@@ -1,0 +1,46 @@
+//! Characterize the bit-accurate approximate-multiplier designs across
+//! operand distributions, validating the paper's Gaussian error model
+//! against real hardware behaviour (§III's DRUM mapping).
+//!
+//! Run: `cargo run --release --example characterize_multipliers`
+
+use approxmul::mult::{characterize, standard_designs, GaussianModel, OperandDist};
+use approxmul::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dists = [
+        OperandDist::Uniform16,
+        OperandDist::Mantissa,
+        OperandDist::Small,
+    ];
+    let n = 300_000;
+
+    for dist in dists {
+        println!("\n## operand distribution: {}", dist.name());
+        let mut t = Table::new(&["design", "MRE", "SD", "bias", "MRE/SD"]);
+        let mut designs = standard_designs();
+        designs.push(Box::new(GaussianModel::new(0.01803, 99)));
+        for d in &designs {
+            let s = characterize(d.as_ref(), dist, n, 7);
+            t.row(vec![
+                d.name(),
+                format!("{:.3}%", 100.0 * s.mre),
+                format!("{:.3}%", 100.0 * s.sd),
+                format!("{:+.3}%", 100.0 * s.mean_re),
+                format!("{:.3}", s.gaussianity_ratio()),
+            ]);
+        }
+        print!("{}", t.to_markdown());
+    }
+
+    println!(
+        "\nreading guide:\n\
+         * drum6 on uniform16 reproduces the published MRE ~1.47% with \
+           near-zero bias — the paper's Table II case 2 mapping.\n\
+         * MRE/SD ≈ 0.798 marks zero-mean-gaussian-like error (the \
+           paper's model); mitchell/trunc are one-sided and violate it.\n\
+         * the mantissa distribution is what float MACs actually feed \
+           the multiplier — note how design error shifts there."
+    );
+    Ok(())
+}

@@ -1,0 +1,242 @@
+"""AOT lowering: JAX train/eval/init graphs -> HLO text + manifest.json.
+
+This is the single point where Python runs in the system's lifecycle
+(``make artifacts``). Each entry point is jitted, lowered to StableHLO,
+converted to an XlaComputation and dumped as **HLO text** — not a
+serialized ``HloModuleProto``: jax >= 0.5 emits 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` records, for every artifact, the positional
+input/output tensor specs (name, shape, dtype) plus the model's
+parameter/state layout and per-layer MAC table. The Rust runtime
+(rust/src/runtime/manifest.rs) treats this file as the ABI contract
+with the compiled graphs; nothing else crosses the language boundary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .error_model import (CONV_TIME_SHARE, PAPER_HW_DESIGNS, PAPER_TABLE2,
+                          PAPER_TABLE3, sigma_to_mre)
+
+# Presets lowered by default. vgg16 lowers too (same code path) but its
+# HLO is ~100 MB of text and CPU PJRT cannot train it in reasonable
+# time; enable with --full for artifact-completeness runs.
+DEFAULT_PRESETS = ("tiny", "tiny_product", "small")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr_like):
+    shape = tuple(int(d) for d in arr_like.shape)
+    return {"name": name, "shape": list(shape),
+            "dtype": str(arr_like.dtype)}
+
+
+def _scalar(name, dtype):
+    return {"name": name, "shape": [], "dtype": dtype}
+
+
+def lower_preset(cfg: M.ModelConfig, outdir: str):
+    """Lower train/eval/init for one preset; return manifest entries."""
+    pspecs = M.param_specs(cfg)
+    sspecs = M.state_specs(cfg)
+    params0 = M.init_params(cfg, 0)
+    state0 = M.init_state(cfg)
+    opt0 = M.init_opt(cfg)
+    np_, ns_ = len(params0), len(state0)
+
+    x_spec = jax.ShapeDtypeStruct(
+        (cfg.batch, cfg.input_hw, cfg.input_hw, cfg.in_ch), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    ex_spec = jax.ShapeDtypeStruct(
+        (cfg.eval_batch, cfg.input_hw, cfg.input_hw, cfg.in_ch), jnp.float32)
+    ey_spec = jax.ShapeDtypeStruct((cfg.eval_batch,), jnp.int32)
+    u32 = jax.ShapeDtypeStruct((), jnp.uint32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def train_flat(*args):
+        params = list(args[:np_])
+        state = list(args[np_:np_ + ns_])
+        opt = list(args[np_ + ns_:2 * np_ + ns_])
+        x, y, seed_err, seed_drop, sigma, lr = args[2 * np_ + ns_:]
+        new_p, new_s, new_o, loss, acc = M.train_step(
+            cfg, params, state, opt, x, y, seed_err, seed_drop, sigma, lr)
+        return tuple(new_p) + tuple(new_s) + tuple(new_o) + (loss, acc)
+
+    def eval_flat(*args):
+        params = list(args[:np_])
+        state = list(args[np_:np_ + ns_])
+        x, y = args[np_ + ns_:]
+        loss_sum, correct = M.eval_step(cfg, params, state, x, y)
+        return (loss_sum, correct)
+
+    def init_flat(seed):
+        p = M.init_params(cfg, seed)
+        s = M.init_state(cfg)
+        o = M.init_opt(cfg)
+        return tuple(p) + tuple(s) + tuple(o)
+
+    param_shapes = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params0]
+    state_shapes = [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state0]
+    opt_shapes = [jax.ShapeDtypeStruct(o.shape, o.dtype) for o in opt0]
+
+    entries = {}
+    jobs = [
+        ("train", train_flat,
+         param_shapes + state_shapes + opt_shapes
+         + [x_spec, y_spec, u32, u32, f32, f32]),
+        ("eval", eval_flat,
+         param_shapes + state_shapes + [ex_spec, ey_spec]),
+        ("init", init_flat, [u32]),
+    ]
+    for kind, fn, in_shapes in jobs:
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{kind}_{cfg.name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        # Input name lists mirror the positional convention.
+        if kind == "train":
+            inputs = ([_spec(f"param:{p.name}", a) for p, a in
+                       zip(pspecs, params0)]
+                      + [_spec(f"state:{n}", a) for (n, _, _), a in
+                         zip(sspecs, state0)]
+                      + [_spec(f"opt:{p.name}", a) for p, a in
+                         zip(pspecs, opt0)]
+                      + [_spec("x", x_spec), _spec("y", y_spec),
+                         _scalar("seed_err", "uint32"),
+                         _scalar("seed_drop", "uint32"),
+                         _scalar("sigma", "float32"),
+                         _scalar("lr", "float32")])
+            outputs = ([_spec(f"param:{p.name}", a) for p, a in
+                        zip(pspecs, params0)]
+                       + [_spec(f"state:{n}", a) for (n, _, _), a in
+                          zip(sspecs, state0)]
+                       + [_spec(f"opt:{p.name}", a) for p, a in
+                          zip(pspecs, opt0)]
+                       + [_scalar("loss", "float32"),
+                          _scalar("acc", "float32")])
+        elif kind == "eval":
+            inputs = ([_spec(f"param:{p.name}", a) for p, a in
+                       zip(pspecs, params0)]
+                      + [_spec(f"state:{n}", a) for (n, _, _), a in
+                         zip(sspecs, state0)]
+                      + [_spec("x", ex_spec), _spec("y", ey_spec)])
+            outputs = [_scalar("loss_sum", "float32"),
+                       _scalar("correct", "int32")]
+        else:
+            inputs = [_scalar("seed", "uint32")]
+            outputs = ([_spec(f"param:{p.name}", a) for p, a in
+                        zip(pspecs, params0)]
+                       + [_spec(f"state:{n}", a) for (n, _, _), a in
+                          zip(sspecs, state0)]
+                       + [_spec(f"opt:{p.name}", a) for p, a in
+                          zip(pspecs, opt0)])
+        entries[kind] = {"file": fname, "inputs": inputs,
+                         "outputs": outputs,
+                         "sha256": hashlib.sha256(
+                             text.encode()).hexdigest()}
+        print(f"  lowered {fname}: {len(text)} chars, "
+              f"{len(inputs)} inputs, {len(outputs)} outputs",
+              file=sys.stderr)
+
+    total_params = sum(int(np.prod(p.shape)) for p in pspecs)
+    return {
+        "preset": cfg.name,
+        "inject": cfg.inject,
+        "batch": cfg.batch,
+        "eval_batch": cfg.eval_batch,
+        "input_hw": cfg.input_hw,
+        "in_ch": cfg.in_ch,
+        "num_classes": cfg.num_classes,
+        "weight_decay": cfg.weight_decay,
+        "sgd_momentum": cfg.sgd_momentum,
+        "total_params": total_params,
+        "params": [{"name": p.name, "shape": list(p.shape),
+                    "kind": p.kind, "layer": p.layer} for p in pspecs],
+        "state": [{"name": n, "shape": list(sh)} for (n, sh, _) in sspecs],
+        "layers": M.layer_table(cfg),
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(DEFAULT_PRESETS))
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the vgg16 preset (large HLO)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    presets = [p for p in args.presets.split(",") if p]
+    if args.full and "vgg16" not in presets:
+        presets.append("vgg16")
+
+    manifest = {
+        "format": 1,
+        "paper": {
+            "title": "Deep Learning Training with Simulated Approximate "
+                     "Multipliers",
+            "doi": "10.1109/ROBIO49542.2019.8961780",
+            "table2": [list(r) for r in PAPER_TABLE2],
+            "table3": [list(r) for r in PAPER_TABLE3],
+            "hw_designs": {k: list(v) for k, v in PAPER_HW_DESIGNS.items()},
+            "conv_time_share": CONV_TIME_SHARE,
+        },
+        "models": {},
+    }
+    for name in presets:
+        cfg = M.PRESETS[name]
+        print(f"lowering preset {name} (inject={cfg.inject})",
+              file=sys.stderr)
+        manifest["models"][name] = lower_preset(cfg, args.outdir)
+
+    # vgg16 always contributes its layer table (cost model needs the
+    # paper-scale MAC breakdown) even when its HLO is not lowered.
+    if "vgg16" not in manifest["models"]:
+        cfg = M.PRESETS["vgg16"]
+        manifest["models"]["vgg16"] = {
+            "preset": "vgg16", "inject": cfg.inject, "batch": cfg.batch,
+            "eval_batch": cfg.eval_batch, "input_hw": cfg.input_hw,
+            "in_ch": cfg.in_ch, "num_classes": cfg.num_classes,
+            "weight_decay": cfg.weight_decay,
+            "sgd_momentum": cfg.sgd_momentum,
+            "total_params": sum(int(np.prod(p.shape))
+                                for p in M.param_specs(cfg)),
+            "params": [{"name": p.name, "shape": list(p.shape),
+                        "kind": p.kind, "layer": p.layer}
+                       for p in M.param_specs(cfg)],
+            "state": [{"name": n, "shape": list(sh)}
+                      for (n, sh, _) in M.state_specs(cfg)],
+            "layers": M.layer_table(cfg),
+            "entries": {},
+        }
+
+    path = os.path.join(args.outdir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

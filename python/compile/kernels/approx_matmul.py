@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: product-level approximate matmul.
+
+Ablation of what real approximate-multiplier hardware does, vs the
+paper's weight-level simulation shortcut: here **every scalar product**
+``x[i,k] * w[k,j]`` inside the matmul is independently perturbed,
+
+    acc[i,j] = sum_k x[i,k] * w[k,j] * (1 + sigma * eps[i,k,j])
+
+with ``eps ~ N(0,1)`` from a Threefry counter stream. Summing K
+independently-perturbed products concentrates the *relative* error of
+the accumulated dot product by ~1/sqrt(K) when partial products have
+similar magnitude — exactly the effect the weight-level model misses
+(there the error is rank-1-correlated across the reduction). The
+``benches/ablations.rs`` harness quantifies the gap.
+
+Tiling: grid (M/bm, N/bn, K/bk) with a VMEM accumulator; on TPU the
+(bm, bk) x (bk, bn) tile product targets the MXU and the eps tile is
+generated on-chip (no HBM traffic). Interpret mode lowers the same
+schedule to plain HLO for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import prng
+
+_DEFAULT_BM = 32
+_DEFAULT_BN = 32
+_DEFAULT_BK = 32
+
+
+def _approx_matmul_kernel(x_ref, w_ref, seed_ref, stream_ref, sigma_ref,
+                          o_ref, *, n_total: int, k_total: int, bk: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K reduction.
+
+    The output BlockSpec index map ignores ``k``, so ``o_ref`` revisits
+    the same VMEM tile across the reduction — it doubles as the
+    accumulator (standard Pallas reduction pattern, no scratch needed).
+    """
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]          # (bm, bk)
+    w = w_ref[...]          # (bk, bn)
+    bm, bn = o_ref.shape
+
+    # Per-product noise eps[ii, kk, jj] keyed by the *global* product
+    # coordinate so the error field is independent of tile shape.
+    # Global flat id = ((i*bm+ii) * k_total + (k*bk+kk)) * n_total + (j*bn+jj).
+    ii = jax.lax.broadcasted_iota(jnp.uint32, (bm, bk, bn), 0)
+    kk = jax.lax.broadcasted_iota(jnp.uint32, (bm, bk, bn), 1)
+    jj = jax.lax.broadcasted_iota(jnp.uint32, (bm, bk, bn), 2)
+    row = ii + jnp.uint32(i) * jnp.uint32(bm)
+    red = kk + jnp.uint32(k) * jnp.uint32(bk)
+    col = jj + jnp.uint32(j) * jnp.uint32(bn)
+    flat = (row * jnp.uint32(k_total) + red) * jnp.uint32(n_total) + col
+    z, _ = prng.normal_pair(seed_ref[0], stream_ref[0],
+                            flat, jnp.zeros_like(flat))
+    sigma = sigma_ref[0]
+
+    # Perturbed partial products, reduced over the K tile.
+    prod = x[:, :, None] * w[None, :, :]
+    prod = prod * (np.float32(1.0) + sigma * z)
+    o_ref[...] += jnp.sum(prod, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, seed, stream, sigma, *,
+                  bm: int = _DEFAULT_BM, bn: int = _DEFAULT_BN,
+                  bk: int = _DEFAULT_BK, interpret: bool = True):
+    """Product-level approximate ``x @ w``.
+
+    Args:
+      x: (M, K) f32.  w: (K, N) f32.
+      seed, stream: uint32 scalars — Threefry key (run seed, layer id).
+      sigma: f32 scalar relative-error SD (``MRE = sigma*sqrt(2/pi)``).
+      bm, bn, bk: tile sizes (static). Shapes are zero-padded up to tile
+        multiples; zero padding contributes zero products so the result
+        is unaffected (property-tested).
+      interpret: keep True on CPU PJRT.
+
+    Returns:
+      (M, N) f32, the approximately-multiplied product.
+    """
+    m, k_total = x.shape
+    k2, n_total = w.shape
+    assert k_total == k2, (x.shape, w.shape)
+    bm_ = min(bm, m)
+    bn_ = min(bn, n_total)
+    bk_ = min(bk, k_total)
+    pm, pn, pk = (-m) % bm_, (-n_total) % bn_, (-k_total) % bk_
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    mm, kk_ = xp.shape
+    _, nn = wp.shape
+
+    seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
+    stream = jnp.asarray(stream, jnp.uint32).reshape((1,))
+    sigma = jnp.asarray(sigma, jnp.float32).reshape((1,))
+
+    out = pl.pallas_call(
+        functools.partial(_approx_matmul_kernel, n_total=nn, k_total=kk_,
+                          bk=bk_),
+        grid=(mm // bm_, nn // bn_, kk_ // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, seed, stream, sigma)
+    return out[:m, :n_total]

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: weight-level approximate-multiplier error injection.
+
+This is the *paper-faithful* simulation mode (ROBIO'19 §II-III): every
+conv / dense layer's weight tensor is multiplied elementwise by an error
+matrix ``(1 + eps)`` with ``eps ~ N(0, sigma)`` before it is used, in
+both forward and backward passes. ``MRE = sigma * sqrt(2/pi)`` for the
+zero-mean Gaussian model (every (MRE, SD) pair in the paper's Table II
+satisfies this identity).
+
+The noise is generated *inside* the kernel from a Threefry counter
+stream keyed by ``(seed, layer_stream)``, so:
+
+* the rust coordinator replays any step bit-exactly from (seed, stream);
+* "fixed error matrix per run" (the paper's Figure-3 procedure) vs
+  "resampled every step" (our ablation) is purely a question of what
+  seed L3 feeds the graph — one artifact serves both;
+* ``sigma = 0`` degenerates to an exact multiplier (the noise is still
+  generated but multiplies by exactly 1.0; the dedicated exact artifact
+  omits this kernel entirely).
+
+TPU mapping (DESIGN.md §4): the weight tensor is streamed HBM->VMEM in
+``block`` rows; noise is generated on-chip (8 u32 ALU ops/element), so
+the kernel adds zero HBM traffic over the plain weight load.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import prng
+
+# Rows per grid step. Weights are viewed as (rows, cols) with cols the
+# trailing dim; 256 rows of a 512-wide f32 tensor = 512 KiB VMEM-resident
+# block + same-shape noise scratch, comfortably inside the ~16 MiB VMEM
+# budget with double buffering.
+_DEFAULT_BLOCK_ROWS = 256
+
+
+def _error_inject_kernel(w_ref, seed_ref, stream_ref, sigma_ref, o_ref,
+                         *, cols: int):
+    """o = w * (1 + sigma * N(0,1)); noise indexed by global element id."""
+    w = w_ref[...]
+    rows = w.shape[0]
+    # Global flat index of this block's first element: grid step * block
+    # elements. Noise must depend on the *global* index so the same
+    # (seed, stream) reproduces the same error matrix regardless of the
+    # block decomposition chosen at compile time.
+    blk = pl.program_id(0)
+    base = (blk * rows * cols).astype(jnp.uint32)
+    noise = prng.counter_normal(
+        seed_ref[0], stream_ref[0], base, (rows, cols))
+    sigma = sigma_ref[0]
+    o_ref[...] = w * (np.float32(1.0) + sigma * noise)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def error_inject(w: jnp.ndarray, seed: jnp.ndarray, stream: jnp.ndarray,
+                 sigma: jnp.ndarray, *, block_rows: int = _DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Apply weight-level approximate-multiplier error to ``w``.
+
+    Args:
+      w: weight tensor, any shape, f32.
+      seed: uint32 scalar — run seed (fixed mode) or step seed (resample).
+      stream: uint32 scalar — unique per layer ("each network layer had a
+        unique error matrix", §II).
+      sigma: f32 scalar — Gaussian SD of the relative error. The paper's
+        MRE relates as ``MRE = sigma * sqrt(2/pi)``.
+      block_rows: grid block height (static).
+      interpret: Pallas interpret mode (must stay True on CPU PJRT).
+
+    Returns:
+      ``w * (1 + sigma * eps)``, same shape/dtype as ``w``.
+    """
+    orig_shape = w.shape
+    cols = orig_shape[-1] if len(orig_shape) >= 1 else 1
+    flat = w.reshape((-1, cols)).astype(jnp.float32)
+    rows = flat.shape[0]
+    br = min(block_rows, rows)
+    # Pad rows to a multiple of the block so the grid is exact.
+    pad = (-rows) % br
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    padded_rows = flat.shape[0]
+
+    seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
+    stream = jnp.asarray(stream, jnp.uint32).reshape((1,))
+    sigma = jnp.asarray(sigma, jnp.float32).reshape((1,))
+
+    out = pl.pallas_call(
+        functools.partial(_error_inject_kernel, cols=cols),
+        grid=(padded_rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, cols), jnp.float32),
+        interpret=interpret,
+    )(flat, seed, stream, sigma)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,112 @@
+"""Counter-based PRNG primitives usable *inside* Pallas kernel bodies.
+
+The approximate-multiplier error simulation needs per-element Gaussian
+noise that is (a) deterministic in (seed, element index) so a training
+step can be replayed bit-exactly from the Rust coordinator, and (b)
+generatable inside a Pallas kernel without touching ``jax.random``
+(whose keys cannot be threaded through ``pallas_call`` refs).
+
+We implement Threefry-2x32 (the same core JAX uses) from scratch with
+plain ``jnp`` integer ops, so the identical code path runs:
+
+* inside Pallas kernel bodies (values read from refs are jnp arrays),
+* in the pure-jnp reference oracle (``ref.py``),
+* in the lowered L2 graph (it is just HLO integer arithmetic).
+
+All functions are shape-polymorphic and dtype-strict (uint32 in/out).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Threefry-2x32 rotation schedule (Salmon et al., SC'11), 20 rounds.
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+_PARITY = np.uint32(0x1BD11BDA)  # key-schedule parity constant
+
+_U32 = np.uint32
+# 1/2^32 as f32; maps uint32 -> [0, 1).
+_INV_2_32 = np.float32(2.3283064365386963e-10)
+_TWO_PI = np.float32(6.283185307179586)
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Rotate-left a uint32 array by the static amount ``r``."""
+    r = int(r)
+    return (x << _U32(r)) | (x >> _U32(32 - r))
+
+
+def threefry2x32(key0: jnp.ndarray, key1: jnp.ndarray,
+                 ctr0: jnp.ndarray, ctr1: jnp.ndarray):
+    """Threefry-2x32, 20 rounds.
+
+    Args:
+      key0, key1: uint32 scalars (or arrays broadcastable to the counters).
+      ctr0, ctr1: uint32 counter arrays; the block is applied elementwise.
+
+    Returns:
+      ``(x0, x1)`` — two uint32 arrays of the counters' shape, the
+      encrypted counter block. Bit-compatible with the reference
+      Random123 implementation (validated against known-answer vectors
+      in ``python/tests/test_prng.py``).
+    """
+    k0 = jnp.asarray(key0, _U32)
+    k1 = jnp.asarray(key1, _U32)
+    k2 = k0 ^ k1 ^ _PARITY
+    x0 = jnp.asarray(ctr0, _U32) + k0
+    x1 = jnp.asarray(ctr1, _U32) + k1
+
+    ks = (k0, k1, k2)
+    for block in range(5):
+        for i in range(4):
+            x0 = x0 + x1
+            x1 = _rotl32(x1, _ROTATIONS[(block % 2) * 4 + i])
+            x1 = x1 ^ x0
+        # Key injection every 4 rounds.
+        inj = block + 1
+        x0 = x0 + ks[inj % 3]
+        x1 = x1 + ks[(inj + 1) % 3] + _U32(inj)
+    return x0, x1
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 bits -> f32 uniform in the open interval (0, 1).
+
+    Offsets by half an ulp of the grid so 0 is excluded (Box-Muller
+    takes ``log(u)``).
+    """
+    return bits.astype(jnp.float32) * _INV_2_32 + np.float32(_INV_2_32 / 2)
+
+
+def normal_pair(key0, key1, ctr0, ctr1):
+    """Two independent standard-normal f32 arrays via Box-Muller.
+
+    One Threefry block yields two uniforms, which Box-Muller turns into
+    two normals — so the bit budget is 1 u32 per normal, same as JAX's
+    native path.
+    """
+    b0, b1 = threefry2x32(key0, key1, ctr0, ctr1)
+    u1 = uniform_from_bits(b0)
+    u2 = uniform_from_bits(b1)
+    r = jnp.sqrt(np.float32(-2.0) * jnp.log(u1))
+    theta = _TWO_PI * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def counter_normal(seed: jnp.ndarray, stream: jnp.ndarray,
+                   base: jnp.ndarray, shape) -> jnp.ndarray:
+    """Standard-normal f32 tensor of ``shape`` from (seed, stream, base).
+
+    ``seed`` is the run/step seed (uint32 scalar), ``stream`` a per-layer
+    / per-tile stream id, ``base`` the flat index of this tensor's first
+    element within the stream (lets a tile of a larger tensor generate
+    exactly its slice of the global noise field). All uint32 scalars.
+    """
+    n = 1
+    for d in shape:
+        n *= int(d)
+    idx = jnp.arange(n, dtype=_U32) + jnp.asarray(base, _U32)
+    z0, _ = normal_pair(jnp.asarray(seed, _U32), jnp.asarray(stream, _U32),
+                        idx, jnp.zeros_like(idx))
+    return z0.reshape(shape)

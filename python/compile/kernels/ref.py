@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Every Pallas kernel in this package has an exact reference here, written
+with no Pallas constructs, using the same Threefry stream derivation.
+``python/tests`` asserts allclose between kernel and oracle across a
+hypothesis sweep of shapes, seeds and sigmas; agreement must be
+bit-level for the noise field (same counters -> same bits) and
+float-associativity-level for reductions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import prng
+
+
+def ref_error_inject(w: jnp.ndarray, seed, stream, sigma) -> jnp.ndarray:
+    """Oracle for ``error_inject``: w * (1 + sigma * eps).
+
+    eps is indexed by the element's flat position in the (rows, cols)
+    view used by the kernel (trailing dim = cols), which equals the flat
+    position in ``w`` itself — row-major reshape preserves order.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    noise = prng.counter_normal(
+        jnp.asarray(seed, jnp.uint32), jnp.asarray(stream, jnp.uint32),
+        jnp.uint32(0), (w.size,)).reshape(w.shape)
+    return w * (jnp.float32(1.0) + jnp.float32(sigma) * noise)
+
+
+def ref_approx_matmul(x: jnp.ndarray, w: jnp.ndarray, seed, stream, sigma,
+                      *, k_total=None, n_total=None) -> jnp.ndarray:
+    """Oracle for ``approx_matmul``: per-product perturbed x @ w.
+
+    The noise field is keyed by the global (row, k, col) product
+    coordinate over the *padded* operand shapes the kernel saw; pass
+    ``k_total``/``n_total`` to match a padded kernel invocation, else
+    the unpadded dims are used (correct whenever no padding occurred).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    m, k = x.shape
+    _, n = w.shape
+    kt = k if k_total is None else int(k_total)
+    nt = n if n_total is None else int(n_total)
+    row = jnp.arange(m, dtype=jnp.uint32)[:, None, None]
+    red = jnp.arange(k, dtype=jnp.uint32)[None, :, None]
+    col = jnp.arange(n, dtype=jnp.uint32)[None, None, :]
+    flat = (row * jnp.uint32(kt) + red) * jnp.uint32(nt) + col
+    flat = jnp.broadcast_to(flat, (m, k, n))
+    z, _ = prng.normal_pair(jnp.asarray(seed, jnp.uint32),
+                            jnp.asarray(stream, jnp.uint32),
+                            flat, jnp.zeros_like(flat))
+    prod = x[:, :, None] * w[None, :, :]
+    prod = prod * (jnp.float32(1.0) + jnp.float32(sigma) * z)
+    return jnp.sum(prod, axis=1)
+
+
+def ref_exact_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Exact-multiplier baseline (sigma = 0 limit of both kernels)."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)

@@ -1,0 +1,475 @@
+"""L2: VGG-style CNN forward/backward with approximate-multiplier error.
+
+Reproduces the ROBIO'19 training setup (modified VGGNet of Liu & Deng
+[8] for CIFAR-10: conv-BN-ReLU blocks + maxpool + dropout + 2 dense
+layers, SGD with momentum / lr decay / L2 weight decay) as a purely
+functional JAX program that is AOT-lowered to HLO by ``aot.py`` and then
+driven exclusively from the Rust coordinator.
+
+Error injection (the paper's contribution) is a first-class input of
+the lowered graph: ``sigma`` (Gaussian SD of the relative multiplier
+error) and ``seed_err`` are runtime scalars, so the Rust hybrid
+controller flips approximate <-> exact multipliers at any epoch without
+recompiling, and chooses fixed-per-run vs resampled-per-step error
+matrices purely by what seed it feeds each step.
+
+Three injection backends (``ModelConfig.inject``):
+
+* ``pallas_weight``  — the paper-faithful mode: every conv/dense weight
+  tensor is perturbed ``W*(1+sigma*eps)`` by the L1 Pallas kernel
+  (``kernels/error_inject.py``) before use; backprop sees the same
+  error matrix via a custom VJP (matches the Keras custom-layer setup).
+* ``jnp_weight``     — bit-identical pure-jnp path (same Threefry
+  counters); used to isolate Pallas overhead in ablations.
+* ``pallas_product`` — per-scalar-product error inside a Pallas tiled
+  matmul (``kernels/approx_matmul.py``); conv is lowered to im2col so
+  every MAC goes through the approximate multiplier. This is what real
+  hardware does and is our ablation of the paper's simulation shortcut.
+
+Parameters / optimizer / BN state are flat lists of arrays with a
+manifest-recorded order, because the Rust runtime marshals them as
+positional PJRT literals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import approx_matmul as am
+from .kernels import error_inject as ei
+from .kernels import prng
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + training hyperparameters for one preset."""
+
+    name: str
+    input_hw: int                      # square input edge (CIFAR: 32)
+    in_ch: int                         # input channels (RGB: 3)
+    blocks: tuple                      # tuple of tuples of conv widths
+    dense: tuple                       # hidden dense widths
+    num_classes: int
+    batch: int
+    eval_batch: int
+    dropout_conv: float = 0.3          # after every maxpool (paper: 30-50%)
+    dropout_dense: float = 0.5         # before the classifier
+    bn_momentum: float = 0.9
+    bn_eps: float = 1e-5
+    weight_decay: float = 5e-4         # paper Table I: L2 0.0005
+    sgd_momentum: float = 0.9
+    inject: str = "pallas_weight"      # see module docstring
+
+    @property
+    def conv_layers(self):
+        """Flat (block, width) list of conv layers in forward order."""
+        out = []
+        for b, widths in enumerate(self.blocks):
+            for w in widths:
+                out.append((b, int(w)))
+        return out
+
+
+# Presets. ``tiny`` is the pytest/bench workhorse, ``small`` the e2e
+# training preset, ``vgg16`` the paper's full architecture (lowered for
+# artifact/MAC accounting; too large to train on CPU PJRT — DESIGN.md §5).
+PRESETS = {
+    "tiny": ModelConfig(
+        name="tiny", input_hw=8, in_ch=3,
+        blocks=((8,), (16,)), dense=(32,), num_classes=10,
+        batch=16, eval_batch=64, dropout_conv=0.0, dropout_dense=0.0),
+    "tiny_product": ModelConfig(
+        name="tiny_product", input_hw=8, in_ch=3,
+        blocks=((8,), (16,)), dense=(32,), num_classes=10,
+        batch=16, eval_batch=64, dropout_conv=0.0, dropout_dense=0.0,
+        inject="pallas_product"),
+    "small": ModelConfig(
+        name="small", input_hw=32, in_ch=3,
+        blocks=((32, 32), (64, 64), (128, 128)), dense=(128,),
+        num_classes=10, batch=64, eval_batch=256),
+    "vgg16": ModelConfig(
+        name="vgg16", input_hw=32, in_ch=3,
+        blocks=((64, 64), (128, 128), (256, 256, 256),
+                (512, 512, 512), (512, 512, 512)),
+        dense=(512,), num_classes=10, batch=128, eval_batch=256),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str          # "he" | "zeros" | "ones"
+    kind: str          # "conv_w" | "dense_w" | "bias" | "bn_gamma" | "bn_beta"
+    layer: int         # error-stream id for weight tensors, -1 otherwise
+
+
+def param_specs(cfg: ModelConfig):
+    """Forward-order flat parameter layout (the manifest contract)."""
+    specs = []
+    ch = cfg.in_ch
+    layer = 0
+    for bi, widths in enumerate(cfg.blocks):
+        for ci, w in enumerate(widths):
+            p = f"conv{bi}_{ci}"
+            specs.append(ParamSpec(f"{p}.w", (3, 3, ch, w), "he", "conv_w", layer))
+            specs.append(ParamSpec(f"{p}.b", (w,), "zeros", "bias", -1))
+            specs.append(ParamSpec(f"{p}.bn_gamma", (w,), "ones", "bn_gamma", -1))
+            specs.append(ParamSpec(f"{p}.bn_beta", (w,), "zeros", "bn_beta", -1))
+            ch = w
+            layer += 1
+    hw = cfg.input_hw // (2 ** len(cfg.blocks))
+    feat = ch * hw * hw
+    for di, w in enumerate(cfg.dense):
+        p = f"dense{di}"
+        specs.append(ParamSpec(f"{p}.w", (feat, w), "he", "dense_w", layer))
+        specs.append(ParamSpec(f"{p}.b", (w,), "zeros", "bias", -1))
+        specs.append(ParamSpec(f"{p}.bn_gamma", (w,), "ones", "bn_gamma", -1))
+        specs.append(ParamSpec(f"{p}.bn_beta", (w,), "zeros", "bn_beta", -1))
+        feat = w
+        layer += 1
+    specs.append(ParamSpec("classifier.w", (feat, cfg.num_classes), "he",
+                           "dense_w", layer))
+    specs.append(ParamSpec("classifier.b", (cfg.num_classes,), "zeros",
+                           "bias", -1))
+    return specs
+
+
+def state_specs(cfg: ModelConfig):
+    """BN running statistics, forward order: (name, shape, init)."""
+    specs = []
+    for bi, widths in enumerate(cfg.blocks):
+        for ci, w in enumerate(widths):
+            specs.append((f"conv{bi}_{ci}.bn_mean", (w,), "zeros"))
+            specs.append((f"conv{bi}_{ci}.bn_var", (w,), "ones"))
+    for di, w in enumerate(cfg.dense):
+        specs.append((f"dense{di}.bn_mean", (w,), "zeros"))
+        specs.append((f"dense{di}.bn_var", (w,), "ones"))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed) -> list:
+    """He-normal init from the Threefry stream (reproducible from u32)."""
+    out = []
+    for i, s in enumerate(param_specs(cfg)):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, jnp.float32))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(s.shape[:-1])) if len(s.shape) > 1 else s.shape[0]
+            std = np.float32(np.sqrt(2.0 / fan_in))
+            # stream 2000+i keeps init streams disjoint from error (0..L),
+            # backprop (500+) and dropout (1000+) streams.
+            z = prng.counter_normal(jnp.asarray(seed, jnp.uint32),
+                                    jnp.uint32(2000 + i), jnp.uint32(0),
+                                    s.shape)
+            out.append(z * std)
+    return out
+
+
+def init_state(cfg: ModelConfig) -> list:
+    return [jnp.zeros(sh, jnp.float32) if init == "zeros"
+            else jnp.ones(sh, jnp.float32)
+            for (_, sh, init) in state_specs(cfg)]
+
+
+def init_opt(cfg: ModelConfig) -> list:
+    return [jnp.zeros(s.shape, jnp.float32) for s in param_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Error injection (custom VJPs so backprop multiplications err too)
+
+_BWD_STREAM_OFFSET = 500    # product-mode backward matmul streams
+_DROP_STREAM_OFFSET = 1000  # dropout streams
+_INIT_STREAM_OFFSET = 2000  # init streams (see init_params)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _inject_weight(w, seed, stream, sigma, use_pallas):
+    """W * (1 + sigma*eps): same eps in forward and gradient (paper §II)."""
+    if use_pallas:
+        return ei.error_inject(w, seed, stream, sigma)
+    return kref.ref_error_inject(w, seed, stream, sigma)
+
+
+def _inject_weight_fwd(w, seed, stream, sigma, use_pallas):
+    out = _inject_weight(w, seed, stream, sigma, use_pallas)
+    return out, (w, seed, stream, sigma)
+
+
+def _inject_weight_bwd(use_pallas, res, g):
+    w, seed, stream, sigma = res
+    # d/dW [W*(1+e)] = (1+e) ⊙ g: regenerate the same error matrix. The
+    # error therefore perturbs the weight-gradient exactly as the Keras
+    # custom layer did ("during both backpropagation and forward
+    # propagation").
+    scaled = _inject_weight(g, seed, stream, sigma, use_pallas)
+    return (scaled, None, None, None)
+
+
+_inject_weight.defvjp(_inject_weight_fwd, _inject_weight_bwd)
+
+
+@jax.custom_vjp
+def _approx_mm(x, w, seed, stream, sigma):
+    """Product-level approximate x @ w with approximate backward matmuls."""
+    return am.approx_matmul(x, w, seed, stream, sigma)
+
+
+def _approx_mm_fwd(x, w, seed, stream, sigma):
+    return _approx_mm(x, w, seed, stream, sigma), (x, w, seed, stream, sigma)
+
+
+def _approx_mm_bwd(res, g):
+    x, w, seed, stream, sigma = res
+    bstream = stream + jnp.uint32(_BWD_STREAM_OFFSET)
+    # Backward matmuls run on the same approximate hardware, with their
+    # own product-error fields (distinct streams per operand).
+    dx = am.approx_matmul(g, w.T, seed, bstream, sigma)
+    dw = am.approx_matmul(x.T, g, seed, bstream + jnp.uint32(1), sigma)
+    return (dx, dw, None, None, None)
+
+
+_approx_mm.defvjp(_approx_mm_fwd, _approx_mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+
+
+def _batchnorm_train(x, gamma, beta, mean_run, var_run, momentum, eps, axes):
+    m = jnp.mean(x, axis=axes)
+    v = jnp.var(x, axis=axes)
+    xn = (x - m) / jnp.sqrt(v + np.float32(eps))
+    new_mean = momentum * mean_run + (1.0 - momentum) * m
+    new_var = momentum * var_run + (1.0 - momentum) * v
+    return gamma * xn + beta, new_mean, new_var
+
+
+def _batchnorm_eval(x, gamma, beta, mean_run, var_run, eps):
+    xn = (x - mean_run) / jnp.sqrt(var_run + np.float32(eps))
+    return gamma * xn + beta
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _dropout(x, rate, seed, stream):
+    if rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    u_bits, _ = prng.threefry2x32(
+        jnp.asarray(seed, jnp.uint32), jnp.uint32(stream),
+        jax.lax.broadcasted_iota(jnp.uint32, (x.size,), 0),
+        jnp.zeros((x.size,), jnp.uint32))
+    u = prng.uniform_from_bits(u_bits).reshape(x.shape)
+    mask = (u < np.float32(keep)).astype(jnp.float32)
+    return x * mask / np.float32(keep)
+
+
+def _im2col(x, kh=3, kw=3):
+    """NHWC -> (N*H*W, kh*kw*C) SAME-padded patch matrix (stride 1)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy:dy + h, dx:dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)        # (N,H,W,kh*kw*C)
+    return patches.reshape(n * h * w, kh * kw * c)
+
+
+def _conv(x, w, b, cfg: ModelConfig, seed_err, stream, sigma):
+    """3x3 SAME conv through the configured approximate-multiplier path."""
+    if cfg.inject == "pallas_product":
+        n, h, ww, c = x.shape
+        kh, kw, cin, cout = w.shape
+        patches = _im2col(x, kh, kw)                # (N*H*W, 9C)
+        wmat = w.reshape(kh * kw * cin, cout)
+        out = _approx_mm(patches, wmat, seed_err, jnp.uint32(stream), sigma)
+        out = out.reshape(n, h, ww, cout)
+    else:
+        wq = _inject_weight(w, seed_err, jnp.uint32(stream), sigma,
+                            cfg.inject == "pallas_weight")
+        out = jax.lax.conv_general_dilated(
+            x, wq, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _dense_layer(x, w, b, cfg: ModelConfig, seed_err, stream, sigma):
+    if cfg.inject == "pallas_product":
+        out = _approx_mm(x, w, seed_err, jnp.uint32(stream), sigma)
+    else:
+        wq = _inject_weight(w, seed_err, jnp.uint32(stream), sigma,
+                            cfg.inject == "pallas_weight")
+        out = x @ wq
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+
+
+def forward(cfg: ModelConfig, params: Sequence, state: Sequence, x,
+            *, train: bool, seed_err, seed_drop, sigma):
+    """Logits + updated BN state.
+
+    ``sigma`` f32 scalar: 0 => exact multipliers. ``seed_err`` u32: keep
+    constant across steps for the paper's fixed-error-matrix procedure,
+    or feed the step index for the resampling ablation.
+    """
+    p = iter(range(len(params)))
+    s = iter(range(len(state)))
+    new_state = list(state)
+    mom = np.float32(cfg.bn_momentum)
+
+    def next_p(k):
+        return [params[next(p)] for _ in range(k)]
+
+    layer = 0
+    h = x
+    for bi, widths in enumerate(cfg.blocks):
+        for _ci, _w in enumerate(widths):
+            w, b, gamma, beta = next_p(4)
+            h = _conv(h, w, b, cfg, seed_err, layer, sigma)
+            im, iv = next(s), next(s)
+            if train:
+                h, nm, nv = _batchnorm_train(
+                    h, gamma, beta, state[im], state[iv], mom, cfg.bn_eps,
+                    axes=(0, 1, 2))
+                new_state[im], new_state[iv] = nm, nv
+            else:
+                h = _batchnorm_eval(h, gamma, beta, state[im], state[iv],
+                                    cfg.bn_eps)
+            h = jax.nn.relu(h)
+            layer += 1
+        h = _maxpool2(h)
+        if train:
+            h = _dropout(h, cfg.dropout_conv, seed_drop,
+                         _DROP_STREAM_OFFSET + bi)
+    h = h.reshape(h.shape[0], -1)
+    for _di, _w in enumerate(cfg.dense):
+        w, b, gamma, beta = next_p(4)
+        h = _dense_layer(h, w, b, cfg, seed_err, layer, sigma)
+        im, iv = next(s), next(s)
+        if train:
+            h, nm, nv = _batchnorm_train(
+                h, gamma, beta, state[im], state[iv], mom, cfg.bn_eps,
+                axes=(0,))
+            new_state[im], new_state[iv] = nm, nv
+        else:
+            h = _batchnorm_eval(h, gamma, beta, state[im], state[iv],
+                                cfg.bn_eps)
+        h = jax.nn.relu(h)
+        layer += 1
+    if train:
+        h = _dropout(h, cfg.dropout_dense, seed_drop,
+                     _DROP_STREAM_OFFSET + 99)
+    w, b = next_p(2)
+    logits = _dense_layer(h, w, b, cfg, seed_err, layer, sigma)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+
+
+def _loss_from_logits(cfg, params, logits, y):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, cfg.num_classes, dtype=jnp.float32)
+    ce = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    # L2 on conv/dense weights only (Keras kernel_regularizer semantics).
+    wd = np.float32(cfg.weight_decay)
+    l2 = sum(jnp.sum(params[i] ** 2)
+             for i, s in enumerate(param_specs(cfg))
+             if s.kind in ("conv_w", "dense_w"))
+    return ce + wd * l2, ce
+
+
+def train_step(cfg: ModelConfig, params, state, opt, x, y,
+               seed_err, seed_drop, sigma, lr):
+    """One SGD-with-momentum step under simulated approximate multipliers.
+
+    Returns (params', state', opt', loss, accuracy). Lowered once by
+    aot.py; every epoch-level decision (lr schedule, hybrid multiplier
+    switch, error resampling) lives in the Rust coordinator, which just
+    varies the scalar inputs.
+    """
+    def loss_fn(ps):
+        logits, new_state = forward(
+            cfg, ps, state, x, train=True,
+            seed_err=seed_err, seed_drop=seed_drop, sigma=sigma)
+        total, ce = _loss_from_logits(cfg, ps, logits, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return total, (new_state, ce, acc)
+
+    grads, (new_state, ce, acc) = jax.grad(
+        loss_fn, has_aux=True)(list(params))
+    mom = np.float32(cfg.sgd_momentum)
+    new_opt = [mom * v + g for v, g in zip(opt, grads)]
+    new_params = [p - lr * v for p, v in zip(params, new_opt)]
+    return new_params, new_state, new_opt, ce, acc
+
+
+def eval_step(cfg: ModelConfig, params, state, x, y):
+    """Exact-multiplier inference (paper removes error layers for test)."""
+    logits, _ = forward(cfg, params, state, x, train=False,
+                        seed_err=jnp.uint32(0), seed_drop=jnp.uint32(0),
+                        sigma=jnp.float32(0.0))
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, cfg.num_classes, dtype=jnp.float32)
+    loss_sum = -jnp.sum(onehot * logp)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return loss_sum, correct
+
+
+# ---------------------------------------------------------------------------
+# MAC accounting (consumed by the Rust cost model via the manifest)
+
+
+def layer_table(cfg: ModelConfig):
+    """Per-layer output shapes / params / MACs (Figure-1 reproduction)."""
+    rows = []
+    hw = cfg.input_hw
+    ch = cfg.in_ch
+    for bi, widths in enumerate(cfg.blocks):
+        for ci, w in enumerate(widths):
+            macs = hw * hw * 3 * 3 * ch * w
+            nparams = 3 * 3 * ch * w + 3 * w
+            rows.append({"name": f"conv{bi}_{ci}", "type": "conv3x3",
+                         "out": [hw, hw, w], "params": nparams,
+                         "macs": macs})
+            ch = w
+        hw //= 2
+        rows.append({"name": f"pool{bi}", "type": "maxpool2",
+                     "out": [hw, hw, ch], "params": 0, "macs": 0})
+    feat = ch * hw * hw
+    for di, w in enumerate(cfg.dense):
+        rows.append({"name": f"dense{di}", "type": "dense",
+                     "out": [w], "params": feat * w + 3 * w,
+                     "macs": feat * w})
+        feat = w
+    rows.append({"name": "classifier", "type": "dense",
+                 "out": [cfg.num_classes],
+                 "params": feat * cfg.num_classes + cfg.num_classes,
+                 "macs": feat * cfg.num_classes})
+    return rows

@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile.*` importable regardless of the
+directory pytest is invoked from."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,91 @@
+"""AOT artifact contract: manifest vs HLO text vs model layout.
+
+These tests run against the artifacts/ directory produced by
+``make artifacts`` (skipped if absent, e.g. unit-only runs).
+"""
+
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_paper_tables_embedded(self, manifest):
+        t2 = manifest["paper"]["table2"]
+        assert len(t2) == 9
+        assert t2[0][3] == 93.60
+        assert t2[8][3] == 65.65
+        t3 = manifest["paper"]["table3"]
+        assert len(t3) == 6
+        assert all(a + e == 200 for (_, _, a, e) in t3)
+
+    def test_models_present(self, manifest):
+        for preset in ("tiny", "tiny_product", "small", "vgg16"):
+            assert preset in manifest["models"]
+
+    def test_entry_files_exist_and_are_hlo(self, manifest):
+        for name, m in manifest["models"].items():
+            for kind, e in m["entries"].items():
+                path = os.path.join(ART, e["file"])
+                assert os.path.exists(path), e["file"]
+                with open(path) as f:
+                    head = f.read(4096)
+                assert "HloModule" in head, e["file"]
+                assert "ENTRY" in open(path).read(), e["file"]
+
+    def test_train_io_symmetry(self, manifest):
+        """Outputs 0..N-1 of train must mirror inputs (state threading)."""
+        for name, m in manifest["models"].items():
+            if "train" not in m["entries"]:
+                continue
+            e = m["entries"]["train"]
+            n_state = len(m["params"]) * 2 + len(m["state"])
+            ins = e["inputs"][:n_state]
+            outs = e["outputs"][:n_state]
+            for i, o in zip(ins, outs):
+                assert i["name"] == o["name"]
+                assert i["shape"] == o["shape"]
+
+    def test_param_shapes_match_model(self, manifest):
+        for preset in ("tiny", "small"):
+            cfg = M.PRESETS[preset]
+            specs = M.param_specs(cfg)
+            mp = manifest["models"][preset]["params"]
+            assert len(mp) == len(specs)
+            for a, b in zip(mp, specs):
+                assert a["name"] == b.name
+                assert tuple(a["shape"]) == tuple(b.shape)
+
+    def test_total_params(self, manifest):
+        for preset, m in manifest["models"].items():
+            total = sum(int(np.prod(p["shape"])) for p in m["params"])
+            assert total == m["total_params"]
+
+    def test_scalar_inputs_trailing(self, manifest):
+        e = manifest["models"]["tiny"]["entries"]["train"]
+        names = [i["name"] for i in e["inputs"][-4:]]
+        assert names == ["seed_err", "seed_drop", "sigma", "lr"]
+
+    def test_hlo_parameter_count_matches_manifest(self, manifest):
+        """The HLO ENTRY signature must take exactly the manifest inputs."""
+        for preset in ("tiny", "small"):
+            e = manifest["models"][preset]["entries"]["train"]
+            text = open(os.path.join(ART, e["file"])).read()
+            n_params = len(set(re.findall(r"parameter\((\d+)\)", text)))
+            assert n_params == len(e["inputs"]), preset

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles (the core L1 correctness signal).
+
+Hypothesis sweeps shapes, seeds and sigmas; every case must agree with
+ref.py. Tolerances are float32-reduction-level only — the noise bits
+themselves must match exactly (same Threefry counters on both sides).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import approx_matmul as am
+from compile.kernels import error_inject as ei
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+class TestErrorInject:
+    @given(rows=st.integers(1, 300), cols=st.integers(1, 65),
+           seed=st.integers(0, 2**32 - 1), sigma=st.floats(0.0, 0.5))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle(self, rows, cols, seed, sigma):
+        w = _rand((rows, cols), 0)
+        seed = np.uint32(seed)
+        out = ei.error_inject(w, seed, 3, sigma, block_rows=64)
+        expect = ref.ref_error_inject(w, seed, 3, sigma)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+    def test_sigma_zero_is_identity(self):
+        w = _rand((37, 11), 1)
+        out = ei.error_inject(w, 9, 0, 0.0)
+        np.testing.assert_allclose(out, w, rtol=0, atol=0)
+
+    def test_4d_tensor(self):
+        """Conv weights (kh,kw,cin,cout) go through the same kernel."""
+        w = _rand((3, 3, 16, 32), 2)
+        out = ei.error_inject(w, 5, 7, 0.1)
+        expect = ref.ref_error_inject(w, 5, 7, 0.1)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+    def test_block_decomposition_invariant(self):
+        """Same (seed, stream) -> same error field for any block_rows."""
+        w = _rand((256, 32), 3)
+        a = ei.error_inject(w, 11, 2, 0.05, block_rows=32)
+        b = ei.error_inject(w, 11, 2, 0.05, block_rows=256)
+        np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+    def test_streams_differ(self):
+        w = jnp.ones((64, 64), jnp.float32)
+        a = ei.error_inject(w, 1, 0, 0.1)
+        b = ei.error_inject(w, 1, 1, 0.1)
+        assert float(jnp.abs(a - b).max()) > 1e-3
+
+    def test_empirical_mre_matches_sigma(self):
+        """Measured MRE of the injected error == sigma*sqrt(2/pi)."""
+        w = jnp.ones((400, 400), jnp.float32)
+        sigma = 0.045  # paper test case 4 (MRE ~3.6%, SD ~4.5%)
+        out = ei.error_inject(w, 42, 0, sigma)
+        rel = jnp.abs(out - 1.0)
+        mre = float(rel.mean())
+        assert abs(mre - sigma * np.sqrt(2 / np.pi)) < 0.0005
+        assert abs(float(rel.std()) - sigma * np.sqrt(1 - 2 / np.pi)) < 0.001
+
+
+class TestApproxMatmul:
+    @given(m=st.integers(1, 40), k=st.integers(1, 40),
+           n=st.integers(1, 40), seed=st.integers(0, 2**32 - 1),
+           sigma=st.floats(0.0, 0.3))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_oracle(self, m, k, n, seed, sigma):
+        x = _rand((m, k), 1)
+        w = _rand((k, n), 2)
+        bm = bn = bk = 16
+        seed = np.uint32(seed)
+        out = am.approx_matmul(x, w, seed, 4, sigma, bm=bm, bn=bn, bk=bk)
+        kt = k + ((-k) % min(bk, k))
+        nt = n + ((-n) % min(bn, n))
+        expect = ref.ref_approx_matmul(x, w, seed, 4, sigma,
+                                       k_total=kt, n_total=nt)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+    def test_sigma_zero_is_exact(self):
+        x = _rand((33, 47), 3)
+        w = _rand((47, 21), 4)
+        out = am.approx_matmul(x, w, 7, 1, 0.0)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-5, atol=1e-5)
+
+    def test_tile_invariance_when_unpadded(self):
+        """Exact-divisor tilings see the same global noise field."""
+        x = _rand((64, 64), 5)
+        w = _rand((64, 64), 6)
+        a = am.approx_matmul(x, w, 9, 2, 0.05, bm=16, bn=16, bk=16)
+        b = am.approx_matmul(x, w, 9, 2, 0.05, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_error_concentration_vs_weight_level(self):
+        """Product-level relative error on the *output* shrinks ~1/sqrt(K)
+        relative to the per-product sigma (DESIGN.md ablation claim)."""
+        k = 256
+        x = jnp.abs(_rand((8, k), 7)) + 0.5   # same-sign products
+        w = jnp.abs(_rand((k, 8), 8)) + 0.5
+        sigma = 0.1
+        exact = x @ w
+        approx = am.approx_matmul(x, w, 3, 1, sigma)
+        rel = float(jnp.abs((approx - exact) / exact).mean())
+        # uncorrelated per-product noise -> output MRE well under sigma
+        assert rel < sigma / 3
+
+    def test_matmul_grad_finite(self):
+        """Padding contributes zero products (documented invariant)."""
+        x = _rand((5, 9), 9)      # forces padding at every tile dim
+        w = _rand((9, 7), 10)
+        out = am.approx_matmul(x, w, 2, 3, 0.2, bm=4, bn=4, bk=4)
+        assert bool(jnp.isfinite(out).all())

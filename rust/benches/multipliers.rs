@@ -1,0 +1,54 @@
+//! Bench: bit-accurate approximate-multiplier designs — error
+//! statistics (the §III DRUM mapping) and simulation throughput of
+//! each design on this host. `cargo bench multipliers`.
+
+use approxmul::benchkit::{throughput, Bench};
+use approxmul::mult::{characterize, standard_designs, GaussianModel, OperandDist};
+use approxmul::report::Table;
+use approxmul::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Error statistics table (uniform16: the DRUM paper's setting).
+    let mut designs = standard_designs();
+    designs.push(Box::new(GaussianModel::new(0.01803, 7)));
+    let mut t = Table::new(&["design", "MRE", "SD", "bias", "MRE/SD"]);
+    for d in &designs {
+        let s = characterize(d.as_ref(), OperandDist::Uniform16, 300_000, 7);
+        t.row(vec![
+            d.name(),
+            format!("{:.3}%", 100.0 * s.mre),
+            format!("{:.3}%", 100.0 * s.sd),
+            format!("{:+.3}%", 100.0 * s.mean_re),
+            format!("{:.3}", s.gaussianity_ratio()),
+        ]);
+    }
+    println!("# multiplier designs: error statistics (uniform16)\n");
+    print!("{}", t.to_markdown());
+    println!("\nDRUM-6 published: MRE 1.47% SD 1.803% (ICCAD'15).\n");
+
+    // 2. Simulation throughput.
+    let mut rng = Xoshiro256::new(1);
+    let ops: Vec<(u32, u32)> =
+        (0..1_000_000).map(|_| (rng.next_u32() | 1, rng.next_u32() | 1)).collect();
+    let mut b = Bench::micro();
+    for d in &designs {
+        let name = format!("{} 1M mults", d.name());
+        b.run(&name, || {
+            let mut acc = 0u64;
+            for &(a, x) in &ops {
+                acc = acc.wrapping_add(d.mul(a, x));
+            }
+            std::hint::black_box(acc);
+        });
+    }
+    println!("# simulation throughput\n");
+    print!("{}", b.report());
+    for s in b.results() {
+        println!(
+            "{:<32} {:>8.1} M mult/s",
+            s.name,
+            throughput(s.median(), 1_000_000) / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Bench: L3 runtime hot path — train-step latency (exact vs
+//! error-injected), eval latency, and the coordinator-side overhead
+//! (batch assembly + literal marshalling) as a fraction of step time.
+//! This is the §Perf baseline for the L3 optimization pass.
+//! `cargo bench runtime_overhead`.
+
+use approxmul::benchkit::{fmt_dur, Bench};
+use approxmul::data::augment::Augment;
+use approxmul::data::batcher::Batcher;
+use approxmul::data::SyntheticCifar;
+use approxmul::runtime::session::StepInputs;
+use approxmul::runtime::{tensor_to_literal, Engine, TrainSession};
+use approxmul::tensor::Tensor;
+
+/// The pre-optimization literal construction (three copies: as_f32,
+/// vec1, reshape) — kept here so the §Perf before/after is measured
+/// in-process rather than remembered.
+fn tensor_to_literal_naive(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let v = t.as_f32()?;
+    let lit = xla::Literal::vec1(&v);
+    Ok(lit.reshape(&dims)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::from_artifacts("artifacts")?;
+
+    // Marshalling A/B on a small-preset-sized parameter set (~0.55M f32).
+    {
+        let tensors: Vec<Tensor> = (0..16)
+            .map(|i| {
+                Tensor::from_f32(&[256, 128], vec![i as f32; 256 * 128]).unwrap()
+            })
+            .collect();
+        let mut b = Bench::micro();
+        b.run("marshal: naive as_f32+vec1+reshape (16x32k f32)", || {
+            for t in &tensors {
+                std::hint::black_box(tensor_to_literal_naive(t).unwrap());
+            }
+        });
+        b.run("marshal: raw untyped_data single copy  (16x32k f32)", || {
+            for t in &tensors {
+                std::hint::black_box(tensor_to_literal(t).unwrap());
+            }
+        });
+        println!("\n# literal marshalling A/B (EXPERIMENTS.md §Perf)\n");
+        print!("{}", b.report());
+    }
+
+    for preset in ["tiny", "small"] {
+        let model = engine.manifest().model(preset)?;
+        let mut ds = SyntheticCifar::for_input(
+            model.input_hw,
+            model.in_ch,
+            model.num_classes,
+            9,
+        )
+        .generate(model.batch * 4);
+        ds.normalize();
+        let mut session = TrainSession::new(&engine, preset, 1)?;
+
+        let mut b = if preset == "small" { Bench::heavy() } else { Bench::micro() };
+
+        // Coordinator-side work only: shuffle + augment + tensor build.
+        b.run(&format!("{preset}: batch assembly"), || {
+            let mut batcher = Batcher::new(&ds, model.batch, 3, 0, Augment::default());
+            let (x, y) = batcher.next().unwrap().unwrap();
+            std::hint::black_box((x.len(), y.len()));
+        });
+
+        // Full step, exact multipliers.
+        let mut batcher = Batcher::new(&ds, model.batch, 3, 0, Augment::none());
+        let (x, y) = batcher.next()?.unwrap();
+        let mut step = 0u32;
+        b.run(&format!("{preset}: train step sigma=0"), || {
+            step += 1;
+            let s = session
+                .step(
+                    x.clone(),
+                    y.clone(),
+                    StepInputs { seed_err: 1, seed_drop: step, sigma: 0.0, lr: 0.01 },
+                )
+                .unwrap();
+            std::hint::black_box(s.loss);
+        });
+
+        // Full step, error-injected (paper case 4).
+        b.run(&format!("{preset}: train step sigma=0.045"), || {
+            step += 1;
+            let s = session
+                .step(
+                    x.clone(),
+                    y.clone(),
+                    StepInputs { seed_err: 1, seed_drop: step, sigma: 0.045, lr: 0.01 },
+                )
+                .unwrap();
+            std::hint::black_box(s.loss);
+        });
+
+        // Eval batch.
+        let mut eds = SyntheticCifar::for_input(
+            model.input_hw,
+            model.in_ch,
+            model.num_classes,
+            10,
+        )
+        .generate(model.eval_batch);
+        eds.normalize();
+        let (ex, ey) = eds.gather_batch(&(0..model.eval_batch).collect::<Vec<_>>())?;
+        b.run(&format!("{preset}: eval batch"), || {
+            let s = session.eval_batch(ex.clone(), ey.clone()).unwrap();
+            std::hint::black_box(s.correct);
+        });
+
+        println!("\n# runtime hot path: {preset}\n");
+        print!("{}", b.report());
+        let results = b.results();
+        let assembly = results[0].median();
+        let exact = results[1].median();
+        println!(
+            "coordinator overhead (assembly/step): {:.2}% ({} / {})",
+            100.0 * assembly.as_secs_f64() / exact.as_secs_f64().max(1e-12),
+            fmt_dur(assembly),
+            fmt_dur(exact),
+        );
+        let inj = results[2].median();
+        println!(
+            "error-injection overhead: {:+.2}% ({} vs {})",
+            100.0 * (inj.as_secs_f64() / exact.as_secs_f64().max(1e-12) - 1.0),
+            fmt_dur(inj),
+            fmt_dur(exact),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Bench harness for **paper Table II**: inference accuracy after
+//! training under simulated approximate-multiplier error, one training
+//! run per error configuration, plus wall-time accounting per case.
+//!
+//! Scaled to the `tiny` preset / synthetic data so the full 9-case
+//! sweep completes in minutes on CPU PJRT; the *shape* of the table
+//! (benign small error, graceful degradation, collapse at MRE≈38%) is
+//! the reproduction target (DESIGN.md §6). `cargo bench table2`.
+
+use approxmul::config::ExperimentConfig;
+use approxmul::coordinator::Sweep;
+use approxmul::error_model::paper_table2_configs;
+use approxmul::report::{diff_pct, pct, Table};
+use approxmul::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let engine = Engine::from_artifacts("artifacts")?;
+    let mut cfg = ExperimentConfig::preset_tiny();
+    cfg.epochs = 8;
+    cfg.train_examples = 1536;
+    cfg.test_examples = 512;
+    cfg.tag = "bench-t2".into();
+
+    let cases = paper_table2_configs();
+    let sweep = Sweep::new(&engine, cfg);
+    let rows = sweep.run(&cases, |id, row| {
+        eprintln!(
+            "case {id}: {} -> {} ({:.1}s)",
+            row.config.label(),
+            pct(row.accuracy),
+            row.wall_secs
+        );
+    })?;
+
+    let mut t = Table::new(&[
+        "Test ID", "MRE", "SD", "acc (ours)", "diff (ours)", "acc (paper)",
+        "diff (paper)", "secs",
+    ]);
+    for r in &rows {
+        let paper = r.paper_accuracy.unwrap_or(0.0);
+        t.row(vec![
+            r.test_id.to_string(),
+            format!("~{:.1}%", 100.0 * r.config.mre()),
+            format!("~{:.1}%", 100.0 * r.config.sigma),
+            pct(r.accuracy),
+            if r.test_id == 0 { "N/A".into() } else { diff_pct(r.diff_from_exact) },
+            pct(paper),
+            if r.test_id == 0 { "N/A".into() } else { diff_pct(paper - 0.936) },
+            format!("{:.1}", r.wall_secs),
+        ]);
+    }
+    println!("\n# Table II reproduction (tiny preset, synthetic data)\n");
+    print!("{}", t.to_markdown());
+    println!(
+        "\nshape holds: {} | total {:.1}s",
+        Sweep::shape_holds(&rows),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

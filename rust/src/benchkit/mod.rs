@@ -1,0 +1,174 @@
+//! In-tree micro/macro benchmark harness (the environment has no
+//! criterion). Used by the `harness = false` bench targets.
+//!
+//! Methodology: warmup iterations, then timed samples; reports mean,
+//! median, p95 and MAD-based outlier count. Deliberately simple, but
+//! honest — each sample is a full closure invocation timed with a
+//! monotonic clock, and the reporter prints enough distribution shape
+//! to spot bimodality.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Sample {
+    fn sorted_nanos(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(|d| d.as_nanos()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: u128 = self.samples.iter().map(|d| d.as_nanos()).sum();
+        Duration::from_nanos((total / self.samples.len().max(1) as u128) as u64)
+    }
+
+    pub fn median(&self) -> Duration {
+        let v = self.sorted_nanos();
+        Duration::from_nanos(v[v.len() / 2] as u64)
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let v = self.sorted_nanos();
+        let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
+        Duration::from_nanos(v[idx] as u64)
+    }
+
+    /// Count of samples further than 5 MADs from the median.
+    pub fn outliers(&self) -> usize {
+        let v = self.sorted_nanos();
+        let med = v[v.len() / 2] as i128;
+        let mut devs: Vec<i128> = v.iter().map(|&x| (x as i128 - med).abs()).collect();
+        devs.sort_unstable();
+        let mad = devs[devs.len() / 2].max(1);
+        v.iter()
+            .filter(|&&x| (x as i128 - med).abs() > 5 * mad)
+            .count()
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample counts.
+pub struct Bench {
+    warmup: usize,
+    samples: usize,
+    results: Vec<Sample>,
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples, results: Vec::new() }
+    }
+
+    /// Quick profile for heavy end-to-end cases.
+    pub fn heavy() -> Self {
+        Bench::new(1, 5)
+    }
+
+    /// Default profile for micro benches.
+    pub fn micro() -> Self {
+        Bench::new(3, 20)
+    }
+
+    /// Time `f` (which should do one unit of work per call).
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        self.results.push(Sample { name: name.to_string(), samples });
+        self.results.last().unwrap()
+    }
+
+    /// Render the standard report table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>9}\n",
+            "benchmark", "median", "mean", "p95", "outliers"
+        ));
+        for s in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>9}\n",
+                s.name,
+                fmt_dur(s.median()),
+                fmt_dur(s.mean()),
+                fmt_dur(s.percentile(95.0)),
+                s.outliers()
+            ));
+        }
+        out
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+/// Human duration (ns/µs/ms/s auto-scaled).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Throughput helper: items/sec given a per-call item count.
+pub fn throughput(d: Duration, items: u64) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::new(1, 5);
+        let mut counter = 0u64;
+        b.run("noop", || counter += 1);
+        assert_eq!(counter, 6); // warmup + samples
+        let r = b.report();
+        assert!(r.contains("noop"));
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let s = Sample {
+            name: "x".into(),
+            samples: (1..=100).map(Duration::from_nanos).collect(),
+        };
+        assert!(s.median() <= s.percentile(95.0));
+        assert_eq!(s.percentile(100.0), Duration::from_nanos(100));
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5 ns");
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let t = throughput(Duration::from_secs(2), 100);
+        assert!((t - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,329 @@
+//! Checkpoint store: CRC-checked binary snapshots of the full training
+//! state (params ++ BN state ++ optimizer momentum).
+//!
+//! The paper's procedures lean on checkpointing twice: Figure 3
+//! ("download weights after certain epochs ... resume from that epoch")
+//! and the Figure-4 hybrid switch-epoch search, which resumes an exact
+//! tail from every candidate epoch of a single approximate run. The
+//! format is self-describing so a checkpoint can be inspected and
+//! restored without the engine.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic "AXMCKPT1" | meta_len u32 | meta json bytes
+//! repeat per tensor: name_len u32 | name | dtype u8 | rank u32 |
+//!                    dims u64[rank] | payload u32[prod(dims)]
+//! crc32 of everything above
+//! ```
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"AXMCKPT1";
+
+/// Checkpoint metadata (JSON header).
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub preset: String,
+    pub epoch: u64,
+    pub step: u64,
+    /// Sigma the run was training with when snapshotted.
+    pub sigma: f64,
+    /// Free-form tag (e.g. "table2-case4").
+    pub tag: String,
+}
+
+impl Meta {
+    fn to_json(&self) -> Value {
+        crate::json::object([
+            ("preset", Value::from(self.preset.as_str())),
+            ("epoch", Value::from(self.epoch as usize)),
+            ("step", Value::from(self.step as usize)),
+            ("sigma", Value::from(self.sigma)),
+            ("tag", Value::from(self.tag.as_str())),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Meta {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            epoch: v.get("epoch")?.as_i64()? as u64,
+            step: v.get("step")?.as_i64()? as u64,
+            sigma: v.get("sigma")?.as_f64()?,
+            tag: v.get("tag")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Serialize a checkpoint to bytes.
+pub fn to_bytes(meta: &Meta, named: &[(String, &Tensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    let meta_bytes = meta.to_json().to_string().into_bytes();
+    out.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&meta_bytes);
+    out.extend_from_slice(&(named.len() as u32).to_le_bytes());
+    for (name, t) in named {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(match t.dtype() {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+        });
+        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &w in t.raw() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse checkpoint bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
+    if bytes.len() < MAGIC.len() + 8 {
+        bail!("checkpoint truncated ({} bytes)", bytes.len());
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        bail!("checkpoint CRC mismatch: stored {stored:#10x}, computed {computed:#10x}");
+    }
+    let mut r = Reader { b: body, pos: 0 };
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let meta_len = r.u32()? as usize;
+    let meta_bytes = r.take(meta_len)?;
+    let meta = Meta::from_json(&Value::parse(std::str::from_utf8(meta_bytes)?)?)?;
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)?.to_string();
+        let dtype = match r.u8()? {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            d => bail!("bad dtype tag {d}"),
+        };
+        let rank = r.u32()? as usize;
+        if rank > 8 {
+            bail!("absurd rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(r.u64()? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let payload = r.take(n * 4)?;
+        let words: Vec<u32> = payload
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let t = match dtype {
+            DType::F32 => Tensor::from_f32(
+                &dims,
+                words.iter().map(|&w| f32::from_bits(w)).collect(),
+            )?,
+            DType::I32 => {
+                Tensor::from_i32(&dims, words.iter().map(|&w| w as i32).collect())?
+            }
+            DType::U32 => Tensor::from_u32(&dims, words)?,
+        };
+        tensors.push((name, t));
+    }
+    if r.pos != body.len() {
+        bail!("trailing bytes in checkpoint");
+    }
+    Ok((meta, tensors))
+}
+
+/// Bounds-checked little-endian cursor over checkpoint bytes.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("checkpoint truncated at offset {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Disk-backed checkpoint store with epoch-indexed naming.
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(Store { dir })
+    }
+
+    pub fn path_for(&self, tag: &str, epoch: u64) -> PathBuf {
+        self.dir.join(format!("{tag}-epoch{epoch:04}.ckpt"))
+    }
+
+    /// Write atomically (tmp + rename).
+    pub fn save(&self, meta: &Meta, named: &[(String, &Tensor)]) -> Result<PathBuf> {
+        let path = self.path_for(&meta.tag, meta.epoch);
+        let tmp = path.with_extension("ckpt.tmp");
+        let bytes = to_bytes(meta, named);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    pub fn load(&self, tag: &str, epoch: u64) -> Result<(Meta, Vec<(String, Tensor)>)> {
+        self.load_path(&self.path_for(tag, epoch))
+    }
+
+    pub fn load_path(&self, path: &Path) -> Result<(Meta, Vec<(String, Tensor)>)> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn exists(&self, tag: &str, epoch: u64) -> bool {
+        self.path_for(tag, epoch).exists()
+    }
+}
+
+/// CRC-32 (IEEE 802.3), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Meta, Vec<(String, Tensor)>) {
+        (
+            Meta {
+                preset: "tiny".into(),
+                epoch: 3,
+                step: 99,
+                sigma: 0.045,
+                tag: "unit".into(),
+            },
+            vec![
+                ("w".into(), Tensor::from_f32(&[2, 2], vec![1., -2., 3., 0.5]).unwrap()),
+                ("y".into(), Tensor::from_i32(&[3], vec![1, -1, 7]).unwrap()),
+                ("s".into(), Tensor::scalar_u32(42)),
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let bytes = to_bytes(&meta, &named);
+        let (m2, t2) = from_bytes(&bytes).unwrap();
+        assert_eq!(m2.preset, "tiny");
+        assert_eq!(m2.epoch, 3);
+        assert_eq!(m2.sigma, 0.045);
+        assert_eq!(t2.len(), 3);
+        assert_eq!(t2[0].1.as_f32().unwrap(), vec![1., -2., 3., 0.5]);
+        assert_eq!(t2[1].1.as_i32().unwrap(), vec![1, -1, 7]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let mut bytes = to_bytes(&meta, &named);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let bytes = to_bytes(&meta, &named);
+        assert!(from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("axm-ckpt-{}", std::process::id()));
+        let store = Store::new(&dir).unwrap();
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        store.save(&meta, &named).unwrap();
+        assert!(store.exists("unit", 3));
+        let (m2, t2) = store.load("unit", 3).unwrap();
+        assert_eq!(m2.step, 99);
+        assert_eq!(t2.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_known_answer() {
+        // CRC32("123456789") = 0xCBF43926 (classic check value).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,169 @@
+//! Minimal CLI argument parser (the environment has no `clap`).
+//!
+//! Grammar: `approxmul <command> [--flag[=value] | --flag value]...
+//! [positional]...`. Flags are declared up front so typos fail with a
+//! helpful message instead of being silently ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A declared flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}={v}")))
+            .transpose()
+    }
+
+    pub fn parse_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{name}={v}")))
+            .transpose()
+    }
+
+    pub fn parse_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{name}={v}")))
+            .transpose()
+    }
+}
+
+/// Parse `argv` (excluding the program/subcommand names) against specs.
+pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for s in specs {
+        if let Some(d) = s.default {
+            args.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let find = |name: &str| -> Result<&FlagSpec> {
+        specs
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("unknown flag --{name}"))
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(raw) = a.strip_prefix("--") {
+            let (name, inline) = match raw.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (raw, None),
+            };
+            let spec = find(name)?;
+            if spec.takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .with_context(|| format!("--{name} needs a value"))?
+                            .clone()
+                    }
+                };
+                args.values.insert(name.to_string(), value);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} takes no value");
+                }
+                args.bools.insert(name.to_string(), true);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a help block for a subcommand.
+pub fn help(command: &str, summary: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("approxmul {command} — {summary}\n\nflags:\n");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        let default = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        out.push_str(&format!("  {arg:<28} {}{default}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "sigma", help: "", takes_value: true, default: Some("0.0") },
+            FlagSpec { name: "fast", help: "", takes_value: false, default: None },
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = parse(&argv(&["--sigma=0.5", "pos1", "--fast", "pos2"]), &specs()).unwrap();
+        assert_eq!(a.get("sigma"), Some("0.5"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let a = parse(&argv(&["--sigma", "0.25"]), &specs()).unwrap();
+        assert_eq!(a.parse_f64("sigma").unwrap(), Some(0.25));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("sigma"), Some("0.0"));
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&argv(&["--bogus"]), &specs()).is_err());
+        assert!(parse(&argv(&["--fast=1"]), &specs()).is_err());
+        assert!(parse(&argv(&["--sigma"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&argv(&["--sigma", "abc"]), &specs()).unwrap();
+        assert!(a.parse_f64("sigma").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the paper's training-control contribution.
+//!
+//! * [`trainer`] — the epoch/step orchestrator (Figure 3's procedure):
+//!   multiplier policy + error-sampling mode + lr schedule are applied
+//!   per step by varying the compiled graph's scalar inputs; evaluation
+//!   always runs exact (the paper removes the error layers for testing).
+//! * [`sweep`] — Table II regeneration: one full training run per
+//!   (MRE, SD) configuration, accuracy vs the exact baseline.
+//! * [`search`] — Figure 4's hybrid switch-epoch search: a single
+//!   approximate run checkpointed every epoch, then exact tails resumed
+//!   from candidate epochs to find the maximal approximate utilization
+//!   that still reaches the target accuracy (Table III).
+
+pub mod search;
+pub mod sweep;
+pub mod trainer;
+
+pub use search::{HybridSearch, SearchOutcome};
+pub use sweep::{Sweep, SweepRow};
+pub use trainer::{TrainOutcome, Trainer};

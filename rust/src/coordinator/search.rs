@@ -1,0 +1,159 @@
+//! The hybrid switch-epoch search (paper Figure 4 / Table III).
+//!
+//! Procedure:
+//! 1. Train the full schedule with approximate multipliers, saving a
+//!    checkpoint after *every* epoch (one approximate run total).
+//! 2. For a candidate switch epoch `k`, restore the epoch-`k`
+//!    checkpoint and train epochs `k..total` with exact multipliers,
+//!    then evaluate. Accuracy is (noisily) non-increasing in `k`, so a
+//!    binary search over `k` finds the largest `k` whose final accuracy
+//!    still reaches the target (baseline − tolerance) — i.e. the
+//!    maximal approximate-multiplier utilization, the paper's Table III
+//!    objective.
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Store;
+use crate::config::{ExperimentConfig, MultiplierPolicy};
+use crate::error_model::ErrorConfig;
+use crate::runtime::Engine;
+
+use super::trainer::{TrainOutcome, Trainer};
+
+/// Result for one error configuration (a Table III row).
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub config: ErrorConfig,
+    /// Epochs trained with the approximate multiplier.
+    pub approx_epochs: u64,
+    /// Exact-multiplier tail length.
+    pub exact_epochs: u64,
+    /// Utilization = approx / total (Table III's last column).
+    pub utilization: f64,
+    /// Accuracy achieved by the selected hybrid schedule.
+    pub accuracy: f64,
+    /// The target it had to reach.
+    pub target: f64,
+    /// Candidate evaluations performed by the search.
+    pub evaluations: u32,
+}
+
+/// The search driver.
+pub struct HybridSearch<'e> {
+    engine: &'e Engine,
+    base: ExperimentConfig,
+    /// Accuracy tolerance below baseline (paper: 0.0002 = 0.02%).
+    pub tolerance: f64,
+}
+
+impl<'e> HybridSearch<'e> {
+    pub fn new(engine: &'e Engine, base: ExperimentConfig) -> Self {
+        HybridSearch { engine, base, tolerance: 0.0002 }
+    }
+
+    /// Train the exact baseline and return its final accuracy.
+    pub fn baseline(&self) -> Result<TrainOutcome> {
+        let mut cfg = self.base.clone();
+        cfg.tag = format!("{}-baseline", self.base.tag);
+        cfg.policy = MultiplierPolicy::Exact;
+        Trainer::new(self.engine, cfg)?.run()
+    }
+
+    /// Phase 1: full approximate run with per-epoch checkpoints.
+    /// Returns (outcome, checkpoint tag).
+    pub fn approx_run(&self, config: ErrorConfig) -> Result<(TrainOutcome, String)> {
+        anyhow::ensure!(!self.base.out_dir.is_empty(), "search needs an out_dir");
+        let tag = format!("{}-approx-s{:.4}", self.base.tag, config.sigma);
+        let mut cfg = self.base.clone();
+        cfg.tag = tag.clone();
+        cfg.policy = MultiplierPolicy::Approximate { error: config };
+        cfg.checkpoint_every = 1;
+        let outcome = Trainer::new(self.engine, cfg)?.run()?;
+        Ok((outcome, tag))
+    }
+
+    /// Phase 2 evaluation of one candidate: resume from the epoch-`k`
+    /// approximate checkpoint and finish exactly.
+    fn try_switch_epoch(
+        &self,
+        config: ErrorConfig,
+        tag: &str,
+        k: u64,
+    ) -> Result<f64> {
+        let store = Store::new(&self.base.out_dir)?;
+        let mut cfg = self.base.clone();
+        cfg.tag = format!("{}-tail{k}", tag);
+        cfg.policy = MultiplierPolicy::Hybrid { error: config, switch_epoch: k };
+        cfg.checkpoint_every = 0;
+        let mut trainer = Trainer::new(self.engine, cfg)?;
+        let (_, tensors) = store
+            .load(tag, k)
+            .with_context(|| format!("loading approx checkpoint epoch {k}"))?;
+        trainer.restore_state(tensors.into_iter().map(|(_, t)| t).collect())?;
+        let outcome = trainer.run_from(k, None)?;
+        Ok(outcome.final_accuracy)
+    }
+
+    /// Full Figure-4 search for one error configuration.
+    ///
+    /// `baseline_acc` is the exact run's final accuracy; `approx_tag`
+    /// and `approx_final` come from [`HybridSearch::approx_run`].
+    pub fn search(
+        &self,
+        config: ErrorConfig,
+        baseline_acc: f64,
+        approx_tag: &str,
+        approx_final: f64,
+    ) -> Result<SearchOutcome> {
+        let total = self.base.epochs;
+        let target = baseline_acc - self.tolerance;
+        let mut evaluations = 0u32;
+
+        // Fully-approximate already reaches target (paper row 1).
+        if approx_final >= target {
+            return Ok(SearchOutcome {
+                config,
+                approx_epochs: total,
+                exact_epochs: 0,
+                utilization: 1.0,
+                accuracy: approx_final,
+                target,
+                evaluations,
+            });
+        }
+
+        // Binary search the largest k in [0, total-1] reaching target.
+        // Invariant: lo is known-good (k=0 is the pure-exact run, which
+        // meets the target by construction up to run noise), hi is
+        // known-bad (k=total misses — checked above).
+        let mut lo = 0u64;
+        let mut hi = total;
+        let mut best_acc = baseline_acc;
+        let mut acc_at = std::collections::BTreeMap::new();
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            let acc = self.try_switch_epoch(config, approx_tag, mid)?;
+            evaluations += 1;
+            acc_at.insert(mid, acc);
+            log::info!(
+                "search sigma={:.3}: switch@{mid} -> acc {:.4} (target {:.4})",
+                config.sigma, acc, target
+            );
+            if acc >= target {
+                lo = mid;
+                best_acc = acc;
+            } else {
+                hi = mid;
+            }
+        }
+        Ok(SearchOutcome {
+            config,
+            approx_epochs: lo,
+            exact_epochs: total - lo,
+            utilization: lo as f64 / total as f64,
+            accuracy: best_acc,
+            target,
+            evaluations,
+        })
+    }
+}

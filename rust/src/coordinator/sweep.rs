@@ -1,0 +1,90 @@
+//! Table II sweep: train once per error configuration, compare final
+//! accuracy to the exact baseline.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, MultiplierPolicy};
+use crate::error_model::ErrorConfig;
+use crate::runtime::Engine;
+
+use super::trainer::Trainer;
+
+/// One sweep row (mirrors Table II's columns).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub test_id: u32,
+    pub config: ErrorConfig,
+    pub accuracy: f64,
+    /// accuracy - baseline accuracy (the paper's "Diff. From Exact").
+    pub diff_from_exact: f64,
+    /// Paper's reported accuracy for this row (percent/100), if any.
+    pub paper_accuracy: Option<f64>,
+    pub epochs_run: u64,
+    pub wall_secs: f64,
+}
+
+/// The sweep runner.
+pub struct Sweep<'e> {
+    engine: &'e Engine,
+    base: ExperimentConfig,
+}
+
+impl<'e> Sweep<'e> {
+    /// `base` supplies everything except the multiplier policy, which
+    /// the sweep overrides per row.
+    pub fn new(engine: &'e Engine, base: ExperimentConfig) -> Self {
+        Sweep { engine, base }
+    }
+
+    /// Run the given error configurations (id, config, paper accuracy).
+    /// The exact baseline must be the first row (id 0 / sigma 0), as in
+    /// the paper's table.
+    pub fn run(
+        &self,
+        cases: &[(u32, ErrorConfig, f64)],
+        mut progress: impl FnMut(u32, &SweepRow),
+    ) -> Result<Vec<SweepRow>> {
+        let mut rows: Vec<SweepRow> = Vec::with_capacity(cases.len());
+        let mut baseline: Option<f64> = None;
+        for &(id, config, paper_acc) in cases {
+            let mut cfg = self.base.clone();
+            cfg.tag = format!("{}-case{id}", self.base.tag);
+            cfg.policy = if config.is_exact() {
+                MultiplierPolicy::Exact
+            } else {
+                MultiplierPolicy::Approximate { error: config }
+            };
+            let mut trainer = Trainer::new(self.engine, cfg)?;
+            let outcome = trainer.run()?;
+            let accuracy = outcome.final_accuracy;
+            let base = *baseline.get_or_insert(accuracy);
+            let row = SweepRow {
+                test_id: id,
+                config,
+                accuracy,
+                diff_from_exact: accuracy - base,
+                paper_accuracy: (paper_acc > 0.0).then_some(paper_acc / 100.0),
+                epochs_run: outcome.epochs_run,
+                wall_secs: outcome.wall_secs,
+            };
+            progress(id, &row);
+            rows.push(row);
+        }
+        Ok(rows)
+    }
+
+    /// Shape checks that define a successful Table II reproduction
+    /// (DESIGN.md §6): small error barely hurts, huge error collapses.
+    pub fn shape_holds(rows: &[SweepRow]) -> bool {
+        let Some(base) = rows.first() else { return false };
+        let small_ok = rows
+            .iter()
+            .filter(|r| r.config.sigma > 0.0 && r.config.sigma <= 0.06)
+            .all(|r| r.accuracy >= base.accuracy - 0.05);
+        let collapse = rows
+            .iter()
+            .filter(|r| r.config.sigma >= 0.48)
+            .all(|r| r.accuracy < base.accuracy - 0.10);
+        small_ok && collapse && rows.len() >= 3
+    }
+}

@@ -1,0 +1,267 @@
+//! The training orchestrator (paper Figure 3).
+//!
+//! Owns: data pipeline, the PJRT train session, the per-epoch loop with
+//! multiplier policy + error sampling + lr schedule, exact-multiplier
+//! evaluation, checkpointing and early stopping. Everything epoch-level
+//! is decided *here*; the compiled graph only sees scalar knobs.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::{Meta, Store};
+use crate::config::{ErrorSampling, ExperimentConfig};
+use crate::data::augment::Augment;
+use crate::data::batcher::{Batcher, EvalBatcher};
+use crate::data::{Dataset, SyntheticCifar};
+use crate::metrics::{EpochRecord, History, Mean};
+use crate::runtime::session::StepInputs;
+use crate::runtime::{Engine, TrainSession};
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub history: History,
+    pub best_accuracy: f64,
+    pub final_accuracy: f64,
+    pub epochs_run: u64,
+    pub wall_secs: f64,
+}
+
+/// Callback invoked after every epoch (progress logging, live plots).
+pub type EpochHook<'h> = dyn FnMut(&EpochRecord) + 'h;
+
+/// The training orchestrator.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: ExperimentConfig,
+    train_ds: Dataset,
+    test_ds: Dataset,
+    session: TrainSession,
+    store: Option<Store>,
+    /// Derived sub-seeds (stable functions of cfg.seed).
+    seed_init: u32,
+    seed_err_base: u32,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer with synthetic data sized for the preset
+    /// (real CIFAR-10 can be supplied via [`Trainer::with_data`]).
+    pub fn new(engine: &'e Engine, cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let model = engine.manifest().model(&cfg.preset)?;
+        let mut gen = SyntheticCifar::for_input(
+            model.input_hw,
+            model.in_ch,
+            model.num_classes,
+            cfg.seed ^ 0xDA7A,
+        );
+        gen.noise = cfg.data_noise as f32;
+        // Test size rounded up to a multiple of the eval batch so the
+        // static-shape eval graph never sees padding.
+        let test_n = cfg.test_examples.div_ceil(model.eval_batch) * model.eval_batch;
+        let mut train_ds = gen.generate(cfg.train_examples + test_n);
+        train_ds.normalize();
+        let (train_ds, test_ds) = train_ds.split_tail(test_n)?;
+        Self::with_data(engine, cfg, train_ds, test_ds)
+    }
+
+    /// Build a trainer over caller-provided datasets.
+    pub fn with_data(
+        engine: &'e Engine,
+        cfg: ExperimentConfig,
+        train_ds: Dataset,
+        test_ds: Dataset,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        train_ds.check()?;
+        test_ds.check()?;
+        let model = engine.manifest().model(&cfg.preset)?;
+        anyhow::ensure!(
+            test_ds.len() % model.eval_batch == 0,
+            "test set ({}) must be a multiple of eval batch ({})",
+            test_ds.len(),
+            model.eval_batch
+        );
+        let seed_init = (cfg.seed as u32) ^ ((cfg.seed >> 32) as u32);
+        let session = TrainSession::new(engine, &cfg.preset, seed_init)
+            .context("creating train session")?;
+        let store = if cfg.out_dir.is_empty() {
+            None
+        } else {
+            Some(Store::new(&cfg.out_dir)?)
+        };
+        Ok(Trainer {
+            engine,
+            cfg,
+            train_ds,
+            test_ds,
+            session,
+            store,
+            seed_init,
+            seed_err_base: seed_init.wrapping_mul(0x9E37_79B9) ^ 0xE44E,
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn session(&self) -> &TrainSession {
+        &self.session
+    }
+
+    /// Restore session state from a checkpoint's tensors (hybrid resume).
+    pub fn restore_state(&mut self, tensors: Vec<crate::tensor::Tensor>) -> Result<()> {
+        self.session.restore(tensors)
+    }
+
+    /// Exact-multiplier accuracy on the held-out set (paper protocol).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mut eb = EvalBatcher::new(&self.test_ds, self.session.eval_batch_size());
+        let mut correct = 0i64;
+        let mut loss_sum = 0f64;
+        let mut total = 0usize;
+        while let Some((x, y, t)) = eb.next()? {
+            debug_assert_eq!(t, self.session.eval_batch_size());
+            let s = self.session.eval_batch(x, y)?;
+            correct += s.correct;
+            loss_sum += s.loss_sum as f64;
+            total += t;
+        }
+        Ok((correct as f64 / total as f64, loss_sum / total as f64))
+    }
+
+    /// Run the configured number of epochs. `resume_from` skips the
+    /// first `n` epochs (data order and seeds replay identically — the
+    /// hybrid search relies on this).
+    pub fn run_from(
+        &mut self,
+        resume_from: u64,
+        mut hook: Option<&mut EpochHook<'_>>,
+    ) -> Result<TrainOutcome> {
+        let started = Instant::now();
+        let mut history = History::default();
+        let mut best = f64::MIN;
+        let mut best_epoch = 0u64;
+        let augment = if self.cfg.augment { Augment::default() } else { Augment::none() };
+        let batch = self.session.batch_size();
+        let steps_per_epoch = (self.train_ds.len() / batch) as u64;
+
+        for epoch in resume_from..self.cfg.epochs {
+            let epoch_started = Instant::now();
+            let sigma = self.cfg.policy.sigma_at(epoch) as f32;
+            let lr = self.cfg.lr.at_epoch(epoch) as f32;
+            let mut loss_mean = Mean::default();
+            let mut acc_mean = Mean::default();
+
+            let mut batcher =
+                Batcher::new(&self.train_ds, batch, self.cfg.seed, epoch, augment);
+            let mut step_in_epoch = 0u64;
+            while let Some((x, y)) = batcher.next()? {
+                let global_step = epoch * steps_per_epoch + step_in_epoch;
+                let seed_err = match self.cfg.sampling {
+                    // Fixed per run: the paper's Figure-3 procedure.
+                    ErrorSampling::FixedPerRun => self.seed_err_base,
+                    // Fresh field each step.
+                    ErrorSampling::PerStep => {
+                        self.seed_err_base.wrapping_add(global_step as u32)
+                    }
+                };
+                let stats = self.session.step(
+                    x,
+                    y,
+                    StepInputs {
+                        seed_err,
+                        seed_drop: (self.seed_init ^ 0xD409).wrapping_add(global_step as u32),
+                        sigma,
+                        lr,
+                    },
+                )?;
+                loss_mean.add(stats.loss as f64);
+                acc_mean.add(stats.accuracy as f64);
+                step_in_epoch += 1;
+            }
+
+            let (test_acc, test_loss) = self.evaluate()?;
+            let record = EpochRecord {
+                epoch,
+                train_loss: loss_mean.get(),
+                train_acc: acc_mean.get(),
+                test_acc,
+                test_loss,
+                sigma: sigma as f64,
+                lr: lr as f64,
+                wall_secs: epoch_started.elapsed().as_secs_f64(),
+            };
+            log::info!(
+                "[{}] epoch {:>3}: loss {:.4} train_acc {:.3} test_acc {:.4} (sigma {:.3}, lr {:.4})",
+                self.cfg.tag, epoch, record.train_loss, record.train_acc,
+                record.test_acc, record.sigma, record.lr
+            );
+            if let Some(h) = hook.as_deref_mut() {
+                h(&record);
+            }
+            history.push(record);
+
+            if test_acc > best {
+                best = test_acc;
+                best_epoch = epoch;
+            }
+
+            if let Some(store) = &self.store {
+                let due = self.cfg.checkpoint_every > 0
+                    && (epoch + 1) % self.cfg.checkpoint_every == 0;
+                if due || epoch + 1 == self.cfg.epochs {
+                    self.save_checkpoint(store, epoch, sigma as f64)?;
+                }
+            }
+
+            if self.cfg.patience > 0 && epoch - best_epoch >= self.cfg.patience {
+                log::info!(
+                    "[{}] early stop at epoch {epoch} (best {best:.4} at {best_epoch})",
+                    self.cfg.tag
+                );
+                break;
+            }
+        }
+
+        let final_accuracy = history.final_test_acc().unwrap_or(0.0);
+        Ok(TrainOutcome {
+            best_accuracy: if history.records.is_empty() { 0.0 } else { best },
+            final_accuracy,
+            epochs_run: history.records.len() as u64,
+            wall_secs: started.elapsed().as_secs_f64(),
+            history,
+        })
+    }
+
+    /// Run all epochs from scratch.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        self.run_from(0, None)
+    }
+
+    fn save_checkpoint(&self, store: &Store, epoch: u64, sigma: f64) -> Result<()> {
+        let model = self.engine.manifest().model(&self.cfg.preset)?;
+        let names: Vec<String> = model
+            .params
+            .iter()
+            .map(|p| format!("param:{}", p.name))
+            .chain(model.state.iter().map(|s| format!("state:{}", s.name)))
+            .chain(model.params.iter().map(|p| format!("opt:{}", p.name)))
+            .collect();
+        let named: Vec<(String, &crate::tensor::Tensor)> = names
+            .into_iter()
+            .zip(self.session.state_tensors())
+            .collect();
+        let meta = Meta {
+            preset: self.cfg.preset.clone(),
+            epoch: epoch + 1, // checkpoint taken *after* this many epochs
+            step: self.session.steps_run(),
+            sigma,
+            tag: self.cfg.tag.clone(),
+        };
+        store.save(&meta, &named)?;
+        Ok(())
+    }
+}

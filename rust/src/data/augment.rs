@@ -1,0 +1,114 @@
+//! Training-time augmentation: pad-and-crop + horizontal flip — the
+//! standard CIFAR recipe the reference Keras implementation [11] uses.
+//! Operates on raw pixel slices so the batcher can apply it per example
+//! without copying the dataset.
+
+use crate::rng::Xoshiro256;
+
+/// Augmentation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Augment {
+    /// Zero-pad margin before random crop (0 disables cropping).
+    pub pad: usize,
+    /// Probability of horizontal flip.
+    pub flip_prob: f64,
+}
+
+impl Default for Augment {
+    fn default() -> Self {
+        Augment { pad: 4, flip_prob: 0.5 }
+    }
+}
+
+impl Augment {
+    pub fn none() -> Self {
+        Augment { pad: 0, flip_prob: 0.0 }
+    }
+
+    /// Apply to one HWC image, writing the augmented pixels to `out`.
+    pub fn apply(
+        &self,
+        img: &[f32],
+        hw: usize,
+        c: usize,
+        rng: &mut Xoshiro256,
+        out: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(img.len(), hw * hw * c);
+        let flip = self.flip_prob > 0.0 && rng.next_f64() < self.flip_prob;
+        let (dy, dx) = if self.pad > 0 {
+            (
+                rng.next_below(2 * self.pad + 1) as isize - self.pad as isize,
+                rng.next_below(2 * self.pad + 1) as isize - self.pad as isize,
+            )
+        } else {
+            (0, 0)
+        };
+        for y in 0..hw {
+            for x in 0..hw {
+                let sx = if flip { hw - 1 - x } else { x };
+                let sy = y as isize + dy;
+                let sx = sx as isize + dx;
+                if sy < 0 || sy >= hw as isize || sx < 0 || sx >= hw as isize {
+                    out.extend(std::iter::repeat(0.0).take(c));
+                } else {
+                    let base = (sy as usize * hw + sx as usize) * c;
+                    out.extend_from_slice(&img[base..base + c]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(hw: usize, c: usize) -> Vec<f32> {
+        (0..hw * hw * c).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let img = ramp(4, 3);
+        let mut rng = Xoshiro256::new(0);
+        let mut out = Vec::new();
+        Augment::none().apply(&img, 4, 3, &mut rng, &mut out);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn output_length_constant() {
+        let img = ramp(8, 3);
+        let mut rng = Xoshiro256::new(1);
+        let aug = Augment::default();
+        for _ in 0..20 {
+            let mut out = Vec::new();
+            aug.apply(&img, 8, 3, &mut rng, &mut out);
+            assert_eq!(out.len(), img.len());
+        }
+    }
+
+    #[test]
+    fn flip_reverses_rows() {
+        let img = ramp(4, 1);
+        let mut rng = Xoshiro256::new(2);
+        let aug = Augment { pad: 0, flip_prob: 1.0 };
+        let mut out = Vec::new();
+        aug.apply(&img, 4, 1, &mut rng, &mut out);
+        assert_eq!(&out[0..4], &[3.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn crop_shifts_are_bounded_and_zero_padded() {
+        let img = vec![1.0f32; 4 * 4];
+        let mut rng = Xoshiro256::new(3);
+        let aug = Augment { pad: 2, flip_prob: 0.0 };
+        for _ in 0..50 {
+            let mut out = Vec::new();
+            aug.apply(&img, 4, 1, &mut rng, &mut out);
+            // all values are 0 (padding) or 1 (original)
+            assert!(out.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+}

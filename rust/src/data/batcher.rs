@@ -1,0 +1,176 @@
+//! Deterministic shuffling batcher with optional augmentation.
+//!
+//! Epoch semantics match the reference Keras setup: reshuffle example
+//! order every epoch (seeded: epoch `e` of run seed `s` always yields
+//! the same order — the checkpoint-resume procedures in the hybrid
+//! search rely on this to replay the exact batch sequence).
+
+use anyhow::Result;
+
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+
+use super::augment::Augment;
+use super::Dataset;
+
+/// Batch iterator over a dataset for one epoch.
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    augment: Augment,
+    rng: Xoshiro256,
+    /// Drop the final short batch (static-shape graphs need full batches).
+    drop_last: bool,
+}
+
+impl<'a> Batcher<'a> {
+    /// Batcher for `epoch` of run `seed`.
+    pub fn new(
+        ds: &'a Dataset,
+        batch: usize,
+        seed: u64,
+        epoch: u64,
+        augment: Augment,
+    ) -> Self {
+        let mut rng = Xoshiro256::new(seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, order, batch, cursor: 0, augment, rng, drop_last: true }
+    }
+
+    /// Number of full batches this epoch will yield.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.len() / self.batch
+    }
+
+    /// Next `[batch, hw, hw, c]` / `[batch]` pair, or `None` at epoch end.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Result<Option<(Tensor, Tensor)>> {
+        let remaining = self.order.len() - self.cursor;
+        if remaining < self.batch && (self.drop_last || remaining == 0) {
+            return Ok(None);
+        }
+        let take = remaining.min(self.batch);
+        let idx = &self.order[self.cursor..self.cursor + take];
+        self.cursor += take;
+
+        let e = self.ds.image_elems();
+        let mut pixels = Vec::with_capacity(take * e);
+        let mut labels = Vec::with_capacity(take);
+        for &i in idx {
+            self.augment.apply(
+                self.ds.image(i),
+                self.ds.hw,
+                self.ds.channels,
+                &mut self.rng,
+                &mut pixels,
+            );
+            labels.push(self.ds.labels[i]);
+        }
+        let x = Tensor::from_f32(
+            &[take, self.ds.hw, self.ds.hw, self.ds.channels],
+            pixels,
+        )?;
+        let y = Tensor::from_i32(&[take], labels)?;
+        Ok(Some((x, y)))
+    }
+}
+
+/// Iterate a full dataset in fixed-size eval batches, padding the last
+/// batch by repeating example 0 (the pad contribution is subtracted by
+/// the caller via the returned true-count).
+pub struct EvalBatcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> EvalBatcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
+        EvalBatcher { ds, batch, cursor: 0 }
+    }
+
+    /// Next `(x, y, true_count)`: `true_count < batch` on the final padded
+    /// batch so metrics can ignore padding.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Result<Option<(Tensor, Tensor, usize)>> {
+        if self.cursor >= self.ds.len() {
+            return Ok(None);
+        }
+        let take = (self.ds.len() - self.cursor).min(self.batch);
+        let mut idx: Vec<usize> = (self.cursor..self.cursor + take).collect();
+        idx.resize(self.batch, 0); // pad with example 0
+        self.cursor += take;
+        let (x, y) = self.ds.gather_batch(&idx)?;
+        Ok(Some((x, y, take)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCifar;
+
+    fn ds() -> Dataset {
+        SyntheticCifar::for_input(8, 3, 10, 1).generate(50)
+    }
+
+    #[test]
+    fn yields_full_batches_only() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, 16, 7, 0, Augment::none());
+        let mut count = 0;
+        while let Some((x, y)) = b.next().unwrap() {
+            assert_eq!(x.shape(), &[16, 8, 8, 3]);
+            assert_eq!(y.shape(), &[16]);
+            count += 1;
+        }
+        assert_eq!(count, 3); // 50/16
+        assert_eq!(b.batches_per_epoch(), 3);
+    }
+
+    #[test]
+    fn epoch_reshuffles_deterministically() {
+        let ds = ds();
+        let first = |epoch| {
+            let mut b = Batcher::new(&ds, 16, 7, epoch, Augment::none());
+            b.next().unwrap().unwrap().1.as_i32().unwrap()
+        };
+        assert_eq!(first(0), first(0));
+        assert_ne!(first(0), first(1));
+    }
+
+    #[test]
+    fn covers_every_example_once() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, 10, 3, 2, Augment::none());
+        let mut seen = vec![0u32; ds.len()];
+        // Recover coverage through labels is ambiguous; instead check the
+        // internal order is a permutation by consuming all batches.
+        let mut total = 0;
+        while let Some((_, y)) = b.next().unwrap() {
+            total += y.len();
+        }
+        assert_eq!(total, 50);
+        // order field covered by construction (shuffle is a permutation);
+        // see rng tests.
+        let _ = &mut seen;
+    }
+
+    #[test]
+    fn eval_batcher_pads_final() {
+        let ds = ds();
+        let mut b = EvalBatcher::new(&ds, 16);
+        let mut trues = 0;
+        let mut batches = 0;
+        while let Some((x, _, t)) = b.next().unwrap() {
+            assert_eq!(x.shape()[0], 16);
+            trues += t;
+            batches += 1;
+        }
+        assert_eq!(trues, 50);
+        assert_eq!(batches, 4); // ceil(50/16)
+    }
+}

@@ -1,0 +1,135 @@
+//! CIFAR-10 binary-format loader (`data_batch_*.bin` / `test_batch.bin`).
+//!
+//! Format (cs.toronto.edu/~kriz/cifar.html): each record is 1 label byte
+//! followed by 3072 pixel bytes in CHW plane order (1024 R, 1024 G,
+//! 1024 B), 10000 records per file. We convert to NHWC f32 in [0, 1].
+//!
+//! The sandbox cannot download the dataset; when a copy exists at
+//! `data/cifar-10-batches-bin` (or a caller-supplied path) the loaders
+//! below are used by the e2e example instead of the synthetic surrogate
+//! — the rest of the pipeline is identical.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+const RECORD: usize = 1 + 3072;
+const HW: usize = 32;
+const CH: usize = 3;
+
+/// Parse one CIFAR-10 binary file's bytes.
+pub fn parse_bin(bytes: &[u8]) -> Result<Dataset> {
+    if bytes.is_empty() || bytes.len() % RECORD != 0 {
+        bail!(
+            "CIFAR bin size {} is not a multiple of record size {RECORD}",
+            bytes.len()
+        );
+    }
+    let n = bytes.len() / RECORD;
+    let mut images = Vec::with_capacity(n * HW * HW * CH);
+    let mut labels = Vec::with_capacity(n);
+    for rec in bytes.chunks_exact(RECORD) {
+        let label = rec[0];
+        if label > 9 {
+            bail!("CIFAR label {label} out of range");
+        }
+        labels.push(label as i32);
+        let planes = &rec[1..];
+        // CHW planes -> HWC interleave.
+        for y in 0..HW {
+            for x in 0..HW {
+                for c in 0..CH {
+                    let v = planes[c * HW * HW + y * HW + x];
+                    images.push(v as f32 / 255.0);
+                }
+            }
+        }
+    }
+    let ds = Dataset { images, labels, hw: HW, channels: CH, num_classes: 10 };
+    ds.check()?;
+    Ok(ds)
+}
+
+/// Load and concatenate a set of batch files.
+pub fn load_files(paths: &[impl AsRef<Path>]) -> Result<Dataset> {
+    let mut all: Option<Dataset> = None;
+    for p in paths {
+        let bytes = std::fs::read(p.as_ref())
+            .with_context(|| format!("reading {}", p.as_ref().display()))?;
+        let ds = parse_bin(&bytes)
+            .with_context(|| format!("parsing {}", p.as_ref().display()))?;
+        all = Some(match all {
+            None => ds,
+            Some(mut acc) => {
+                acc.images.extend(ds.images);
+                acc.labels.extend(ds.labels);
+                acc
+            }
+        });
+    }
+    all.context("no CIFAR files given")
+}
+
+/// Standard train/test split from a `cifar-10-batches-bin` directory,
+/// or `None` if the directory is absent.
+pub fn load_standard(dir: impl AsRef<Path>) -> Result<Option<(Dataset, Dataset)>> {
+    let dir = dir.as_ref();
+    if !dir.join("test_batch.bin").exists() {
+        return Ok(None);
+    }
+    let train_files: Vec<_> =
+        (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect();
+    let train = load_files(&train_files)?;
+    let test = load_files(&[dir.join("test_batch.bin")])?;
+    Ok(Some((train, test)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_record(label: u8, fill: u8) -> Vec<u8> {
+        let mut rec = vec![label];
+        rec.extend(std::iter::repeat(fill).take(3072));
+        rec
+    }
+
+    #[test]
+    fn parses_synthetic_records() {
+        let mut bytes = fake_record(3, 128);
+        bytes.extend(fake_record(9, 255));
+        let ds = parse_bin(&bytes).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.labels, vec![3, 9]);
+        assert!((ds.image(0)[0] - 128.0 / 255.0).abs() < 1e-6);
+        assert_eq!(ds.image(1)[0], 1.0);
+    }
+
+    #[test]
+    fn plane_interleave_is_hwc() {
+        // R plane = 10, G = 20, B = 30: every pixel must be [r,g,b].
+        let mut rec = vec![0u8];
+        rec.extend(std::iter::repeat(10).take(1024));
+        rec.extend(std::iter::repeat(20).take(1024));
+        rec.extend(std::iter::repeat(30).take(1024));
+        let ds = parse_bin(&rec).unwrap();
+        let px = &ds.image(0)[..3];
+        assert!((px[0] - 10.0 / 255.0).abs() < 1e-6);
+        assert!((px[1] - 20.0 / 255.0).abs() < 1e-6);
+        assert!((px[2] - 30.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse_bin(&[0u8; 100]).is_err());
+        let rec = fake_record(12, 0);
+        assert!(parse_bin(&rec).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_none() {
+        assert!(load_standard("/nonexistent/path").unwrap().is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! Data pipeline: CIFAR-10 (binary format) loader, a synthetic
+//! CIFAR-surrogate generator (no network in this environment — see
+//! DESIGN.md §5), augmentation, normalization and a deterministic
+//! shuffling batcher.
+//!
+//! Layout convention matches the compiled graphs: images are NHWC f32,
+//! labels i32 class ids.
+
+pub mod augment;
+pub mod batcher;
+pub mod cifar;
+pub mod synthetic;
+
+pub use batcher::Batcher;
+pub use synthetic::SyntheticCifar;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// An in-memory labelled image dataset (NHWC f32, i32 labels).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n * hw * hw * c` pixels, already normalized.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub hw: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    /// Validate internal consistency.
+    pub fn check(&self) -> Result<()> {
+        if self.images.len() != self.len() * self.image_elems() {
+            bail!(
+                "dataset: {} pixels for {} images of {} elems",
+                self.images.len(),
+                self.len(),
+                self.image_elems()
+            );
+        }
+        if let Some(&bad) = self
+            .labels
+            .iter()
+            .find(|&&l| l < 0 || l as usize >= self.num_classes)
+        {
+            bail!("dataset: label {bad} out of range 0..{}", self.num_classes);
+        }
+        Ok(())
+    }
+
+    /// Slice of one image's pixels.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let e = self.image_elems();
+        &self.images[i * e..(i + 1) * e]
+    }
+
+    /// Assemble an `[n, hw, hw, c]` batch tensor from example indices
+    /// (optionally augmented by the caller beforehand).
+    pub fn gather_batch(&self, idx: &[usize]) -> Result<(Tensor, Tensor)> {
+        let e = self.image_elems();
+        let mut pixels = Vec::with_capacity(idx.len() * e);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            if i >= self.len() {
+                bail!("batch index {i} out of range {}", self.len());
+            }
+            pixels.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        let x = Tensor::from_f32(&[idx.len(), self.hw, self.hw, self.channels], pixels)?;
+        let y = Tensor::from_i32(&[idx.len()], labels)?;
+        Ok((x, y))
+    }
+
+    /// Per-channel mean/std normalization in place (the paper's "input
+    /// normalization"). Returns the (mean, std) per channel.
+    pub fn normalize(&mut self) -> Vec<(f32, f32)> {
+        let c = self.channels;
+        let mut stats = Vec::with_capacity(c);
+        for ch in 0..c {
+            let vals: Vec<f32> = self
+                .images
+                .iter()
+                .skip(ch)
+                .step_by(c)
+                .copied()
+                .collect();
+            let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f32>()
+                / vals.len() as f32;
+            let std = var.sqrt().max(1e-6);
+            stats.push((mean, std));
+            for (j, v) in self.images.iter_mut().enumerate() {
+                if j % c == ch {
+                    *v = (*v - mean) / std;
+                }
+            }
+        }
+        stats
+    }
+
+    /// Copy out the contiguous range `[start, start + n)` as a new
+    /// dataset (round-based continual-learning streams use this).
+    pub fn slice(&self, start: usize, n: usize) -> Result<Dataset> {
+        if start + n > self.len() {
+            bail!("slice {start}..{} exceeds {} examples", start + n, self.len());
+        }
+        let e = self.image_elems();
+        Ok(Dataset {
+            images: self.images[start * e..(start + n) * e].to_vec(),
+            labels: self.labels[start..start + n].to_vec(),
+            hw: self.hw,
+            channels: self.channels,
+            num_classes: self.num_classes,
+        })
+    }
+
+    /// Split off the last `n` examples as a held-out set.
+    pub fn split_tail(mut self, n: usize) -> Result<(Dataset, Dataset)> {
+        if n >= self.len() {
+            bail!("cannot split {n} from {} examples", self.len());
+        }
+        let keep = self.len() - n;
+        let e = self.image_elems();
+        let tail = Dataset {
+            images: self.images.split_off(keep * e),
+            labels: self.labels.split_off(keep),
+            hw: self.hw,
+            channels: self.channels,
+            num_classes: self.num_classes,
+        };
+        Ok((self, tail))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ds() -> Dataset {
+        Dataset {
+            images: (0..2 * 2 * 2 * 3).map(|i| i as f32).collect(),
+            labels: vec![0, 1],
+            hw: 2,
+            channels: 3,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn check_catches_bad_labels() {
+        let mut ds = tiny_ds();
+        assert!(ds.check().is_ok());
+        ds.labels[0] = 5;
+        assert!(ds.check().is_err());
+    }
+
+    #[test]
+    fn gather_batch_shapes() {
+        let ds = tiny_ds();
+        let (x, y) = ds.gather_batch(&[1, 0]).unwrap();
+        assert_eq!(x.shape(), &[2, 2, 2, 3]);
+        assert_eq!(y.as_i32().unwrap(), vec![1, 0]);
+        assert!(ds.gather_batch(&[7]).is_err());
+    }
+
+    #[test]
+    fn normalize_zero_means() {
+        let mut ds = tiny_ds();
+        ds.normalize();
+        for ch in 0..3 {
+            let vals: Vec<f32> = ds.images.iter().skip(ch).step_by(3).copied().collect();
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn split_tail_partitions() {
+        let ds = tiny_ds();
+        let (a, b) = ds.split_tail(1).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.labels, vec![1]);
+    }
+}

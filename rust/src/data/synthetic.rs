@@ -1,0 +1,199 @@
+//! Synthetic CIFAR surrogate.
+//!
+//! The sandbox has no network access, so CIFAR-10 itself cannot be
+//! downloaded; `data/cifar.rs` loads the real binary format when a copy
+//! exists on disk, and this generator provides a drop-in surrogate
+//! otherwise (DESIGN.md §5).
+//!
+//! Construction: each class gets a smooth random "prototype" image
+//! (low-frequency mixture of 2-D cosine modes, so conv filters have
+//! real spatial structure to learn) plus per-example elastic intensity
+//! jitter and pixel noise. Difficulty is controlled by the noise/signal
+//! ratio; the defaults make the `small` preset reach high accuracy in a
+//! few epochs while keeping class overlap non-trivial, which is what
+//! the Table II/III shape reproduction needs (an accuracy metric that
+//! *can* be damaged by multiplier error).
+
+use crate::rng::Xoshiro256;
+
+use super::Dataset;
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SyntheticCifar {
+    pub hw: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    /// Number of cosine modes per prototype.
+    pub modes: usize,
+    /// Additive pixel-noise SD relative to signal SD (~difficulty).
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for SyntheticCifar {
+    fn default() -> Self {
+        SyntheticCifar {
+            hw: 32,
+            channels: 3,
+            num_classes: 10,
+            modes: 4,
+            noise: 0.6,
+            seed: 0xC1FA_5EED,
+        }
+    }
+}
+
+impl SyntheticCifar {
+    /// CIFAR-shaped surrogate for a given model input size.
+    pub fn for_input(hw: usize, channels: usize, num_classes: usize, seed: u64) -> Self {
+        SyntheticCifar { hw, channels, num_classes, seed, ..Default::default() }
+    }
+
+    /// Class prototypes: smooth per-channel fields in [-1, 1].
+    fn prototypes(&self, rng: &mut Xoshiro256) -> Vec<Vec<f32>> {
+        let e = self.hw * self.hw * self.channels;
+        (0..self.num_classes)
+            .map(|_| {
+                let mut proto = vec![0f32; e];
+                for _ in 0..self.modes {
+                    // Random 2-D cosine mode with per-channel phase.
+                    let fx = 0.5 + 2.5 * rng.next_f32();
+                    let fy = 0.5 + 2.5 * rng.next_f32();
+                    let phase_xy = std::f32::consts::TAU * rng.next_f32();
+                    let amp = 0.4 + 0.6 * rng.next_f32();
+                    let chphase: Vec<f32> = (0..self.channels)
+                        .map(|_| std::f32::consts::TAU * rng.next_f32())
+                        .collect();
+                    for y in 0..self.hw {
+                        for x in 0..self.hw {
+                            let t = fx * x as f32 / self.hw as f32
+                                + fy * y as f32 / self.hw as f32;
+                            for c in 0..self.channels {
+                                let v = amp
+                                    * (std::f32::consts::TAU * t + phase_xy + chphase[c])
+                                        .cos();
+                                proto[(y * self.hw + x) * self.channels + c] += v;
+                            }
+                        }
+                    }
+                }
+                proto
+            })
+            .collect()
+    }
+
+    /// Generate `n` labelled examples (balanced classes, shuffled).
+    pub fn generate(&self, n: usize) -> Dataset {
+        let mut rng = Xoshiro256::new(self.seed);
+        let protos = self.prototypes(&mut rng);
+        let e = self.hw * self.hw * self.channels;
+
+        let mut labels: Vec<i32> =
+            (0..n).map(|i| (i % self.num_classes) as i32).collect();
+        rng.shuffle(&mut labels);
+
+        let mut images = Vec::with_capacity(n * e);
+        for &label in &labels {
+            let proto = &protos[label as usize];
+            // Per-example global gain/offset jitter + pixel noise.
+            let gain = 0.8 + 0.4 * rng.next_f32();
+            let offset = 0.2 * (rng.next_f32() - 0.5);
+            for &p in proto {
+                let noise = self.noise * rng.next_normal() as f32;
+                images.push(gain * p + offset + noise);
+            }
+        }
+        let ds = Dataset {
+            images,
+            labels,
+            hw: self.hw,
+            channels: self.channels,
+            num_classes: self.num_classes,
+        };
+        debug_assert!(ds.check().is_ok());
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let g = SyntheticCifar { hw: 8, num_classes: 10, ..Default::default() };
+        let ds = g.generate(100);
+        ds.check().unwrap();
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.image_elems(), 8 * 8 * 3);
+        let mut counts = [0; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = SyntheticCifar { hw: 8, seed: 7, ..Default::default() };
+        let a = g.generate(16);
+        let b = g.generate(16);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-prototype classification on clean prototypes must beat
+        // chance by a wide margin: the task carries real signal.
+        let g = SyntheticCifar { hw: 8, noise: 0.4, seed: 3, ..Default::default() };
+        let ds = g.generate(400);
+        // Use class-mean images as prototypes.
+        let e = ds.image_elems();
+        let mut means = vec![vec![0f32; e]; 10];
+        let mut counts = vec![0f32; 10];
+        for i in 0..ds.len() {
+            let l = ds.labels[i] as usize;
+            counts[l] += 1.0;
+            for (m, &p) in means[l].iter_mut().zip(ds.image(i)) {
+                *m += p;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let img = ds.image(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        means[a].iter().zip(img).map(|(m, p)| (m - p).powi(2)).sum();
+                    let db: f32 =
+                        means[b].iter().zip(img).map(|(m, p)| (m - p).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.6, "nearest-mean accuracy only {acc}");
+    }
+
+    #[test]
+    fn noise_controls_difficulty() {
+        let clean = SyntheticCifar { hw: 8, noise: 0.05, seed: 5, ..Default::default() };
+        let noisy = SyntheticCifar { hw: 8, noise: 2.5, seed: 5, ..Default::default() };
+        let var = |ds: &Dataset| {
+            let m: f32 = ds.images.iter().sum::<f32>() / ds.images.len() as f32;
+            ds.images.iter().map(|v| (v - m).powi(2)).sum::<f32>()
+                / ds.images.len() as f32
+        };
+        assert!(var(&noisy.generate(64)) > var(&clean.generate(64)));
+    }
+}

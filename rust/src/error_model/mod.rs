@@ -1,0 +1,208 @@
+//! The paper's Gaussian approximate-multiplier error model, host side.
+//!
+//! Mirrors `python/compile/error_model.py`: SD (`sigma`) is the
+//! canonical knob, `MRE = sigma * sqrt(2/pi)`. This module also
+//! regenerates error matrices bit-identically to what the compiled
+//! graphs inject (same Threefry streams), which powers the Figure-2
+//! histogram harness and the model-vs-bit-accurate comparisons.
+
+use crate::rng::threefry::counter_normal;
+use crate::HALF_NORMAL_MEAN;
+
+/// Convert Gaussian sigma (the paper's "SD") to MRE.
+pub fn sigma_to_mre(sigma: f64) -> f64 {
+    sigma * HALF_NORMAL_MEAN
+}
+
+/// Convert MRE to the Gaussian sigma realizing it.
+pub fn mre_to_sigma(mre: f64) -> f64 {
+    mre / HALF_NORMAL_MEAN
+}
+
+/// One error configuration (a Table II column pair).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorConfig {
+    /// Gaussian SD of the relative error (fraction, not percent).
+    pub sigma: f64,
+}
+
+impl ErrorConfig {
+    pub fn from_sigma(sigma: f64) -> Self {
+        ErrorConfig { sigma }
+    }
+
+    pub fn from_mre(mre: f64) -> Self {
+        ErrorConfig { sigma: mre_to_sigma(mre) }
+    }
+
+    pub fn exact() -> Self {
+        ErrorConfig { sigma: 0.0 }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.sigma == 0.0
+    }
+
+    pub fn mre(&self) -> f64 {
+        sigma_to_mre(self.sigma)
+    }
+
+    /// Display label like "MRE ~1.4% (SD 1.8%)".
+    pub fn label(&self) -> String {
+        if self.is_exact() {
+            "exact".to_string()
+        } else {
+            format!("MRE ~{:.2}% (SD {:.2}%)", 100.0 * self.mre(), 100.0 * self.sigma)
+        }
+    }
+}
+
+/// The paper's Table II error configurations (id, config, paper accuracy %).
+pub fn paper_table2_configs() -> Vec<(u32, ErrorConfig, f64)> {
+    [
+        (0, 0.000, 93.60),
+        (1, 0.015, 93.59),
+        (2, 0.018, 93.53),
+        (3, 0.030, 93.35),
+        (4, 0.045, 93.23),
+        (5, 0.060, 93.11),
+        (6, 0.120, 93.00),
+        (7, 0.240, 92.23),
+        (8, 0.480, 65.65),
+    ]
+    .into_iter()
+    .map(|(id, sd, acc)| (id, ErrorConfig::from_sigma(sd), acc))
+    .collect()
+}
+
+/// An error matrix for one layer — the exact field the compiled graph
+/// multiplies into that layer's weights for `(seed, stream=layer_id)`.
+#[derive(Debug, Clone)]
+pub struct ErrorMatrix {
+    /// The multiplicative factors `1 + sigma*eps` (len = weight count).
+    pub factors: Vec<f32>,
+    pub sigma: f64,
+}
+
+impl ErrorMatrix {
+    /// Generate the matrix the graph will inject for this layer.
+    pub fn generate(seed: u32, layer_stream: u32, sigma: f64, n: usize) -> Self {
+        let eps = counter_normal(seed, layer_stream, 0, n);
+        ErrorMatrix {
+            factors: eps.iter().map(|&e| 1.0 + (sigma as f32) * e).collect(),
+            sigma,
+        }
+    }
+
+    /// Measured MRE of the realized matrix (mean |factor - 1|).
+    pub fn measured_mre(&self) -> f64 {
+        if self.factors.is_empty() {
+            return 0.0;
+        }
+        self.factors.iter().map(|&f| (f as f64 - 1.0).abs()).sum::<f64>()
+            / self.factors.len() as f64
+    }
+
+    /// Measured SD of the realized relative error.
+    pub fn measured_sd(&self) -> f64 {
+        if self.factors.is_empty() {
+            return 0.0;
+        }
+        let mean: f64 = self.factors.iter().map(|&f| f as f64 - 1.0).sum::<f64>()
+            / self.factors.len() as f64;
+        (self
+            .factors
+            .iter()
+            .map(|&f| (f as f64 - 1.0 - mean).powi(2))
+            .sum::<f64>()
+            / self.factors.len() as f64)
+            .sqrt()
+    }
+
+    /// Histogram of the relative errors over `bins` equal-width bins in
+    /// `[lo, hi]` — the Figure-2 reproduction. Returns (bin_edges_lo,
+    /// counts); out-of-range samples clamp into the edge bins.
+    pub fn histogram(&self, bins: usize, lo: f64, hi: f64) -> (Vec<f64>, Vec<u64>) {
+        assert!(bins >= 2 && hi > lo);
+        let width = (hi - lo) / bins as f64;
+        let mut counts = vec![0u64; bins];
+        for &f in &self.factors {
+            let re = f as f64 - 1.0;
+            let idx = (((re - lo) / width) as isize).clamp(0, bins as isize - 1);
+            counts[idx as usize] += 1;
+        }
+        let edges = (0..bins).map(|i| lo + i as f64 * width).collect();
+        (edges, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        for mre in [0.012, 0.036, 0.382] {
+            assert!((sigma_to_mre(mre_to_sigma(mre)) - mre).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_pairs_satisfy_identity() {
+        // Every Table II (MRE, SD) pair: MRE = SD * sqrt(2/pi) within
+        // the paper's "~" rounding.
+        let mres = [0.012, 0.014, 0.024, 0.036, 0.048, 0.096, 0.192, 0.382];
+        let sds = [0.015, 0.018, 0.030, 0.045, 0.060, 0.120, 0.240, 0.480];
+        for (mre, sd) in mres.iter().zip(&sds) {
+            let predicted = sigma_to_mre(*sd);
+            assert!(
+                (predicted - mre).abs() / mre < 0.05,
+                "MRE {mre} vs predicted {predicted}"
+            );
+        }
+    }
+
+    #[test]
+    fn generated_matrix_hits_target_stats() {
+        let m = ErrorMatrix::generate(42, 3, 0.045, 200_000);
+        assert!((m.measured_sd() - 0.045).abs() < 0.0005, "sd {}", m.measured_sd());
+        assert!(
+            (m.measured_mre() - sigma_to_mre(0.045)).abs() < 0.0005,
+            "mre {}",
+            m.measured_mre()
+        );
+    }
+
+    #[test]
+    fn histogram_is_centered_and_complete() {
+        let m = ErrorMatrix::generate(7, 1, 0.045, 100_000);
+        let (edges, counts) = m.histogram(500, -0.2, 0.2);
+        assert_eq!(edges.len(), 500);
+        assert_eq!(counts.iter().sum::<u64>(), 100_000);
+        // Peak near zero error.
+        let peak = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap()
+            .0;
+        let peak_center = edges[peak] + 0.2 / 500.0;
+        assert!(peak_center.abs() < 0.01, "peak at {peak_center}");
+    }
+
+    #[test]
+    fn exact_config() {
+        let c = ErrorConfig::exact();
+        assert!(c.is_exact());
+        assert_eq!(c.mre(), 0.0);
+        assert_eq!(c.label(), "exact");
+    }
+
+    #[test]
+    fn table2_configs_shape() {
+        let t = paper_table2_configs();
+        assert_eq!(t.len(), 9);
+        assert!(t[0].1.is_exact());
+        assert!((t[4].1.mre() - 0.0359).abs() < 0.001); // ~3.6%
+    }
+}

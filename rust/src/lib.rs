@@ -1,0 +1,62 @@
+//! # approxmul — Deep Learning Training with Simulated Approximate Multipliers
+//!
+//! Production reproduction of Hammad, El-Sankary & Gu (IEEE ROBIO 2019,
+//! DOI 10.1109/ROBIO49542.2019.8961780): CNN training under simulated
+//! approximate-multiplier error, plus the paper's hybrid
+//! approximate-then-exact training methodology.
+//!
+//! ## Architecture (three layers, Python never on the hot path)
+//!
+//! * **L1 (Pallas, build time)** — `python/compile/kernels/`: the
+//!   approximate-multiplier error kernels (weight-level and per-product).
+//! * **L2 (JAX, build time)** — `python/compile/model.py`: VGG-style CNN
+//!   fwd/bwd + SGD, AOT-lowered to HLO text artifacts by `make artifacts`.
+//! * **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]) and
+//!   owns everything else: the training orchestrator and hybrid switch
+//!   controller ([`coordinator`]), bit-accurate approximate-multiplier
+//!   simulations ([`mult`]), the hardware cost model ([`costmodel`]),
+//!   data pipeline ([`data`]), checkpointing ([`checkpoint`]), metrics
+//!   ([`metrics`]) and reporting ([`report`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use approxmul::config::ExperimentConfig;
+//! use approxmul::coordinator::Trainer;
+//! use approxmul::runtime::Engine;
+//!
+//! let engine = Engine::from_artifacts("artifacts")?;
+//! let cfg = ExperimentConfig::preset_small();
+//! let mut trainer = Trainer::new(&engine, cfg)?;
+//! let result = trainer.run()?;
+//! println!("final accuracy {:.2}%", 100.0 * result.best_accuracy);
+//! # anyhow::Result::<()>::Ok(())
+//! ```
+//!
+//! The `approxmul` binary exposes the paper's experiments as subcommands
+//! (`table2`, `table3`, `fig2`, `arch`, `characterize`, `costmodel`,
+//! `train`); see `approxmul --help`.
+
+pub mod benchkit;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod error_model;
+pub mod json;
+pub mod metrics;
+pub mod mult;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;
+
+/// `MRE = SD * sqrt(2/pi)` — the identity every (MRE, SD) pair in the
+/// paper satisfies; `error_model` and the Python side share it.
+pub const HALF_NORMAL_MEAN: f64 = 0.797_884_560_802_865_4;

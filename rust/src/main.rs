@@ -1,0 +1,708 @@
+//! `approxmul` — CLI for the ROBIO'19 reproduction.
+//!
+//! Subcommands map one-to-one to the paper's artifacts (DESIGN.md §3):
+//! `table2` (accuracy vs multiplier error), `table3` (hybrid switch
+//! search), `fig2` (error-matrix histogram), `arch` (Figure-1 layer
+//! table), `characterize` (bit-accurate designs vs the Gaussian model),
+//! `costmodel` (§III hardware-gain mapping), plus `train` and `info`.
+
+use std::io::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use approxmul::cli::{self, Args, FlagSpec};
+use approxmul::config::{ErrorSampling, ExperimentConfig, LrSchedule, MultiplierPolicy};
+use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
+use approxmul::costmodel::{cited_designs, CostModel};
+use approxmul::error_model::{paper_table2_configs, ErrorConfig, ErrorMatrix};
+use approxmul::mult::{characterize, standard_designs, OperandDist};
+use approxmul::report::{ascii_histogram, diff_pct, histogram_csv, pct, Table};
+use approxmul::runtime::Engine;
+
+fn main() {
+    init_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(command) = argv.first() else {
+        print!("{}", top_help());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match command.as_str() {
+        "info" => cmd_info(rest),
+        "train" => cmd_train(rest),
+        "table2" => cmd_table2(rest),
+        "table3" => cmd_table3(rest),
+        "fig2" => cmd_fig2(rest),
+        "arch" => cmd_arch(rest),
+        "characterize" => cmd_characterize(rest),
+        "costmodel" => cmd_costmodel(rest),
+        "validate" => cmd_validate(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", top_help());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `approxmul help`"),
+    }
+}
+
+fn top_help() -> String {
+    "approxmul — Deep Learning Training with Simulated Approximate Multipliers \
+     (ROBIO'19 reproduction)\n\ncommands:\n  \
+     info          manifest + artifact summary\n  \
+     train         run one training experiment\n  \
+     table2        accuracy vs multiplier error sweep (paper Table II)\n  \
+     table3        hybrid switch-epoch search (paper Table III / Fig. 4)\n  \
+     fig2          error-matrix histogram (paper Figure 2)\n  \
+     arch          model layer table (paper Figure 1)\n  \
+     characterize  bit-accurate approximate-multiplier error stats\n  \
+     costmodel     multiplier-level -> system-level gain mapping (§III)\n  \
+     validate      verify artifact hashes against the manifest\n  \
+     help          this message\n\nRun `approxmul <cmd> --help` for flags.\n"
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// shared flag groups
+
+fn artifacts_flag() -> FlagSpec {
+    FlagSpec {
+        name: "artifacts",
+        help: "artifacts directory",
+        takes_value: true,
+        default: Some("artifacts"),
+    }
+}
+
+fn training_flags() -> Vec<FlagSpec> {
+    vec![
+        artifacts_flag(),
+        FlagSpec { name: "preset", help: "model preset", takes_value: true, default: Some("tiny") },
+        FlagSpec { name: "epochs", help: "training epochs", takes_value: true, default: None },
+        FlagSpec { name: "train-n", help: "training examples", takes_value: true, default: None },
+        FlagSpec { name: "test-n", help: "held-out examples", takes_value: true, default: None },
+        FlagSpec { name: "seed", help: "run seed", takes_value: true, default: Some("42") },
+        FlagSpec {
+            name: "sampling",
+            help: "error sampling: fixed | per-step",
+            takes_value: true,
+            default: Some("fixed"),
+        },
+        FlagSpec { name: "lr", help: "base learning rate", takes_value: true, default: None },
+        FlagSpec { name: "out-dir", help: "checkpoint/log dir", takes_value: true, default: None },
+        FlagSpec { name: "no-augment", help: "disable augmentation", takes_value: false, default: None },
+        FlagSpec {
+            name: "data-noise",
+            help: "synthetic-data difficulty (noise/signal)",
+            takes_value: true,
+            default: None,
+        },
+    ]
+}
+
+fn apply_training_flags(cfg: &mut ExperimentConfig, a: &Args) -> Result<()> {
+    cfg.preset = a.get_or("preset", &cfg.preset);
+    if let Some(e) = a.parse_u64("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(n) = a.parse_usize("train-n")? {
+        cfg.train_examples = n;
+    }
+    if let Some(n) = a.parse_usize("test-n")? {
+        cfg.test_examples = n;
+    }
+    if let Some(s) = a.parse_u64("seed")? {
+        cfg.seed = s;
+    }
+    cfg.sampling = ErrorSampling::parse(&a.get_or("sampling", "fixed"))?;
+    if let Some(lr) = a.parse_f64("lr")? {
+        cfg.lr = LrSchedule::StepDecay { lr, factor: 0.5, every: (cfg.epochs / 2).max(1) };
+    }
+    if let Some(d) = a.get("out-dir") {
+        cfg.out_dir = d.to_string();
+    }
+    if a.flag("no-augment") {
+        cfg.augment = false;
+    }
+    if let Some(d) = a.parse_f64("data-noise")? {
+        cfg.data_noise = d;
+    }
+    Ok(())
+}
+
+fn base_config(a: &Args) -> Result<ExperimentConfig> {
+    let preset = a.get_or("preset", "tiny");
+    let mut cfg = if preset == "small" {
+        ExperimentConfig::preset_small()
+    } else {
+        let mut c = ExperimentConfig::preset_tiny();
+        c.preset = preset.clone();
+        c
+    };
+    apply_training_flags(&mut cfg, a)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// commands
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let specs = vec![artifacts_flag()];
+    if wants_help(argv) {
+        print!("{}", cli::help("info", "manifest + artifact summary", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    println!("platform: {}", engine.platform_name());
+    let mut t = Table::new(&["preset", "inject", "params", "fwd MACs", "batch", "entries"]);
+    for (name, m) in &engine.manifest().models {
+        t.row(vec![
+            name.clone(),
+            m.inject.clone(),
+            m.total_params.to_string(),
+            m.forward_macs().to_string(),
+            m.batch.to_string(),
+            m.entries.keys().cloned().collect::<Vec<_>>().join(","),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let mut specs = training_flags();
+    specs.extend([
+        FlagSpec { name: "sigma", help: "error SD (0 = exact)", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "mre", help: "error MRE (overrides --sigma)", takes_value: true, default: None },
+        FlagSpec {
+            name: "switch-epoch",
+            help: "hybrid: switch to exact at this epoch",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec { name: "csv", help: "write history CSV here", takes_value: true, default: None },
+    ]);
+    if wants_help(argv) {
+        print!("{}", cli::help("train", "run one training experiment", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let mut cfg = base_config(&a)?;
+    let sigma = match a.parse_f64("mre")? {
+        Some(mre) => ErrorConfig::from_mre(mre).sigma,
+        None => a.parse_f64("sigma")?.unwrap_or(0.0),
+    };
+    cfg.policy = match (sigma > 0.0, a.parse_u64("switch-epoch")?) {
+        (false, _) => MultiplierPolicy::Exact,
+        (true, None) => MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(sigma) },
+        (true, Some(k)) => MultiplierPolicy::Hybrid {
+            error: ErrorConfig::from_sigma(sigma),
+            switch_epoch: k,
+        },
+    };
+    cfg.validate()?;
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    println!(
+        "training preset={} epochs={} policy={:?} sampling={}",
+        cfg.preset, cfg.epochs, cfg.policy, cfg.sampling.name()
+    );
+    let mut hook = |r: &approxmul::metrics::EpochRecord| {
+        println!(
+            "epoch {:>3}: train loss {:.4} acc {:.3} | test acc {} (sigma {:.3}, lr {:.4}, {:.1}s)",
+            r.epoch, r.train_loss, r.train_acc, pct(r.test_acc), r.sigma, r.lr, r.wall_secs
+        );
+        std::io::stdout().flush().ok();
+    };
+    let outcome = trainer.run_from(0, Some(&mut hook))?;
+    println!(
+        "done: best {} final {} in {:.1}s",
+        pct(outcome.best_accuracy),
+        pct(outcome.final_accuracy),
+        outcome.wall_secs
+    );
+    let losses: Vec<f64> =
+        outcome.history.records.iter().map(|r| r.train_loss).collect();
+    let accs: Vec<f64> =
+        outcome.history.records.iter().map(|r| r.test_acc).collect();
+    if losses.len() >= 2 {
+        println!("\ntrain loss / test accuracy over epochs:");
+        print!(
+            "{}",
+            approxmul::report::line_chart(
+                &[("train loss", &losses), ("test acc", &accs)],
+                10,
+                64
+            )
+        );
+    }
+    if let Some(path) = a.get("csv") {
+        outcome.history.save_csv(path)?;
+        println!("history -> {path}");
+    }
+    Ok(())
+}
+
+fn table2_cases(a: &Args) -> Result<Vec<(u32, ErrorConfig, f64)>> {
+    let all = paper_table2_configs();
+    match a.get("cases") {
+        None => Ok(all),
+        Some(spec) => {
+            let want: Vec<u32> = spec
+                .split(',')
+                .map(|s| s.trim().parse::<u32>().context("bad --cases"))
+                .collect::<Result<_>>()?;
+            Ok(all.into_iter().filter(|(id, _, _)| want.contains(id)).collect())
+        }
+    }
+}
+
+fn cmd_table2(argv: &[String]) -> Result<()> {
+    let mut specs = training_flags();
+    specs.extend([
+        FlagSpec {
+            name: "cases",
+            help: "comma-separated test ids (default: all 9)",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec { name: "csv", help: "write rows CSV here", takes_value: true, default: None },
+    ]);
+    if wants_help(argv) {
+        print!("{}", cli::help("table2", "Table II accuracy sweep", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let cfg = base_config(&a)?;
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let cases = table2_cases(&a)?;
+    println!(
+        "Table II sweep: preset={} epochs={} train={} cases={}",
+        cfg.preset,
+        cfg.epochs,
+        cfg.train_examples,
+        cases.len()
+    );
+    let sweep = Sweep::new(&engine, cfg);
+    let rows = sweep.run(&cases, |id, row| {
+        println!("  case {id}: {} -> acc {}", row.config.label(), pct(row.accuracy));
+        std::io::stdout().flush().ok();
+    })?;
+
+    let mut t = Table::new(&[
+        "Test ID", "MRE", "SD(σ)", "Accuracy", "Diff. From Exact", "Paper Acc.", "Paper Diff.",
+    ]);
+    let paper_base = rows.first().and_then(|r| r.paper_accuracy).unwrap_or(0.936);
+    for r in &rows {
+        t.row(vec![
+            r.test_id.to_string(),
+            format!("~{:.1}%", 100.0 * r.config.mre()),
+            format!("~{:.1}%", 100.0 * r.config.sigma),
+            pct(r.accuracy),
+            if r.test_id == 0 { "N/A".into() } else { diff_pct(r.diff_from_exact) },
+            r.paper_accuracy.map(pct).unwrap_or_else(|| "-".into()),
+            r.paper_accuracy
+                .map(|p| if r.test_id == 0 { "N/A".into() } else { diff_pct(p - paper_base) })
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    println!(
+        "shape holds (small error benign, huge error collapses): {}",
+        Sweep::shape_holds(&rows)
+    );
+    if let Some(path) = a.get("csv") {
+        let mut csv = String::from("test_id,mre,sd,accuracy,diff,paper_acc\n");
+        for r in &rows {
+            csv.push_str(&format!(
+                "{},{:.4},{:.4},{:.6},{:.6},{}\n",
+                r.test_id,
+                r.config.mre(),
+                r.config.sigma,
+                r.accuracy,
+                r.diff_from_exact,
+                r.paper_accuracy.map(|p| format!("{p:.4}")).unwrap_or_default()
+            ));
+        }
+        std::fs::write(path, csv)?;
+        println!("rows -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table3(argv: &[String]) -> Result<()> {
+    let mut specs = training_flags();
+    specs.extend([
+        FlagSpec {
+            name: "cases",
+            help: "comma-separated test ids",
+            takes_value: true,
+            default: Some("2,4,6"),
+        },
+        FlagSpec {
+            name: "tolerance",
+            help: "accuracy tolerance below baseline",
+            takes_value: true,
+            default: Some("0.005"),
+        },
+        FlagSpec { name: "csv", help: "write rows CSV here", takes_value: true, default: None },
+    ]);
+    if wants_help(argv) {
+        print!("{}", cli::help("table3", "hybrid switch-epoch search (Fig. 4)", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let mut cfg = base_config(&a)?;
+    if cfg.out_dir.is_empty() {
+        cfg.out_dir = "runs/table3".into();
+    }
+    cfg.tag = "t3".into();
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let mut search = HybridSearch::new(&engine, cfg.clone());
+    search.tolerance = a.parse_f64("tolerance")?.unwrap_or(0.005);
+    let cases = table2_cases(&a)?;
+    let cases: Vec<_> = cases.into_iter().filter(|(id, _, _)| *id != 0).collect();
+
+    println!("baseline (exact) run...");
+    let baseline = search.baseline()?;
+    println!("baseline accuracy: {}", pct(baseline.final_accuracy));
+
+    let mut t = Table::new(&[
+        "Test ID", "MRE", "Approx Epochs", "Exact Epochs", "Utilization",
+        "Accuracy", "Paper Util.",
+    ]);
+    let paper_util: std::collections::BTreeMap<u32, f64> = engine
+        .manifest()
+        .paper
+        .table3
+        .iter()
+        .map(|&(id, _, a_ep, e_ep)| (id, a_ep as f64 / (a_ep + e_ep) as f64))
+        .collect();
+    let mut csv = String::from(
+        "test_id,mre,approx_epochs,exact_epochs,utilization,accuracy,evaluations\n",
+    );
+    for (id, config, _) in cases {
+        println!("case {id}: approximate run ({})...", config.label());
+        let (approx_outcome, tag) = search.approx_run(config)?;
+        let outcome = search.search(
+            config,
+            baseline.final_accuracy,
+            &tag,
+            approx_outcome.final_accuracy,
+        )?;
+        println!(
+            "  -> approx {} / exact {} (util {}, acc {}, {} evals)",
+            outcome.approx_epochs,
+            outcome.exact_epochs,
+            pct(outcome.utilization),
+            pct(outcome.accuracy),
+            outcome.evaluations
+        );
+        t.row(vec![
+            id.to_string(),
+            format!("~{:.1}%", 100.0 * config.mre()),
+            outcome.approx_epochs.to_string(),
+            outcome.exact_epochs.to_string(),
+            pct(outcome.utilization),
+            pct(outcome.accuracy),
+            paper_util.get(&id).map(|u| pct(*u)).unwrap_or_else(|| "-".into()),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.4},{},{},{:.4},{:.6},{}\n",
+            id,
+            config.mre(),
+            outcome.approx_epochs,
+            outcome.exact_epochs,
+            outcome.utilization,
+            outcome.accuracy,
+            outcome.evaluations
+        ));
+    }
+    print!("{}", t.to_markdown());
+    if let Some(path) = a.get("csv") {
+        std::fs::write(path, csv)?;
+        println!("rows -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        FlagSpec { name: "sigma", help: "error SD", takes_value: true, default: Some("0.045") },
+        FlagSpec { name: "mre", help: "error MRE (overrides --sigma)", takes_value: true, default: None },
+        FlagSpec { name: "bins", help: "histogram bins", takes_value: true, default: Some("500") },
+        FlagSpec { name: "n", help: "samples", takes_value: true, default: Some("1000000") },
+        FlagSpec { name: "seed", help: "threefry seed", takes_value: true, default: Some("42") },
+        FlagSpec { name: "csv", help: "write histogram CSV here", takes_value: true, default: None },
+    ];
+    if wants_help(argv) {
+        print!("{}", cli::help("fig2", "error-matrix histogram (Figure 2)", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let sigma = match a.parse_f64("mre")? {
+        Some(mre) => ErrorConfig::from_mre(mre).sigma,
+        None => a.parse_f64("sigma")?.unwrap_or(0.045),
+    };
+    let bins = a.parse_usize("bins")?.unwrap_or(500);
+    let n = a.parse_usize("n")?.unwrap_or(1_000_000);
+    let seed = a.parse_u64("seed")?.unwrap_or(42) as u32;
+    let m = ErrorMatrix::generate(seed, 0, sigma, n);
+    let lim = 4.5 * sigma;
+    let (edges, counts) = m.histogram(bins, -lim, lim);
+    println!(
+        "Figure 2: histogram ({bins} bins) of an error matrix with target \
+         MRE {:.2}% SD {:.2}%",
+        100.0 * ErrorConfig::from_sigma(sigma).mre(),
+        100.0 * sigma
+    );
+    println!(
+        "measured: MRE {:.3}% SD {:.3}% over {n} samples\n",
+        100.0 * m.measured_mre(),
+        100.0 * m.measured_sd()
+    );
+    print!("{}", ascii_histogram(&edges, &counts, 60, 33));
+    if let Some(path) = a.get("csv") {
+        std::fs::write(path, histogram_csv(&edges, &counts))?;
+        println!("histogram -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_arch(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        artifacts_flag(),
+        FlagSpec { name: "preset", help: "model preset", takes_value: true, default: Some("vgg16") },
+    ];
+    if wants_help(argv) {
+        print!("{}", cli::help("arch", "model layer table (Figure 1)", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let model = engine.manifest().model(&a.get_or("preset", "vgg16"))?;
+    println!(
+        "{} (inject={}, {} params, {} fwd MACs/sample)",
+        model.preset,
+        model.inject,
+        model.total_params,
+        model.forward_macs()
+    );
+    let mut t = Table::new(&["layer", "type", "output", "params", "MACs", "MAC %"]);
+    let total = model.forward_macs().max(1) as f64;
+    for l in &model.layers {
+        t.row(vec![
+            l.name.clone(),
+            l.ty.clone(),
+            format!("{:?}", l.out),
+            l.params.to_string(),
+            l.macs.to_string(),
+            format!("{:.1}%", 100.0 * l.macs as f64 / total),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    let conv_share = model.conv_macs() as f64 / total;
+    println!(
+        "conv MAC share: {} (paper [12] reports ~90.7% of *time* in conv)",
+        pct(conv_share)
+    );
+    Ok(())
+}
+
+fn cmd_characterize(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        FlagSpec {
+            name: "dist",
+            help: "operand distribution: uniform16 | uniform32 | mantissa | small",
+            takes_value: true,
+            default: Some("uniform16"),
+        },
+        FlagSpec { name: "n", help: "sample pairs per design", takes_value: true, default: Some("500000") },
+        FlagSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("7") },
+    ];
+    if wants_help(argv) {
+        print!("{}", cli::help("characterize", "approximate-multiplier error stats", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let dist = match a.get_or("dist", "uniform16").as_str() {
+        "uniform16" => OperandDist::Uniform16,
+        "uniform32" => OperandDist::Uniform32,
+        "mantissa" => OperandDist::Mantissa,
+        "small" => OperandDist::Small,
+        other => bail!("unknown distribution {other:?}"),
+    };
+    let n = a.parse_u64("n")?.unwrap_or(500_000);
+    let seed = a.parse_u64("seed")?.unwrap_or(7);
+    let mut designs = standard_designs();
+    // The paper's simulation model at DRUM-6's published SD, for the
+    // model-vs-hardware comparison.
+    designs.push(Box::new(approxmul::mult::GaussianModel::new(0.01803, seed as u32)));
+    let mut t = Table::new(&[
+        "design", "MRE", "SD", "bias", "min RE", "max RE", "MRE/SD (0.798=gaussian)",
+    ]);
+    for d in &designs {
+        let s = characterize(d.as_ref(), dist, n, seed);
+        t.row(vec![
+            d.name(),
+            format!("{:.3}%", 100.0 * s.mre),
+            format!("{:.3}%", 100.0 * s.sd),
+            format!("{:+.3}%", 100.0 * s.mean_re),
+            format!("{:+.2}%", 100.0 * s.min_re),
+            format!("{:+.2}%", 100.0 * s.max_re),
+            format!("{:.3}", s.gaussianity_ratio()),
+        ]);
+    }
+    println!("operand distribution: {} ({n} pairs/design)", dist.name());
+    print!("{}", t.to_markdown());
+    println!(
+        "\nDRUM [3] published: MRE 1.47%, SD 1.803% — compare row drum6.\n\
+         Gaussian model rows should show MRE/SD ≈ 0.798; one-sided designs \
+         (mitchell, trunc*) cannot be represented by the paper's model."
+    );
+    Ok(())
+}
+
+fn cmd_costmodel(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        artifacts_flag(),
+        FlagSpec { name: "preset", help: "model preset", takes_value: true, default: Some("vgg16") },
+        FlagSpec {
+            name: "epochs",
+            help: "total epochs for hybrid rows",
+            takes_value: true,
+            default: Some("200"),
+        },
+    ];
+    if wants_help(argv) {
+        print!("{}", cli::help("costmodel", "hardware gain composition (§III)", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let model = engine.manifest().model(&a.get_or("preset", "vgg16"))?;
+    let cm = CostModel::from_model(model, engine.manifest().paper.conv_time_share)?;
+    println!(
+        "cost model for {}: MAC time share {:.1}%, {} fwd MACs/sample",
+        model.preset,
+        100.0 * cm.mac_time_share(),
+        cm.forward_macs()
+    );
+    let mut t = Table::new(&[
+        "design", "mult speedup", "step speedup", "time saving", "energy saving",
+        "area saving", "MRE",
+    ]);
+    for (name, d) in cited_designs() {
+        let g = cm.system_gains(&d);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}%", 100.0 * d.speed_gain),
+            format!("{:.2}x", g.step_speedup),
+            pct(g.time_saving),
+            pct(g.energy_saving),
+            pct(g.area_saving),
+            format!("{:.2}%", 100.0 * d.mre),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+
+    // Hybrid composition using the paper's Table III utilizations.
+    let total = a.parse_u64("epochs")?.unwrap_or(200) as u32;
+    let drum = CostModel::design("drum6")?;
+    let mut t = Table::new(&[
+        "Table III row", "MRE", "approx/total", "time saving", "energy saving",
+    ]);
+    for &(id, mre, a_ep, e_ep) in &engine.manifest().paper.table3 {
+        let scale = total as f64 / (a_ep + e_ep) as f64;
+        let a_scaled = (a_ep as f64 * scale).round() as u32;
+        let g = cm.hybrid_gains(&drum, a_scaled, total);
+        t.row(vec![
+            id.to_string(),
+            format!("~{:.1}%", 100.0 * mre),
+            format!("{a_scaled}/{total}"),
+            pct(g.time_saving),
+            pct(g.energy_saving),
+        ]);
+    }
+    println!("\nhybrid schedules on drum6 (paper Table III utilizations):");
+    print!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<()> {
+    let specs = vec![artifacts_flag()];
+    if wants_help(argv) {
+        print!("{}", cli::help("validate", "verify artifact integrity", &specs));
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let manifest = approxmul::runtime::Manifest::load(a.get_or("artifacts", "artifacts"))?;
+    let reports = approxmul::runtime::integrity::validate(&manifest)?;
+    let mut t = Table::new(&["preset", "entry", "file", "status"]);
+    for r in &reports {
+        use approxmul::runtime::integrity::FileStatus;
+        let status = match &r.status {
+            FileStatus::Ok => "ok".to_string(),
+            FileStatus::Missing => "MISSING".to_string(),
+            FileStatus::Mismatch { expected, actual } => format!(
+                "MISMATCH {}.. != {}..",
+                &expected[..8],
+                &actual[..8]
+            ),
+        };
+        t.row(vec![r.preset.clone(), r.kind.clone(), r.file.clone(), status]);
+    }
+    print!("{}", t.to_markdown());
+    if approxmul::runtime::integrity::all_ok(&reports) {
+        println!("all {} artifacts verified", reports.len());
+        Ok(())
+    } else {
+        bail!("artifact integrity check FAILED — re-run `make artifacts`");
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn wants_help(argv: &[String]) -> bool {
+    argv.iter().any(|a| a == "--help" || a == "-h")
+}
+
+/// Tiny env-filtered logger (no external logger crates offline).
+fn init_logger() {
+    struct Logger(log::LevelFilter);
+    impl log::Log for Logger {
+        fn enabled(&self, m: &log::Metadata<'_>) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record<'_>) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("APPROXMUL_LOG").as_deref() {
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    // (the vendored `log` has no `std` feature, so no set_boxed_logger)
+    static LOGGER: Logger = Logger(log::LevelFilter::Trace);
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}

@@ -1,0 +1,179 @@
+//! Training metrics: per-epoch history, streaming summaries, CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One epoch's record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    /// Mean training cross-entropy over the epoch's steps.
+    pub train_loss: f64,
+    /// Mean minibatch training accuracy.
+    pub train_acc: f64,
+    /// Held-out accuracy (exact multipliers, per the paper's protocol).
+    pub test_acc: f64,
+    pub test_loss: f64,
+    /// Sigma in force during this epoch (0 = exact phase).
+    pub sigma: f64,
+    pub lr: f64,
+    pub wall_secs: f64,
+}
+
+/// Full run history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<EpochRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: EpochRecord) {
+        self.records.push(r);
+    }
+
+    pub fn best_test_acc(&self) -> Option<(u64, f64)> {
+        self.records
+            .iter()
+            .map(|r| (r.epoch, r.test_acc))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    pub fn final_test_acc(&self) -> Option<f64> {
+        self.records.last().map(|r| r.test_acc)
+    }
+
+    /// First epoch whose test accuracy reaches `target`, if any.
+    pub fn first_epoch_reaching(&self, target: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.test_acc >= target)
+            .map(|r| r.epoch)
+    }
+
+    /// CSV serialization (header + one row per epoch).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("epoch,train_loss,train_acc,test_loss,test_acc,sigma,lr,wall_secs\n");
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3}",
+                r.epoch,
+                r.train_loss,
+                r.train_acc,
+                r.test_loss,
+                r.test_acc,
+                r.sigma,
+                r.lr,
+                r.wall_secs
+            );
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Parse back a CSV produced by [`History::to_csv`].
+    pub fn from_csv(text: &str) -> Result<Self> {
+        let mut records = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(f.len() == 8, "line {i}: {} fields", f.len());
+            records.push(EpochRecord {
+                epoch: f[0].parse()?,
+                train_loss: f[1].parse()?,
+                train_acc: f[2].parse()?,
+                test_loss: f[3].parse()?,
+                test_acc: f[4].parse()?,
+                sigma: f[5].parse()?,
+                lr: f[6].parse()?,
+                wall_secs: f[7].parse()?,
+            });
+        }
+        Ok(History { records })
+    }
+}
+
+/// Streaming mean (loss/accuracy accumulation inside an epoch).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Mean {
+    sum: f64,
+    n: u64,
+}
+
+impl Mean {
+    pub fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: u64, acc: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            test_loss: 1.2,
+            test_acc: acc,
+            sigma: 0.0,
+            lr: 0.05,
+            wall_secs: 1.5,
+        }
+    }
+
+    #[test]
+    fn best_and_reaching() {
+        let mut h = History::default();
+        h.push(rec(0, 0.3));
+        h.push(rec(1, 0.8));
+        h.push(rec(2, 0.7));
+        assert_eq!(h.best_test_acc(), Some((1, 0.8)));
+        assert_eq!(h.first_epoch_reaching(0.75), Some(1));
+        assert_eq!(h.first_epoch_reaching(0.9), None);
+        assert_eq!(h.final_test_acc(), Some(0.7));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut h = History::default();
+        h.push(rec(0, 0.25));
+        h.push(rec(1, 0.5));
+        let parsed = History::from_csv(&h.to_csv()).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        assert!((parsed.records[1].test_acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_streaming() {
+        let mut m = Mean::default();
+        assert_eq!(m.get(), 0.0);
+        m.add(1.0);
+        m.add(3.0);
+        assert_eq!(m.get(), 2.0);
+        assert_eq!(m.count(), 2);
+    }
+}

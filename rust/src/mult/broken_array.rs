@@ -1,0 +1,114 @@
+//! Broken-Array Multiplier (Mahdiani et al., 2010): omit the lowest
+//! `d` carry-save rows *and* columns of the partial-product array —
+//! the structural truncation the tree-compressor designs (the paper's
+//! [6], Yang et al. ICCD'17) refine. Unlike operand truncation
+//! ([`super::Truncation`]) the cut is on the *product array*, so the
+//! error scales with the product magnitude rather than the operand
+//! magnitude — a different (still one-sided) error shape for the
+//! model-vs-hardware comparison.
+
+use anyhow::{bail, Result};
+
+use super::Multiplier;
+
+/// Broken-array multiplier dropping partial products below column `d`.
+#[derive(Debug, Clone, Copy)]
+pub struct BrokenArray {
+    d: u32,
+}
+
+impl BrokenArray {
+    /// `d` in `[1, 47]`: lowest product column retained is `d`.
+    pub fn new(d: u32) -> Result<Self> {
+        if !(1..=47).contains(&d) {
+            bail!("broken-array depth must be in [1, 47], got {d}");
+        }
+        Ok(BrokenArray { d })
+    }
+}
+
+impl Multiplier for BrokenArray {
+    fn name(&self) -> String {
+        format!("bam{}", self.d)
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        // Partial product row i (bit i of b set) contributes a << i.
+        // Dropping array cells below column d means each row keeps
+        // only the part of (a << i) at columns >= d:
+        //   kept_i = ((a >> max(0, d - i)) << max(0, d - i)) << i
+        // i.e. clear the low (d - i) bits of a for rows i < d.
+        let mut acc = 0u64;
+        let mut bb = b;
+        while bb != 0 {
+            let i = bb.trailing_zeros();
+            bb &= bb - 1;
+            let cut = self.d.saturating_sub(i);
+            let kept = if cut >= 32 { 0 } else { (a >> cut) << cut };
+            acc += (kept as u64) << i;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{characterize, OperandDist};
+
+    #[test]
+    fn exact_reference_check_small() {
+        // Against a direct mask-based model for exhaustive small cases.
+        let m = BrokenArray::new(4).unwrap();
+        for a in 0..128u32 {
+            for b in 0..128u32 {
+                let mut expect = 0u64;
+                for i in 0..7 {
+                    if b >> i & 1 == 1 {
+                        let cut = 4u32.saturating_sub(i);
+                        expect += (((a >> cut) << cut) as u64) << i;
+                    }
+                }
+                assert_eq!(m.mul(a, b), expect, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_exceeds_exact() {
+        let m = BrokenArray::new(8).unwrap();
+        let mut rng = crate::rng::Xoshiro256::new(5);
+        for _ in 0..10_000 {
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            assert!(m.mul(a, b) <= m.exact(a, b));
+        }
+    }
+
+    #[test]
+    fn high_rows_unaffected() {
+        // If both operands live entirely above the cut, it's exact.
+        let m = BrokenArray::new(8).unwrap();
+        assert_eq!(m.mul(0x100, 0x100), 0x10000);
+        assert_eq!(m.mul(0xFF00, 0xAB00), 0xFF00u64 * 0xAB00);
+    }
+
+    #[test]
+    fn deeper_cut_more_error() {
+        let mre = |d| {
+            characterize(&BrokenArray::new(d).unwrap(), OperandDist::Uniform16,
+                         50_000, 7)
+                .mre
+        };
+        assert!(mre(12) > mre(6));
+        assert!(mre(6) > mre(3));
+    }
+
+    #[test]
+    fn error_is_one_sided() {
+        let s = characterize(&BrokenArray::new(10).unwrap(),
+                             OperandDist::Uniform16, 50_000, 9);
+        assert!(s.max_re <= 0.0);
+        assert!(s.mean_re < 0.0);
+    }
+}

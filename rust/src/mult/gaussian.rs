@@ -1,0 +1,75 @@
+//! The paper's simulation model as a `Multiplier`: exact product times
+//! `(1 + sigma * eps)`, `eps ~ N(0,1)` from the shared Threefry stream.
+//!
+//! This is the host-side twin of the L1 `error_inject` kernel. Running
+//! it through the same characterization harness as the bit-accurate
+//! designs quantifies how well the Gaussian model imitates each real
+//! design (mean/SD match DRUM well; it cannot represent Mitchell's
+//! one-sided bias — see EXPERIMENTS.md §characterize).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::rng::threefry::normal_pair;
+
+use super::Multiplier;
+
+/// Gaussian relative-error model multiplier with SD `sigma`.
+#[derive(Debug)]
+pub struct GaussianModel {
+    sigma: f64,
+    seed: u32,
+    counter: AtomicU32,
+}
+
+impl GaussianModel {
+    pub fn new(sigma: f64, seed: u32) -> Self {
+        GaussianModel { sigma, seed, counter: AtomicU32::new(0) }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+}
+
+impl Multiplier for GaussianModel {
+    fn name(&self) -> String {
+        format!("gauss{:.4}", self.sigma)
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        let exact = a as u64 * b as u64;
+        let ctr = self.counter.fetch_add(1, Ordering::Relaxed);
+        let (z, _) = normal_pair(self.seed, 0x6d75_6c74, ctr, 0);
+        let v = exact as f64 * (1.0 + self.sigma * z as f64);
+        // Clamp into the representable product range (a real multiplier
+        // cannot return a negative or > 64-bit product).
+        v.max(0.0).min(u64::MAX as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{characterize, OperandDist};
+
+    #[test]
+    fn sigma_zero_is_exact() {
+        let g = GaussianModel::new(0.0, 1);
+        assert_eq!(g.mul(12345, 678), 12345u64 * 678);
+    }
+
+    #[test]
+    fn mre_tracks_sigma() {
+        // sigma = 1.803% (DRUM-6's published SD) must give MRE ~1.44%.
+        let g = GaussianModel::new(0.01803, 2);
+        let stats = characterize(&g, OperandDist::Mantissa, 200_000, 11);
+        let expect = 0.01803 * crate::HALF_NORMAL_MEAN;
+        assert!(
+            (stats.mre - expect).abs() < 0.0008,
+            "mre {:.5} vs expected {:.5}",
+            stats.mre,
+            expect
+        );
+        assert!(stats.mean_re.abs() < 0.001);
+    }
+}

@@ -1,0 +1,99 @@
+//! Mitchell's logarithmic multiplier (J. N. Mitchell, 1962).
+//!
+//! Approximates `log2(v) ≈ msb + frac` with the linear mantissa
+//! interpolation, adds the two logs, and takes the linear antilog. The
+//! classic cheap multiplier the approximate-computing literature
+//! baselines against; its error is **one-sided** (always ≤ 0, up to
+//! ~-11.1%), i.e. *not* zero-mean Gaussian — which makes it the
+//! counterexample design for the paper's error model and an instructive
+//! ablation row in `characterize`.
+
+use super::Multiplier;
+
+/// Fixed-point fractional bits used for the log representation.
+const FRAC_BITS: u32 = 32;
+
+/// Mitchell logarithmic approximate multiplier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Mitchell;
+
+impl Mitchell {
+    /// `log2(v)` in fixed point: integer part = msb index, fraction =
+    /// mantissa bits below the leading one (linear approximation).
+    #[inline]
+    fn log2_fixed(v: u32) -> u64 {
+        debug_assert!(v > 0);
+        let msb = 31 - v.leading_zeros();
+        // Fraction: bits below the leading one, left-aligned to FRAC_BITS.
+        let frac = ((v as u64) << (FRAC_BITS - msb)) & ((1u64 << FRAC_BITS) - 1);
+        ((msb as u64) << FRAC_BITS) | frac
+    }
+
+    /// Linear antilog: `2^(int + frac) ≈ (1 + frac) << int`.
+    #[inline]
+    fn antilog_fixed(l: u64) -> u64 {
+        let int = (l >> FRAC_BITS) as u32;
+        let frac = l & ((1u64 << FRAC_BITS) - 1);
+        let mantissa = (1u64 << FRAC_BITS) | frac; // 1.frac
+        if int >= FRAC_BITS {
+            mantissa << (int - FRAC_BITS)
+        } else {
+            mantissa >> (FRAC_BITS - int)
+        }
+    }
+}
+
+impl Multiplier for Mitchell {
+    fn name(&self) -> String {
+        "mitchell".into()
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        Self::antilog_fixed(Self::log2_fixed(a) + Self::log2_fixed(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{characterize, OperandDist};
+
+    #[test]
+    fn powers_of_two_exact() {
+        let m = Mitchell;
+        for i in 0..16 {
+            for j in 0..16 {
+                let (a, b) = (1u32 << i, 1u32 << j);
+                assert_eq!(m.mul(a, b), a as u64 * b as u64, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_is_one_sided_negative() {
+        let m = Mitchell;
+        let stats = characterize(&m, OperandDist::Uniform16, 100_000, 5);
+        // Mitchell underestimates: worst case -(1 - 2*(sqrt(2)-1)) ~ -11.1%.
+        assert!(stats.max_re <= 1e-12, "positive error {:.5}", stats.max_re);
+        assert!(stats.min_re > -0.12, "error too negative {:.5}", stats.min_re);
+        assert!(stats.mean_re < -0.01, "should be biased, got {:.5}", stats.mean_re);
+    }
+
+    #[test]
+    fn zero_operands() {
+        assert_eq!(Mitchell.mul(0, 123), 0);
+        assert_eq!(Mitchell.mul(123, 0), 0);
+    }
+
+    #[test]
+    fn no_overflow_at_extremes() {
+        let m = Mitchell;
+        let r = m.mul(u32::MAX, u32::MAX);
+        let exact = u32::MAX as u64 * u32::MAX as u64;
+        let rel = (r as f64 - exact as f64) / exact as f64;
+        assert!(rel.abs() < 0.12, "rel {rel}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Bit-accurate approximate-multiplier substrate.
+//!
+//! The paper characterizes approximate multipliers only by their (MRE,
+//! SD) and cites hardware designs ([3]-[6]) for the speed/power/area
+//! numbers. To close the loop we implement the cited designs (or their
+//! closest published form) **bit-accurately** on unsigned integers:
+//!
+//! * [`Drum`] — DRUM (Hashemi, Bahar & Reda, ICCAD'15): dynamic-range
+//!   unbiased truncation to `k` significant bits. DRUM-6's published
+//!   error (MRE ≈ 1.47%, near-zero mean) is reproduced by
+//!   `examples/characterize_multipliers.rs` and pinned by tests.
+//! * [`Mitchell`] — Mitchell's logarithmic multiplier (1962), the
+//!   classic log-domain approximation (biased negative).
+//! * [`Truncation`] — static low-bit truncation (the naive baseline).
+//! * [`GaussianModel`] — the paper's own *simulation* model: exact
+//!   product times `(1 + sigma*eps)` from the shared Threefry stream.
+//!   Comparing its statistics against the bit-accurate designs is what
+//!   justifies (or indicts) the paper's modelling shortcut.
+//!
+//! Floating-point relevance: an f32/f16 multiply is an exact exponent
+//! add plus a mantissa multiply, so the *relative* error of the mantissa
+//! multiplier equals the relative error of the float product. The
+//! [`OperandDist::Mantissa`] distribution (uniform over `[2^23, 2^24)`)
+//! therefore characterizes exactly the error a CNN training MAC would
+//! see — this is the bridge between these integer designs and the
+//! Gaussian sigma fed to the compiled graphs.
+
+mod broken_array;
+mod drum;
+mod gaussian;
+mod mitchell;
+mod roba;
+mod stats;
+mod truncation;
+
+pub use broken_array::BrokenArray;
+pub use drum::Drum;
+pub use gaussian::GaussianModel;
+pub use mitchell::Mitchell;
+pub use roba::Roba;
+pub use stats::{characterize, ErrorStats, OperandDist};
+pub use truncation::Truncation;
+
+use anyhow::{bail, Result};
+
+/// An (approximate) unsigned integer multiplier.
+pub trait Multiplier: Send + Sync {
+    /// Design name, e.g. `drum6`.
+    fn name(&self) -> String;
+
+    /// Approximate product of two unsigned operands.
+    fn mul(&self, a: u32, b: u32) -> u64;
+
+    /// Exact reference for error accounting.
+    fn exact(&self, a: u32, b: u32) -> u64 {
+        a as u64 * b as u64
+    }
+
+    /// Signed relative error of one product (0 when the exact product
+    /// is 0, matching the MRE definition's implicit exclusion).
+    fn relative_error(&self, a: u32, b: u32) -> f64 {
+        let exact = self.exact(a, b);
+        if exact == 0 {
+            return 0.0;
+        }
+        (self.mul(a, b) as f64 - exact as f64) / exact as f64
+    }
+}
+
+/// Exact multiplier (the paper's second training phase).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Exact;
+
+impl Multiplier for Exact {
+    fn name(&self) -> String {
+        "exact".into()
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        a as u64 * b as u64
+    }
+}
+
+/// Build a multiplier from a spec string: `exact`, `drum<k>`,
+/// `mitchell`, `trunc<k>`, `gauss<sigma-percent>`.
+pub fn by_name(spec: &str) -> Result<Box<dyn Multiplier>> {
+    if spec == "exact" {
+        return Ok(Box::new(Exact));
+    }
+    if spec == "mitchell" {
+        return Ok(Box::new(Mitchell));
+    }
+    if spec == "roba" {
+        return Ok(Box::new(Roba));
+    }
+    if let Some(d) = spec.strip_prefix("bam") {
+        let d: u32 = d.parse()?;
+        return Ok(Box::new(BrokenArray::new(d)?));
+    }
+    if let Some(k) = spec.strip_prefix("drum") {
+        let k: u32 = k.parse()?;
+        return Ok(Box::new(Drum::new(k)?));
+    }
+    if let Some(k) = spec.strip_prefix("trunc") {
+        let k: u32 = k.parse()?;
+        return Ok(Box::new(Truncation::new(k)?));
+    }
+    if let Some(p) = spec.strip_prefix("gauss") {
+        let pct: f64 = p.parse()?;
+        return Ok(Box::new(GaussianModel::new(pct / 100.0, 0)));
+    }
+    bail!(
+        "unknown multiplier spec {spec:?} \
+         (expected exact | drum<k> | mitchell | roba | bam<d> | trunc<k> | gauss<pct>)"
+    )
+}
+
+/// The design set the characterization harness sweeps by default.
+pub fn standard_designs() -> Vec<Box<dyn Multiplier>> {
+    vec![
+        Box::new(Exact),
+        Box::new(Drum::new(4).unwrap()),
+        Box::new(Drum::new(6).unwrap()),
+        Box::new(Drum::new(8).unwrap()),
+        Box::new(Mitchell),
+        Box::new(Roba),
+        Box::new(BrokenArray::new(8).unwrap()),
+        Box::new(BrokenArray::new(12).unwrap()),
+        Box::new(Truncation::new(8).unwrap()),
+        Box::new(Truncation::new(12).unwrap()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_is_exact() {
+        let m = Exact;
+        assert_eq!(m.mul(0, 0), 0);
+        assert_eq!(m.mul(u32::MAX, u32::MAX), u32::MAX as u64 * u32::MAX as u64);
+        assert_eq!(m.relative_error(12345, 6789), 0.0);
+    }
+
+    #[test]
+    fn by_name_parses() {
+        assert_eq!(by_name("exact").unwrap().name(), "exact");
+        assert_eq!(by_name("drum6").unwrap().name(), "drum6");
+        assert_eq!(by_name("trunc8").unwrap().name(), "trunc8");
+        assert_eq!(by_name("mitchell").unwrap().name(), "mitchell");
+        assert_eq!(by_name("roba").unwrap().name(), "roba");
+        assert_eq!(by_name("bam8").unwrap().name(), "bam8");
+        assert!(by_name("drum").is_err());
+        assert!(by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn relative_error_zero_product() {
+        let m = by_name("drum6").unwrap();
+        assert_eq!(m.relative_error(0, 12345), 0.0);
+    }
+}

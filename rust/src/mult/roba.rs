@@ -1,0 +1,102 @@
+//! RoBA — Rounding-Based Approximate multiplier (Zendegani et al.,
+//! TVLSI 2017), representative of the "round to nearest power of two"
+//! family the approximate-multiplier literature benchmarks against.
+//!
+//! Idea: with `ar`, `br` the operands rounded to their nearest powers
+//! of two, expand `a*b ≈ ar*b + a*br − ar*br`. Every term multiplies
+//! by a power of two (shifts only — no partial-product array at all),
+//! which is where the hardware win comes from. The error is bounded
+//! and *sign-oscillating* (near-zero mean), making RoBA a second
+//! real design (besides DRUM) that the paper's zero-mean Gaussian
+//! model approximates well — the characterization harness quantifies
+//! how well.
+
+use super::Multiplier;
+
+/// RoBA approximate multiplier (unsigned variant).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Roba;
+
+impl Roba {
+    /// Round to the nearest power of two. Ties (exact midpoint
+    /// `3·2^(m-1)`) round up, matching the published RTL.
+    #[inline]
+    fn round_pow2(v: u32) -> u64 {
+        debug_assert!(v > 0);
+        let msb = 31 - v.leading_zeros();
+        let base = 1u64 << msb;
+        if msb == 0 {
+            return base;
+        }
+        // v = 2^msb + rest; round up iff rest >= 2^(msb-1).
+        let rest = v as u64 - base;
+        if rest >= (1u64 << (msb - 1)) {
+            base << 1
+        } else {
+            base
+        }
+    }
+}
+
+impl Multiplier for Roba {
+    fn name(&self) -> String {
+        "roba".into()
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let ar = Self::round_pow2(a);
+        let br = Self::round_pow2(b);
+        // ar*b + a*br - ar*br, all shifts. The sum can transiently
+        // exceed the true product; compute in i128 to keep the
+        // subtraction exact, then clamp at 0 (hardware saturates).
+        let v = ar as i128 * b as i128 + a as i128 * br as i128
+            - ar as i128 * br as i128;
+        v.max(0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{characterize, OperandDist};
+
+    #[test]
+    fn powers_of_two_exact() {
+        let m = Roba;
+        for i in 0..16 {
+            for j in 0..16 {
+                let (a, b) = (1u32 << i, 1u32 << j);
+                assert_eq!(m.mul(a, b), a as u64 * b as u64, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_pow2_cases() {
+        assert_eq!(Roba::round_pow2(1), 1);
+        assert_eq!(Roba::round_pow2(3), 4); // tie rounds up
+        assert_eq!(Roba::round_pow2(5), 4);
+        assert_eq!(Roba::round_pow2(6), 8);
+        assert_eq!(Roba::round_pow2(0xFFFF_FFFF), 1 << 32);
+    }
+
+    #[test]
+    fn error_is_bounded_and_nearly_unbiased() {
+        // Published RoBA error: |RE| <= 11.1%, mean close to zero on
+        // uniform operands (oscillating sign).
+        let s = characterize(&Roba, OperandDist::Uniform16, 200_000, 3);
+        assert!(s.max_re < 0.12, "max {:.4}", s.max_re);
+        assert!(s.min_re > -0.12, "min {:.4}", s.min_re);
+        assert!(s.mean_re.abs() < 0.02, "bias {:.4}", s.mean_re);
+        assert!((0.01..0.06).contains(&s.mre), "mre {:.4}", s.mre);
+    }
+
+    #[test]
+    fn zero_operands() {
+        assert_eq!(Roba.mul(0, 17), 0);
+        assert_eq!(Roba.mul(17, 0), 0);
+    }
+}

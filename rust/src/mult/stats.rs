@@ -1,0 +1,140 @@
+//! Error characterization harness: drive a [`Multiplier`] over an
+//! operand distribution and accumulate MRE / SD / bias / extrema with
+//! Welford's streaming algorithm. This regenerates the error columns of
+//! the cited design papers (and the mapping in the paper's §III).
+
+use crate::rng::Xoshiro256;
+
+use super::Multiplier;
+
+/// Operand distributions for characterization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandDist {
+    /// Uniform over the full 16-bit range `[1, 2^16)` — the distribution
+    /// the DRUM paper reports against.
+    Uniform16,
+    /// Uniform over `[1, 2^32)`.
+    Uniform32,
+    /// Uniform over `[2^23, 2^24)` — normalized f32 mantissas: the
+    /// distribution a floating-point CNN MAC actually feeds the
+    /// mantissa multiplier.
+    Mantissa,
+    /// Low-magnitude operands `[1, 2^8)` — stresses designs whose error
+    /// depends on operand range (truncation collapses here).
+    Small,
+}
+
+impl OperandDist {
+    pub fn sample(self, rng: &mut Xoshiro256) -> u32 {
+        match self {
+            OperandDist::Uniform16 => 1 + rng.next_below(65_535) as u32,
+            OperandDist::Uniform32 => {
+                let v = rng.next_u32();
+                if v == 0 {
+                    1
+                } else {
+                    v
+                }
+            }
+            OperandDist::Mantissa => (1 << 23) + rng.next_below(1 << 23) as u32,
+            OperandDist::Small => 1 + rng.next_below(255) as u32,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OperandDist::Uniform16 => "uniform16",
+            OperandDist::Uniform32 => "uniform32",
+            OperandDist::Mantissa => "mantissa",
+            OperandDist::Small => "small",
+        }
+    }
+}
+
+/// Streaming error statistics of a multiplier design.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorStats {
+    /// Mean of |relative error| — the paper's MRE, equation (1).
+    pub mre: f64,
+    /// Standard deviation of the *signed* relative error — the paper's SD.
+    pub sd: f64,
+    /// Mean signed relative error (bias; ~0 for unbiased designs).
+    pub mean_re: f64,
+    pub min_re: f64,
+    pub max_re: f64,
+    pub samples: u64,
+}
+
+impl ErrorStats {
+    /// `MRE / SD` — equals sqrt(2/pi) ≈ 0.798 iff the error is
+    /// zero-mean Gaussian (the identity behind the paper's Table II).
+    pub fn gaussianity_ratio(&self) -> f64 {
+        if self.sd == 0.0 {
+            return 0.0;
+        }
+        self.mre / self.sd
+    }
+}
+
+/// Characterize `m` over `n` random operand pairs from `dist`.
+pub fn characterize(
+    m: &dyn Multiplier,
+    dist: OperandDist,
+    n: u64,
+    seed: u64,
+) -> ErrorStats {
+    let mut rng = Xoshiro256::new(seed);
+    let mut mean = 0.0f64; // Welford over signed relative error
+    let mut m2 = 0.0f64;
+    let mut abs_sum = 0.0f64;
+    let (mut min_re, mut max_re) = (f64::INFINITY, f64::NEG_INFINITY);
+    for i in 1..=n {
+        let a = dist.sample(&mut rng);
+        let b = dist.sample(&mut rng);
+        let re = m.relative_error(a, b);
+        abs_sum += re.abs();
+        let delta = re - mean;
+        mean += delta / i as f64;
+        m2 += delta * (re - mean);
+        min_re = min_re.min(re);
+        max_re = max_re.max(re);
+    }
+    ErrorStats {
+        mre: abs_sum / n as f64,
+        sd: (m2 / n as f64).sqrt(),
+        mean_re: mean,
+        min_re,
+        max_re,
+        samples: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::Exact;
+
+    #[test]
+    fn exact_has_zero_error() {
+        let s = characterize(&Exact, OperandDist::Uniform16, 10_000, 1);
+        assert_eq!(s.mre, 0.0);
+        assert_eq!(s.sd, 0.0);
+        assert_eq!(s.samples, 10_000);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let d = crate::mult::Drum::new(6).unwrap();
+        let a = characterize(&d, OperandDist::Mantissa, 5_000, 42);
+        let b = characterize(&d, OperandDist::Mantissa, 5_000, 42);
+        assert_eq!(a.mre, b.mre);
+        assert_eq!(a.sd, b.sd);
+    }
+
+    #[test]
+    fn gaussianity_ratio_for_gaussian_model() {
+        let g = crate::mult::GaussianModel::new(0.05, 3);
+        let s = characterize(&g, OperandDist::Mantissa, 100_000, 4);
+        assert!((s.gaussianity_ratio() - crate::HALF_NORMAL_MEAN).abs() < 0.02);
+    }
+}

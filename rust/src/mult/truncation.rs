@@ -1,0 +1,71 @@
+//! Static truncation multiplier: zero the low `k` bits of each operand
+//! before an exact multiply. The cheapest possible "approximate
+//! multiplier" and the standard strawman baseline: unlike DRUM it is
+//! *biased* (always underestimates) and its relative error blows up for
+//! small operands — both visible in the characterization tables.
+
+use anyhow::{bail, Result};
+
+use super::Multiplier;
+
+/// Truncate-low-k-bits multiplier.
+#[derive(Debug, Clone, Copy)]
+pub struct Truncation {
+    k: u32,
+}
+
+impl Truncation {
+    /// `k` in `[1, 31]`: number of low bits discarded per operand.
+    pub fn new(k: u32) -> Result<Self> {
+        if !(1..=31).contains(&k) {
+            bail!("truncation k must be in [1, 31], got {k}");
+        }
+        Ok(Truncation { k })
+    }
+}
+
+impl Multiplier for Truncation {
+    fn name(&self) -> String {
+        format!("trunc{}", self.k)
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        let mask = !0u32 << self.k;
+        (a & mask) as u64 * (b & mask) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{characterize, Multiplier, OperandDist};
+
+    #[test]
+    fn underestimates_always() {
+        let t = Truncation::new(8).unwrap();
+        let stats = characterize(&t, OperandDist::Uniform16, 50_000, 9);
+        assert!(stats.max_re <= 0.0);
+        assert!(stats.mean_re < 0.0);
+    }
+
+    #[test]
+    fn small_operands_zeroed() {
+        let t = Truncation::new(8).unwrap();
+        assert_eq!(t.mul(200, 200), 0); // both < 2^8
+    }
+
+    #[test]
+    fn aligned_operands_exact() {
+        let t = Truncation::new(4).unwrap();
+        assert_eq!(t.mul(0x10, 0x20), 0x200);
+    }
+
+    #[test]
+    fn more_truncation_more_error() {
+        let mre = |k| {
+            characterize(&Truncation::new(k).unwrap(), OperandDist::Mantissa, 50_000, 3)
+                .mre
+        };
+        assert!(mre(16) > mre(8));
+    }
+}

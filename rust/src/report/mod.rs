@@ -1,0 +1,230 @@
+//! Report rendering: markdown tables, ASCII histograms, and the
+//! paper-vs-measured comparison layouts used by the table2/table3/fig2
+//! harnesses.
+
+use std::fmt::Write as _;
+
+/// A simple markdown/ASCII table builder with right-aligned numeric
+/// columns.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {:>w$} |", c, w = w);
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<w$}|", "", w = w + 2);
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render an ASCII histogram (the Figure-2 reproduction's terminal
+/// form; the CSV twin is written next to it for plotting).
+pub fn ascii_histogram(
+    edges: &[f64],
+    counts: &[u64],
+    width: usize,
+    max_rows: usize,
+) -> String {
+    assert_eq!(edges.len(), counts.len());
+    let mut out = String::new();
+    if counts.is_empty() {
+        return out;
+    }
+    // Downsample bins to at most max_rows rows by summing groups.
+    let group = counts.len().div_ceil(max_rows);
+    let peak = counts
+        .chunks(group)
+        .map(|c| c.iter().sum::<u64>())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    for (i, chunk) in counts.chunks(group).enumerate() {
+        let total: u64 = chunk.iter().sum();
+        let bar = (total as f64 / peak as f64 * width as f64).round() as usize;
+        let lo = edges[i * group];
+        let _ = writeln!(
+            out,
+            "{:>8.4} | {:<width$} {}",
+            lo,
+            "#".repeat(bar),
+            total,
+            width = width
+        );
+    }
+    out
+}
+
+/// Render an ASCII line chart of one or more labelled series over a
+/// shared x axis (epoch loss/accuracy curves; the terminal twin of the
+/// CSVs the trainer writes).
+pub fn line_chart(
+    series: &[(&str, &[f64])],
+    height: usize,
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    let n = series.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    if n == 0 || height < 2 {
+        return out;
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, v) in series {
+        for &y in *v {
+            lo = lo.min(y);
+            hi = hi.max(y);
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        hi = lo + 1.0;
+    }
+    let marks: &[char] = &['*', 'o', '+', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, v)) in series.iter().enumerate() {
+        for (i, &y) in v.iter().enumerate() {
+            let cx = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+            let fy = (y - lo) / (hi - lo);
+            let cy = height - 1 - ((fy * (height - 1) as f64).round() as usize);
+            grid[cy.min(height - 1)][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let label = if ri == 0 {
+            format!("{hi:>9.3}")
+        } else if ri == height - 1 {
+            format!("{lo:>9.3}")
+        } else {
+            " ".repeat(9)
+        };
+        let _ = writeln!(out, "{label} | {}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>9}   {}", "", "-".repeat(width));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    let _ = writeln!(out, "{:>12}{}", "", legend.join("   "));
+    out
+}
+
+/// CSV for (edges, counts) histograms.
+pub fn histogram_csv(edges: &[f64], counts: &[u64]) -> String {
+    let mut out = String::from("bin_lo,count\n");
+    for (e, c) in edges.iter().zip(counts) {
+        let _ = writeln!(out, "{e:.6},{c}");
+    }
+    out
+}
+
+/// Format a fraction as a percent string like `93.53%`.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", 100.0 * v)
+}
+
+/// Format a signed accuracy delta like the paper's "Diff." column.
+pub fn diff_pct(v: f64) -> String {
+    format!("{:+.2}%", 100.0 * v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["id", "value"]);
+        t.row(vec!["1".into(), "93.6".into()]);
+        t.row(vec!["22".into(), "5".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| id | value |"));
+        assert_eq!(md.lines().count(), 4);
+        let lines: Vec<&str> = md.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        Table::new(&["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn histogram_shapes() {
+        let edges: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let counts: Vec<u64> = (0..10).map(|i| i * 10).collect();
+        let h = ascii_histogram(&edges, &counts, 20, 5);
+        assert_eq!(h.lines().count(), 5);
+        let csv = histogram_csv(&edges, &counts);
+        assert_eq!(csv.lines().count(), 11);
+    }
+
+    #[test]
+    fn line_chart_renders() {
+        let a = [3.0, 2.0, 1.0, 0.5];
+        let b = [2.5, 2.0, 1.8, 1.7];
+        let c = line_chart(&[("exact", &a), ("approx", &b)], 8, 40);
+        assert_eq!(c.lines().count(), 10);
+        assert!(c.contains("exact"));
+        assert!(c.contains('*') && c.contains('o'));
+        assert!(line_chart(&[("empty", &[])], 8, 40).is_empty());
+    }
+
+    #[test]
+    fn line_chart_constant_series() {
+        let a = [1.0, 1.0, 1.0];
+        let c = line_chart(&[("flat", &a)], 4, 10);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.9353), "93.53%");
+        assert_eq!(diff_pct(-0.0007), "-0.07%");
+        assert_eq!(diff_pct(0.001), "+0.10%");
+    }
+}

@@ -1,0 +1,143 @@
+//! PJRT engine: client + artifact registry + compile cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{EntrySpec, Manifest};
+use super::{literal_to_tensor, tensor_to_literal};
+use crate::tensor::Tensor;
+
+/// A compiled entry point plus its manifest spec. Cheap to clone.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    spec: Arc<EntrySpec>,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &EntrySpec {
+        &self.spec
+    }
+
+    /// Run with host tensors, validating count/shape/dtype against the
+    /// manifest, and untuple the result back to host tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_refs(&inputs.iter().collect::<Vec<_>>())
+    }
+
+    /// Like [`Executable::run`] but borrowing the inputs — the step
+    /// loop passes the session's resident state without cloning it
+    /// (EXPERIMENTS.md §Perf).
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.file,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input {i} ({}) expects {}{:?}, got {}{:?}",
+                    self.spec.file,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.file))?;
+        let mut root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        // aot.py lowers with return_tuple=True: one top-level tuple.
+        let parts = root.decompose_tuple().context("untupling result")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                self.spec.file,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Owns the PJRT client, the manifest, and a per-entry compile cache.
+/// One `Engine` per process; sessions and sweeps share it (`&Engine` is
+/// `Sync` — PJRT CPU executables are thread-safe for execution).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Executable>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifacts directory.
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) the `kind` entry of `preset`.
+    pub fn load(&self, preset: &str, kind: &str) -> Result<Executable> {
+        let key = format!("{preset}/{kind}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let model = self.manifest.model(preset)?;
+        let spec = model.entry(kind)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let started = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        log::info!("compiled {key} in {:.2?}", started.elapsed());
+        let executable =
+            Executable { exe: Arc::new(exe), spec: Arc::new(spec) };
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, executable.clone());
+        Ok(executable)
+    }
+
+    /// Number of compiled entries currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

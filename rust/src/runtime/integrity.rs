@@ -1,0 +1,128 @@
+//! Artifact integrity: verify every HLO file on disk against the
+//! sha256 the AOT build recorded in the manifest. Catches stale or
+//! hand-edited artifacts before they produce silently-wrong numerics
+//! (`approxmul validate`).
+
+use anyhow::{Context, Result};
+use sha2::{Digest, Sha256};
+
+use super::manifest::Manifest;
+
+/// Outcome for one artifact file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FileStatus {
+    Ok,
+    Mismatch { expected: String, actual: String },
+    Missing,
+}
+
+/// One row of a validation report.
+#[derive(Debug, Clone)]
+pub struct FileReport {
+    pub preset: String,
+    pub kind: String,
+    pub file: String,
+    pub status: FileStatus,
+}
+
+/// Hash every artifact referenced by the manifest.
+pub fn validate(manifest: &Manifest) -> Result<Vec<FileReport>> {
+    let mut out = Vec::new();
+    for (preset, model) in &manifest.models {
+        for (kind, entry) in &model.entries {
+            let path = manifest.dir.join(&entry.file);
+            let status = if !path.exists() {
+                FileStatus::Missing
+            } else {
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                let actual = hex(&Sha256::digest(&bytes));
+                if actual == entry.sha256 {
+                    FileStatus::Ok
+                } else {
+                    FileStatus::Mismatch { expected: entry.sha256.clone(), actual }
+                }
+            };
+            out.push(FileReport {
+                preset: preset.clone(),
+                kind: kind.clone(),
+                file: entry.file.clone(),
+                status,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// True iff every artifact verified.
+pub fn all_ok(reports: &[FileReport]) -> bool {
+    reports.iter().all(|r| r.status == FileStatus::Ok)
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_encodes() {
+        assert_eq!(hex(&[0x00, 0xff, 0x0a]), "00ff0a");
+    }
+
+    #[test]
+    fn sha256_known_answer() {
+        // sha256("abc")
+        assert_eq!(
+            hex(&Sha256::digest(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn validates_real_artifacts() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Manifest::load(dir).unwrap();
+        let reports = validate(&manifest).unwrap();
+        assert!(!reports.is_empty());
+        assert!(all_ok(&reports), "{reports:?}");
+    }
+
+    #[test]
+    fn detects_tampering() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let tmp = std::env::temp_dir().join(format!("axm-int-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        for e in std::fs::read_dir(dir).unwrap() {
+            let e = e.unwrap();
+            if e.file_name() != ".stamp" {
+                std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+            }
+        }
+        // Append a byte to one artifact.
+        let victim = tmp.join("train_tiny.hlo.txt");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes.push(b'\n');
+        std::fs::write(&victim, bytes).unwrap();
+        let manifest = Manifest::load(&tmp).unwrap();
+        let reports = validate(&manifest).unwrap();
+        assert!(!all_ok(&reports));
+        assert!(reports.iter().any(|r| matches!(
+            r.status,
+            FileStatus::Mismatch { .. }
+        ) && r.file == "train_tiny.hlo.txt"));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,365 @@
+//! `artifacts/manifest.json` — the ABI contract with the AOT build.
+//!
+//! The manifest pins, for every lowered entry point, the positional
+//! input/output tensor list (name, shape, dtype), the model's parameter
+//! and BN-state layout, and the per-layer MAC table the cost model uses.
+//! Everything the coordinator knows about the compiled graphs comes from
+//! here; shape or order drift between Python and Rust fails loudly at
+//! load time rather than as silent numerical garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::tensor::DType;
+
+/// One positional input/output of a compiled entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(IoSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_array()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(v.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One lowered entry point (train / eval / init).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl EntrySpec {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(EntrySpec {
+            file: v.get("file")?.as_str()?.to_string(),
+            sha256: v.get("sha256")?.as_str()?.to_string(),
+            inputs: v
+                .get("inputs")?
+                .as_array()?
+                .iter()
+                .map(IoSpec::parse)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .get("outputs")?
+                .as_array()?
+                .iter()
+                .map(IoSpec::parse)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// A model parameter or BN-state tensor in manifest order.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `conv_w` / `dense_w` / `bias` / `bn_gamma` / `bn_beta` ("state"
+    /// for BN running stats).
+    pub kind: String,
+    /// Error-stream id for weight tensors, -1 otherwise.
+    pub layer: i64,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Figure-1 layer-table row (drives the cost model + `arch` report).
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub name: String,
+    pub ty: String,
+    pub out: Vec<usize>,
+    pub params: u64,
+    pub macs: u64,
+}
+
+/// One preset's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub preset: String,
+    pub inject: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub input_hw: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub total_params: u64,
+    pub params: Vec<TensorSpec>,
+    pub state: Vec<TensorSpec>,
+    pub layers: Vec<LayerRow>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ModelManifest {
+    pub fn entry(&self, kind: &str) -> Result<&EntrySpec> {
+        self.entries.get(kind).with_context(|| {
+            format!("preset {:?} has no lowered {kind:?} entry", self.preset)
+        })
+    }
+
+    /// Total MACs of one forward pass for one sample.
+    pub fn forward_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// MACs in conv layers only (the 90.7% share of [12]).
+    pub fn conv_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.ty.starts_with("conv"))
+            .map(|l| l.macs)
+            .sum()
+    }
+}
+
+/// Paper reference data embedded in the manifest (single source of truth
+/// shared with Python).
+#[derive(Debug, Clone)]
+pub struct PaperData {
+    /// (test_id, mre, sd, accuracy_pct)
+    pub table2: Vec<(u32, f64, f64, f64)>,
+    /// (test_id, mre, approx_epochs, exact_epochs)
+    pub table3: Vec<(u32, f64, u32, u32)>,
+    /// name -> (speed_gain, area_saving, power_saving, mre, sd)
+    pub hw_designs: BTreeMap<String, (f64, f64, f64, f64, f64)>,
+    pub conv_time_share: f64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub paper: PaperData,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let root = Value::parse_file(dir.join("manifest.json"))?;
+        if root.get("format")?.as_i64()? != 1 {
+            bail!("unknown manifest format");
+        }
+
+        let paper = root.get("paper")?;
+        let table2 = paper
+            .get("table2")?
+            .as_array()?
+            .iter()
+            .map(|r| {
+                let r = r.as_array()?;
+                Ok((
+                    r[0].as_usize()? as u32,
+                    r[1].as_f64()?,
+                    r[2].as_f64()?,
+                    r[3].as_f64()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let table3 = paper
+            .get("table3")?
+            .as_array()?
+            .iter()
+            .map(|r| {
+                let r = r.as_array()?;
+                Ok((
+                    r[0].as_usize()? as u32,
+                    r[1].as_f64()?,
+                    r[2].as_usize()? as u32,
+                    r[3].as_usize()? as u32,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut hw_designs = BTreeMap::new();
+        for (name, v) in paper.get("hw_designs")?.as_object()? {
+            let a = v.as_array()?;
+            hw_designs.insert(
+                name.clone(),
+                (
+                    a[0].as_f64()?,
+                    a[1].as_f64()?,
+                    a[2].as_f64()?,
+                    a[3].as_f64()?,
+                    a[4].as_f64()?,
+                ),
+            );
+        }
+        let paper = PaperData {
+            table2,
+            table3,
+            hw_designs,
+            conv_time_share: paper.get("conv_time_share")?.as_f64()?,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_object()? {
+            models.insert(name.clone(), Self::parse_model(m)?);
+        }
+        let manifest = Manifest { dir, paper, models };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn parse_model(m: &Value) -> Result<ModelManifest> {
+        let tensor_specs = |key: &str, default_kind: &str| -> Result<Vec<TensorSpec>> {
+            m.get(key)?
+                .as_array()?
+                .iter()
+                .map(|p| {
+                    Ok(TensorSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p
+                            .get("shape")?
+                            .as_array()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        kind: p
+                            .opt("kind")
+                            .map(|k| k.as_str().map(str::to_string))
+                            .transpose()?
+                            .unwrap_or_else(|| default_kind.to_string()),
+                        layer: p.opt("layer").map(|l| l.as_i64()).transpose()?.unwrap_or(-1),
+                    })
+                })
+                .collect()
+        };
+        let layers = m
+            .get("layers")?
+            .as_array()?
+            .iter()
+            .map(|l| {
+                Ok(LayerRow {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    ty: l.get("type")?.as_str()?.to_string(),
+                    out: l
+                        .get("out")?
+                        .as_array()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    params: l.get("params")?.as_i64()? as u64,
+                    macs: l.get("macs")?.as_i64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = BTreeMap::new();
+        for (kind, e) in m.get("entries")?.as_object()? {
+            entries.insert(kind.clone(), EntrySpec::parse(e)?);
+        }
+        Ok(ModelManifest {
+            preset: m.get("preset")?.as_str()?.to_string(),
+            inject: m.get("inject")?.as_str()?.to_string(),
+            batch: m.get("batch")?.as_usize()?,
+            eval_batch: m.get("eval_batch")?.as_usize()?,
+            input_hw: m.get("input_hw")?.as_usize()?,
+            in_ch: m.get("in_ch")?.as_usize()?,
+            num_classes: m.get("num_classes")?.as_usize()?,
+            total_params: m.get("total_params")?.as_i64()? as u64,
+            params: tensor_specs("params", "param")?,
+            state: tensor_specs("state", "state")?,
+            layers,
+            entries,
+        })
+    }
+
+    /// Structural invariants every loaded manifest must satisfy.
+    fn validate(&self) -> Result<()> {
+        for (name, m) in &self.models {
+            let declared: u64 = m.params.iter().map(|p| p.element_count() as u64).sum();
+            if declared != m.total_params {
+                bail!("{name}: total_params {} != declared {declared}", m.total_params);
+            }
+            for (kind, e) in &m.entries {
+                let path = self.dir.join(&e.file);
+                if !path.exists() {
+                    bail!("{name}/{kind}: missing artifact {}", path.display());
+                }
+                if kind == "train" {
+                    let expect = 2 * m.params.len() + m.state.len() + 6;
+                    if e.inputs.len() != expect {
+                        bail!(
+                            "{name}/train: {} inputs, expected {expect}",
+                            e.inputs.len()
+                        );
+                    }
+                    // Threading symmetry: output i mirrors input i for the
+                    // params/state/opt prefix.
+                    let n = 2 * m.params.len() + m.state.len();
+                    for i in 0..n {
+                        if e.inputs[i].shape != e.outputs[i].shape {
+                            bail!("{name}/train: io shape mismatch at {i}");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(preset)
+            .with_context(|| format!("unknown preset {preset:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.models.contains_key("tiny"));
+        assert_eq!(m.paper.table2.len(), 9);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.num_classes, 10);
+        assert!(tiny.entry("train").is_ok());
+        assert!(tiny.entry("nope").is_err());
+        assert!(tiny.forward_macs() > 0);
+    }
+
+    #[test]
+    fn vgg16_conv_dominates() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let vgg = m.model("vgg16").unwrap();
+        let share = vgg.conv_macs() as f64 / vgg.forward_macs() as f64;
+        assert!(share > 0.9, "conv share {share}");
+    }
+}

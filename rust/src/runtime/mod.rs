@@ -1,0 +1,66 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//!
+//! The contract with the Python build step is `artifacts/manifest.json`
+//! ([`manifest`]) plus one HLO **text** file per entry point (text, not
+//! serialized proto — see `python/compile/aot.py` for why). [`Engine`]
+//! owns the PJRT CPU client and a compile cache; [`session::TrainSession`]
+//! keeps model/optimizer state resident as device buffers so the hot
+//! step loop never round-trips parameters through the host.
+
+pub mod engine;
+pub mod integrity;
+pub mod manifest;
+pub mod session;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{EntrySpec, IoSpec, LayerRow, Manifest, ModelManifest, TensorSpec};
+pub use session::TrainSession;
+
+use crate::tensor::{DType, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// Host tensor -> PJRT literal.
+///
+/// Perf note (EXPERIMENTS.md §Perf): built with
+/// `create_from_shape_and_untyped_data` — a single memcpy of the
+/// tensor's raw words — instead of the naive
+/// `as_f32() -> vec1 -> reshape` chain, which costs three full copies
+/// per tensor per step. All three supported dtypes are 4-byte words,
+/// so the raw `u32` storage is the wire format for each of them.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    };
+    // Reinterpret the word storage as bytes (little-endian host).
+    let words = t.raw();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), bytes)
+        .context("creating literal from raw tensor data")
+}
+
+/// PJRT literal -> host tensor (dtype from the literal's element type).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Tensor::from_f32(&dims, lit.to_vec::<f32>().context("f32 read")?)
+        }
+        xla::ElementType::S32 => {
+            Tensor::from_i32(&dims, lit.to_vec::<i32>().context("i32 read")?)
+        }
+        xla::ElementType::U32 => {
+            Tensor::from_u32(&dims, lit.to_vec::<u32>().context("u32 read")?)
+        }
+        xla::ElementType::Pred => {
+            // Predicates surface from eval comparisons; widen to i32.
+            let v = lit.to_vec::<u8>().context("pred read")?;
+            Tensor::from_i32(&dims, v.into_iter().map(|b| b as i32).collect())
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}

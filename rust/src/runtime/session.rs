@@ -1,0 +1,233 @@
+//! `TrainSession`: model + optimizer + BN state bound to compiled
+//! train/eval/init executables.
+//!
+//! The session owns the host copies of all stateful tensors and threads
+//! them through the positional train-step ABI. It exposes exactly the
+//! knobs the paper's procedures need per step: the error sigma, the
+//! error seed (fixed vs resampled), and the learning rate — so the
+//! coordinator's policies stay pure control logic.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, Executable};
+use super::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+/// Scalar knobs for one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInputs {
+    /// Error-matrix seed. Constant per run = the paper's fixed error
+    /// matrices; varied per step = the resampling ablation.
+    pub seed_err: u32,
+    /// Dropout seed (always varied per step by the trainer).
+    pub seed_drop: u32,
+    /// Gaussian SD of the relative multiplier error; `0.0` = exact.
+    pub sigma: f32,
+    pub lr: f32,
+}
+
+/// Outcome of one step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Cross-entropy part of the loss (excludes the L2 term).
+    pub loss: f32,
+    /// Minibatch training accuracy.
+    pub accuracy: f32,
+}
+
+/// Outcome of one eval batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalStats {
+    pub loss_sum: f32,
+    pub correct: i64,
+    pub total: usize,
+}
+
+/// Training-state container bound to one preset's executables.
+pub struct TrainSession {
+    preset: String,
+    train: Executable,
+    eval: Executable,
+    n_params: usize,
+    n_state: usize,
+    batch: usize,
+    eval_batch: usize,
+    input_elems: usize,
+    eval_input_elems: usize,
+    /// params ++ state ++ opt, manifest order.
+    tensors: Vec<Tensor>,
+    steps_run: u64,
+}
+
+impl TrainSession {
+    /// Create a session with freshly initialized (seeded) model state by
+    /// running the compiled `init` graph — init happens *in XLA*, so a
+    /// Rust-driven run reproduces the Python-side init bit-for-bit.
+    pub fn new(engine: &Engine, preset: &str, seed: u32) -> Result<Self> {
+        let model = engine.manifest().model(preset)?;
+        let init = engine.load(preset, "init")?;
+        let tensors = init.run(&[Tensor::scalar_u32(seed)])?;
+        Self::from_tensors(engine, preset, tensors, model)
+    }
+
+    /// Restore a session from checkpointed tensors (params++state++opt).
+    pub fn from_checkpoint(
+        engine: &Engine,
+        preset: &str,
+        tensors: Vec<Tensor>,
+    ) -> Result<Self> {
+        let model = engine.manifest().model(preset)?;
+        Self::from_tensors(engine, preset, tensors, model)
+    }
+
+    fn from_tensors(
+        engine: &Engine,
+        preset: &str,
+        tensors: Vec<Tensor>,
+        model: &ModelManifest,
+    ) -> Result<Self> {
+        let n_params = model.params.len();
+        let n_state = model.state.len();
+        if tensors.len() != 2 * n_params + n_state {
+            bail!(
+                "{preset}: state vector has {} tensors, expected {}",
+                tensors.len(),
+                2 * n_params + n_state
+            );
+        }
+        for (t, spec) in tensors.iter().zip(
+            model.params.iter().chain(model.state.iter()).chain(model.params.iter()),
+        ) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{preset}: tensor {} shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let train = engine.load(preset, "train")?;
+        let eval = engine.load(preset, "eval")?;
+        let hw = model.input_hw;
+        Ok(TrainSession {
+            preset: preset.to_string(),
+            train,
+            eval,
+            n_params,
+            n_state,
+            batch: model.batch,
+            eval_batch: model.eval_batch,
+            input_elems: model.batch * hw * hw * model.in_ch,
+            eval_input_elems: model.eval_batch * hw * hw * model.in_ch,
+            tensors,
+            steps_run: 0,
+        })
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+
+    pub fn steps_run(&self) -> u64 {
+        self.steps_run
+    }
+
+    /// All stateful tensors (params ++ state ++ opt) — checkpoint payload.
+    pub fn state_tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Model parameters only.
+    pub fn params(&self) -> &[Tensor] {
+        &self.tensors[..self.n_params]
+    }
+
+    /// One SGD step on a minibatch.
+    ///
+    /// `x` must be `[batch, hw, hw, c]` f32, `y` `[batch]` i32.
+    pub fn step(&mut self, x: Tensor, y: Tensor, k: StepInputs) -> Result<StepStats> {
+        if x.len() != self.input_elems {
+            bail!(
+                "{}: x has {} elements, expected {}",
+                self.preset,
+                x.len(),
+                self.input_elems
+            );
+        }
+        // Scalars live on the stack; state tensors are passed by
+        // reference — no per-step copy of the model state on the host
+        // side (EXPERIMENTS.md §Perf).
+        let scalars = [
+            Tensor::scalar_u32(k.seed_err),
+            Tensor::scalar_u32(k.seed_drop),
+            Tensor::scalar_f32(k.sigma),
+            Tensor::scalar_f32(k.lr),
+        ];
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.tensors.len() + 6);
+        inputs.extend(self.tensors.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(scalars.iter());
+
+        let mut outputs = self.train.run_refs(&inputs).context("train step")?;
+        let acc = outputs.pop().expect("acc output").scalar_as_f32()?;
+        let loss = outputs.pop().expect("loss output").scalar_as_f32()?;
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss at step {}", self.preset, self.steps_run);
+        }
+        self.tensors = outputs;
+        self.steps_run += 1;
+        Ok(StepStats { loss, accuracy: acc })
+    }
+
+    /// Evaluate one batch with exact multipliers (error layers removed,
+    /// matching the paper's test procedure).
+    pub fn eval_batch(&self, x: Tensor, y: Tensor) -> Result<EvalStats> {
+        if x.len() != self.eval_input_elems {
+            bail!(
+                "{}: eval x has {} elements, expected {}",
+                self.preset,
+                x.len(),
+                self.eval_input_elems
+            );
+        }
+        let mut inputs: Vec<&Tensor> =
+            Vec::with_capacity(self.n_params + self.n_state + 2);
+        inputs.extend(self.tensors[..self.n_params + self.n_state].iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        let outputs = self.eval.run_refs(&inputs).context("eval step")?;
+        Ok(EvalStats {
+            loss_sum: outputs[0].scalar_as_f32()?,
+            correct: outputs[1].scalar_as_i32()? as i64,
+            total: self.eval_batch,
+        })
+    }
+
+    /// Replace the full state vector (used by checkpoint restore-in-place).
+    pub fn restore(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!(
+                "restore: {} tensors, expected {}",
+                tensors.len(),
+                self.tensors.len()
+            );
+        }
+        for (new, old) in tensors.iter().zip(&self.tensors) {
+            if new.shape() != old.shape() {
+                bail!("restore: shape mismatch {:?} vs {:?}", new.shape(), old.shape());
+            }
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+}

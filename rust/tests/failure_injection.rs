@@ -1,0 +1,93 @@
+//! Failure injection: every load-time contract violation must fail
+//! loudly with a useful error, never as silent numerical garbage.
+
+use std::fs;
+
+use approxmul::runtime::{Engine, Manifest};
+
+fn artifacts_exist() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Copy the artifacts dir, apply `mutate` to the manifest JSON text,
+/// and return the scratch dir.
+fn mutated_artifacts(
+    name: &str,
+    mutate: impl FnOnce(String) -> String,
+) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("axm-fi-{name}-{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    for entry in fs::read_dir("artifacts").unwrap() {
+        let entry = entry.unwrap();
+        if entry.file_name() != ".stamp" {
+            fs::copy(entry.path(), dir.join(entry.file_name())).unwrap();
+        }
+    }
+    let manifest_path = dir.join("manifest.json");
+    let text = fs::read_to_string(&manifest_path).unwrap();
+    fs::write(&manifest_path, mutate(text)).unwrap();
+    dir
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    if !artifacts_exist() {
+        return;
+    }
+    let dir = mutated_artifacts("garbage", |mut t| {
+        t.truncate(t.len() / 2);
+        t
+    });
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn missing_artifact_file_rejected() {
+    if !artifacts_exist() {
+        return;
+    }
+    let dir = mutated_artifacts("missing", |t| t);
+    fs::remove_file(dir.join("train_tiny.hlo.txt")).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing artifact"), "{err}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn tampered_param_count_rejected() {
+    if !artifacts_exist() {
+        return;
+    }
+    let dir = mutated_artifacts("params", |t| {
+        // Inflate tiny's declared total_params so it no longer matches
+        // the per-tensor shapes.
+        t.replacen("\"total_params\": 3914", "\"total_params\": 4000", 1)
+    });
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("total_params"), "{err}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn unknown_preset_and_entry_error() {
+    if !artifacts_exist() {
+        return;
+    }
+    let engine = Engine::from_artifacts("artifacts").unwrap();
+    assert!(engine.load("nope", "train").is_err());
+    assert!(engine.load("vgg16", "train").is_err()); // not lowered
+}
+
+#[test]
+fn malformed_hlo_text_rejected_at_compile() {
+    if !artifacts_exist() {
+        return;
+    }
+    let dir = mutated_artifacts("hlo", |t| t);
+    fs::write(dir.join("train_tiny.hlo.txt"), "HloModule broken\nENTRY {").unwrap();
+    let engine = Engine::from_artifacts(&dir).unwrap();
+    assert!(engine.load("tiny", "train").is_err());
+    fs::remove_dir_all(dir).ok();
+}

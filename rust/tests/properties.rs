@@ -1,0 +1,234 @@
+//! Property-based tests (via the in-tree `testkit`) over coordinator
+//! and substrate invariants: multiplier error bounds, checkpoint/JSON
+//! round trips, batcher coverage, cost-model sanity, policy algebra.
+
+use approxmul::checkpoint;
+use approxmul::config::{LrSchedule, MultiplierPolicy};
+use approxmul::costmodel::{CostModel, HwDesign};
+use approxmul::data::SyntheticCifar;
+use approxmul::error_model::{mre_to_sigma, sigma_to_mre, ErrorConfig, ErrorMatrix};
+use approxmul::json::Value;
+use approxmul::mult::{Drum, Exact, Mitchell, Multiplier, Truncation};
+use approxmul::tensor::Tensor;
+use approxmul::testkit::{forall, Gen};
+
+#[test]
+fn prop_drum_error_bounded_by_truncation_level() {
+    // DRUM-k keeps k significant bits per operand; its relative error
+    // per operand is < 2^(1-k), so the product error is < ~2^(2-k).
+    forall(300, 11, |g: &mut Gen| {
+        let k = g.usize_in(4, 10) as u32;
+        let d = Drum::new(k).unwrap();
+        let a = g.u32().max(1);
+        let b = g.u32().max(1);
+        let re = d.relative_error(a, b).abs();
+        let bound = f64::powi(2.0, 2 - k as i32);
+        assert!(re <= bound, "drum{k}: |re|={re} > {bound} for {a}*{b}");
+    });
+}
+
+#[test]
+fn prop_mitchell_always_underestimates() {
+    forall(500, 12, |g: &mut Gen| {
+        let a = g.u32().max(1);
+        let b = g.u32().max(1);
+        let m = Mitchell;
+        assert!(m.mul(a, b) <= m.exact(a, b) + 1); // +1: fixed-point floor
+    });
+}
+
+#[test]
+fn prop_truncation_never_exceeds_exact() {
+    forall(500, 13, |g: &mut Gen| {
+        let k = g.usize_in(1, 20) as u32;
+        let t = Truncation::new(k).unwrap();
+        let a = g.u32();
+        let b = g.u32();
+        assert!(t.mul(a, b) <= t.exact(a, b));
+    });
+}
+
+#[test]
+fn prop_exact_commutes_and_identities() {
+    forall(300, 14, |g: &mut Gen| {
+        let m = Exact;
+        let a = g.u32();
+        let b = g.u32();
+        assert_eq!(m.mul(a, b), m.mul(b, a));
+        assert_eq!(m.mul(a, 1), a as u64);
+        assert_eq!(m.mul(a, 0), 0);
+    });
+}
+
+#[test]
+fn prop_mre_sigma_roundtrip() {
+    forall(200, 15, |g: &mut Gen| {
+        let mre = g.f64_in(1e-6, 0.5);
+        let back = sigma_to_mre(mre_to_sigma(mre));
+        assert!((back - mre).abs() < 1e-12);
+        assert!(mre_to_sigma(mre) > mre); // sigma > MRE always
+    });
+}
+
+#[test]
+fn prop_error_matrix_stats_track_sigma() {
+    forall(20, 16, |g: &mut Gen| {
+        let sigma = g.f64_in(0.005, 0.3);
+        let seed = g.u32();
+        let m = ErrorMatrix::generate(seed, 1, sigma, 50_000);
+        assert!((m.measured_sd() - sigma).abs() < 0.15 * sigma + 1e-4);
+        assert!((m.measured_mre() - sigma_to_mre(sigma)).abs() < 0.15 * sigma + 1e-4);
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    forall(50, 17, |g: &mut Gen| {
+        let n_tensors = g.usize_in(1, 5);
+        let mut named = Vec::new();
+        let mut tensors = Vec::new();
+        for i in 0..n_tensors {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(1, 8);
+            let data = g.vec_f32(rows * cols, -10.0, 10.0);
+            tensors.push(Tensor::from_f32(&[rows, cols], data).unwrap());
+            named.push(format!("t{i}"));
+        }
+        let pairs: Vec<(String, &Tensor)> =
+            named.iter().cloned().zip(tensors.iter()).collect();
+        let meta = checkpoint::Meta {
+            preset: "p".into(),
+            epoch: g.usize_in(0, 1000) as u64,
+            step: 5,
+            sigma: g.f64_in(0.0, 0.5),
+            tag: "prop".into(),
+        };
+        let bytes = checkpoint::to_bytes(&meta, &pairs);
+        let (m2, t2) = checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(m2.epoch, meta.epoch);
+        assert_eq!(t2.len(), n_tensors);
+        for ((_, orig), (name, restored)) in pairs.iter().zip(&t2) {
+            assert_eq!(*orig, restored, "{name}");
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_bitflip_always_detected() {
+    forall(60, 18, |g: &mut Gen| {
+        let t = Tensor::from_f32(&[4], g.vec_f32(4, -1.0, 1.0)).unwrap();
+        let meta = checkpoint::Meta {
+            preset: "p".into(),
+            epoch: 1,
+            step: 1,
+            sigma: 0.0,
+            tag: "flip".into(),
+        };
+        let mut bytes = checkpoint::to_bytes(&meta, &[("t".into(), &t)]);
+        let pos = g.usize_in(0, bytes.len() - 1);
+        let bit = g.usize_in(0, 7);
+        bytes[pos] ^= 1 << bit;
+        assert!(
+            checkpoint::from_bytes(&bytes).is_err(),
+            "flip at byte {pos} bit {bit} undetected"
+        );
+    });
+}
+
+#[test]
+fn prop_json_number_string_roundtrip() {
+    forall(200, 19, |g: &mut Gen| {
+        let n = g.f64_in(-1e9, 1e9);
+        let v = Value::parse(&format!("{n}")).unwrap();
+        assert!((v.as_f64().unwrap() - n).abs() <= n.abs() * 1e-12);
+        // String with escapes round-trips through serialization.
+        let s = format!("a\"b\\c\n{}", g.usize_in(0, 9));
+        let ser = Value::String(s.clone()).to_string();
+        assert_eq!(Value::parse(&ser).unwrap().as_str().unwrap(), s);
+    });
+}
+
+#[test]
+fn prop_policy_utilization_bounds() {
+    forall(200, 20, |g: &mut Gen| {
+        let total = g.usize_in(1, 500) as u64;
+        let switch = g.usize_in(0, 500) as u64;
+        let p = MultiplierPolicy::Hybrid {
+            error: ErrorConfig::from_sigma(0.05),
+            switch_epoch: switch,
+        };
+        let u = p.utilization(total);
+        assert!((0.0..=1.0).contains(&u));
+        // Epoch sigma is consistent with utilization extremes.
+        if u == 0.0 {
+            assert_eq!(p.sigma_at(0), if switch == 0 { 0.0 } else { 0.05 });
+        }
+    });
+}
+
+#[test]
+fn prop_lr_schedule_monotone_nonincreasing() {
+    forall(100, 21, |g: &mut Gen| {
+        let s = LrSchedule::StepDecay {
+            lr: g.f64_in(0.001, 1.0),
+            factor: g.f64_in(0.1, 1.0),
+            every: g.usize_in(1, 50) as u64,
+        };
+        let mut prev = f64::INFINITY;
+        for e in 0..100 {
+            let lr = s.at_epoch(e);
+            assert!(lr <= prev + 1e-15);
+            assert!(lr > 0.0);
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_costmodel_amdahl_invariants() {
+    forall(200, 22, |g: &mut Gen| {
+        let share = g.f64_in(0.1, 0.99);
+        let speed = g.f64_in(0.01, 0.9);
+        let cm = CostModel::new(share, 1_000);
+        let d = HwDesign {
+            speed_gain: speed,
+            area_saving: 0.5,
+            power_saving: 0.5,
+            mre: 0.01,
+            sd: 0.0125,
+        };
+        let gain = cm.system_gains(&d);
+        assert!(gain.step_speedup >= 1.0);
+        assert!(gain.step_speedup <= 1.0 / (1.0 - share) + 1e-9);
+        assert!(gain.step_speedup <= 1.0 / (1.0 - speed) + 1e-9);
+        // Hybrid gain interpolates monotonically in utilization.
+        let total = 100;
+        let mut prev = 0.0;
+        for a in [0u32, 25, 50, 75, 100] {
+            let h = cm.hybrid_gains(&d, a, total);
+            assert!(h.time_saving >= prev - 1e-12);
+            prev = h.time_saving;
+        }
+    });
+}
+
+#[test]
+fn prop_synthetic_dataset_valid_for_any_size() {
+    forall(20, 23, |g: &mut Gen| {
+        let hw = [4usize, 8, 16][g.usize_in(0, 2)];
+        let n = g.usize_in(10, 200);
+        let classes = g.usize_in(2, 10);
+        let gen = SyntheticCifar {
+            hw,
+            channels: 3,
+            num_classes: classes,
+            modes: g.usize_in(1, 6),
+            noise: g.f64_in(0.0, 3.0) as f32,
+            seed: g.u32() as u64,
+        };
+        let ds = gen.generate(n);
+        ds.check().unwrap();
+        assert_eq!(ds.len(), n);
+        assert!(ds.images.iter().all(|v| v.is_finite()));
+    });
+}

@@ -1,0 +1,106 @@
+//! Integration: the Table-II sweep runner and the Figure-4 hybrid
+//! search at miniature scale (fast enough for CI, exercising the same
+//! code paths the bench harnesses use).
+
+use approxmul::config::ExperimentConfig;
+use approxmul::coordinator::{HybridSearch, Sweep};
+use approxmul::error_model::ErrorConfig;
+use approxmul::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::from_artifacts("artifacts").expect("engine"))
+}
+
+fn mini_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_tiny();
+    cfg.epochs = 3;
+    cfg.train_examples = 384;
+    cfg.test_examples = 128;
+    cfg.tag = tag.into();
+    cfg
+}
+
+#[test]
+fn sweep_produces_comparable_rows() {
+    let Some(engine) = engine() else { return };
+    let cases = vec![
+        (0, ErrorConfig::exact(), 93.60),
+        (4, ErrorConfig::from_mre(0.036), 93.23),
+        (8, ErrorConfig::from_mre(0.382), 65.65),
+    ];
+    let sweep = Sweep::new(&engine, mini_cfg("sw"));
+    let mut seen = Vec::new();
+    let rows = sweep.run(&cases, |id, _| seen.push(id)).unwrap();
+    assert_eq!(seen, vec![0, 4, 8]);
+    assert_eq!(rows.len(), 3);
+    // Baseline row defines diff = 0.
+    assert_eq!(rows[0].diff_from_exact, 0.0);
+    assert!(rows[0].paper_accuracy.unwrap() > 0.93);
+    // Collapse case must be visibly below the benign case even at 3
+    // epochs (sigma 0.48 destroys training signal immediately).
+    assert!(
+        rows[2].accuracy < rows[1].accuracy,
+        "collapse {} !< benign {}",
+        rows[2].accuracy,
+        rows[1].accuracy
+    );
+    // All results are probabilities.
+    for r in &rows {
+        assert!((0.0..=1.0).contains(&r.accuracy));
+    }
+}
+
+#[test]
+fn hybrid_search_full_procedure() {
+    let Some(engine) = engine() else { return };
+    let dir = std::env::temp_dir().join(format!("axm-search-{}", std::process::id()));
+    let mut cfg = mini_cfg("hs");
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    let mut search = HybridSearch::new(&engine, cfg);
+    search.tolerance = 0.02;
+
+    let baseline = search.baseline().unwrap();
+    assert!(baseline.final_accuracy > 0.3);
+
+    // A destructive error level: the search must find that some exact
+    // tail is needed (utilization < 100%) or prove the full run passes.
+    let config = ErrorConfig::from_sigma(0.48);
+    let (approx, tag) = search.approx_run(config).unwrap();
+    let outcome = search
+        .search(config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .unwrap();
+    assert_eq!(outcome.approx_epochs + outcome.exact_epochs, 3);
+    assert!((0.0..=1.0).contains(&outcome.utilization));
+    if approx.final_accuracy < outcome.target {
+        assert!(outcome.exact_epochs >= 1, "destructive error needs a tail");
+        assert!(outcome.evaluations >= 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn benign_error_needs_no_tail() {
+    let Some(engine) = engine() else { return };
+    let dir = std::env::temp_dir().join(format!("axm-search2-{}", std::process::id()));
+    let mut cfg = mini_cfg("hs2");
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    let mut search = HybridSearch::new(&engine, cfg);
+    search.tolerance = 0.05; // generous: tiny-scale noise
+
+    let baseline = search.baseline().unwrap();
+    let config = ErrorConfig::from_sigma(0.018); // DRUM-6 level
+    let (approx, tag) = search.approx_run(config).unwrap();
+    let outcome = search
+        .search(config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .unwrap();
+    // Paper row 1: benign error -> full utilization.
+    if approx.final_accuracy >= outcome.target {
+        assert_eq!(outcome.utilization, 1.0);
+        assert_eq!(outcome.evaluations, 0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,121 @@
+//! Integration: the coordinator end to end — training improves
+//! accuracy, the hybrid policy switches multipliers mid-run, and
+//! checkpoint/resume replays bit-exactly (the property the Figure-4
+//! search depends on).
+
+use approxmul::checkpoint::Store;
+use approxmul::config::{ExperimentConfig, MultiplierPolicy};
+use approxmul::coordinator::Trainer;
+use approxmul::error_model::ErrorConfig;
+use approxmul::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::from_artifacts("artifacts").expect("engine"))
+}
+
+fn quick_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_tiny();
+    cfg.epochs = 4;
+    cfg.train_examples = 512;
+    cfg.test_examples = 256;
+    cfg.tag = tag.into();
+    cfg
+}
+
+#[test]
+fn training_learns_synthetic_task() {
+    let Some(engine) = engine() else { return };
+    let mut trainer = Trainer::new(&engine, quick_cfg("learn")).unwrap();
+    let outcome = trainer.run().unwrap();
+    assert_eq!(outcome.epochs_run, 4);
+    assert!(
+        outcome.final_accuracy > 0.5,
+        "only {:.3} accuracy",
+        outcome.final_accuracy
+    );
+    // Loss decreased across epochs.
+    let first = outcome.history.records.first().unwrap().train_loss;
+    let last = outcome.history.records.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn hybrid_policy_switches_sigma() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = quick_cfg("hybrid");
+    cfg.policy = MultiplierPolicy::Hybrid {
+        error: ErrorConfig::from_sigma(0.1),
+        switch_epoch: 2,
+    };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let outcome = trainer.run().unwrap();
+    let sigmas: Vec<f64> = outcome.history.records.iter().map(|r| r.sigma).collect();
+    assert_eq!(sigmas.len(), 4);
+    assert!(sigmas[0] > 0.0 && sigmas[1] > 0.0, "{sigmas:?}");
+    assert_eq!(sigmas[2], 0.0);
+    assert_eq!(sigmas[3], 0.0);
+}
+
+#[test]
+fn identical_configs_reproduce_exactly() {
+    let Some(engine) = engine() else { return };
+    let a = Trainer::new(&engine, quick_cfg("rep")).unwrap().run().unwrap();
+    let b = Trainer::new(&engine, quick_cfg("rep")).unwrap().run().unwrap();
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.test_acc, rb.test_acc);
+    }
+}
+
+#[test]
+fn checkpoint_resume_replays_run() {
+    let Some(engine) = engine() else { return };
+    let dir = std::env::temp_dir().join(format!("axm-resume-{}", std::process::id()));
+
+    // Full 4-epoch run, checkpointing every epoch.
+    let mut cfg = quick_cfg("resume");
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    cfg.checkpoint_every = 1;
+    let full = Trainer::new(&engine, cfg.clone()).unwrap().run().unwrap();
+
+    // Resume from the epoch-2 checkpoint and run epochs 2..4.
+    let store = Store::new(&dir).unwrap();
+    let (meta, tensors) = store.load("resume", 2).unwrap();
+    assert_eq!(meta.epoch, 2);
+    let mut resumed = Trainer::new(&engine, cfg).unwrap();
+    resumed
+        .restore_state(tensors.into_iter().map(|(_, t)| t).collect())
+        .unwrap();
+    let tail = resumed.run_from(2, None).unwrap();
+
+    // The resumed tail must match the full run's epochs 2..4 exactly
+    // (same data order, same seeds, same state).
+    assert_eq!(tail.history.records.len(), 2);
+    for (r_full, r_tail) in full.history.records[2..].iter().zip(&tail.history.records) {
+        assert_eq!(r_full.epoch, r_tail.epoch);
+        assert_eq!(r_full.train_loss, r_tail.train_loss, "epoch {}", r_full.epoch);
+        assert_eq!(r_full.test_acc, r_tail.test_acc);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_step_sampling_differs_from_fixed() {
+    let Some(engine) = engine() else { return };
+    let mut cfg_fixed = quick_cfg("samp-f");
+    cfg_fixed.policy =
+        MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(0.2) };
+    let mut cfg_step = cfg_fixed.clone();
+    cfg_step.tag = "samp-s".into();
+    cfg_step.sampling = approxmul::config::ErrorSampling::PerStep;
+
+    let a = Trainer::new(&engine, cfg_fixed).unwrap().run().unwrap();
+    let b = Trainer::new(&engine, cfg_step).unwrap().run().unwrap();
+    let la: Vec<f64> = a.history.records.iter().map(|r| r.train_loss).collect();
+    let lb: Vec<f64> = b.history.records.iter().map(|r| r.train_loss).collect();
+    assert_ne!(la, lb, "sampling mode had no effect");
+}
