@@ -1,14 +1,47 @@
 //! Bench: bit-accurate approximate-multiplier designs — error
-//! statistics (the §III DRUM mapping) and simulation throughput of
-//! each design on this host. `cargo bench multipliers`.
+//! statistics (the §III DRUM mapping) and simulation throughput of the
+//! three host paths per design:
+//!
+//! * `scalar` — one virtual `mul` call per element (the pre-PR-1
+//!   baseline, kept as the comparison anchor);
+//! * `batch`  — one virtual `mul_batch` call per slice (monomorphized,
+//!   auto-vectorizable inner loop);
+//! * `lut`    — the ApproxTrain-style 8-bit table backend.
+//!
+//! Batch outputs are asserted bit-identical to scalar per design; LUT
+//! outputs are asserted bit-identical where its contract guarantees it
+//! (DRUM-k with k strictly below the 8-bit table width on any
+//! operands; every deterministic design on 8-bit operands). Emits
+//! `BENCH_multipliers.json` with M mult/s per
+//! (design, dist, path) so the perf trajectory is tracked across PRs.
+//! `cargo bench multipliers`.
 
-use approxmul::benchkit::{throughput, Bench};
-use approxmul::mult::{characterize, standard_designs, GaussianModel, OperandDist};
+use approxmul::benchkit::{save_json, throughput, Bench};
+use approxmul::json::{object, Value};
+use approxmul::mult::{
+    characterize, standard_designs, GaussianModel, LutMultiplier, Multiplier,
+    OperandDist,
+};
 use approxmul::report::Table;
 use approxmul::rng::Xoshiro256;
 
+const N_OPS: usize = 1_000_000;
+const LUT_BITS: u32 = 8;
+
+fn operands(dist: OperandDist, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut a = Vec::with_capacity(N_OPS);
+    let mut b = Vec::with_capacity(N_OPS);
+    for _ in 0..N_OPS {
+        a.push(dist.sample(&mut rng));
+        b.push(dist.sample(&mut rng));
+    }
+    (a, b)
+}
+
 fn main() -> anyhow::Result<()> {
-    // 1. Error statistics table (uniform16: the DRUM paper's setting).
+    // 1. Error statistics table (uniform16: the DRUM paper's setting) —
+    //    now computed by the parallel characterize harness.
     let mut designs = standard_designs();
     designs.push(Box::new(GaussianModel::new(0.01803, 7)));
     let mut t = Table::new(&["design", "MRE", "SD", "bias", "MRE/SD"]);
@@ -26,29 +59,78 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.to_markdown());
     println!("\nDRUM-6 published: MRE 1.47% SD 1.803% (ICCAD'15).\n");
 
-    // 2. Simulation throughput.
-    let mut rng = Xoshiro256::new(1);
-    let ops: Vec<(u32, u32)> =
-        (0..1_000_000).map(|_| (rng.next_u32() | 1, rng.next_u32() | 1)).collect();
-    let mut b = Bench::micro();
-    for d in &designs {
-        let name = format!("{} 1M mults", d.name());
-        b.run(&name, || {
-            let mut acc = 0u64;
-            for &(a, x) in &ops {
-                acc = acc.wrapping_add(d.mul(a, x));
+    // 2. Simulation throughput: scalar vs batch vs LUT per design/dist.
+    let dists = [OperandDist::Uniform16, OperandDist::Mantissa, OperandDist::Small];
+    let mut json_rows: Vec<Value> = Vec::new();
+    for dist in dists {
+        let (a, b) = operands(dist, 1);
+        let mut out_scalar = vec![0u64; N_OPS];
+        let mut out = vec![0u64; N_OPS];
+        println!("# simulation throughput — {} operands\n", dist.name());
+        let mut summary =
+            Table::new(&["design", "scalar M/s", "batch M/s", "lut M/s", "batch x", "lut x"]);
+        for d in &designs {
+            // LUT noise tables are frozen at construction, which is the
+            // point: the same backend contract ApproxTrain uses.
+            let lut = LutMultiplier::new(d.as_ref(), LUT_BITS)?;
+            let mut bench = Bench::new(1, 7);
+            bench.run(&format!("{} scalar {}", d.name(), dist.name()), || {
+                for i in 0..N_OPS {
+                    out_scalar[i] = d.mul(a[i], b[i]);
+                }
+                std::hint::black_box(&out_scalar);
+            });
+            bench.run(&format!("{} batch  {}", d.name(), dist.name()), || {
+                d.mul_batch(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            });
+            // Bit-identity: batch must equal scalar everywhere. (The
+            // Gaussian model is stateful, so its paths draw different
+            // noise; identity is pinned separately in tests/mult_batch.)
+            if !d.name().starts_with("gauss") {
+                assert_eq!(out_scalar, out, "{}: batch != scalar", d.name());
             }
-            std::hint::black_box(acc);
-        });
+            bench.run(&format!("{} lut{LUT_BITS}  {}", d.name(), dist.name()), || {
+                lut.mul_batch(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            });
+            // drum8 is excluded: at k == table width DRUM's forced
+            // steering bit is lost inside the table (see mult::lut).
+            let lut_exact_here = matches!(d.name().as_str(), "drum4" | "drum6")
+                || (dist == OperandDist::Small && !d.name().starts_with("gauss"));
+            if lut_exact_here {
+                assert_eq!(out_scalar, out, "{}: lut != scalar on {}", d.name(), dist.name());
+            }
+
+            let results = bench.results();
+            let mps: Vec<f64> = results
+                .iter()
+                .map(|s| throughput(s.median(), N_OPS as u64) / 1e6)
+                .collect();
+            summary.row(vec![
+                d.name(),
+                format!("{:.1}", mps[0]),
+                format!("{:.1}", mps[1]),
+                format!("{:.1}", mps[2]),
+                format!("{:.2}x", mps[1] / mps[0]),
+                format!("{:.2}x", mps[2] / mps[0]),
+            ]);
+            json_rows.push(object([
+                ("design", Value::from(d.name())),
+                ("dist", dist.name().into()),
+                ("scalar_mps", mps[0].into()),
+                ("batch_mps", mps[1].into()),
+                ("lut_mps", mps[2].into()),
+                ("lut_bits", (LUT_BITS as usize).into()),
+                ("lut_bit_identical", lut_exact_here.into()),
+                ("n_ops", N_OPS.into()),
+            ]));
+        }
+        print!("{}", summary.to_markdown());
+        println!();
     }
-    println!("# simulation throughput\n");
-    print!("{}", b.report());
-    for s in b.results() {
-        println!(
-            "{:<32} {:>8.1} M mult/s",
-            s.name,
-            throughput(s.median(), 1_000_000) / 1e6
-        );
-    }
+
+    save_json("BENCH_multipliers.json", &Value::Array(json_rows))?;
+    println!("throughput rows -> BENCH_multipliers.json");
     Ok(())
 }

@@ -89,6 +89,26 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Machine-readable results:
+    /// `[{name, median_ns, mean_ns, p95_ns, samples}, ...]` — the
+    /// payload of the `BENCH_*.json` perf-trajectory files.
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::Array(
+            self.results
+                .iter()
+                .map(|s| {
+                    crate::json::object([
+                        ("name", crate::json::Value::from(s.name.clone())),
+                        ("median_ns", (s.median().as_nanos() as f64).into()),
+                        ("mean_ns", (s.mean().as_nanos() as f64).into()),
+                        ("p95_ns", (s.percentile(95.0).as_nanos() as f64).into()),
+                        ("samples", s.samples.len().into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     /// Render the standard report table.
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -133,6 +153,20 @@ pub fn throughput(d: Duration, items: u64) -> f64 {
     items as f64 / d.as_secs_f64().max(1e-12)
 }
 
+/// Write a JSON value to `path` — bench harnesses emit
+/// `BENCH_<name>.json` files with this so the perf trajectory is
+/// machine-readable across PRs.
+pub fn save_json(
+    path: impl AsRef<std::path::Path>,
+    value: &crate::json::Value,
+) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    let path = path.as_ref();
+    std::fs::write(path, format!("{value}\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +204,20 @@ mod tests {
     fn throughput_sane() {
         let t = throughput(Duration::from_secs(2), 100);
         assert!((t - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let mut b = Bench::new(0, 3);
+        b.run("case", || {
+            std::hint::black_box(1 + 1);
+        });
+        let v = b.to_json();
+        let re = crate::json::Value::parse(&v.to_string()).unwrap();
+        let rows = re.as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "case");
+        assert_eq!(rows[0].get("samples").unwrap().as_usize().unwrap(), 3);
+        assert!(rows[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

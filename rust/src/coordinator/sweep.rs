@@ -1,10 +1,20 @@
 //! Table II sweep: train once per error configuration, compare final
 //! accuracy to the exact baseline.
+//!
+//! Sweep points are independent training runs, so they execute on a
+//! worker pool ([`crate::parallel`]) sharing one [`Engine`] — the
+//! engine's per-entry compile slots mean the executables are compiled
+//! once and reused by every point. Rows, the baseline diff and the
+//! progress callback all keep the original case order regardless of
+//! completion order.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
 
 use crate::config::{ExperimentConfig, MultiplierPolicy};
 use crate::error_model::ErrorConfig;
+use crate::parallel;
 use crate::runtime::Engine;
 
 use super::trainer::Trainer;
@@ -27,35 +37,71 @@ pub struct SweepRow {
 pub struct Sweep<'e> {
     engine: &'e Engine,
     base: ExperimentConfig,
+    /// Worker threads for independent sweep points (default:
+    /// [`parallel::max_threads`]; set 1 for strictly serial execution).
+    pub parallelism: usize,
 }
 
 impl<'e> Sweep<'e> {
     /// `base` supplies everything except the multiplier policy, which
     /// the sweep overrides per row.
     pub fn new(engine: &'e Engine, base: ExperimentConfig) -> Self {
-        Sweep { engine, base }
+        Sweep { engine, base, parallelism: parallel::max_threads() }
     }
 
-    /// Run the given error configurations (id, config, paper accuracy).
-    /// The exact baseline must be the first row (id 0 / sigma 0), as in
-    /// the paper's table.
+    /// Run the given error configurations (id, config, paper accuracy)
+    /// on up to [`Sweep::parallelism`] workers. The exact baseline must
+    /// be the first row (id 0 / sigma 0), as in the paper's table; the
+    /// progress callback fires in case order once results are in (a
+    /// parallel sweep has no meaningful mid-flight row to report).
+    /// A failing point cancels the not-yet-started points instead of
+    /// burning hours training the rest.
     pub fn run(
         &self,
         cases: &[(u32, ErrorConfig, f64)],
         mut progress: impl FnMut(u32, &SweepRow),
     ) -> Result<Vec<SweepRow>> {
+        // Index of the temporally-first failing point (usize::MAX =
+        // none): later points cancel themselves, and that index — not a
+        // string marker — is what the error reporting surfaces.
+        let first_failure = AtomicUsize::new(usize::MAX);
+        let outcomes = parallel::par_map(cases, self.parallelism, |idx, case| {
+            let (id, config, _) = *case;
+            if first_failure.load(Ordering::Relaxed) != usize::MAX {
+                bail!("sweep case {id} cancelled after an earlier failure");
+            }
+            let result = (|| {
+                let mut cfg = self.base.clone();
+                cfg.tag = format!("{}-case{id}", self.base.tag);
+                cfg.policy = if config.is_exact() {
+                    MultiplierPolicy::Exact
+                } else {
+                    MultiplierPolicy::Approximate { error: config }
+                };
+                Trainer::new(self.engine, cfg)?.run()
+            })();
+            if result.is_err() {
+                let _ = first_failure.compare_exchange(
+                    usize::MAX,
+                    idx,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                );
+            }
+            result
+        });
+        // Surface the root failure, not a cancellation marker. The slot
+        // at `root` is guaranteed Err: only a worker whose own result
+        // failed can have won the compare-exchange.
+        let root = first_failure.load(Ordering::Relaxed);
+        if root != usize::MAX {
+            let mut outcomes = outcomes;
+            return Err(outcomes.swap_remove(root).unwrap_err());
+        }
         let mut rows: Vec<SweepRow> = Vec::with_capacity(cases.len());
         let mut baseline: Option<f64> = None;
-        for &(id, config, paper_acc) in cases {
-            let mut cfg = self.base.clone();
-            cfg.tag = format!("{}-case{id}", self.base.tag);
-            cfg.policy = if config.is_exact() {
-                MultiplierPolicy::Exact
-            } else {
-                MultiplierPolicy::Approximate { error: config }
-            };
-            let mut trainer = Trainer::new(self.engine, cfg)?;
-            let outcome = trainer.run()?;
+        for (&(id, config, paper_acc), outcome) in cases.iter().zip(outcomes) {
+            let outcome = outcome?;
             let accuracy = outcome.final_accuracy;
             let base = *baseline.get_or_insert(accuracy);
             let row = SweepRow {

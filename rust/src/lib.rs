@@ -48,6 +48,7 @@ pub mod error_model;
 pub mod json;
 pub mod metrics;
 pub mod mult;
+pub mod parallel;
 pub mod report;
 pub mod rng;
 pub mod runtime;

@@ -15,7 +15,9 @@ use approxmul::config::{ErrorSampling, ExperimentConfig, LrSchedule, MultiplierP
 use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
 use approxmul::costmodel::{cited_designs, CostModel};
 use approxmul::error_model::{paper_table2_configs, ErrorConfig, ErrorMatrix};
-use approxmul::mult::{characterize, standard_designs, OperandDist};
+use approxmul::mult::{
+    characterize, characterize_matmul_set, standard_designs, OperandDist,
+};
 use approxmul::report::{ascii_histogram, diff_pct, histogram_csv, pct, Table};
 use approxmul::runtime::Engine;
 
@@ -531,6 +533,24 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
         },
         FlagSpec { name: "n", help: "sample pairs per design", takes_value: true, default: Some("500000") },
         FlagSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("7") },
+        FlagSpec {
+            name: "threads",
+            help: "worker threads (default: all cores)",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec {
+            name: "lut",
+            help: "also characterize each design through a LUT backend of this bit width",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec {
+            name: "gemm",
+            help: "characterize on a GEMM shape RxKxC (e.g. 64x128x64) instead of operand pairs",
+            takes_value: true,
+            default: None,
+        },
     ];
     if wants_help(argv) {
         print!("{}", cli::help("characterize", "approximate-multiplier error stats", &specs));
@@ -546,10 +566,59 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
     };
     let n = a.parse_u64("n")?.unwrap_or(500_000);
     let seed = a.parse_u64("seed")?.unwrap_or(7);
+    if let Some(t) = a.parse_usize("threads")? {
+        approxmul::parallel::set_max_threads(t);
+    }
     let mut designs = standard_designs();
     // The paper's simulation model at DRUM-6's published SD, for the
     // model-vs-hardware comparison.
     designs.push(Box::new(approxmul::mult::GaussianModel::new(0.01803, seed as u32)));
+    if let Some(bits) = a.parse_u64("lut")? {
+        let luts: Vec<Box<dyn approxmul::mult::Multiplier>> = designs
+            .iter()
+            .map(|d| {
+                approxmul::mult::LutMultiplier::new(d.as_ref(), bits as u32)
+                    .map(|l| Box::new(l) as Box<dyn approxmul::mult::Multiplier>)
+            })
+            .collect::<Result<_>>()?;
+        designs.extend(luts);
+    }
+
+    if let Some(shape) = a.get("gemm") {
+        let dims: Vec<usize> = shape
+            .split(['x', ','])
+            .map(|s| s.trim().parse::<usize>().context("bad --gemm, want RxKxC"))
+            .collect::<Result<_>>()?;
+        let [rows, inner, cols] = dims[..] else {
+            bail!("--gemm wants three dimensions RxKxC, got {shape:?}");
+        };
+        let mut t = Table::new(&["design", "out MRE", "out SD", "out bias", "min RE", "max RE"]);
+        // One shared exact-reference GEMM for the whole design set.
+        let stats = characterize_matmul_set(&designs, rows, inner, cols, seed)?;
+        for (d, s) in designs.iter().zip(&stats) {
+            t.row(vec![
+                d.name(),
+                format!("{:.3}%", 100.0 * s.mre),
+                format!("{:.3}%", 100.0 * s.sd),
+                format!("{:+.3}%", 100.0 * s.mean_re),
+                format!("{:+.2}%", 100.0 * s.min_re),
+                format!("{:+.2}%", 100.0 * s.max_re),
+            ]);
+        }
+        println!(
+            "bit-accurate GEMM characterization: C[{rows}x{cols}] = \
+             A[{rows}x{inner}]·B[{inner}x{cols}], stats over output elements\n\
+             (GEMM mode samples uniform [-1,1) f32 matrices; --dist and --n \
+             do not apply — the sample count is rows x cols)"
+        );
+        print!("{}", t.to_markdown());
+        println!(
+            "\nPer-product mantissa error accumulates through each k={inner} \
+             chain exactly as an approximate FP MAC array would produce it."
+        );
+        return Ok(());
+    }
+
     let mut t = Table::new(&[
         "design", "MRE", "SD", "bias", "min RE", "max RE", "MRE/SD (0.798=gaussian)",
     ]);

@@ -49,6 +49,9 @@ impl Multiplier for BrokenArray {
         }
         acc
     }
+    // `mul_batch` default suffices: the row-accumulation inner loop is
+    // data-dependent, so the batched win is the amortized dispatch the
+    // monomorphized default already provides.
 }
 
 #[cfg(test)]

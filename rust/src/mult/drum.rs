@@ -58,6 +58,8 @@ impl Multiplier for Drum {
         let (tb, sb) = self.reduce(b);
         (ta as u64 * tb as u64) << (sa + sb)
     }
+    // `mul_batch` default suffices: the monomorphized loop over `mul`
+    // is already the branch-light leading-zero + shift kernel.
 }
 
 #[cfg(test)]

@@ -11,7 +11,10 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::rng::threefry::normal_pair;
 
-use super::Multiplier;
+use super::{check_batch_lens, Multiplier};
+
+/// Threefry stream nonce for multiplier noise ("mult" in ASCII).
+const NONCE: u32 = 0x6d75_6c74;
 
 /// Gaussian relative-error model multiplier with SD `sigma`.
 #[derive(Debug)]
@@ -39,11 +42,25 @@ impl Multiplier for GaussianModel {
     fn mul(&self, a: u32, b: u32) -> u64 {
         let exact = a as u64 * b as u64;
         let ctr = self.counter.fetch_add(1, Ordering::Relaxed);
-        let (z, _) = normal_pair(self.seed, 0x6d75_6c74, ctr, 0);
+        let (z, _) = normal_pair(self.seed, NONCE, ctr, 0);
         let v = exact as f64 * (1.0 + self.sigma * z as f64);
         // Clamp into the representable product range (a real multiplier
         // cannot return a negative or > 64-bit product).
         v.max(0.0).min(u64::MAX as f64) as u64
+    }
+
+    /// Reserves the whole noise-counter range with one atomic add, then
+    /// evaluates it monomorphically — a fresh instance produces the
+    /// same sequence batched as it would through scalar `mul` calls.
+    fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        check_batch_lens(a, b, out);
+        let base = self.counter.fetch_add(out.len() as u32, Ordering::Relaxed);
+        for (i, ((&x, &y), o)) in a.iter().zip(b).zip(out.iter_mut()).enumerate() {
+            let exact = x as u64 * y as u64;
+            let (z, _) = normal_pair(self.seed, NONCE, base.wrapping_add(i as u32), 0);
+            let v = exact as f64 * (1.0 + self.sigma * z as f64);
+            *o = v.max(0.0).min(u64::MAX as f64) as u64;
+        }
     }
 }
 

@@ -1,0 +1,215 @@
+//! ApproxTrain-style lookup-table multiplier backend (arXiv:2209.04161).
+//!
+//! ApproxTrain reaches CNN-training scale by replacing the bit-level
+//! simulation of an approximate multiplier with a precomputed product
+//! table over the operand mantissas. [`LutMultiplier`] is the host-side
+//! twin: it tabulates *any* [`Multiplier`] over a configurable operand
+//! width `bits` (table of `2^bits × 2^bits` products, e.g. 512 KiB at
+//! 8×8) and serves each product with two leading-one reductions and a
+//! single load.
+//!
+//! Fidelity contract (pinned by `tests/mult_batch.rs`):
+//!
+//! * operands `< 2^bits` — bit-identical to the wrapped design;
+//! * DRUM-k with `k < bits` (strict!) — bit-identical over the full
+//!   32-bit range: DRUM only inspects the top `k` bits from the
+//!   leading one, which the reduction preserves. At `k == bits` the
+//!   identity breaks — a pre-reduced `bits`-wide operand fits DRUM's
+//!   window exactly, so its forced steering bit (`(v >> s) | 1`) is
+//!   never applied inside the table;
+//! * otherwise — the wrapped design evaluated on leading-one-truncated
+//!   operands, exactly the approximation ApproxTrain's mantissa LUTs
+//!   make.
+
+use anyhow::{bail, Result};
+
+use super::{check_batch_lens, Multiplier};
+
+/// Lookup-table backend for any multiplier design.
+pub struct LutMultiplier {
+    name: String,
+    bits: u32,
+    /// `1 << bits` — operands below this index the table directly.
+    size: u32,
+    /// Row-major products: `table[(a << bits) | b] = inner.mul(a, b)`.
+    table: Vec<u64>,
+}
+
+impl LutMultiplier {
+    /// Widest supported operand: 12×12 is a 128 MiB table; anything
+    /// wider stops being a cache-resident win.
+    pub const MAX_BITS: u32 = 12;
+
+    /// Tabulate `inner` over `bits`-wide operands.
+    pub fn new(inner: &dyn Multiplier, bits: u32) -> Result<Self> {
+        if !(2..=Self::MAX_BITS).contains(&bits) {
+            bail!("LUT operand width must be in [2, {}], got {bits}", Self::MAX_BITS);
+        }
+        let size = 1usize << bits;
+        let cols: Vec<u32> = (0..size as u32).collect();
+        let mut row_a = vec![0u32; size];
+        let mut table = vec![0u64; size * size];
+        for a in 0..size {
+            row_a.fill(a as u32);
+            inner.mul_batch(&row_a, &cols, &mut table[a * size..(a + 1) * size]);
+        }
+        Ok(LutMultiplier {
+            name: format!("lut{bits}:{}", inner.name()),
+            bits,
+            size: size as u32,
+            table,
+        })
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Leading-one reduction to a table index: `(index, shift)` with
+    /// `value ≈ index << shift` and `index < 2^bits`.
+    #[inline]
+    fn reduce(&self, v: u32) -> (u32, u32) {
+        if v < self.size {
+            return (v, 0);
+        }
+        let msb = 31 - v.leading_zeros();
+        let shift = msb + 1 - self.bits;
+        (v >> shift, shift)
+    }
+
+    #[inline]
+    fn lookup(&self, ia: u32, ib: u32) -> u64 {
+        self.table[((ia << self.bits) | ib) as usize]
+    }
+}
+
+/// Rescale a table product by the reduction shifts, saturating instead
+/// of wrapping: an *overestimating* inner design (e.g. the Gaussian
+/// model) can tabulate products >= 2^(2*bits), and on wide operands
+/// `value << (sa + sb)` would silently lose the top bits. Saturation
+/// matches [`super::GaussianModel`]'s own u64 clamp. Exact for every
+/// design whose table stays below 2^(2*bits) (all the deterministic
+/// hardware designs).
+#[inline]
+fn shift_saturating(value: u64, shift: u32) -> u64 {
+    if value == 0 {
+        return 0;
+    }
+    if value.leading_zeros() >= shift {
+        value << shift
+    } else {
+        u64::MAX
+    }
+}
+
+impl Multiplier for LutMultiplier {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u64 {
+        let (ia, sa) = self.reduce(a);
+        let (ib, sb) = self.reduce(b);
+        shift_saturating(self.lookup(ia, ib), sa + sb)
+    }
+
+    /// Reduce + load loop, bit-identical to the scalar LUT path.
+    fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        check_batch_lens(a, b, out);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            let (ix, sx) = self.reduce(x);
+            let (iy, sy) = self.reduce(y);
+            *o = shift_saturating(self.lookup(ix, iy), sx + sy);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{by_name, Drum, Exact, Mitchell};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn exhaustive_identity_below_table_width() {
+        // Inside the table domain the LUT is the design, bit for bit.
+        let designs: [&dyn Multiplier; 2] = [&Mitchell, &Exact];
+        for d in designs {
+            let lut = LutMultiplier::new(d, 6).unwrap();
+            for a in 0..64u32 {
+                for b in 0..64u32 {
+                    assert_eq!(lut.mul(a, b), d.mul(a, b), "{} {a}*{b}", lut.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drum_identity_over_full_range() {
+        // DRUM-6 through an 8-bit LUT: identical on arbitrary operands.
+        let d = Drum::new(6).unwrap();
+        let lut = LutMultiplier::new(&d, 8).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..20_000 {
+            let (a, b) = (rng.next_u32(), rng.next_u32());
+            assert_eq!(lut.mul(a, b), d.mul(a, b), "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn wide_operands_use_leading_one_truncation() {
+        // Outside the contract the LUT equals the design applied to the
+        // reduced operands, rescaled.
+        let lut = LutMultiplier::new(&Mitchell, 8).unwrap();
+        let a = 0x0001_2345u32; // 17 bits -> reduced by 9
+        let b = 0x0000_00FFu32; // fits
+        assert_eq!(lut.mul(a, b), Mitchell.mul(a >> 9, b) << 9);
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let lut = by_name("lut8:mitchell").unwrap();
+        let mut rng = Xoshiro256::new(5);
+        let a: Vec<u32> = (0..4096).map(|_| rng.next_u32()).collect();
+        let b: Vec<u32> = (0..4096).map(|_| rng.next_u32()).collect();
+        let mut out = vec![0u64; a.len()];
+        lut.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], lut.mul(a[i], b[i]), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(LutMultiplier::new(&Exact, 1).is_err());
+        assert!(LutMultiplier::new(&Exact, 13).is_err());
+    }
+
+    #[test]
+    fn zero_operands() {
+        let lut = LutMultiplier::new(&Mitchell, 4).unwrap();
+        assert_eq!(lut.mul(0, 999), 0);
+        assert_eq!(lut.mul(999, 0), 0);
+    }
+
+    #[test]
+    fn overestimating_inner_design_saturates_instead_of_wrapping() {
+        // A model whose products exceed 2^(2*bits) must clamp at
+        // u64::MAX on wide operands, never wrap into a small value.
+        struct Overshoot;
+        impl Multiplier for Overshoot {
+            fn name(&self) -> String {
+                "overshoot".into()
+            }
+            fn mul(&self, a: u32, b: u32) -> u64 {
+                (a as u64 * b as u64) * 3
+            }
+        }
+        let lut = LutMultiplier::new(&Overshoot, 8).unwrap();
+        let (a, b) = (u32::MAX, u32::MAX); // shifts total 48
+        let got = lut.mul(a, b);
+        assert_eq!(got, u64::MAX, "wrapped to {got:#x}");
+        // In-range products are untouched by the saturation guard.
+        assert_eq!(lut.mul(100, 100), 30_000);
+    }
+}

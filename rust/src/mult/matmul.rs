@@ -1,0 +1,369 @@
+//! Host-side bit-accurate approximate GEMM.
+//!
+//! The characterization harness samples random operand *pairs*; real
+//! training error emerges from operand pairs inside dot-product chains.
+//! [`approx_matmul`] closes that gap: every scalar product in
+//! `C = A·B` is computed by decomposing the f32 operands into sign /
+//! exponent / 24-bit mantissa, running the mantissa product through a
+//! bit-accurate [`Multiplier`] (via the batched fast path, one
+//! `mul_batch` per output element's k-chain), renormalizing back to
+//! f32 (truncating ties like the hardware designs do), and accumulating
+//! in f32 in k-order — i.e. exactly what an approximate FP MAC array
+//! would produce. ApproxTrain (arXiv:2209.04161) calls the same
+//! construction `AMDNN`'s simulated GEMM.
+//!
+//! Parallel over output rows via [`crate::parallel::par_map`]; output
+//! elements are independent, so results are deterministic at any
+//! worker count.
+//!
+//! Non-finite inputs fall back to the native f32 product; zeros and
+//! subnormals flush to (signed) zero, as the integer designs have no
+//! subnormal path.
+
+use anyhow::{bail, Result};
+
+use crate::parallel;
+use crate::rng::Xoshiro256;
+
+use super::stats::Welford;
+use super::{ErrorStats, Exact, Multiplier};
+
+/// Decompose a finite f32 into `(sign, biased exponent, 24-bit
+/// mantissa)`; `None` for zero/subnormal (flushed).
+#[inline]
+fn decompose(x: f32) -> Option<(u32, i32, u32)> {
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp == 0 {
+        return None;
+    }
+    Some((bits >> 31, exp, (bits & 0x007F_FFFF) | 0x0080_0000))
+}
+
+/// Renormalize an approximate 24×24-bit mantissa product back to f32.
+/// `ex`/`ey` are the operands' biased exponents; truncates the mantissa
+/// (no round-to-nearest — matching the truncating hardware designs),
+/// saturates to ±inf on overflow and flushes to signed zero on
+/// underflow.
+#[inline]
+fn renorm(sign: u32, ex: i32, ey: i32, p: u64) -> f32 {
+    if p == 0 {
+        return f32::from_bits(sign << 31);
+    }
+    let q = 63 - p.leading_zeros() as i32;
+    let mant = if q > 23 {
+        (p >> (q - 23)) as u32
+    } else {
+        (p as u32) << (23 - q)
+    };
+    // x*y = mx*my * 2^(ex+ey-300); float(mant, er) = mant * 2^(er-150).
+    let er = ex + ey + q - 173;
+    if er >= 255 {
+        return f32::from_bits((sign << 31) | 0x7F80_0000);
+    }
+    if er <= 0 {
+        return f32::from_bits(sign << 31);
+    }
+    f32::from_bits((sign << 31) | ((er as u32) << 23) | (mant & 0x007F_FFFF))
+}
+
+/// One bit-accurate approximate f32 product: `m` multiplies the
+/// mantissas, the exponent add is exact.
+pub fn approx_mul_f32(m: &dyn Multiplier, x: f32, y: f32) -> f32 {
+    if !x.is_finite() || !y.is_finite() {
+        return x * y;
+    }
+    match (decompose(x), decompose(y)) {
+        (Some((sx, ex, mx)), Some((sy, ey, my))) => {
+            renorm(sx ^ sy, ex, ey, m.mul(mx, my))
+        }
+        _ => f32::from_bits((x.to_bits() ^ y.to_bits()) & 0x8000_0000),
+    }
+}
+
+/// `C[rows×cols] = A[rows×inner] · B[inner×cols]` (row-major slices)
+/// with every scalar product computed bit-accurately by `m` and f32
+/// accumulation in k-order. Parallel over output rows; deterministic.
+pub fn approx_matmul(
+    m: &dyn Multiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != inner * cols {
+        bail!(
+            "approx_matmul: ({rows}x{inner})·({inner}x{cols}) needs {} and {} \
+             elements, got {} and {}",
+            rows * inner,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    let threads = parallel::max_threads();
+    // Block rows per task (a few blocks per worker for load balance)
+    // so the staging buffers are allocated once per task, not per row.
+    let block = rows.div_ceil(threads.max(1) * 4).max(1);
+    let blocks: Vec<(usize, usize)> = (0..rows)
+        .step_by(block)
+        .map(|r0| (r0, (r0 + block).min(rows)))
+        .collect();
+    let out_blocks = parallel::par_map(&blocks, threads, |_, &(r0, r1)| {
+        // Per-task staging for one k-chain: mantissa pairs, products,
+        // and the (sign, exponent-sum) metadata of the active terms.
+        let mut ma = vec![0u32; inner];
+        let mut mb = vec![0u32; inner];
+        let mut prod = vec![0u64; inner];
+        let mut sign_exp = vec![(0u32, 0i32); inner];
+        let mut chunk = vec![0f32; (r1 - r0) * cols];
+        for i in r0..r1 {
+            for (j, slot) in chunk[(i - r0) * cols..(i - r0 + 1) * cols]
+                .iter_mut()
+                .enumerate()
+            {
+                let mut acc = 0f32;
+                let mut active = 0usize;
+                for k in 0..inner {
+                    let x = a[i * inner + k];
+                    let y = b[k * cols + j];
+                    if !x.is_finite() || !y.is_finite() {
+                        acc += x * y;
+                        continue;
+                    }
+                    if let (Some((sx, ex, mx)), Some((sy, ey, my))) =
+                        (decompose(x), decompose(y))
+                    {
+                        ma[active] = mx;
+                        mb[active] = my;
+                        sign_exp[active] = (sx ^ sy, ex + ey);
+                        active += 1;
+                    }
+                    // Flushed (zero/subnormal) terms contribute exactly 0.
+                }
+                m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
+                for t in 0..active {
+                    let (sign, exp_sum) = sign_exp[t];
+                    acc += renorm(sign, exp_sum, 0, prod[t]);
+                }
+                *slot = acc;
+            }
+        }
+        chunk
+    });
+    Ok(out_blocks.concat())
+}
+
+/// Seeded random operand matrices (uniform in `[-1, 1)`) for GEMM
+/// characterization.
+fn seeded_matrices(
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let a = (0..rows * inner).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let b = (0..inner * cols).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    (a, b)
+}
+
+/// Relative-error statistics of `approx` GEMM output vs the exact
+/// pipeline's output (0 error where the reference is 0).
+fn output_error_stats(approx: &[f32], exact: &[f32]) -> ErrorStats {
+    let mut acc = Welford::new();
+    for (&ap, &ex) in approx.iter().zip(exact) {
+        let re = if ex == 0.0 {
+            0.0
+        } else {
+            (ap as f64 - ex as f64) / ex as f64
+        };
+        acc.push(re);
+    }
+    acc.finish()
+}
+
+/// Model-vs-bit-accurate comparison on a real GEMM shape: run `m` and
+/// [`Exact`] through the same mantissa pipeline on seeded random
+/// matrices (uniform in `[-1, 1)`), and return error statistics of the
+/// relative output error over all `rows*cols` elements.
+pub fn characterize_matmul(
+    m: &dyn Multiplier,
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    seed: u64,
+) -> Result<ErrorStats> {
+    if rows == 0 || inner == 0 || cols == 0 {
+        bail!("characterize_matmul: empty shape {rows}x{inner}x{cols}");
+    }
+    let (a, b) = seeded_matrices(rows, inner, cols, seed);
+    let approx = approx_matmul(m, &a, &b, rows, inner, cols)?;
+    let exact = approx_matmul(&Exact, &a, &b, rows, inner, cols)?;
+    Ok(output_error_stats(&approx, &exact))
+}
+
+/// [`characterize_matmul`] over a design set: the operand matrices and
+/// the exact-reference GEMM are computed once and shared, instead of
+/// once per design. Returns stats in design order.
+pub fn characterize_matmul_set(
+    designs: &[Box<dyn Multiplier>],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    seed: u64,
+) -> Result<Vec<ErrorStats>> {
+    if rows == 0 || inner == 0 || cols == 0 {
+        bail!("characterize_matmul: empty shape {rows}x{inner}x{cols}");
+    }
+    let (a, b) = seeded_matrices(rows, inner, cols, seed);
+    let exact = approx_matmul(&Exact, &a, &b, rows, inner, cols)?;
+    designs
+        .iter()
+        .map(|d| {
+            let approx = approx_matmul(d.as_ref(), &a, &b, rows, inner, cols)?;
+            Ok(output_error_stats(&approx, &exact))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::{Drum, Mitchell};
+
+    /// f64 reference through the same flush/truncate conventions is
+    /// overkill here; instead compare the Exact pipeline against the
+    /// native product, which it must match within 1 ulp (truncation vs
+    /// round-to-nearest).
+    #[test]
+    fn exact_pipeline_within_one_ulp_of_native() {
+        let mut rng = Xoshiro256::new(17);
+        for _ in 0..50_000 {
+            let x = f32::from_bits(rng.next_u32());
+            let y = f32::from_bits(rng.next_u32());
+            if !x.is_normal() || !y.is_normal() {
+                continue;
+            }
+            let native = x * y;
+            if !native.is_normal() {
+                continue; // overflow/underflow edge conventions differ
+            }
+            let ours = approx_mul_f32(&Exact, x, y);
+            let diff = (ours.to_bits() as i64 - native.to_bits() as i64).abs();
+            assert!(diff <= 1, "{x} * {y}: {ours} vs {native} ({diff} ulp)");
+        }
+    }
+
+    #[test]
+    fn powers_of_two_are_exact() {
+        for i in -8i32..8 {
+            for j in -8i32..8 {
+                let (x, y) = (2f32.powi(i), 2f32.powi(j));
+                assert_eq!(approx_mul_f32(&Exact, x, y), x * y, "{x}*{y}");
+                assert_eq!(approx_mul_f32(&Mitchell, x, y), x * y, "{x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn signs_and_zeros() {
+        assert_eq!(approx_mul_f32(&Exact, -2.0, 3.0), -6.0);
+        assert_eq!(approx_mul_f32(&Exact, -2.0, -3.0), 6.0);
+        assert_eq!(approx_mul_f32(&Exact, 0.0, 5.0), 0.0);
+        assert!(approx_mul_f32(&Exact, -0.0, 5.0).to_bits() == 0x8000_0000);
+        assert!(approx_mul_f32(&Exact, f32::NAN, 5.0).is_nan());
+    }
+
+    #[test]
+    fn matmul_exact_matches_f64_reference() {
+        let (rows, inner, cols) = (7, 13, 5);
+        let mut rng = Xoshiro256::new(3);
+        let a: Vec<f32> = (0..rows * inner).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let c = approx_matmul(&Exact, &a, &b, rows, inner, cols).unwrap();
+        for i in 0..rows {
+            for j in 0..cols {
+                let mut want = 0f64;
+                for k in 0..inner {
+                    want += a[i * inner + k] as f64 * b[k * cols + j] as f64;
+                }
+                let got = c[i * cols + j] as f64;
+                // f32 accumulation + per-product truncation: loose bound.
+                assert!(
+                    (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "c[{i}][{j}] = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_is_deterministic_across_calls() {
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(8);
+        let a: Vec<f32> = (0..32 * 24).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..24 * 16).map(|_| rng.next_f32() - 0.5).collect();
+        let c1 = approx_matmul(&d, &a, &b, 32, 24, 16).unwrap();
+        let c2 = approx_matmul(&d, &a, &b, 32, 24, 16).unwrap();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(approx_matmul(&Exact, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
+        assert!(characterize_matmul(&Exact, 0, 3, 2, 1).is_err());
+        assert!(characterize_matmul_set(&[], 2, 0, 2, 1).is_err());
+    }
+
+    #[test]
+    fn matmul_set_matches_individual_runs() {
+        let designs: Vec<Box<dyn Multiplier>> =
+            vec![Box::new(Exact), Box::new(Drum::new(6).unwrap()), Box::new(Mitchell)];
+        let set = characterize_matmul_set(&designs, 8, 16, 8, 3).unwrap();
+        assert_eq!(set.len(), designs.len());
+        for (d, s) in designs.iter().zip(&set) {
+            let solo = characterize_matmul(d.as_ref(), 8, 16, 8, 3).unwrap();
+            assert_eq!(s.mre, solo.mre, "{}", d.name());
+            assert_eq!(s.sd, solo.sd, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn gemm_error_tracks_design_error() {
+        // DRUM-6's per-product error is ~1.5%; after accumulation over
+        // k=32 chains the *output* relative error stays the same order.
+        let d = Drum::new(6).unwrap();
+        let s = characterize_matmul(&d, 16, 32, 16, 5).unwrap();
+        assert_eq!(s.samples, 256);
+        assert!(s.mre > 1e-4, "mre {}", s.mre);
+        // Upper band is loose: near-zero outputs of a random GEMM
+        // legitimately inflate relative error.
+        assert!(s.mre < 0.25, "mre {}", s.mre);
+        // Exact through the same pipeline: zero error by construction.
+        let e = characterize_matmul(&Exact, 16, 32, 16, 5).unwrap();
+        assert_eq!(e.mre, 0.0);
+    }
+
+    #[test]
+    fn mitchell_gemm_is_biased_low() {
+        // Mitchell underestimates every product, so dot products of
+        // same-sign data are biased low — visible at GEMM level.
+        let m = Mitchell;
+        let mut rng = Xoshiro256::new(4);
+        // All-positive matrices keep the bias from cancelling.
+        let a: Vec<f32> = (0..8 * 64).map(|_| rng.next_f32() + 0.1).collect();
+        let b: Vec<f32> = (0..64 * 8).map(|_| rng.next_f32() + 0.1).collect();
+        let approx = approx_matmul(&m, &a, &b, 8, 64, 8).unwrap();
+        let exact = approx_matmul(&Exact, &a, &b, 8, 64, 8).unwrap();
+        let mean_re: f64 = approx
+            .iter()
+            .zip(&exact)
+            .map(|(&ap, &ex)| (ap as f64 - ex as f64) / ex as f64)
+            .sum::<f64>()
+            / exact.len() as f64;
+        assert!(mean_re < -0.01, "mean relative error {mean_re}");
+        assert!(mean_re > -0.12, "mean relative error {mean_re}");
+    }
+}

@@ -24,10 +24,53 @@
 //! therefore characterizes exactly the error a CNN training MAC would
 //! see — this is the bridge between these integer designs and the
 //! Gaussian sigma fed to the compiled graphs.
+//!
+//! ## Batched simulation (the fast path)
+//!
+//! [`Multiplier::mul`] through a `Box<dyn Multiplier>` costs one
+//! virtual call per product; at characterization scale (10^5..10^9
+//! multiplies) that dominates. [`Multiplier::mul_batch`] amortizes the
+//! dispatch to one virtual call per *slice*: default trait methods are
+//! monomorphized per implementing type, so inside the batch body
+//! `self.mul` is statically dispatched, inlined and auto-vectorized.
+//! Designs whose loop benefits from restructuring (hoisted constants,
+//! up-front noise-counter reservation) override `mul_batch`; the rest
+//! keep the default, which is already the monomorphized loop. Either
+//! way the batch path is bit-identical to the scalar path
+//! (`tests/mult_batch.rs` pins this per design × operand
+//! distribution).
+//!
+//! [`LutMultiplier`] is the ApproxTrain-style (arXiv:2209.04161)
+//! lookup-table backend: it tabulates any design over a configurable
+//! operand width (e.g. 8×8 or 12×12) and serves products with one load
+//! plus two leading-one reductions. It is bit-identical to the wrapped
+//! design whenever both operands fit the table width, and for
+//! dynamic-range designs that only inspect the top bits (DRUM-k with
+//! `k < bits`, strictly) over the *full* 32-bit range; for other
+//! designs on wider operands it is the same leading-one truncation
+//! ApproxTrain's mantissa LUTs apply.
+//!
+//! ## Parallelism & determinism
+//!
+//! [`characterize`] is a chunked parallel reduction: the sample stream
+//! is split into fixed 2^16-sample chunks, each chunk draws from its
+//! own seed-derived RNG, and per-chunk Welford accumulators merge with
+//! the parallel-variance formula *in chunk order*. The schedule depends
+//! only on `(n, seed)` — never on the worker count — so results are
+//! bit-reproducible across thread counts for all stateless designs.
+//! ([`GaussianModel`] draws from an internal atomic noise counter; its
+//! batched statistics are reproducible for a fresh instance because the
+//! counter range is consumed exactly once, but per-sample pairing is
+//! thread-order dependent, so only its aggregate stats — not per-call
+//! products — are stable under parallel characterization.)
+//! [`approx_matmul`] runs the same bit-accurate multipliers over real
+//! GEMM shapes, parallel over output rows, deterministically.
 
 mod broken_array;
 mod drum;
 mod gaussian;
+mod lut;
+mod matmul;
 mod mitchell;
 mod roba;
 mod stats;
@@ -36,9 +79,13 @@ mod truncation;
 pub use broken_array::BrokenArray;
 pub use drum::Drum;
 pub use gaussian::GaussianModel;
+pub use lut::LutMultiplier;
+pub use matmul::{
+    approx_matmul, approx_mul_f32, characterize_matmul, characterize_matmul_set,
+};
 pub use mitchell::Mitchell;
 pub use roba::Roba;
-pub use stats::{characterize, ErrorStats, OperandDist};
+pub use stats::{characterize, characterize_threads, ErrorStats, OperandDist};
 pub use truncation::Truncation;
 
 use anyhow::{bail, Result};
@@ -51,13 +98,19 @@ pub trait Multiplier: Send + Sync {
     /// Approximate product of two unsigned operands.
     fn mul(&self, a: u32, b: u32) -> u64;
 
-    /// Exact reference for error accounting.
+    /// Exact reference for error accounting. This is a convenience,
+    /// not a customization point: the characterization harnesses
+    /// ([`characterize`], [`approx_matmul`]) compute the reference
+    /// inline as `a as u64 * b as u64` on their hot paths, so an
+    /// override would not be honored there. Do not override.
     fn exact(&self, a: u32, b: u32) -> u64 {
         a as u64 * b as u64
     }
 
     /// Signed relative error of one product (0 when the exact product
-    /// is 0, matching the MRE definition's implicit exclusion).
+    /// is 0, matching the MRE definition's implicit exclusion). Like
+    /// [`Multiplier::exact`], the batched harnesses inline this
+    /// definition rather than dispatching through it.
     fn relative_error(&self, a: u32, b: u32) -> f64 {
         let exact = self.exact(a, b);
         if exact == 0 {
@@ -65,6 +118,38 @@ pub trait Multiplier: Send + Sync {
         }
         (self.mul(a, b) as f64 - exact as f64) / exact as f64
     }
+
+    /// Approximate products of paired slices: `out[i] = mul(a[i], b[i])`.
+    ///
+    /// This is the fast path: one virtual call per slice instead of one
+    /// per element. Default trait methods monomorphize per implementing
+    /// type, so this default body dispatches `self.mul` statically
+    /// inside the loop — most designs need nothing more. Override only
+    /// to restructure the loop (e.g. [`Truncation`] hoists its mask,
+    /// [`GaussianModel`] reserves its noise-counter range up front);
+    /// overrides must stay bit-identical to `mul` —
+    /// `tests/mult_batch.rs` enforces this.
+    ///
+    /// # Panics
+    /// Panics when the three slices differ in length.
+    fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        check_batch_lens(a, b, out);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.mul(x, y);
+        }
+    }
+}
+
+/// Shared length guard for `mul_batch` implementations.
+#[inline]
+pub(crate) fn check_batch_lens(a: &[u32], b: &[u32], out: &[u64]) {
+    assert!(
+        a.len() == b.len() && a.len() == out.len(),
+        "mul_batch: slice lengths differ ({}, {}, {})",
+        a.len(),
+        b.len(),
+        out.len()
+    );
 }
 
 /// Exact multiplier (the paper's second training phase).
@@ -79,11 +164,22 @@ impl Multiplier for Exact {
     fn mul(&self, a: u32, b: u32) -> u64 {
         a as u64 * b as u64
     }
+    // `mul_batch` default: already a monomorphized widening-multiply
+    // loop for this impl.
 }
 
 /// Build a multiplier from a spec string: `exact`, `drum<k>`,
-/// `mitchell`, `trunc<k>`, `gauss<sigma-percent>`.
+/// `mitchell`, `roba`, `bam<d>`, `trunc<k>`, `gauss<sigma-percent>`,
+/// or `lut<bits>:<inner>` for the LUT-accelerated backend of any of
+/// the above (e.g. `lut8:drum6`).
 pub fn by_name(spec: &str) -> Result<Box<dyn Multiplier>> {
+    if let Some(rest) = spec.strip_prefix("lut") {
+        if let Some((bits, inner)) = rest.split_once(':') {
+            let bits: u32 = bits.parse()?;
+            let inner = by_name(inner)?;
+            return Ok(Box::new(LutMultiplier::new(inner.as_ref(), bits)?));
+        }
+    }
     if spec == "exact" {
         return Ok(Box::new(Exact));
     }
@@ -110,8 +206,8 @@ pub fn by_name(spec: &str) -> Result<Box<dyn Multiplier>> {
         return Ok(Box::new(GaussianModel::new(pct / 100.0, 0)));
     }
     bail!(
-        "unknown multiplier spec {spec:?} \
-         (expected exact | drum<k> | mitchell | roba | bam<d> | trunc<k> | gauss<pct>)"
+        "unknown multiplier spec {spec:?} (expected exact | drum<k> | mitchell \
+         | roba | bam<d> | trunc<k> | gauss<pct> | lut<bits>:<inner>)"
     )
 }
 
@@ -151,8 +247,30 @@ mod tests {
         assert_eq!(by_name("mitchell").unwrap().name(), "mitchell");
         assert_eq!(by_name("roba").unwrap().name(), "roba");
         assert_eq!(by_name("bam8").unwrap().name(), "bam8");
+        assert_eq!(by_name("lut8:drum6").unwrap().name(), "lut8:drum6");
         assert!(by_name("drum").is_err());
         assert!(by_name("bogus").is_err());
+        assert!(by_name("lut99:drum6").is_err());
+        assert!(by_name("lut8:bogus").is_err());
+    }
+
+    #[test]
+    fn default_mul_batch_matches_scalar() {
+        let m = by_name("drum6").unwrap();
+        let a = [0u32, 1, 77, 0xFFFF, 0xFFFF_FFFF];
+        let b = [5u32, 0, 123_456, 0xABCD, 3];
+        let mut out = [0u64; 5];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slice lengths differ")]
+    fn mul_batch_length_mismatch_panics() {
+        let mut out = [0u64; 2];
+        Exact.mul_batch(&[1, 2, 3], &[4, 5, 6], &mut out);
     }
 
     #[test]

@@ -56,6 +56,8 @@ impl Multiplier for Roba {
             - ar as i128 * br as i128;
         v.max(0) as u64
     }
+    // `mul_batch` default suffices: the monomorphized loop over `mul`
+    // is already the shift-expansion kernel, nothing to hoist.
 }
 
 #[cfg(test)]

@@ -1,11 +1,30 @@
 //! Error characterization harness: drive a [`Multiplier`] over an
-//! operand distribution and accumulate MRE / SD / bias / extrema with
-//! Welford's streaming algorithm. This regenerates the error columns of
-//! the cited design papers (and the mapping in the paper's §III).
+//! operand distribution and accumulate MRE / SD / bias / extrema.
+//! This regenerates the error columns of the cited design papers (and
+//! the mapping in the paper's §III).
+//!
+//! Since PR 1 this is a chunked parallel reduction over the batched
+//! [`Multiplier::mul_batch`] fast path: the sample stream splits into
+//! fixed [`CHUNK_SAMPLES`]-sized chunks, each chunk draws operands from
+//! its own seed-derived RNG and runs a local Welford accumulator, and
+//! chunk accumulators merge **in chunk order** with the Chan et al.
+//! parallel-variance formula. The chunk schedule depends only on
+//! `(n, seed)`, so results are bit-reproducible at any worker count
+//! (pinned by `characterize_threads` equality tests).
 
-use crate::rng::Xoshiro256;
+use crate::parallel;
+use crate::rng::{SplitMix64, Xoshiro256};
 
 use super::Multiplier;
+
+/// Samples per scheduling chunk. Fixed (not derived from the worker
+/// count) so the sample → chunk assignment — and therefore the result —
+/// is identical at any parallelism level.
+pub const CHUNK_SAMPLES: u64 = 1 << 16;
+
+/// Operand/product staging length: big enough to amortize the virtual
+/// `mul_batch` call, small enough to stay cache-resident.
+const BATCH: usize = 4096;
 
 /// Operand distributions for characterization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +68,16 @@ impl OperandDist {
             OperandDist::Small => "small",
         }
     }
+
+    /// Every distribution, for sweeps and property tests.
+    pub fn all() -> [OperandDist; 4] {
+        [
+            OperandDist::Uniform16,
+            OperandDist::Uniform32,
+            OperandDist::Mantissa,
+            OperandDist::Small,
+        ]
+    }
 }
 
 /// Streaming error statistics of a multiplier design.
@@ -76,37 +105,163 @@ impl ErrorStats {
     }
 }
 
-/// Characterize `m` over `n` random operand pairs from `dist`.
-pub fn characterize(
+/// Mergeable Welford accumulator over signed relative error. Shared by
+/// the characterization chunks and the GEMM comparison in
+/// [`super::matmul`].
+#[derive(Debug, Clone, Copy)]
+pub(super) struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    abs_sum: f64,
+    min_re: f64,
+    max_re: f64,
+}
+
+impl Default for Welford {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Welford {
+    pub(super) fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            abs_sum: 0.0,
+            min_re: f64::INFINITY,
+            max_re: f64::NEG_INFINITY,
+        }
+    }
+
+    pub(super) fn push(&mut self, re: f64) {
+        self.n += 1;
+        self.abs_sum += re.abs();
+        let delta = re - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (re - self.mean);
+        self.min_re = self.min_re.min(re);
+        self.max_re = self.max_re.max(re);
+    }
+
+    /// Chan et al. parallel-variance merge. Called in a fixed order so
+    /// the floating-point result is deterministic.
+    pub(super) fn merge(self, other: Welford) -> Welford {
+        if self.n == 0 {
+            return other;
+        }
+        if other.n == 0 {
+            return self;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        Welford {
+            n,
+            mean: self.mean + delta * (other.n as f64 / n as f64),
+            m2: self.m2
+                + other.m2
+                + delta * delta * (self.n as f64 * other.n as f64 / n as f64),
+            abs_sum: self.abs_sum + other.abs_sum,
+            min_re: self.min_re.min(other.min_re),
+            max_re: self.max_re.max(other.max_re),
+        }
+    }
+
+    pub(super) fn finish(self) -> ErrorStats {
+        if self.n == 0 {
+            return ErrorStats {
+                mre: 0.0,
+                sd: 0.0,
+                mean_re: 0.0,
+                min_re: 0.0,
+                max_re: 0.0,
+                samples: 0,
+            };
+        }
+        ErrorStats {
+            mre: self.abs_sum / self.n as f64,
+            sd: (self.m2 / self.n as f64).sqrt(),
+            mean_re: self.mean,
+            min_re: self.min_re,
+            max_re: self.max_re,
+            samples: self.n,
+        }
+    }
+}
+
+/// Decorrelated per-chunk RNG seed — one SplitMix64 step over
+/// `(seed, chunk)`.
+fn chunk_seed(seed: u64, chunk: u64) -> u64 {
+    SplitMix64::new(seed ^ chunk.wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
+}
+
+/// One chunk: draw `len` operand pairs, run the batched fast path, and
+/// accumulate locally.
+fn run_chunk(m: &dyn Multiplier, dist: OperandDist, len: u64, seed: u64) -> Welford {
+    let mut rng = Xoshiro256::new(seed);
+    let mut acc = Welford::new();
+    let mut a = [0u32; BATCH];
+    let mut b = [0u32; BATCH];
+    let mut out = [0u64; BATCH];
+    let mut left = len;
+    while left > 0 {
+        let k = left.min(BATCH as u64) as usize;
+        for i in 0..k {
+            a[i] = dist.sample(&mut rng);
+            b[i] = dist.sample(&mut rng);
+        }
+        m.mul_batch(&a[..k], &b[..k], &mut out[..k]);
+        for i in 0..k {
+            // Exact reference inline (all designs use the default
+            // `exact`); 0 maps to 0 error per the MRE definition.
+            let exact = a[i] as u64 * b[i] as u64;
+            let re = if exact == 0 {
+                0.0
+            } else {
+                (out[i] as f64 - exact as f64) / exact as f64
+            };
+            acc.push(re);
+        }
+        left -= k as u64;
+    }
+    acc
+}
+
+/// Characterize `m` over `n` random operand pairs from `dist`, in
+/// parallel over [`parallel::max_threads`] workers. Deterministic in
+/// `(n, seed)` for stateless designs regardless of worker count; see
+/// the module docs for the [`super::GaussianModel`] caveat.
+pub fn characterize(m: &dyn Multiplier, dist: OperandDist, n: u64, seed: u64) -> ErrorStats {
+    characterize_threads(m, dist, n, seed, parallel::max_threads())
+}
+
+/// [`characterize`] with an explicit worker count (1 = fully
+/// sequential on the calling thread). Any two worker counts produce
+/// bit-identical results for stateless designs — the schedule is fixed
+/// by `(n, seed)`.
+pub fn characterize_threads(
     m: &dyn Multiplier,
     dist: OperandDist,
     n: u64,
     seed: u64,
+    threads: usize,
 ) -> ErrorStats {
-    let mut rng = Xoshiro256::new(seed);
-    let mut mean = 0.0f64; // Welford over signed relative error
-    let mut m2 = 0.0f64;
-    let mut abs_sum = 0.0f64;
-    let (mut min_re, mut max_re) = (f64::INFINITY, f64::NEG_INFINITY);
-    for i in 1..=n {
-        let a = dist.sample(&mut rng);
-        let b = dist.sample(&mut rng);
-        let re = m.relative_error(a, b);
-        abs_sum += re.abs();
-        let delta = re - mean;
-        mean += delta / i as f64;
-        m2 += delta * (re - mean);
-        min_re = min_re.min(re);
-        max_re = max_re.max(re);
+    if n == 0 {
+        return Welford::new().finish();
     }
-    ErrorStats {
-        mre: abs_sum / n as f64,
-        sd: (m2 / n as f64).sqrt(),
-        mean_re: mean,
-        min_re,
-        max_re,
-        samples: n,
-    }
+    let chunks: Vec<(u64, u64)> = (0..n.div_ceil(CHUNK_SAMPLES))
+        .map(|c| {
+            let start = c * CHUNK_SAMPLES;
+            (c, (n - start).min(CHUNK_SAMPLES))
+        })
+        .collect();
+    let accs = parallel::par_map(&chunks, threads, |_, &(c, len)| {
+        run_chunk(m, dist, len, chunk_seed(seed, c))
+    });
+    // Merge in chunk order — deterministic floating-point reduction.
+    accs.into_iter().fold(Welford::new(), Welford::merge).finish()
 }
 
 #[cfg(test)]
@@ -132,9 +287,56 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_does_not_change_results() {
+        // Multi-chunk run (n > CHUNK_SAMPLES): sequential vs parallel
+        // schedules must agree bit-for-bit.
+        let d = crate::mult::Drum::new(6).unwrap();
+        let seq = characterize_threads(&d, OperandDist::Uniform16, 200_000, 9, 1);
+        let par = characterize_threads(&d, OperandDist::Uniform16, 200_000, 9, 8);
+        assert_eq!(seq.mre, par.mre);
+        assert_eq!(seq.sd, par.sd);
+        assert_eq!(seq.mean_re, par.mean_re);
+        assert_eq!(seq.min_re, par.min_re);
+        assert_eq!(seq.max_re, par.max_re);
+    }
+
+    #[test]
+    fn zero_samples_is_well_defined() {
+        let s = characterize(&Exact, OperandDist::Small, 0, 3);
+        assert_eq!(s.samples, 0);
+        assert_eq!(s.mre, 0.0);
+        assert_eq!(s.min_re, 0.0);
+    }
+
+    #[test]
     fn gaussianity_ratio_for_gaussian_model() {
         let g = crate::mult::GaussianModel::new(0.05, 3);
         let s = characterize(&g, OperandDist::Mantissa, 100_000, 4);
         assert!((s.gaussianity_ratio() - crate::HALF_NORMAL_MEAN).abs() < 0.02);
+    }
+
+    #[test]
+    fn welford_merge_matches_streaming() {
+        // Split-and-merge equals one streaming pass (up to fp noise).
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 / 50.0 - 1.0).collect();
+        let mut one = Welford::new();
+        for &x in &xs {
+            one.push(x);
+        }
+        let mut lo = Welford::new();
+        let mut hi = Welford::new();
+        for &x in &xs[..337] {
+            lo.push(x);
+        }
+        for &x in &xs[337..] {
+            hi.push(x);
+        }
+        let merged = lo.merge(hi).finish();
+        let direct = one.finish();
+        assert_eq!(merged.samples, direct.samples);
+        assert!((merged.mean_re - direct.mean_re).abs() < 1e-12);
+        assert!((merged.sd - direct.sd).abs() < 1e-12);
+        assert_eq!(merged.min_re, direct.min_re);
+        assert_eq!(merged.max_re, direct.max_re);
     }
 }

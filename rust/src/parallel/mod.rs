@@ -1,0 +1,144 @@
+//! Minimal data-parallel substrate (the offline environment has no
+//! `rayon`; `std::thread::scope` gives us the same fork-join shape with
+//! zero dependencies).
+//!
+//! Design rules, shared by every caller ([`crate::mult::characterize`],
+//! [`crate::mult::approx_matmul`], the Table-II sweep):
+//!
+//! * **Work is split by the problem, never by the worker count.** Item
+//!   lists and chunk schedules depend only on the input, so the set of
+//!   computed results is identical at any parallelism level; callers
+//!   merge results in item order, which makes the *values*
+//!   thread-count-independent too.
+//! * **Workers steal indices from one atomic counter** — coarse,
+//!   contention-free load balancing with no queues to tune.
+//! * **Panics propagate**: a panicking worker aborts the scope and
+//!   re-panics on the caller, so property tests see their assertions.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide override for [`max_threads`] (0 = no override). The
+/// CLI's `--threads` flag and tests use this; the `APPROXMUL_THREADS`
+/// environment variable is consulted next.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Force the worker count for subsequent parallel calls (0 clears the
+/// override).
+pub fn set_max_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Worker count used by parallel helpers: the [`set_max_threads`]
+/// override, else `APPROXMUL_THREADS`, else the machine's available
+/// parallelism.
+pub fn max_threads() -> usize {
+    let forced = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
+    }
+    if let Ok(v) = std::env::var("APPROXMUL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` workers and return the
+/// results **in item order**. `f` receives `(index, &item)`; it must be
+/// pure with respect to ordering — workers claim indices dynamically.
+///
+/// With `threads <= 1` (or one item) this degrades to a plain
+/// sequential map on the calling thread, which — combined with
+/// input-derived work splitting — is what makes callers' results
+/// reproducible at any parallelism level.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // One slot per item: each is locked by exactly one worker, so the
+    // "lock" is uncontended bookkeeping, not synchronization.
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("par_map: worker exited without filling its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_item_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let items: Vec<u64> = (0..257).collect();
+        let f = |_: usize, &x: &u64| x.wrapping_mul(0x9E37_79B9).rotate_left(7);
+        let seq = par_map(&items, 1, f);
+        let par = par_map(&items, 7, f);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[42u32], 4, |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn override_wins() {
+        set_max_threads(3);
+        assert_eq!(max_threads(), 3);
+        set_max_threads(0);
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let items: Vec<u32> = (0..64).collect();
+        let result = std::panic::catch_unwind(|| {
+            par_map(&items, 4, |_, &x| {
+                assert!(x != 13, "boom");
+                x
+            })
+        });
+        assert!(result.is_err());
+    }
+}

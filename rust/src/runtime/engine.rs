@@ -2,6 +2,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -77,13 +78,19 @@ impl Executable {
     }
 }
 
+/// One compile slot per cache entry: racing loaders of the *same*
+/// entry serialize on the slot's lock while different entries compile
+/// concurrently. The outer map lock is never held across a compile.
+type Slot = Arc<Mutex<Option<Executable>>>;
+
 /// Owns the PJRT client, the manifest, and a per-entry compile cache.
 /// One `Engine` per process; sessions and sweeps share it (`&Engine` is
 /// `Sync` — PJRT CPU executables are thread-safe for execution).
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Executable>>,
+    cache: Mutex<HashMap<String, Slot>>,
+    compiled: AtomicUsize,
 }
 
 impl Engine {
@@ -96,7 +103,12 @@ impl Engine {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compiled: AtomicUsize::new(0),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -108,9 +120,22 @@ impl Engine {
     }
 
     /// Fetch (compiling on first use) the `kind` entry of `preset`.
+    ///
+    /// Thread-safe without duplicated work: the previous
+    /// check-then-insert let two threads compile the same entry
+    /// concurrently (and double-count compile time); now each entry has
+    /// one slot — the second loader blocks on the slot until the first
+    /// finishes, then reuses its executable. A failed compile leaves
+    /// the slot empty, so the next caller retries instead of caching
+    /// the error.
     pub fn load(&self, preset: &str, kind: &str) -> Result<Executable> {
         let key = format!("{preset}/{kind}");
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+        let slot: Slot = {
+            let mut cache = self.cache.lock().unwrap();
+            Arc::clone(cache.entry(key.clone()).or_default())
+        };
+        let mut entry = slot.lock().unwrap();
+        if let Some(e) = entry.as_ref() {
             return Ok(e.clone());
         }
         let model = self.manifest.model(preset)?;
@@ -129,15 +154,13 @@ impl Engine {
         log::info!("compiled {key} in {:.2?}", started.elapsed());
         let executable =
             Executable { exe: Arc::new(exe), spec: Arc::new(spec) };
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, executable.clone());
+        *entry = Some(executable.clone());
+        self.compiled.fetch_add(1, Ordering::Relaxed);
         Ok(executable)
     }
 
-    /// Number of compiled entries currently cached.
+    /// Number of successfully compiled entries currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.compiled.load(Ordering::Relaxed)
     }
 }

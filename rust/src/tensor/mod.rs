@@ -134,10 +134,18 @@ impl Tensor {
     }
 
     pub fn as_f32(&self) -> Result<Vec<f32>> {
+        Ok(self.f32s()?.collect())
+    }
+
+    /// Zero-allocation view of the f32 elements: an exact-size iterator
+    /// over the word storage, reinterpreted per element. The statistics
+    /// below use this instead of [`Tensor::as_f32`], which clones the
+    /// whole buffer.
+    pub fn f32s(&self) -> Result<impl ExactSizeIterator<Item = f32> + Clone + '_> {
         if self.dtype != DType::F32 {
             bail!("tensor is {}, not float32", self.dtype);
         }
-        Ok(self.data.iter().map(|&b| f32::from_bits(b)).collect())
+        Ok(self.data.iter().map(|&b| f32::from_bits(b)))
     }
 
     pub fn as_i32(&self) -> Result<Vec<i32>> {
@@ -187,33 +195,33 @@ impl Tensor {
         Ok(self)
     }
 
-    // -- statistics (f32 only) -----------------------------------------------
+    // -- statistics (f32 only, allocation-free via `f32s`) -------------------
 
     pub fn mean(&self) -> Result<f64> {
-        let v = self.as_f32()?;
-        if v.is_empty() {
+        if self.is_empty() {
             bail!("mean of empty tensor");
         }
-        Ok(v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64)
+        let n = self.len() as f64;
+        Ok(self.f32s()?.map(|x| x as f64).sum::<f64>() / n)
     }
 
     pub fn std(&self) -> Result<f64> {
-        let v = self.as_f32()?;
-        if v.is_empty() {
+        if self.is_empty() {
             bail!("std of empty tensor");
         }
+        // Two passes over the view (numerically stable, still no clone).
+        let n = self.len() as f64;
         let m = self.mean()?;
-        let var = v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
-            / v.len() as f64;
+        let var = self.f32s()?.map(|x| (x as f64 - m).powi(2)).sum::<f64>() / n;
         Ok(var.sqrt())
     }
 
     pub fn abs_mean(&self) -> Result<f64> {
-        let v = self.as_f32()?;
-        if v.is_empty() {
+        if self.is_empty() {
             bail!("abs_mean of empty tensor");
         }
-        Ok(v.iter().map(|&x| (x as f64).abs()).sum::<f64>() / v.len() as f64)
+        let n = self.len() as f64;
+        Ok(self.f32s()?.map(|x| (x as f64).abs()).sum::<f64>() / n)
     }
 }
 
@@ -278,6 +286,21 @@ mod tests {
         assert_eq!(t.mean().unwrap(), 0.0);
         assert_eq!(t.std().unwrap(), 1.0);
         assert_eq!(t.abs_mean().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn f32s_view_matches_clone_path() {
+        let values = vec![0.5f32, -2.0, 3.75, 0.0, -0.125];
+        let t = Tensor::from_f32(&[5], values.clone()).unwrap();
+        let viewed: Vec<f32> = t.f32s().unwrap().collect();
+        assert_eq!(viewed, values);
+        assert_eq!(t.f32s().unwrap().len(), 5);
+        // Wrong dtype is rejected like `as_f32`.
+        let i = Tensor::from_i32(&[1], vec![3]).unwrap();
+        assert!(i.f32s().is_err());
+        // Empty-tensor statistics still error cleanly.
+        let e = Tensor::zeros(&[0], DType::F32);
+        assert!(e.mean().is_err() && e.std().is_err() && e.abs_mean().is_err());
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Host-side pieces ([`Literal`] construction, reshape, typed readout)
+//! are fully functional so literal-marshalling code and its tests work
+//! without native XLA. Anything that needs the real runtime
+//! ([`PjRtClient::cpu`], compilation, execution, tuple decomposition of
+//! device results) returns an [`Error`] explaining that this is the
+//! stub build — callers degrade gracefully (the integration tests
+//! already skip when artifacts are absent). Point the workspace at the
+//! real `xla` crate to run compiled graphs.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error`, so `?` converts it
+/// into `anyhow::Error` at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: native XLA/PJRT backend not available in this build \
+         (vendored stub — see vendor/xla)"
+    ))
+}
+
+/// Element types of XLA literals (the subset the manifest can declare,
+/// plus enough extras that match arms stay non-exhaustive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+}
+
+macro_rules! native_type {
+    ($($t:ty => $v:ident),* $(,)?) => {
+        $(impl NativeType for $t {
+            const TY: ElementType = ElementType::$v;
+        })*
+    };
+}
+
+native_type!(u8 => U8, i32 => S32, i64 => S64, u32 => U32, u64 => U64, f32 => F32, f64 => F64);
+
+/// Shape of a (non-tuple) literal: element type + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side XLA literal: shape plus raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build from raw bytes (single memcpy; the fast marshalling path).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * ty.size_bytes() {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {dims:?} of {ty:?} needs {}",
+                data.len(),
+                elems * ty.size_bytes()
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { ty, dims: dims.iter().map(|&d| d as i64).collect() },
+            data: data.to_vec(),
+        })
+    }
+
+    /// Build a rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Self {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                values.as_ptr() as *const u8,
+                std::mem::size_of_val(values),
+            )
+        };
+        Literal {
+            shape: ArrayShape { ty: T::TY, dims: vec![values.len() as i64] },
+            data: bytes.to_vec(),
+        }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let new_elems: i64 = dims.iter().product();
+        let old_elems: i64 = self.shape.dims.iter().product();
+        if new_elems != old_elems {
+            return Err(Error(format!(
+                "cannot reshape {:?} -> {dims:?}",
+                self.shape.dims
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { ty: self.shape.ty, dims: dims.to_vec() },
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    /// Read the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        // Pred literals read out as u8, like the real bindings.
+        let compatible = T::TY == self.shape.ty
+            || (T::TY == ElementType::U8 && self.shape.ty == ElementType::Pred);
+        if !compatible {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        if size == 0 || self.data.len() % size != 0 {
+            return Err(Error(format!(
+                "literal byte length {} not a multiple of element size {size}",
+                self.data.len()
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(size)
+            .map(|chunk| unsafe { std::ptr::read_unaligned(chunk.as_ptr() as *const T) })
+            .collect())
+    }
+
+    /// Split a tuple literal into its elements. Tuples only come back
+    /// from graph execution, which the stub cannot do.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module (the stub only retains the text).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { _text: text })
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. The stub cannot create one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let values = [1.0f32, -2.5, 3.25];
+        let lit = Literal::vec1(&values);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), values);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn untyped_construction_checks_length() {
+        let bytes = [0u8; 12];
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::U32, &[3], &bytes)
+                .unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![0, 0, 0]);
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[4],
+            &bytes
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_cleanly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+}
