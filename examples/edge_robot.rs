@@ -11,7 +11,7 @@ use approxmul::config::{ErrorSampling, ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
 use approxmul::costmodel::CostModel;
 use approxmul::data::SyntheticCifar;
-use approxmul::error_model::ErrorConfig;
+use approxmul::mult::MultSpec;
 use approxmul::report::{pct, Table};
 use approxmul::runtime::Engine;
 
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::preset_tiny();
     cfg.epochs = 3; // per round
     cfg.policy =
-        MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(0.018) };
+        MultiplierPolicy::Approximate { mult: MultSpec::gaussian(0.018) };
     cfg.sampling = ErrorSampling::PerStep;
 
     let cm = CostModel::from_model(model, engine.manifest().paper.conv_time_share)?;

@@ -9,25 +9,28 @@
 use approxmul::config::{ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
 use approxmul::costmodel::CostModel;
-use approxmul::error_model::ErrorConfig;
+use approxmul::mult::MultSpec;
 use approxmul::report::{pct, Table};
 use approxmul::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::from_artifacts("artifacts")?;
-    let error = ErrorConfig::from_mre(0.096);
+    let error = MultSpec::gaussian_mre(0.096);
     let epochs = 10u64;
     let switch = 7u64; // 70% approximate utilization
 
     let mut rows = Vec::new();
     for (name, policy) in [
         ("exact", MultiplierPolicy::Exact),
-        ("approximate", MultiplierPolicy::Approximate { error }),
-        ("hybrid", MultiplierPolicy::Hybrid { error, switch_epoch: switch }),
+        ("approximate", MultiplierPolicy::Approximate { mult: error.clone() }),
+        (
+            "hybrid",
+            MultiplierPolicy::Hybrid { mult: error.clone(), switch_epoch: switch },
+        ),
     ] {
         let mut cfg = ExperimentConfig::preset_tiny();
         cfg.epochs = epochs;
-        cfg.policy = policy;
+        cfg.policy = policy.clone();
         cfg.tag = format!("hybrid-demo-{name}");
         println!("=== {name} ===");
         let mut trainer = Trainer::new(&engine, cfg.clone())?;

@@ -1,41 +1,38 @@
-//! Quickstart: load the AOT artifacts, train the `tiny` preset for a
-//! few epochs under a simulated approximate multiplier (MRE ~3.6%, the
-//! paper's test case 4), and evaluate with exact multipliers.
+//! Quickstart: train the `tiny` preset on the native backend for a few
+//! epochs with a *bit-accurate* approximate multiplier (DRUM-6 — the
+//! paper's reference design), then evaluate with exact multipliers. No
+//! compiled artifacts or PJRT needed; every GEMM of the run goes
+//! through the simulated DRUM-6 hardware.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use approxmul::config::{ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
-use approxmul::error_model::ErrorConfig;
-use approxmul::runtime::Engine;
+use approxmul::mult::MultSpec;
 
 fn main() -> anyhow::Result<()> {
-    // The engine owns the PJRT CPU client and the compiled-graph cache.
-    let engine = Engine::from_artifacts("artifacts")?;
-    println!("platform: {}", engine.platform_name());
-
-    // Train case 4 of the paper's Table II: MRE ~3.6% / SD ~4.5%.
     let mut cfg = ExperimentConfig::preset_tiny();
     cfg.epochs = 6;
     cfg.policy = MultiplierPolicy::Approximate {
-        error: ErrorConfig::from_mre(0.036),
+        mult: MultSpec::parse("drum6")?,
     };
     cfg.tag = "quickstart".into();
 
-    let mut trainer = Trainer::new(&engine, cfg)?;
+    let mut trainer = Trainer::native(cfg)?;
+    println!("backend: {}", trainer.session().backend_kind());
     let mut hook = |r: &approxmul::metrics::EpochRecord| {
         println!(
-            "epoch {}: train loss {:.4}, test acc {:.2}% (sigma {:.3})",
+            "epoch {}: train loss {:.4}, test acc {:.2}%",
             r.epoch,
             r.train_loss,
             100.0 * r.test_acc,
-            r.sigma
         );
     };
     let outcome = trainer.run_from(0, Some(&mut hook))?;
 
     println!(
-        "\ntrained {} epochs in {:.1}s — final exact-multiplier accuracy {:.2}%",
+        "\ntrained {} epochs under drum6 in {:.1}s — final exact-multiplier \
+         accuracy {:.2}%",
         outcome.epochs_run,
         outcome.wall_secs,
         100.0 * outcome.final_accuracy

@@ -1,72 +1,120 @@
-//! End-to-end driver (EXPERIMENTS.md §e2e): trains the `small` VGG-style
-//! preset (~1.2M params) for several hundred steps on the CIFAR
-//! surrogate (or real CIFAR-10 if `data/cifar-10-batches-bin` exists),
-//! through the full stack — Rust coordinator -> PJRT -> AOT-compiled
-//! JAX graph -> Pallas error-injection kernel — and logs the loss
-//! curve, comparing the exact baseline against the paper's MRE ~1.4%
-//! configuration (Table II case 2).
+//! End-to-end training driver for either backend.
 //!
-//! Run: `cargo run --release --example train_e2e [epochs]`
+//! * `native` (default): trains through the pure-Rust backend where
+//!   every GEMM runs on the bit-accurate multiplier engine — compares
+//!   the exact baseline against DRUM-6 (the paper's reference design)
+//!   with no PJRT or artifacts. This is the CI smoke path.
+//! * `pjrt`: the original full-stack path — Rust coordinator -> PJRT ->
+//!   AOT-compiled JAX graph -> Pallas error-injection kernel — against
+//!   the paper's MRE ~1.4% Gaussian configuration (Table II case 2).
+//!
+//! Real CIFAR-10 is used when `data/cifar-10-batches-bin` exists and
+//! the preset takes 32x32 input; otherwise the CIFAR surrogate.
+//!
+//! Run: `cargo run --release --example train_e2e [epochs] [backend] [preset]`
+//! e.g. `cargo run --release --example train_e2e 2 native tiny`
 
 use approxmul::config::{ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
 use approxmul::data::cifar;
-use approxmul::error_model::ErrorConfig;
-use approxmul::runtime::Engine;
+use approxmul::mult::MultSpec;
+use approxmul::runtime::{BackendModel, Engine, NativeConfig};
 
 fn main() -> anyhow::Result<()> {
-    let epochs: u64 = std::env::args()
-        .nth(1)
-        .map(|s| s.parse())
-        .transpose()?
-        .unwrap_or(6);
+    let mut args = std::env::args().skip(1);
+    let epochs: u64 = args.next().map(|s| s.parse()).transpose()?.unwrap_or(6);
+    let backend = args.next().unwrap_or_else(|| "native".to_string());
+    let native = match backend.as_str() {
+        "native" => true,
+        "pjrt" => false,
+        other => anyhow::bail!("backend {other:?} (native | pjrt)"),
+    };
+    let preset = args
+        .next()
+        .unwrap_or_else(|| if native { "tiny".to_string() } else { "small".to_string() });
 
-    let engine = Engine::from_artifacts("artifacts")?;
-    println!("platform: {}", engine.platform_name());
+    let engine = if native {
+        None
+    } else {
+        Some(Engine::from_artifacts("artifacts")?)
+    };
+    let model: BackendModel = match &engine {
+        Some(engine) => {
+            println!("platform: {}", engine.platform_name());
+            BackendModel::from_manifest(engine.manifest().model(&preset)?)
+        }
+        None => NativeConfig::preset(&preset)?.backend_model(),
+    };
 
-    let mut base = ExperimentConfig::preset_small();
+    let mut base = if preset == "small" {
+        ExperimentConfig::preset_small()
+    } else {
+        let mut c = ExperimentConfig::preset_tiny();
+        c.preset = preset.clone();
+        c
+    };
     base.epochs = epochs;
-    base.train_examples = 4096;
-    base.test_examples = 1024;
 
-    // Real CIFAR-10 if present on disk (DESIGN.md §5).
-    let real = cifar::load_standard("data/cifar-10-batches-bin")?;
+    // Real CIFAR-10 if present on disk and geometrically compatible
+    // (DESIGN.md §5).
+    let real = if model.input_hw == 32 {
+        cifar::load_standard("data/cifar-10-batches-bin")?
+    } else {
+        None
+    };
     if real.is_some() {
         println!("using real CIFAR-10 from data/cifar-10-batches-bin");
     } else {
-        println!("using synthetic CIFAR surrogate (no dataset on disk)");
+        println!("using synthetic CIFAR surrogate");
     }
+
+    // Native runs compare against the actual DRUM-6 design; PJRT runs
+    // can only express the paper's Gaussian surrogate at DRUM-6's MRE.
+    let approx_spec = if native {
+        MultSpec::parse("drum6")?
+    } else {
+        MultSpec::gaussian_mre(0.014)
+    };
 
     std::fs::create_dir_all("runs")?;
     let mut results = Vec::new();
     for (name, policy) in [
         ("exact", MultiplierPolicy::Exact),
         (
-            "approx-mre1.4",
-            MultiplierPolicy::Approximate { error: ErrorConfig::from_mre(0.014) },
+            "approx",
+            MultiplierPolicy::Approximate { mult: approx_spec.clone() },
         ),
     ] {
         let mut cfg = base.clone();
         cfg.policy = policy;
-        cfg.tag = format!("e2e-{name}");
-        println!("\n=== {name} ({} epochs, {} examples) ===", cfg.epochs, cfg.train_examples);
-        let mut trainer = match &real {
-            Some((train, test)) => {
-                let model = engine.manifest().model(&cfg.preset)?;
-                let mut train = train.clone();
-                let take_test = cfg.test_examples.div_ceil(model.eval_batch) * model.eval_batch;
-                train.normalize();
-                let mut test = test.clone();
-                test.normalize();
-                test.images.truncate(take_test * test.image_elems());
-                test.labels.truncate(take_test);
-                train.images.truncate(cfg.train_examples * train.image_elems());
-                train.labels.truncate(cfg.train_examples);
-                Trainer::with_data(&engine, cfg.clone(), train, test)?
+        cfg.tag = format!("e2e-{backend}-{name}");
+        println!(
+            "\n=== {name} ({} epochs, {} examples, backend {backend}) ===",
+            cfg.epochs, cfg.train_examples
+        );
+        let data = real.as_ref().map(|(train, test)| {
+            let take_test =
+                cfg.test_examples.div_ceil(model.eval_batch) * model.eval_batch;
+            let mut train = train.clone();
+            train.normalize();
+            let mut test = test.clone();
+            test.normalize();
+            test.images.truncate(take_test * test.image_elems());
+            test.labels.truncate(take_test);
+            train.images.truncate(cfg.train_examples * train.image_elems());
+            train.labels.truncate(cfg.train_examples);
+            (train, test)
+        });
+        let mut trainer = match (&engine, data) {
+            (Some(engine), Some((train, test))) => {
+                Trainer::with_data(engine, cfg.clone(), train, test)?
             }
-            None => Trainer::new(&engine, cfg.clone())?,
+            (Some(engine), None) => Trainer::new(engine, cfg.clone())?,
+            (None, Some((train, test))) => {
+                Trainer::native_with_data(cfg.clone(), train, test)?
+            }
+            (None, None) => Trainer::native(cfg.clone())?,
         };
-        let mut steps = 0u64;
         let mut hook = |r: &approxmul::metrics::EpochRecord| {
             println!(
                 "  epoch {:>2}: train loss {:.4} acc {:.3} | test acc {:.2}% | {:.1}s",
@@ -78,11 +126,23 @@ fn main() -> anyhow::Result<()> {
             );
         };
         let outcome = trainer.run_from(0, Some(&mut hook))?;
-        steps += outcome.epochs_run * (base.train_examples as u64 / 64);
-        let csv = format!("runs/e2e-{name}.csv");
+        anyhow::ensure!(
+            outcome.epochs_run == epochs,
+            "expected {epochs} epochs, ran {}",
+            outcome.epochs_run
+        );
+        let first = outcome.history.records.first().map(|r| r.train_loss);
+        let last = outcome.history.records.last().map(|r| r.train_loss);
+        if let (Some(first), Some(last)) = (first, last) {
+            anyhow::ensure!(
+                epochs < 2 || last < first,
+                "{name}: train loss did not decrease ({first:.4} -> {last:.4})"
+            );
+        }
+        let csv = format!("runs/e2e-{backend}-{name}.csv");
         outcome.history.save_csv(&csv)?;
         println!(
-            "{name}: final acc {:.2}% after ~{steps} steps in {:.1}s (loss curve -> {csv})",
+            "{name}: final acc {:.2}% in {:.1}s (loss curve -> {csv})",
             100.0 * outcome.final_accuracy,
             outcome.wall_secs
         );
@@ -92,9 +152,10 @@ fn main() -> anyhow::Result<()> {
     let exact = &results[0].1;
     let approx = &results[1].1;
     println!(
-        "\nsummary: exact {:.2}% vs approx(MRE~1.4%) {:.2}% — diff {:+.2} pts \
+        "\nsummary: exact {:.2}% vs {} {:.2}% — diff {:+.2} pts \
          (paper Table II case 2: -0.07 pts at 200 epochs)",
         100.0 * exact.final_accuracy,
+        approx_spec.label(),
         100.0 * approx.final_accuracy,
         100.0 * (approx.final_accuracy - exact.final_accuracy)
     );

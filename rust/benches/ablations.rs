@@ -12,7 +12,7 @@
 
 use approxmul::config::{ErrorSampling, ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
-use approxmul::error_model::ErrorConfig;
+use approxmul::mult::MultSpec;
 use approxmul::report::{pct, Table};
 use approxmul::runtime::Engine;
 
@@ -33,7 +33,7 @@ fn run_case(
     cfg.policy = if sigma == 0.0 {
         MultiplierPolicy::Exact
     } else {
-        MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(sigma) }
+        MultiplierPolicy::Approximate { mult: MultSpec::gaussian(sigma) }
     };
     let outcome = Trainer::new(engine, cfg)?.run()?;
     Ok(outcome.final_accuracy)

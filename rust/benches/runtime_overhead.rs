@@ -78,7 +78,13 @@ fn main() -> anyhow::Result<()> {
                 .step(
                     x.clone(),
                     y.clone(),
-                    StepInputs { seed_err: 1, seed_drop: step, sigma: 0.0, lr: 0.01 },
+                    StepInputs {
+                        seed_err: 1,
+                        seed_drop: step,
+                        sigma: 0.0,
+                        lr: 0.01,
+                        approx: false,
+                    },
                 )
                 .unwrap();
             std::hint::black_box(s.loss);
@@ -91,7 +97,13 @@ fn main() -> anyhow::Result<()> {
                 .step(
                     x.clone(),
                     y.clone(),
-                    StepInputs { seed_err: 1, seed_drop: step, sigma: 0.045, lr: 0.01 },
+                    StepInputs {
+                        seed_err: 1,
+                        seed_drop: step,
+                        sigma: 0.045,
+                        lr: 0.01,
+                        approx: true,
+                    },
                 )
                 .unwrap();
             std::hint::black_box(s.loss);

@@ -9,7 +9,7 @@
 
 use approxmul::config::ExperimentConfig;
 use approxmul::coordinator::Sweep;
-use approxmul::error_model::paper_table2_configs;
+use approxmul::error_model::paper_table2_specs;
 use approxmul::report::{diff_pct, pct, Table};
 use approxmul::runtime::Engine;
 
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     cfg.test_examples = 512;
     cfg.tag = "bench-t2".into();
 
-    let cases = paper_table2_configs();
+    let cases = paper_table2_specs();
     let sweep = Sweep::new(&engine, cfg);
     let rows = sweep.run(&cases, |id, row| {
         eprintln!(
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         t.row(vec![
             r.test_id.to_string(),
             format!("~{:.1}%", 100.0 * r.config.mre()),
-            format!("~{:.1}%", 100.0 * r.config.sigma),
+            format!("~{:.1}%", 100.0 * r.config.sigma()),
             pct(r.accuracy),
             if r.test_id == 0 { "N/A".into() } else { diff_pct(r.diff_from_exact) },
             pct(paper),

@@ -6,7 +6,7 @@
 
 use approxmul::config::ExperimentConfig;
 use approxmul::coordinator::HybridSearch;
-use approxmul::error_model::paper_table2_configs;
+use approxmul::error_model::paper_table2_specs;
 use approxmul::report::{pct, Table};
 use approxmul::runtime::Engine;
 
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!("baseline accuracy {}", pct(baseline.final_accuracy));
 
     // Paper cases 2 (MRE~1.4%), 4 (~3.6%), 6 (~9.6%), 7 (~19.2%).
-    let cases: Vec<_> = paper_table2_configs()
+    let cases: Vec<_> = paper_table2_specs()
         .into_iter()
         .filter(|(id, _, _)| [2, 4, 6, 7].contains(id))
         .collect();
@@ -49,8 +49,9 @@ fn main() -> anyhow::Result<()> {
     ]);
     for (id, config, _) in cases {
         eprintln!("case {id}: approximate run {}...", config.label());
-        let (approx, tag) = search.approx_run(config)?;
-        let o = search.search(config, baseline.final_accuracy, &tag, approx.final_accuracy)?;
+        let (approx, tag) = search.approx_run(&config)?;
+        let o =
+            search.search(&config, baseline.final_accuracy, &tag, approx.final_accuracy)?;
         eprintln!(
             "  -> {}/{} epochs approx (util {})",
             o.approx_epochs,

@@ -32,8 +32,13 @@ pub struct Meta {
     pub preset: String,
     pub epoch: u64,
     pub step: u64,
-    /// Sigma the run was training with when snapshotted.
+    /// Sigma the run was training with when snapshotted (Gaussian
+    /// surrogate only; 0 for exact and bit-accurate designs).
     pub sigma: f64,
+    /// Canonical multiplier spec in force when snapshotted (`exact`,
+    /// `gaussian:<sigma>`, `drum6`, ...) — sigma alone loses the
+    /// multiplier's identity.
+    pub mult: String,
     /// Free-form tag (e.g. "table2-case4").
     pub tag: String,
 }
@@ -45,16 +50,26 @@ impl Meta {
             ("epoch", Value::from(self.epoch as usize)),
             ("step", Value::from(self.step as usize)),
             ("sigma", Value::from(self.sigma)),
+            ("mult", Value::from(self.mult.as_str())),
             ("tag", Value::from(self.tag.as_str())),
         ])
     }
 
     fn from_json(v: &Value) -> Result<Self> {
+        let sigma = v.get("sigma")?.as_f64()?;
+        // Pre-backend-split checkpoints have no `mult` key: their only
+        // multiplier identity *was* the sigma, so reconstruct it.
+        let mult = match v.opt("mult") {
+            Some(m) => m.as_str()?.to_string(),
+            None if sigma > 0.0 => format!("gaussian:{sigma}"),
+            None => "exact".to_string(),
+        };
         Ok(Meta {
             preset: v.get("preset")?.as_str()?.to_string(),
             epoch: v.get("epoch")?.as_i64()? as u64,
             step: v.get("step")?.as_i64()? as u64,
-            sigma: v.get("sigma")?.as_f64()?,
+            sigma,
+            mult,
             tag: v.get("tag")?.as_str()?.to_string(),
         })
     }
@@ -260,6 +275,7 @@ mod tests {
                 epoch: 3,
                 step: 99,
                 sigma: 0.045,
+                mult: "gaussian:0.045".into(),
                 tag: "unit".into(),
             },
             vec![
@@ -280,9 +296,39 @@ mod tests {
         assert_eq!(m2.preset, "tiny");
         assert_eq!(m2.epoch, 3);
         assert_eq!(m2.sigma, 0.045);
+        assert_eq!(m2.mult, "gaussian:0.045");
         assert_eq!(t2.len(), 3);
         assert_eq!(t2[0].1.as_f32().unwrap(), vec![1., -2., 3., 0.5]);
         assert_eq!(t2[1].1.as_i32().unwrap(), vec![1, -1, 7]);
+    }
+
+    /// A hand-built checkpoint whose JSON header predates the `mult`
+    /// key (the old format) must still load, deriving the multiplier
+    /// identity from sigma.
+    #[test]
+    fn legacy_checkpoint_without_mult_loads() {
+        let build = |meta_json: &str| -> Vec<u8> {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            bytes.extend_from_slice(&(meta_json.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(meta_json.as_bytes());
+            bytes.extend_from_slice(&0u32.to_le_bytes()); // zero tensors
+            let crc = crc32(&bytes);
+            bytes.extend_from_slice(&crc.to_le_bytes());
+            bytes
+        };
+        let legacy = build(
+            r#"{"epoch":2,"preset":"tiny","sigma":0.12,"step":7,"tag":"old"}"#,
+        );
+        let (meta, tensors) = from_bytes(&legacy).unwrap();
+        assert_eq!(meta.epoch, 2);
+        assert_eq!(meta.mult, "gaussian:0.12");
+        assert!(tensors.is_empty());
+        let exact = build(
+            r#"{"epoch":1,"preset":"tiny","sigma":0.0,"step":3,"tag":"old"}"#,
+        );
+        let (meta, _) = from_bytes(&exact).unwrap();
+        assert_eq!(meta.mult, "exact");
     }
 
     #[test]

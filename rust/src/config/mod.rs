@@ -5,8 +5,34 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::error_model::ErrorConfig;
 use crate::json::Value;
+use crate::mult::MultSpec;
+
+/// Which execution backend runs the training graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Compiled PJRT executables (needs `make artifacts` + real XLA).
+    Pjrt,
+    /// Pure-Rust bit-accurate path ([`crate::runtime::NativeBackend`]).
+    Native,
+}
+
+impl ExecBackend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pjrt" | "xla" => ExecBackend::Pjrt,
+            "native" => ExecBackend::Native,
+            other => bail!("unknown backend {other:?} (pjrt | native)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecBackend::Pjrt => "pjrt",
+            ExecBackend::Native => "native",
+        }
+    }
+}
 
 /// When the error matrices are (re)generated — the paper's Figure-3
 /// procedure fixes them once per run; resampling is our ablation.
@@ -56,38 +82,65 @@ impl LrSchedule {
 }
 
 /// The multiplier policy over epochs: exact, approximate, or the
-/// paper's hybrid (approximate then exact).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// paper's hybrid (approximate then exact). The approximate multiplier
+/// is a full [`MultSpec`] — the paper's Gaussian surrogate
+/// (`gaussian:<sigma>`) or a bit-accurate design (`drum6`,
+/// `lut12:drum6`, ...; native backend only).
+#[derive(Debug, Clone, PartialEq)]
 pub enum MultiplierPolicy {
     Exact,
-    Approximate { error: ErrorConfig },
+    Approximate { mult: MultSpec },
     /// Approximate for epochs `< switch_epoch`, exact after (§IV).
-    Hybrid { error: ErrorConfig, switch_epoch: u64 },
+    Hybrid { mult: MultSpec, switch_epoch: u64 },
 }
 
 impl MultiplierPolicy {
-    /// Sigma in force at `epoch`.
-    pub fn sigma_at(&self, epoch: u64) -> f64 {
-        match *self {
-            MultiplierPolicy::Exact => 0.0,
-            MultiplierPolicy::Approximate { error } => error.sigma,
-            MultiplierPolicy::Hybrid { error, switch_epoch } => {
-                if epoch < switch_epoch {
-                    error.sigma
-                } else {
-                    0.0
-                }
+    /// The configured approximate multiplier, if any.
+    pub fn mult(&self) -> Option<&MultSpec> {
+        match self {
+            MultiplierPolicy::Exact => None,
+            MultiplierPolicy::Approximate { mult }
+            | MultiplierPolicy::Hybrid { mult, .. } => Some(mult),
+        }
+    }
+
+    /// Whether the approximate multiplier is in force at `epoch`.
+    pub fn active_at(&self, epoch: u64) -> bool {
+        match self {
+            MultiplierPolicy::Exact => false,
+            MultiplierPolicy::Approximate { mult } => !mult.is_exact(),
+            MultiplierPolicy::Hybrid { mult, switch_epoch } => {
+                epoch < *switch_epoch && !mult.is_exact()
             }
+        }
+    }
+
+    /// Gaussian sigma in force at `epoch` (0 for exact phases and for
+    /// bit-accurate designs, whose error is operand-dependent).
+    pub fn sigma_at(&self, epoch: u64) -> f64 {
+        if self.active_at(epoch) {
+            self.mult().map(|m| m.sigma()).unwrap_or(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// The multiplier spec in force at `epoch`.
+    pub fn spec_at(&self, epoch: u64) -> MultSpec {
+        if self.active_at(epoch) {
+            self.mult().cloned().unwrap_or(MultSpec::Exact)
+        } else {
+            MultSpec::Exact
         }
     }
 
     /// Fraction of epochs run approximately (Table III's utilization).
     pub fn utilization(&self, total_epochs: u64) -> f64 {
-        match *self {
+        match self {
             MultiplierPolicy::Exact => 0.0,
             MultiplierPolicy::Approximate { .. } => 1.0,
             MultiplierPolicy::Hybrid { switch_epoch, .. } => {
-                (switch_epoch.min(total_epochs)) as f64 / total_epochs.max(1) as f64
+                (*switch_epoch).min(total_epochs) as f64 / total_epochs.max(1) as f64
             }
         }
     }
@@ -96,8 +149,10 @@ impl MultiplierPolicy {
 /// A full training-run configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    /// Model preset name (must exist in the manifest).
+    /// Model preset name (must exist in the manifest / native table).
     pub preset: String,
+    /// Execution backend for the training session.
+    pub backend: ExecBackend,
     pub epochs: u64,
     pub train_examples: usize,
     pub test_examples: usize,
@@ -126,6 +181,7 @@ impl ExperimentConfig {
     pub fn preset_small() -> Self {
         ExperimentConfig {
             preset: "small".into(),
+            backend: ExecBackend::Pjrt,
             epochs: 12,
             train_examples: 4096,
             test_examples: 1024,
@@ -146,6 +202,7 @@ impl ExperimentConfig {
     pub fn preset_tiny() -> Self {
         ExperimentConfig {
             preset: "tiny".into(),
+            backend: ExecBackend::Pjrt,
             epochs: 10,
             train_examples: 1024,
             test_examples: 512,
@@ -169,8 +226,8 @@ impl ExperimentConfig {
         if self.train_examples == 0 || self.test_examples == 0 {
             bail!("train/test example counts must be > 0");
         }
-        if let MultiplierPolicy::Hybrid { switch_epoch, .. } = self.policy {
-            if switch_epoch > self.epochs {
+        if let MultiplierPolicy::Hybrid { switch_epoch, .. } = &self.policy {
+            if *switch_epoch > self.epochs {
                 bail!(
                     "switch_epoch {} exceeds total epochs {}",
                     switch_epoch,
@@ -181,6 +238,17 @@ impl ExperimentConfig {
         let sigma = self.policy.sigma_at(0).max(self.policy.sigma_at(self.epochs));
         if !(0.0..1.0).contains(&sigma) {
             bail!("sigma {sigma} out of sane range [0, 1)");
+        }
+        if self.backend == ExecBackend::Pjrt {
+            if let Some(mult) = self.policy.mult() {
+                if mult.surrogate_sigma().is_none() {
+                    bail!(
+                        "multiplier {:?} is bit-accurate; the PJRT backend can only \
+                         express gaussian:<sigma> — use the native backend",
+                        mult.canonical()
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -197,6 +265,9 @@ impl ExperimentConfig {
         let mut cfg = Self::preset_small();
         if let Some(p) = v.opt("preset") {
             cfg.preset = p.as_str()?.to_string();
+        }
+        if let Some(b) = v.opt("backend") {
+            cfg.backend = ExecBackend::parse(b.as_str()?)?;
         }
         if let Some(e) = v.opt("epochs") {
             cfg.epochs = e.as_i64()? as u64;
@@ -244,13 +315,19 @@ impl ExperimentConfig {
         }
         if let Some(p) = v.opt("policy") {
             let kind = p.get("kind")?.as_str()?;
+            // `mult` names a full spec; a bare `sigma` number keeps the
+            // pre-backend-split configs loading (gaussian surrogate).
+            let mult = |p: &Value| -> Result<MultSpec> {
+                match p.opt("mult") {
+                    Some(m) => MultSpec::parse(m.as_str()?),
+                    None => Ok(MultSpec::gaussian(p.get("sigma")?.as_f64()?)),
+                }
+            };
             cfg.policy = match kind {
                 "exact" => MultiplierPolicy::Exact,
-                "approx" => MultiplierPolicy::Approximate {
-                    error: ErrorConfig::from_sigma(p.get("sigma")?.as_f64()?),
-                },
+                "approx" => MultiplierPolicy::Approximate { mult: mult(p)? },
                 "hybrid" => MultiplierPolicy::Hybrid {
-                    error: ErrorConfig::from_sigma(p.get("sigma")?.as_f64()?),
+                    mult: mult(p)?,
                     switch_epoch: p.get("switch_epoch")?.as_i64()? as u64,
                 },
                 other => bail!("unknown policy kind {other:?}"),
@@ -279,13 +356,28 @@ mod tests {
 
     #[test]
     fn policy_sigma_switching() {
-        let e = ErrorConfig::from_sigma(0.045);
-        let h = MultiplierPolicy::Hybrid { error: e, switch_epoch: 5 };
+        let h = MultiplierPolicy::Hybrid {
+            mult: MultSpec::gaussian(0.045),
+            switch_epoch: 5,
+        };
         assert_eq!(h.sigma_at(0), 0.045);
         assert_eq!(h.sigma_at(4), 0.045);
         assert_eq!(h.sigma_at(5), 0.0);
+        assert!(h.active_at(4) && !h.active_at(5));
         assert_eq!(h.utilization(10), 0.5);
         assert_eq!(MultiplierPolicy::Exact.utilization(10), 0.0);
+        assert_eq!(h.spec_at(0), MultSpec::gaussian(0.045));
+        assert_eq!(h.spec_at(5), MultSpec::Exact);
+    }
+
+    #[test]
+    fn policy_with_design_spec() {
+        let p = MultiplierPolicy::Approximate {
+            mult: MultSpec::parse("drum6").unwrap(),
+        };
+        assert!(p.active_at(0));
+        assert_eq!(p.sigma_at(0), 0.0); // operand-dependent, not a sigma
+        assert_eq!(p.spec_at(0).canonical(), "drum6");
     }
 
     #[test]
@@ -302,14 +394,29 @@ mod tests {
         let cfg = ExperimentConfig::from_json(&v).unwrap();
         assert_eq!(cfg.preset, "tiny");
         assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.backend, ExecBackend::Pjrt);
         assert_eq!(cfg.sampling, ErrorSampling::PerStep);
         match cfg.policy {
-            MultiplierPolicy::Hybrid { error, switch_epoch } => {
-                assert!((error.sigma - 0.12).abs() < 1e-12);
+            MultiplierPolicy::Hybrid { mult, switch_epoch } => {
+                assert!((mult.sigma() - 0.12).abs() < 1e-12);
                 assert_eq!(switch_epoch, 2);
             }
             _ => panic!("wrong policy"),
         }
+    }
+
+    #[test]
+    fn json_config_with_mult_spec_and_backend() {
+        let v = Value::parse(
+            r#"{
+                "preset": "tiny", "backend": "native", "epochs": 2,
+                "policy": {"kind": "approx", "mult": "lut8:drum6"}
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.backend, ExecBackend::Native);
+        assert_eq!(cfg.policy.mult().unwrap().canonical(), "lut8:drum6");
     }
 
     #[test]
@@ -319,9 +426,25 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = ExperimentConfig::preset_tiny();
         cfg.policy = MultiplierPolicy::Hybrid {
-            error: ErrorConfig::from_sigma(0.1),
+            mult: MultSpec::gaussian(0.1),
             switch_epoch: 99,
         };
         assert!(cfg.validate().is_err());
+        // Bit-accurate design on the PJRT backend: rejected with a hint.
+        let mut cfg = ExperimentConfig::preset_tiny();
+        cfg.policy = MultiplierPolicy::Approximate {
+            mult: MultSpec::parse("drum6").unwrap(),
+        };
+        assert!(cfg.validate().is_err());
+        cfg.backend = ExecBackend::Native;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!(ExecBackend::parse("native").unwrap(), ExecBackend::Native);
+        assert_eq!(ExecBackend::parse("pjrt").unwrap(), ExecBackend::Pjrt);
+        assert!(ExecBackend::parse("gpu").is_err());
+        assert_eq!(ExecBackend::Native.name(), "native");
     }
 }

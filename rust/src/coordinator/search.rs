@@ -10,20 +10,25 @@
 //!    still reaches the target (baseline − tolerance) — i.e. the
 //!    maximal approximate-multiplier utilization, the paper's Table III
 //!    objective.
+//!
+//! The approximate multiplier is any [`MultSpec`] — the Gaussian
+//! surrogate on either backend, or a bit-accurate design (`drum6`,
+//! `lut12:drum6`, ...) on the native backend, which is how the search
+//! produces Table-III rows for *real* hardware designs.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Store;
-use crate::config::{ExperimentConfig, MultiplierPolicy};
-use crate::error_model::ErrorConfig;
+use crate::config::{ExecBackend, ExperimentConfig, MultiplierPolicy};
+use crate::mult::MultSpec;
 use crate::runtime::Engine;
 
 use super::trainer::{TrainOutcome, Trainer};
 
-/// Result for one error configuration (a Table III row).
+/// Result for one multiplier configuration (a Table III row).
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
-    pub config: ErrorConfig,
+    pub config: MultSpec,
     /// Epochs trained with the approximate multiplier.
     pub approx_epochs: u64,
     /// Exact-multiplier tail length.
@@ -40,15 +45,30 @@ pub struct SearchOutcome {
 
 /// The search driver.
 pub struct HybridSearch<'e> {
-    engine: &'e Engine,
+    engine: Option<&'e Engine>,
     base: ExperimentConfig,
     /// Accuracy tolerance below baseline (paper: 0.0002 = 0.02%).
     pub tolerance: f64,
 }
 
 impl<'e> HybridSearch<'e> {
+    /// Search over an engine-backed config (PJRT unless `base.backend`
+    /// says otherwise).
     pub fn new(engine: &'e Engine, base: ExperimentConfig) -> Self {
-        HybridSearch { engine, base, tolerance: 0.0002 }
+        HybridSearch { engine: Some(engine), base, tolerance: 0.0002 }
+    }
+
+    /// Engine-free search on the native backend.
+    pub fn native(mut base: ExperimentConfig) -> HybridSearch<'static> {
+        base.backend = ExecBackend::Native;
+        HybridSearch { engine: None, base, tolerance: 0.0002 }
+    }
+
+    fn trainer(&self, cfg: ExperimentConfig) -> Result<Trainer> {
+        match self.engine {
+            Some(engine) => Trainer::new(engine, cfg),
+            None => Trainer::native(cfg),
+        }
     }
 
     /// Train the exact baseline and return its final accuracy.
@@ -56,51 +76,57 @@ impl<'e> HybridSearch<'e> {
         let mut cfg = self.base.clone();
         cfg.tag = format!("{}-baseline", self.base.tag);
         cfg.policy = MultiplierPolicy::Exact;
-        Trainer::new(self.engine, cfg)?.run()
+        self.trainer(cfg)?.run()
     }
 
     /// Phase 1: full approximate run with per-epoch checkpoints.
     /// Returns (outcome, checkpoint tag).
-    pub fn approx_run(&self, config: ErrorConfig) -> Result<(TrainOutcome, String)> {
+    pub fn approx_run(&self, config: &MultSpec) -> Result<(TrainOutcome, String)> {
         anyhow::ensure!(!self.base.out_dir.is_empty(), "search needs an out_dir");
-        let tag = format!("{}-approx-s{:.4}", self.base.tag, config.sigma);
+        let tag = format!("{}-approx-{}", self.base.tag, config.file_tag());
         let mut cfg = self.base.clone();
         cfg.tag = tag.clone();
-        cfg.policy = MultiplierPolicy::Approximate { error: config };
+        cfg.policy = MultiplierPolicy::Approximate { mult: config.clone() };
         cfg.checkpoint_every = 1;
-        let outcome = Trainer::new(self.engine, cfg)?.run()?;
+        let outcome = self.trainer(cfg)?.run()?;
         Ok((outcome, tag))
     }
 
     /// Phase 2 evaluation of one candidate: resume from the epoch-`k`
     /// approximate checkpoint and finish exactly.
-    fn try_switch_epoch(
-        &self,
-        config: ErrorConfig,
-        tag: &str,
-        k: u64,
-    ) -> Result<f64> {
+    fn try_switch_epoch(&self, config: &MultSpec, tag: &str, k: u64) -> Result<f64> {
         let store = Store::new(&self.base.out_dir)?;
         let mut cfg = self.base.clone();
         cfg.tag = format!("{}-tail{k}", tag);
-        cfg.policy = MultiplierPolicy::Hybrid { error: config, switch_epoch: k };
+        cfg.policy =
+            MultiplierPolicy::Hybrid { mult: config.clone(), switch_epoch: k };
         cfg.checkpoint_every = 0;
-        let mut trainer = Trainer::new(self.engine, cfg)?;
-        let (_, tensors) = store
+        let mut trainer = self.trainer(cfg)?;
+        let (meta, tensors) = store
             .load(tag, k)
             .with_context(|| format!("loading approx checkpoint epoch {k}"))?;
+        // The checkpoint must come from the same multiplier we are
+        // searching: a resumed tail under a different design would
+        // silently produce a Table-III row for nothing in particular.
+        if meta.mult != config.canonical() {
+            bail!(
+                "checkpoint {tag} epoch {k} was trained with {:?}, search is for {:?}",
+                meta.mult,
+                config.canonical()
+            );
+        }
         trainer.restore_state(tensors.into_iter().map(|(_, t)| t).collect())?;
         let outcome = trainer.run_from(k, None)?;
         Ok(outcome.final_accuracy)
     }
 
-    /// Full Figure-4 search for one error configuration.
+    /// Full Figure-4 search for one multiplier configuration.
     ///
     /// `baseline_acc` is the exact run's final accuracy; `approx_tag`
     /// and `approx_final` come from [`HybridSearch::approx_run`].
     pub fn search(
         &self,
-        config: ErrorConfig,
+        config: &MultSpec,
         baseline_acc: f64,
         approx_tag: &str,
         approx_final: f64,
@@ -112,7 +138,7 @@ impl<'e> HybridSearch<'e> {
         // Fully-approximate already reaches target (paper row 1).
         if approx_final >= target {
             return Ok(SearchOutcome {
-                config,
+                config: config.clone(),
                 approx_epochs: total,
                 exact_epochs: 0,
                 utilization: 1.0,
@@ -129,15 +155,15 @@ impl<'e> HybridSearch<'e> {
         let mut lo = 0u64;
         let mut hi = total;
         let mut best_acc = baseline_acc;
-        let mut acc_at = std::collections::BTreeMap::new();
         while hi - lo > 1 {
             let mid = (lo + hi) / 2;
             let acc = self.try_switch_epoch(config, approx_tag, mid)?;
             evaluations += 1;
-            acc_at.insert(mid, acc);
             log::info!(
-                "search sigma={:.3}: switch@{mid} -> acc {:.4} (target {:.4})",
-                config.sigma, acc, target
+                "search {}: switch@{mid} -> acc {:.4} (target {:.4})",
+                config.canonical(),
+                acc,
+                target
             );
             if acc >= target {
                 lo = mid;
@@ -147,7 +173,7 @@ impl<'e> HybridSearch<'e> {
             }
         }
         Ok(SearchOutcome {
-            config,
+            config: config.clone(),
             approx_epochs: lo,
             exact_epochs: total - lo,
             utilization: lo as f64 / total as f64,

@@ -1,19 +1,21 @@
-//! Table II sweep: train once per error configuration, compare final
-//! accuracy to the exact baseline.
+//! Table II sweep: train once per multiplier configuration, compare
+//! final accuracy to the exact baseline.
 //!
 //! Sweep points are independent training runs, so they execute on a
-//! worker pool ([`crate::parallel`]) sharing one [`Engine`] — the
-//! engine's per-entry compile slots mean the executables are compiled
-//! once and reused by every point. Rows, the baseline diff and the
-//! progress callback all keep the original case order regardless of
-//! completion order.
+//! worker pool ([`crate::parallel`]). PJRT points share one [`Engine`]
+//! — the engine's per-entry compile slots mean the executables are
+//! compiled once and reused by every point; native points are
+//! self-contained. Cases are full [`MultSpec`]s, so a sweep can mix the
+//! paper's Gaussian rows with bit-accurate designs. Rows, the baseline
+//! diff and the progress callback all keep the original case order
+//! regardless of completion order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Result};
 
-use crate::config::{ExperimentConfig, MultiplierPolicy};
-use crate::error_model::ErrorConfig;
+use crate::config::{ExecBackend, ExperimentConfig, MultiplierPolicy};
+use crate::mult::MultSpec;
 use crate::parallel;
 use crate::runtime::Engine;
 
@@ -23,7 +25,7 @@ use super::trainer::Trainer;
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub test_id: u32,
-    pub config: ErrorConfig,
+    pub config: MultSpec,
     pub accuracy: f64,
     /// accuracy - baseline accuracy (the paper's "Diff. From Exact").
     pub diff_from_exact: f64,
@@ -35,7 +37,7 @@ pub struct SweepRow {
 
 /// The sweep runner.
 pub struct Sweep<'e> {
-    engine: &'e Engine,
+    engine: Option<&'e Engine>,
     base: ExperimentConfig,
     /// Worker threads for independent sweep points (default:
     /// [`parallel::max_threads`]; set 1 for strictly serial execution).
@@ -46,19 +48,27 @@ impl<'e> Sweep<'e> {
     /// `base` supplies everything except the multiplier policy, which
     /// the sweep overrides per row.
     pub fn new(engine: &'e Engine, base: ExperimentConfig) -> Self {
-        Sweep { engine, base, parallelism: parallel::max_threads() }
+        Sweep { engine: Some(engine), base, parallelism: parallel::max_threads() }
     }
 
-    /// Run the given error configurations (id, config, paper accuracy)
-    /// on up to [`Sweep::parallelism`] workers. The exact baseline must
-    /// be the first row (id 0 / sigma 0), as in the paper's table; the
-    /// progress callback fires in case order once results are in (a
-    /// parallel sweep has no meaningful mid-flight row to report).
-    /// A failing point cancels the not-yet-started points instead of
-    /// burning hours training the rest.
+    /// Engine-free sweep on the native backend. Each point already
+    /// parallelizes its GEMMs internally, so points run serially by
+    /// default — set [`Sweep::parallelism`] to oversubscribe.
+    pub fn native(mut base: ExperimentConfig) -> Sweep<'static> {
+        base.backend = ExecBackend::Native;
+        Sweep { engine: None, base, parallelism: 1 }
+    }
+
+    /// Run the given multiplier configurations (id, spec, paper
+    /// accuracy percent) on up to [`Sweep::parallelism`] workers. The
+    /// exact baseline must be the first row (id 0 / `exact`), as in the
+    /// paper's table; the progress callback fires in case order once
+    /// results are in (a parallel sweep has no meaningful mid-flight
+    /// row to report). A failing point cancels the not-yet-started
+    /// points instead of burning hours training the rest.
     pub fn run(
         &self,
-        cases: &[(u32, ErrorConfig, f64)],
+        cases: &[(u32, MultSpec, f64)],
         mut progress: impl FnMut(u32, &SweepRow),
     ) -> Result<Vec<SweepRow>> {
         // Index of the temporally-first failing point (usize::MAX =
@@ -66,7 +76,7 @@ impl<'e> Sweep<'e> {
         // string marker — is what the error reporting surfaces.
         let first_failure = AtomicUsize::new(usize::MAX);
         let outcomes = parallel::par_map(cases, self.parallelism, |idx, case| {
-            let (id, config, _) = *case;
+            let (id, config, _) = case;
             if first_failure.load(Ordering::Relaxed) != usize::MAX {
                 bail!("sweep case {id} cancelled after an earlier failure");
             }
@@ -76,9 +86,13 @@ impl<'e> Sweep<'e> {
                 cfg.policy = if config.is_exact() {
                     MultiplierPolicy::Exact
                 } else {
-                    MultiplierPolicy::Approximate { error: config }
+                    MultiplierPolicy::Approximate { mult: config.clone() }
                 };
-                Trainer::new(self.engine, cfg)?.run()
+                let mut trainer = match self.engine {
+                    Some(engine) => Trainer::new(engine, cfg)?,
+                    None => Trainer::native(cfg)?,
+                };
+                trainer.run()
             })();
             if result.is_err() {
                 let _ = first_failure.compare_exchange(
@@ -100,20 +114,20 @@ impl<'e> Sweep<'e> {
         }
         let mut rows: Vec<SweepRow> = Vec::with_capacity(cases.len());
         let mut baseline: Option<f64> = None;
-        for (&(id, config, paper_acc), outcome) in cases.iter().zip(outcomes) {
+        for ((id, config, paper_acc), outcome) in cases.iter().zip(outcomes) {
             let outcome = outcome?;
             let accuracy = outcome.final_accuracy;
             let base = *baseline.get_or_insert(accuracy);
             let row = SweepRow {
-                test_id: id,
-                config,
+                test_id: *id,
+                config: config.clone(),
                 accuracy,
                 diff_from_exact: accuracy - base,
-                paper_accuracy: (paper_acc > 0.0).then_some(paper_acc / 100.0),
+                paper_accuracy: (*paper_acc > 0.0).then_some(*paper_acc / 100.0),
                 epochs_run: outcome.epochs_run,
                 wall_secs: outcome.wall_secs,
             };
-            progress(id, &row);
+            progress(*id, &row);
             rows.push(row);
         }
         Ok(rows)
@@ -125,11 +139,11 @@ impl<'e> Sweep<'e> {
         let Some(base) = rows.first() else { return false };
         let small_ok = rows
             .iter()
-            .filter(|r| r.config.sigma > 0.0 && r.config.sigma <= 0.06)
+            .filter(|r| r.config.sigma() > 0.0 && r.config.sigma() <= 0.06)
             .all(|r| r.accuracy >= base.accuracy - 0.05);
         let collapse = rows
             .iter()
-            .filter(|r| r.config.sigma >= 0.48)
+            .filter(|r| r.config.sigma() >= 0.48)
             .all(|r| r.accuracy < base.accuracy - 0.10);
         small_ok && collapse && rows.len() >= 3
     }

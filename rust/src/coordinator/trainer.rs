@@ -1,22 +1,31 @@
 //! The training orchestrator (paper Figure 3).
 //!
-//! Owns: data pipeline, the PJRT train session, the per-epoch loop with
-//! multiplier policy + error sampling + lr schedule, exact-multiplier
-//! evaluation, checkpointing and early stopping. Everything epoch-level
-//! is decided *here*; the compiled graph only sees scalar knobs.
+//! Owns: data pipeline, the train session (PJRT- or native-backed), the
+//! per-epoch loop with multiplier policy + error sampling + lr
+//! schedule, exact-multiplier evaluation, checkpointing and early
+//! stopping. Everything epoch-level is decided *here*; the backend only
+//! sees scalar knobs.
+//!
+//! Per-step sub-seeds (error matrices, dropout) are derived from the
+//! run seed by Threefry counter splitting ([`rng::counter_split`]):
+//! each consumer gets its own domain-tagged, statistically independent
+//! stream, replacing the old `base.wrapping_add(step)` arithmetic
+//! whose streams were shifts of each other and collided structurally.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::{Meta, Store};
-use crate::config::{ErrorSampling, ExperimentConfig};
+use crate::config::{ErrorSampling, ExecBackend, ExperimentConfig};
 use crate::data::augment::Augment;
 use crate::data::batcher::{Batcher, EvalBatcher};
 use crate::data::{Dataset, SyntheticCifar};
 use crate::metrics::{EpochRecord, History, Mean};
+use crate::mult::MultSpec;
+use crate::rng::{counter_split, STREAM_DROP, STREAM_ERR, STREAM_INIT};
 use crate::runtime::session::StepInputs;
-use crate::runtime::{Engine, TrainSession};
+use crate::runtime::{BackendModel, Engine, NativeBackend, TrainSession};
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
@@ -31,76 +40,113 @@ pub struct TrainOutcome {
 /// Callback invoked after every epoch (progress logging, live plots).
 pub type EpochHook<'h> = dyn FnMut(&EpochRecord) + 'h;
 
+/// Build the session the config asks for. The engine is only needed
+/// for the PJRT backend; the native backend is self-contained.
+fn make_session(engine: Option<&Engine>, cfg: &ExperimentConfig) -> Result<TrainSession> {
+    let seed_init = counter_split(cfg.seed, STREAM_INIT, 0);
+    match cfg.backend {
+        ExecBackend::Native => {
+            let spec = cfg.policy.mult().cloned().unwrap_or(MultSpec::Exact);
+            let backend = NativeBackend::new(&cfg.preset, spec)?;
+            TrainSession::with_backend(Box::new(backend), seed_init)
+        }
+        ExecBackend::Pjrt => {
+            let engine = engine.context(
+                "the PJRT backend needs an Engine (compiled artifacts); \
+                 set backend: native or construct the trainer with one",
+            )?;
+            TrainSession::new(engine, &cfg.preset, seed_init)
+        }
+    }
+}
+
 /// The training orchestrator.
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+pub struct Trainer {
     cfg: ExperimentConfig,
+    model: BackendModel,
     train_ds: Dataset,
     test_ds: Dataset,
     session: TrainSession,
     store: Option<Store>,
-    /// Derived sub-seeds (stable functions of cfg.seed).
-    seed_init: u32,
-    seed_err_base: u32,
 }
 
-impl<'e> Trainer<'e> {
+impl Trainer {
     /// Build a trainer with synthetic data sized for the preset
     /// (real CIFAR-10 can be supplied via [`Trainer::with_data`]).
-    pub fn new(engine: &'e Engine, cfg: ExperimentConfig) -> Result<Self> {
-        cfg.validate()?;
-        let model = engine.manifest().model(&cfg.preset)?;
-        let mut gen = SyntheticCifar::for_input(
-            model.input_hw,
-            model.in_ch,
-            model.num_classes,
-            cfg.seed ^ 0xDA7A,
-        );
-        gen.noise = cfg.data_noise as f32;
-        // Test size rounded up to a multiple of the eval batch so the
-        // static-shape eval graph never sees padding.
-        let test_n = cfg.test_examples.div_ceil(model.eval_batch) * model.eval_batch;
-        let mut train_ds = gen.generate(cfg.train_examples + test_n);
-        train_ds.normalize();
-        let (train_ds, test_ds) = train_ds.split_tail(test_n)?;
-        Self::with_data(engine, cfg, train_ds, test_ds)
+    /// Respects `cfg.backend`; the engine is untouched for native runs.
+    pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Self> {
+        Self::build(Some(engine), cfg, None)
+    }
+
+    /// Engine-free constructor: forces the native backend.
+    pub fn native(mut cfg: ExperimentConfig) -> Result<Self> {
+        cfg.backend = ExecBackend::Native;
+        Self::build(None, cfg, None)
     }
 
     /// Build a trainer over caller-provided datasets.
     pub fn with_data(
-        engine: &'e Engine,
+        engine: &Engine,
         cfg: ExperimentConfig,
         train_ds: Dataset,
         test_ds: Dataset,
     ) -> Result<Self> {
+        Self::build(Some(engine), cfg, Some((train_ds, test_ds)))
+    }
+
+    /// Engine-free [`Trainer::with_data`] on the native backend.
+    pub fn native_with_data(
+        mut cfg: ExperimentConfig,
+        train_ds: Dataset,
+        test_ds: Dataset,
+    ) -> Result<Self> {
+        cfg.backend = ExecBackend::Native;
+        Self::build(None, cfg, Some((train_ds, test_ds)))
+    }
+
+    fn build(
+        engine: Option<&Engine>,
+        cfg: ExperimentConfig,
+        data: Option<(Dataset, Dataset)>,
+    ) -> Result<Self> {
         cfg.validate()?;
-        train_ds.check()?;
-        test_ds.check()?;
-        let model = engine.manifest().model(&cfg.preset)?;
-        anyhow::ensure!(
-            test_ds.len() % model.eval_batch == 0,
-            "test set ({}) must be a multiple of eval batch ({})",
-            test_ds.len(),
-            model.eval_batch
-        );
-        let seed_init = (cfg.seed as u32) ^ ((cfg.seed >> 32) as u32);
-        let session = TrainSession::new(engine, &cfg.preset, seed_init)
-            .context("creating train session")?;
+        let session = make_session(engine, &cfg).context("creating train session")?;
+        let model = session.model().clone();
+        let (train_ds, test_ds) = match data {
+            Some((train_ds, test_ds)) => {
+                train_ds.check()?;
+                test_ds.check()?;
+                anyhow::ensure!(
+                    test_ds.len() % model.eval_batch == 0,
+                    "test set ({}) must be a multiple of eval batch ({})",
+                    test_ds.len(),
+                    model.eval_batch
+                );
+                (train_ds, test_ds)
+            }
+            None => {
+                let mut gen = SyntheticCifar::for_input(
+                    model.input_hw,
+                    model.in_ch,
+                    model.num_classes,
+                    cfg.seed ^ 0xDA7A,
+                );
+                gen.noise = cfg.data_noise as f32;
+                // Test size rounded up to a multiple of the eval batch so
+                // the static-shape eval graph never sees padding.
+                let test_n =
+                    cfg.test_examples.div_ceil(model.eval_batch) * model.eval_batch;
+                let mut train_ds = gen.generate(cfg.train_examples + test_n);
+                train_ds.normalize();
+                train_ds.split_tail(test_n)?
+            }
+        };
         let store = if cfg.out_dir.is_empty() {
             None
         } else {
             Some(Store::new(&cfg.out_dir)?)
         };
-        Ok(Trainer {
-            engine,
-            cfg,
-            train_ds,
-            test_ds,
-            session,
-            store,
-            seed_init,
-            seed_err_base: seed_init.wrapping_mul(0x9E37_79B9) ^ 0xE44E,
-        })
+        Ok(Trainer { cfg, model, train_ds, test_ds, session, store })
     }
 
     pub fn config(&self) -> &ExperimentConfig {
@@ -150,6 +196,7 @@ impl<'e> Trainer<'e> {
 
         for epoch in resume_from..self.cfg.epochs {
             let epoch_started = Instant::now();
+            let approx = self.cfg.policy.active_at(epoch);
             let sigma = self.cfg.policy.sigma_at(epoch) as f32;
             let lr = self.cfg.lr.at_epoch(epoch) as f32;
             let mut loss_mean = Mean::default();
@@ -162,21 +209,20 @@ impl<'e> Trainer<'e> {
                 let global_step = epoch * steps_per_epoch + step_in_epoch;
                 let seed_err = match self.cfg.sampling {
                     // Fixed per run: the paper's Figure-3 procedure.
-                    ErrorSampling::FixedPerRun => self.seed_err_base,
+                    ErrorSampling::FixedPerRun => {
+                        counter_split(self.cfg.seed, STREAM_ERR, 0)
+                    }
                     // Fresh field each step.
                     ErrorSampling::PerStep => {
-                        self.seed_err_base.wrapping_add(global_step as u32)
+                        counter_split(self.cfg.seed, STREAM_ERR, global_step)
                     }
                 };
+                let seed_drop =
+                    counter_split(self.cfg.seed, STREAM_DROP, global_step);
                 let stats = self.session.step(
                     x,
                     y,
-                    StepInputs {
-                        seed_err,
-                        seed_drop: (self.seed_init ^ 0xD409).wrapping_add(global_step as u32),
-                        sigma,
-                        lr,
-                    },
+                    StepInputs { seed_err, seed_drop, sigma, lr, approx },
                 )?;
                 loss_mean.add(stats.loss as f64);
                 acc_mean.add(stats.accuracy as f64);
@@ -195,9 +241,9 @@ impl<'e> Trainer<'e> {
                 wall_secs: epoch_started.elapsed().as_secs_f64(),
             };
             log::info!(
-                "[{}] epoch {:>3}: loss {:.4} train_acc {:.3} test_acc {:.4} (sigma {:.3}, lr {:.4})",
+                "[{}] epoch {:>3}: loss {:.4} train_acc {:.3} test_acc {:.4} (mult {}, lr {:.4})",
                 self.cfg.tag, epoch, record.train_loss, record.train_acc,
-                record.test_acc, record.sigma, record.lr
+                record.test_acc, self.cfg.policy.spec_at(epoch).canonical(), record.lr
             );
             if let Some(h) = hook.as_deref_mut() {
                 h(&record);
@@ -242,15 +288,9 @@ impl<'e> Trainer<'e> {
     }
 
     fn save_checkpoint(&self, store: &Store, epoch: u64, sigma: f64) -> Result<()> {
-        let model = self.engine.manifest().model(&self.cfg.preset)?;
-        let names: Vec<String> = model
-            .params
-            .iter()
-            .map(|p| format!("param:{}", p.name))
-            .chain(model.state.iter().map(|s| format!("state:{}", s.name)))
-            .chain(model.params.iter().map(|p| format!("opt:{}", p.name)))
-            .collect();
-        let named: Vec<(String, &crate::tensor::Tensor)> = names
+        let named: Vec<(String, &crate::tensor::Tensor)> = self
+            .model
+            .tensor_names()
             .into_iter()
             .zip(self.session.state_tensors())
             .collect();
@@ -259,6 +299,7 @@ impl<'e> Trainer<'e> {
             epoch: epoch + 1, // checkpoint taken *after* this many epochs
             step: self.session.steps_run(),
             sigma,
+            mult: self.cfg.policy.spec_at(epoch).canonical(),
             tag: self.cfg.tag.clone(),
         };
         store.save(&meta, &named)?;

@@ -57,6 +57,15 @@ impl ErrorConfig {
     }
 }
 
+/// [`paper_table2_configs`] as multiplier specs (id, spec, paper
+/// accuracy %) — the shape the sweep and hybrid search consume.
+pub fn paper_table2_specs() -> Vec<(u32, crate::mult::MultSpec, f64)> {
+    paper_table2_configs()
+        .into_iter()
+        .map(|(id, c, acc)| (id, crate::mult::MultSpec::gaussian(c.sigma), acc))
+        .collect()
+}
+
 /// The paper's Table II error configurations (id, config, paper accuracy %).
 pub fn paper_table2_configs() -> Vec<(u32, ErrorConfig, f64)> {
     [

@@ -5,30 +5,37 @@
 //! approximate-multiplier error, plus the paper's hybrid
 //! approximate-then-exact training methodology.
 //!
-//! ## Architecture (three layers, Python never on the hot path)
+//! ## Architecture
 //!
-//! * **L1 (Pallas, build time)** — `python/compile/kernels/`: the
-//!   approximate-multiplier error kernels (weight-level and per-product).
-//! * **L2 (JAX, build time)** — `python/compile/model.py`: VGG-style CNN
-//!   fwd/bwd + SGD, AOT-lowered to HLO text artifacts by `make artifacts`.
-//! * **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]) and
-//!   owns everything else: the training orchestrator and hybrid switch
-//!   controller ([`coordinator`]), bit-accurate approximate-multiplier
-//!   simulations ([`mult`]), the hardware cost model ([`costmodel`]),
-//!   data pipeline ([`data`]), checkpointing ([`checkpoint`]), metrics
-//!   ([`metrics`]) and reporting ([`report`]).
+//! Training executes on a pluggable backend ([`runtime::Backend`]):
 //!
-//! ## Quickstart
+//! * **Native** ([`runtime::NativeBackend`]) — pure-Rust CNN
+//!   forward/backward in which every GEMM routes through the
+//!   bit-accurate multiplier engine ([`mult::approx_matmul`]): real
+//!   designs (`drum6`, `mitchell`, `lut12:drum6`, ...) train real
+//!   networks on stock hardware, no artifacts needed.
+//! * **PJRT** ([`runtime::PjrtBackend`]) — AOT-lowered XLA graphs from
+//!   the Python build layer (`python/compile/`): L1 Pallas error
+//!   kernels, L2 JAX model, lowered by `make artifacts`.
+//!
+//! Around the backends: the training orchestrator and hybrid switch
+//! controller ([`coordinator`]), bit-accurate approximate-multiplier
+//! simulations ([`mult`]), the hardware cost model ([`costmodel`]),
+//! data pipeline ([`data`]), checkpointing ([`checkpoint`]), metrics
+//! ([`metrics`]) and reporting ([`report`]).
+//!
+//! ## Quickstart (native backend — runs anywhere)
 //!
 //! ```no_run
-//! use approxmul::config::ExperimentConfig;
+//! use approxmul::config::{ExperimentConfig, MultiplierPolicy};
 //! use approxmul::coordinator::Trainer;
-//! use approxmul::runtime::Engine;
+//! use approxmul::mult::MultSpec;
 //!
-//! let engine = Engine::from_artifacts("artifacts")?;
-//! let cfg = ExperimentConfig::preset_small();
-//! let mut trainer = Trainer::new(&engine, cfg)?;
-//! let result = trainer.run()?;
+//! let mut cfg = ExperimentConfig::preset_tiny();
+//! cfg.policy = MultiplierPolicy::Approximate {
+//!     mult: MultSpec::parse("drum6")?,
+//! };
+//! let result = Trainer::native(cfg)?.run()?;
 //! println!("final accuracy {:.2}%", 100.0 * result.best_accuracy);
 //! # anyhow::Result::<()>::Ok(())
 //! ```

@@ -11,12 +11,14 @@ use std::io::Write as _;
 use anyhow::{bail, Context, Result};
 
 use approxmul::cli::{self, Args, FlagSpec};
-use approxmul::config::{ErrorSampling, ExperimentConfig, LrSchedule, MultiplierPolicy};
+use approxmul::config::{
+    ErrorSampling, ExecBackend, ExperimentConfig, LrSchedule, MultiplierPolicy,
+};
 use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
 use approxmul::costmodel::{cited_designs, CostModel};
-use approxmul::error_model::{paper_table2_configs, ErrorConfig, ErrorMatrix};
+use approxmul::error_model::{paper_table2_specs, ErrorConfig, ErrorMatrix};
 use approxmul::mult::{
-    characterize, characterize_matmul_set, standard_designs, OperandDist,
+    characterize, characterize_matmul_set, standard_designs, MultSpec, OperandDist,
 };
 use approxmul::report::{ascii_histogram, diff_pct, histogram_csv, pct, Table};
 use approxmul::runtime::Engine;
@@ -89,6 +91,12 @@ fn artifacts_flag() -> FlagSpec {
 fn training_flags() -> Vec<FlagSpec> {
     vec![
         artifacts_flag(),
+        FlagSpec {
+            name: "backend",
+            help: "execution backend: native (pure Rust, no artifacts) | pjrt",
+            takes_value: true,
+            default: Some("native"),
+        },
         FlagSpec { name: "preset", help: "model preset", takes_value: true, default: Some("tiny") },
         FlagSpec { name: "epochs", help: "training epochs", takes_value: true, default: None },
         FlagSpec { name: "train-n", help: "training examples", takes_value: true, default: None },
@@ -114,6 +122,7 @@ fn training_flags() -> Vec<FlagSpec> {
 
 fn apply_training_flags(cfg: &mut ExperimentConfig, a: &Args) -> Result<()> {
     cfg.preset = a.get_or("preset", &cfg.preset);
+    cfg.backend = ExecBackend::parse(&a.get_or("backend", "native"))?;
     if let Some(e) = a.parse_u64("epochs")? {
         cfg.epochs = e;
     }
@@ -186,8 +195,14 @@ fn cmd_info(argv: &[String]) -> Result<()> {
 fn cmd_train(argv: &[String]) -> Result<()> {
     let mut specs = training_flags();
     specs.extend([
-        FlagSpec { name: "sigma", help: "error SD (0 = exact)", takes_value: true, default: Some("0.0") },
-        FlagSpec { name: "mre", help: "error MRE (overrides --sigma)", takes_value: true, default: None },
+        FlagSpec {
+            name: "mult",
+            help: "multiplier spec: exact | gaussian:<sd> | drum6 | lut12:drum6 | ...",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec { name: "sigma", help: "gaussian error SD (0 = exact)", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "mre", help: "gaussian error MRE (overrides --sigma)", takes_value: true, default: None },
         FlagSpec {
             name: "switch-epoch",
             help: "hybrid: switch to exact at this epoch",
@@ -202,24 +217,31 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     let a = cli::parse(argv, &specs)?;
     let mut cfg = base_config(&a)?;
-    let sigma = match a.parse_f64("mre")? {
-        Some(mre) => ErrorConfig::from_mre(mre).sigma,
-        None => a.parse_f64("sigma")?.unwrap_or(0.0),
-    };
-    cfg.policy = match (sigma > 0.0, a.parse_u64("switch-epoch")?) {
-        (false, _) => MultiplierPolicy::Exact,
-        (true, None) => MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(sigma) },
-        (true, Some(k)) => MultiplierPolicy::Hybrid {
-            error: ErrorConfig::from_sigma(sigma),
-            switch_epoch: k,
+    let mult = match a.get("mult") {
+        Some(spec) => MultSpec::parse(spec)?,
+        None => match a.parse_f64("mre")? {
+            Some(mre) => MultSpec::gaussian_mre(mre),
+            None => MultSpec::gaussian(a.parse_f64("sigma")?.unwrap_or(0.0)),
         },
     };
+    cfg.policy = match (mult.is_exact(), a.parse_u64("switch-epoch")?) {
+        (true, _) => MultiplierPolicy::Exact,
+        (false, None) => MultiplierPolicy::Approximate { mult },
+        (false, Some(k)) => MultiplierPolicy::Hybrid { mult, switch_epoch: k },
+    };
     cfg.validate()?;
-    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
-    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    let engine = optional_engine(&cfg, &a)?;
+    let mut trainer = match &engine {
+        Some(engine) => Trainer::new(engine, cfg.clone())?,
+        None => Trainer::native(cfg.clone())?,
+    };
     println!(
-        "training preset={} epochs={} policy={:?} sampling={}",
-        cfg.preset, cfg.epochs, cfg.policy, cfg.sampling.name()
+        "training preset={} backend={} epochs={} policy={:?} sampling={}",
+        cfg.preset,
+        cfg.backend.name(),
+        cfg.epochs,
+        cfg.policy,
+        cfg.sampling.name()
     );
     let mut hook = |r: &approxmul::metrics::EpochRecord| {
         println!(
@@ -257,8 +279,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn table2_cases(a: &Args) -> Result<Vec<(u32, ErrorConfig, f64)>> {
-    let all = paper_table2_configs();
+fn table2_cases(a: &Args) -> Result<Vec<(u32, MultSpec, f64)>> {
+    let all = paper_table2_specs();
     match a.get("cases") {
         None => Ok(all),
         Some(spec) => {
@@ -269,6 +291,17 @@ fn table2_cases(a: &Args) -> Result<Vec<(u32, ErrorConfig, f64)>> {
             Ok(all.into_iter().filter(|(id, _, _)| want.contains(id)).collect())
         }
     }
+}
+
+/// Engine for the configured backend: compiled artifacts for PJRT,
+/// nothing for native.
+fn optional_engine(cfg: &ExperimentConfig, a: &Args) -> Result<Option<Engine>> {
+    Ok(match cfg.backend {
+        ExecBackend::Pjrt => {
+            Some(Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?)
+        }
+        ExecBackend::Native => None,
+    })
 }
 
 fn cmd_table2(argv: &[String]) -> Result<()> {
@@ -288,16 +321,20 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
     }
     let a = cli::parse(argv, &specs)?;
     let cfg = base_config(&a)?;
-    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
+    let engine = optional_engine(&cfg, &a)?;
     let cases = table2_cases(&a)?;
     println!(
-        "Table II sweep: preset={} epochs={} train={} cases={}",
+        "Table II sweep: preset={} backend={} epochs={} train={} cases={}",
         cfg.preset,
+        cfg.backend.name(),
         cfg.epochs,
         cfg.train_examples,
         cases.len()
     );
-    let sweep = Sweep::new(&engine, cfg);
+    let sweep = match &engine {
+        Some(engine) => Sweep::new(engine, cfg),
+        None => Sweep::native(cfg),
+    };
     let rows = sweep.run(&cases, |id, row| {
         println!("  case {id}: {} -> acc {}", row.config.label(), pct(row.accuracy));
         std::io::stdout().flush().ok();
@@ -311,7 +348,7 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
         t.row(vec![
             r.test_id.to_string(),
             format!("~{:.1}%", 100.0 * r.config.mre()),
-            format!("~{:.1}%", 100.0 * r.config.sigma),
+            format!("~{:.1}%", 100.0 * r.config.sigma()),
             pct(r.accuracy),
             if r.test_id == 0 { "N/A".into() } else { diff_pct(r.diff_from_exact) },
             r.paper_accuracy.map(pct).unwrap_or_else(|| "-".into()),
@@ -332,7 +369,7 @@ fn cmd_table2(argv: &[String]) -> Result<()> {
                 "{},{:.4},{:.4},{:.6},{:.6},{}\n",
                 r.test_id,
                 r.config.mre(),
-                r.config.sigma,
+                r.config.sigma(),
                 r.accuracy,
                 r.diff_from_exact,
                 r.paper_accuracy.map(|p| format!("{p:.4}")).unwrap_or_default()
@@ -371,8 +408,11 @@ fn cmd_table3(argv: &[String]) -> Result<()> {
         cfg.out_dir = "runs/table3".into();
     }
     cfg.tag = "t3".into();
-    let engine = Engine::from_artifacts(a.get_or("artifacts", "artifacts"))?;
-    let mut search = HybridSearch::new(&engine, cfg.clone());
+    let engine = optional_engine(&cfg, &a)?;
+    let mut search = match &engine {
+        Some(engine) => HybridSearch::new(engine, cfg.clone()),
+        None => HybridSearch::native(cfg.clone()),
+    };
     search.tolerance = a.parse_f64("tolerance")?.unwrap_or(0.005);
     let cases = table2_cases(&a)?;
     let cases: Vec<_> = cases.into_iter().filter(|(id, _, _)| *id != 0).collect();
@@ -385,21 +425,27 @@ fn cmd_table3(argv: &[String]) -> Result<()> {
         "Test ID", "MRE", "Approx Epochs", "Exact Epochs", "Utilization",
         "Accuracy", "Paper Util.",
     ]);
+    // Paper reference utilizations live in the artifact manifest; a
+    // native (artifact-free) run just omits the comparison column.
     let paper_util: std::collections::BTreeMap<u32, f64> = engine
-        .manifest()
-        .paper
-        .table3
-        .iter()
-        .map(|&(id, _, a_ep, e_ep)| (id, a_ep as f64 / (a_ep + e_ep) as f64))
-        .collect();
+        .as_ref()
+        .map(|e| {
+            e.manifest()
+                .paper
+                .table3
+                .iter()
+                .map(|&(id, _, a_ep, e_ep)| (id, a_ep as f64 / (a_ep + e_ep) as f64))
+                .collect()
+        })
+        .unwrap_or_default();
     let mut csv = String::from(
         "test_id,mre,approx_epochs,exact_epochs,utilization,accuracy,evaluations\n",
     );
     for (id, config, _) in cases {
         println!("case {id}: approximate run ({})...", config.label());
-        let (approx_outcome, tag) = search.approx_run(config)?;
+        let (approx_outcome, tag) = search.approx_run(&config)?;
         let outcome = search.search(
-            config,
+            &config,
             baseline.final_accuracy,
             &tag,
             approx_outcome.final_accuracy,

@@ -102,6 +102,78 @@ pub fn approx_matmul(
             b.len()
         );
     }
+    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, inner, 1, cols, 1))
+}
+
+/// `C[rows×cols] = Aᵀ · B` where `a` is the **untransposed**
+/// `[inner×rows]` row-major matrix. The backward pass's `dW = Xᵀ·dY`
+/// runs through this, so weight gradients see the same bit-accurate
+/// multiplier as the forward GEMM without materializing a transpose.
+/// Bit-identical to transposing `a` and calling [`approx_matmul`]
+/// (pinned by tests): the error of each scalar product depends only on
+/// the operand values, and accumulation stays in k-order.
+pub fn approx_matmul_tn(
+    m: &dyn Multiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != inner * rows || b.len() != inner * cols {
+        bail!(
+            "approx_matmul_tn: ({inner}x{rows})ᵀ·({inner}x{cols}) needs {} and {} \
+             elements, got {} and {}",
+            inner * rows,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, 1, rows, cols, 1))
+}
+
+/// `C[rows×cols] = A · Bᵀ` where `b` is the **untransposed**
+/// `[cols×inner]` row-major matrix — the backward pass's `dX = dY·Wᵀ`.
+/// Same determinism/identity contract as [`approx_matmul_tn`].
+pub fn approx_matmul_nt(
+    m: &dyn Multiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != cols * inner {
+        bail!(
+            "approx_matmul_nt: ({rows}x{inner})·({cols}x{inner})ᵀ needs {} and {} \
+             elements, got {} and {}",
+            rows * inner,
+            cols * inner,
+            a.len(),
+            b.len()
+        );
+    }
+    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, inner, 1, 1, inner))
+}
+
+/// Shared kernel behind the NN/TN/NT entry points: `A[i,k]` is read at
+/// `a[i*ais + k*aks]` and `B[k,j]` at `b[k*bks + j*bjs]`, so the
+/// transposed variants reuse the same staging/parallel structure with
+/// different strides. Callers validate slice lengths.
+#[allow(clippy::too_many_arguments)]
+fn approx_matmul_strided(
+    m: &dyn Multiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    ais: usize,
+    aks: usize,
+    bks: usize,
+    bjs: usize,
+) -> Vec<f32> {
     let threads = parallel::max_threads();
     // Block rows per task (a few blocks per worker for load balance)
     // so the staging buffers are allocated once per task, not per row.
@@ -126,8 +198,8 @@ pub fn approx_matmul(
                 let mut acc = 0f32;
                 let mut active = 0usize;
                 for k in 0..inner {
-                    let x = a[i * inner + k];
-                    let y = b[k * cols + j];
+                    let x = a[i * ais + k * aks];
+                    let y = b[k * bks + j * bjs];
                     if !x.is_finite() || !y.is_finite() {
                         acc += x * y;
                         continue;
@@ -152,7 +224,7 @@ pub fn approx_matmul(
         }
         chunk
     });
-    Ok(out_blocks.concat())
+    out_blocks.concat()
 }
 
 /// Seeded random operand matrices (uniform in `[-1, 1)`) for GEMM
@@ -344,6 +416,71 @@ mod tests {
         // Exact through the same pipeline: zero error by construction.
         let e = characterize_matmul(&Exact, 16, 32, 16, 5).unwrap();
         assert_eq!(e.mre, 0.0);
+    }
+
+    fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0f32; src.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose_bitwise() {
+        // C = Aᵀ·B must be bit-identical to transposing A and running
+        // the NN kernel — same products, same accumulation order.
+        let (rows, inner, cols) = (9, 14, 6);
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(41);
+        // a stored untransposed: [inner x rows]
+        let a: Vec<f32> = (0..inner * rows).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let tn = approx_matmul_tn(&d, &a, &b, rows, inner, cols).unwrap();
+        let at = transpose(&a, inner, rows); // [rows x inner]
+        let nn = approx_matmul(&d, &at, &b, rows, inner, cols).unwrap();
+        assert_eq!(tn, nn);
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose_bitwise() {
+        let (rows, inner, cols) = (7, 11, 8);
+        let d = Mitchell;
+        let mut rng = Xoshiro256::new(42);
+        let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        // b stored untransposed: [cols x inner]
+        let b: Vec<f32> = (0..cols * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let nt = approx_matmul_nt(&d, &a, &b, rows, inner, cols).unwrap();
+        let bt = transpose(&b, cols, inner); // [inner x cols]
+        let nn = approx_matmul(&d, &a, &bt, rows, inner, cols).unwrap();
+        assert_eq!(nt, nn);
+    }
+
+    #[test]
+    fn transposed_variants_deterministic_across_calls() {
+        // Thread-count independence is inherited from the shared strided
+        // kernel (blocks are input-derived; see tests/native_backend.rs
+        // for the end-to-end thread sweep). Here: repeat-call identity.
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(43);
+        let a: Vec<f32> = (0..24 * 16).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..24 * 12).map(|_| rng.next_f32() - 0.5).collect();
+        assert_eq!(
+            approx_matmul_tn(&d, &a, &b, 16, 24, 12).unwrap(),
+            approx_matmul_tn(&d, &a, &b, 16, 24, 12).unwrap()
+        );
+        assert_eq!(
+            approx_matmul_nt(&d, &b, &a, 12, 24, 16).unwrap(),
+            approx_matmul_nt(&d, &b, &a, 12, 24, 16).unwrap()
+        );
+    }
+
+    #[test]
+    fn transposed_variants_reject_bad_shapes() {
+        assert!(approx_matmul_tn(&Exact, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
+        assert!(approx_matmul_nt(&Exact, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
     }
 
     #[test]

@@ -73,6 +73,7 @@ mod lut;
 mod matmul;
 mod mitchell;
 mod roba;
+mod spec;
 mod stats;
 mod truncation;
 
@@ -81,10 +82,12 @@ pub use drum::Drum;
 pub use gaussian::GaussianModel;
 pub use lut::LutMultiplier;
 pub use matmul::{
-    approx_matmul, approx_mul_f32, characterize_matmul, characterize_matmul_set,
+    approx_matmul, approx_matmul_nt, approx_matmul_tn, approx_mul_f32,
+    characterize_matmul, characterize_matmul_set,
 };
 pub use mitchell::Mitchell;
 pub use roba::Roba;
+pub use spec::MultSpec;
 pub use stats::{characterize, characterize_threads, ErrorStats, OperandDist};
 pub use truncation::Truncation;
 

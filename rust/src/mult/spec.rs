@@ -1,0 +1,272 @@
+//! Multiplier specification strings — the knob a *training run* turns.
+//!
+//! The paper's training path only ever knew one number (the Gaussian
+//! sigma). A [`MultSpec`] names the actual multiplier a run trains
+//! with, so the coordinator, CLI, checkpoints and sweeps can all speak
+//! the same vocabulary:
+//!
+//! * `exact` — exact multipliers;
+//! * `gaussian:<sigma>` — the paper's simulation model: each weight
+//!   matrix is perturbed `W * (1 + sigma*eps)` (weight-level injection,
+//!   Figure 3). This is the only spec the PJRT backend can express,
+//!   because the compiled graphs take sigma as a runtime scalar;
+//! * any [`by_name`] design spec (`drum6`, `mitchell`, `trunc8`,
+//!   `lut12:drum6`, ...) — a bit-accurate design. The native backend
+//!   routes **every forward and backward GEMM** through
+//!   [`crate::mult::approx_matmul`] with this design (product-level
+//!   injection, what the hardware actually does).
+//!
+//! The product-level `gauss<pct>` model ([`super::GaussianModel`]) is
+//! deliberately rejected here: its noise counter is consumed in thread
+//! order, so training with it would not be reproducible. Use
+//! `gaussian:<sigma>` (deterministic Threefry weight-level fields) or a
+//! deterministic design instead.
+
+use anyhow::{bail, Context, Result};
+
+use crate::HALF_NORMAL_MEAN;
+
+use super::{by_name, Exact, LutMultiplier, Multiplier};
+
+/// A parsed multiplier specification. See the module docs for the
+/// grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MultSpec {
+    /// Exact multipliers.
+    Exact,
+    /// The paper's Gaussian surrogate: weight-level `W*(1+sigma*eps)`.
+    Gaussian {
+        /// SD of the relative error (fraction, not percent).
+        sigma: f64,
+    },
+    /// A bit-accurate design accepted by [`by_name`].
+    Design {
+        /// The validated spec string, e.g. `drum6` or `lut12:drum6`.
+        spec: String,
+    },
+}
+
+impl MultSpec {
+    /// Parse a spec string (`exact` | `gaussian:<sigma>` | design spec).
+    pub fn parse(s: &str) -> Result<MultSpec> {
+        let s = s.trim();
+        if s == "exact" {
+            return Ok(MultSpec::Exact);
+        }
+        if let Some(v) = s.strip_prefix("gaussian:").or_else(|| s.strip_prefix("gauss:")) {
+            let sigma: f64 = v
+                .parse()
+                .with_context(|| format!("bad gaussian sigma in {s:?}"))?;
+            return Self::gaussian_checked(sigma);
+        }
+        if s.starts_with("gauss") {
+            bail!(
+                "product-level spec {s:?} is not reproducible under parallel \
+                 training; use gaussian:<sigma> (weight-level) instead"
+            );
+        }
+        // Validate eagerly so config errors surface at parse time, not
+        // mid-run.
+        validate_design(s)?;
+        Ok(MultSpec::Design { spec: s.to_string() })
+    }
+
+    /// Gaussian surrogate at SD `sigma` (`0` normalizes to `Exact`).
+    /// Range checking happens at spec parse / config validation, so an
+    /// out-of-range sigma surfaces as an error there, never a panic.
+    pub fn gaussian(sigma: f64) -> MultSpec {
+        if sigma == 0.0 {
+            MultSpec::Exact
+        } else {
+            MultSpec::Gaussian { sigma }
+        }
+    }
+
+    /// Gaussian surrogate hitting MRE `mre` (`MRE = sigma*sqrt(2/pi)`).
+    pub fn gaussian_mre(mre: f64) -> MultSpec {
+        Self::gaussian(mre / HALF_NORMAL_MEAN)
+    }
+
+    /// Exact multipliers.
+    pub fn exact() -> MultSpec {
+        MultSpec::Exact
+    }
+
+    fn gaussian_checked(sigma: f64) -> Result<MultSpec> {
+        if !(0.0..1.0).contains(&sigma) {
+            bail!("gaussian sigma {sigma} out of sane range [0, 1)");
+        }
+        if sigma == 0.0 {
+            return Ok(MultSpec::Exact);
+        }
+        Ok(MultSpec::Gaussian { sigma })
+    }
+
+    pub fn is_exact(&self) -> bool {
+        matches!(self, MultSpec::Exact)
+    }
+
+    /// Gaussian SD this spec injects at the weight level (`0` for exact
+    /// and for bit-accurate designs, whose error is operand-dependent).
+    pub fn sigma(&self) -> f64 {
+        match self {
+            MultSpec::Gaussian { sigma } => *sigma,
+            _ => 0.0,
+        }
+    }
+
+    /// MRE of the Gaussian surrogate (`0` for exact / designs).
+    pub fn mre(&self) -> f64 {
+        self.sigma() * HALF_NORMAL_MEAN
+    }
+
+    /// The sigma scalar the compiled PJRT graphs can realize, or `None`
+    /// for bit-accurate designs (which need the native backend).
+    pub fn surrogate_sigma(&self) -> Option<f64> {
+        match self {
+            MultSpec::Exact => Some(0.0),
+            MultSpec::Gaussian { sigma } => Some(*sigma),
+            MultSpec::Design { .. } => None,
+        }
+    }
+
+    /// Canonical spec string — round-trips through [`MultSpec::parse`];
+    /// checkpoints store this.
+    pub fn canonical(&self) -> String {
+        match self {
+            MultSpec::Exact => "exact".to_string(),
+            MultSpec::Gaussian { sigma } => format!("gaussian:{sigma}"),
+            MultSpec::Design { spec } => spec.clone(),
+        }
+    }
+
+    /// Filesystem-safe form of [`MultSpec::canonical`] for run tags.
+    pub fn file_tag(&self) -> String {
+        self.canonical().replace(':', "_")
+    }
+
+    /// Human label for tables.
+    pub fn label(&self) -> String {
+        match self {
+            MultSpec::Exact => "exact".to_string(),
+            MultSpec::Gaussian { sigma } => format!(
+                "MRE ~{:.2}% (SD {:.2}%)",
+                100.0 * sigma * HALF_NORMAL_MEAN,
+                100.0 * sigma
+            ),
+            MultSpec::Design { spec } => spec.clone(),
+        }
+    }
+
+    /// Instantiate the bit-accurate multiplier behind this spec. The
+    /// Gaussian surrogate has no product multiplier — it is weight-level
+    /// by construction — so building it is an error.
+    pub fn build(&self) -> Result<Box<dyn Multiplier>> {
+        match self {
+            MultSpec::Exact => Ok(Box::new(Exact)),
+            MultSpec::Design { spec } => by_name(spec),
+            MultSpec::Gaussian { .. } => bail!(
+                "{:?} is a weight-level surrogate, not a product multiplier",
+                self.canonical()
+            ),
+        }
+    }
+}
+
+/// Grammar-only validation of a design spec: LUT wrappers are checked
+/// structurally (width range + inner spec) *without* tabulating — a
+/// `lut12:<inner>` table is 128 MiB and ~16.7M simulated products, far
+/// too heavy to build and discard at config-parse time. Non-LUT specs
+/// are cheap, so [`by_name`] stays the single source of truth for them.
+fn validate_design(spec: &str) -> Result<()> {
+    if let Some(rest) = spec.strip_prefix("lut") {
+        if let Some((bits, inner)) = rest.split_once(':') {
+            let bits: u32 = bits
+                .parse()
+                .with_context(|| format!("bad LUT width in {spec:?}"))?;
+            if !(2..=LutMultiplier::MAX_BITS).contains(&bits) {
+                bail!(
+                    "LUT operand width must be in [2, {}], got {bits}",
+                    LutMultiplier::MAX_BITS
+                );
+            }
+            return validate_design(inner);
+        }
+    }
+    by_name(spec).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_forms() {
+        assert_eq!(MultSpec::parse("exact").unwrap(), MultSpec::Exact);
+        assert_eq!(
+            MultSpec::parse("gaussian:0.045").unwrap(),
+            MultSpec::Gaussian { sigma: 0.045 }
+        );
+        assert_eq!(
+            MultSpec::parse("drum6").unwrap(),
+            MultSpec::Design { spec: "drum6".into() }
+        );
+        assert_eq!(
+            MultSpec::parse("lut12:drum6").unwrap(),
+            MultSpec::Design { spec: "lut12:drum6".into() }
+        );
+        assert!(MultSpec::parse("bogus").is_err());
+        assert!(MultSpec::parse("gaussian:1.5").is_err());
+        assert!(MultSpec::parse("gauss4.5").is_err()); // product-level, rejected
+        // LUT grammar is checked structurally, without tabulating.
+        assert!(MultSpec::parse("lut99:drum6").is_err());
+        assert!(MultSpec::parse("lut8:bogus").is_err());
+        assert!(MultSpec::parse("lut8:lut4:drum6").is_ok()); // nested wrappers
+    }
+
+    #[test]
+    fn canonical_roundtrips() {
+        for s in ["exact", "gaussian:0.045", "drum6", "mitchell", "lut8:drum6"] {
+            let spec = MultSpec::parse(s).unwrap();
+            assert_eq!(MultSpec::parse(&spec.canonical()).unwrap(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn zero_sigma_normalizes_to_exact() {
+        assert!(MultSpec::gaussian(0.0).is_exact());
+        assert!(MultSpec::parse("gaussian:0").unwrap().is_exact());
+        assert_eq!(MultSpec::gaussian(0.0).canonical(), "exact");
+    }
+
+    #[test]
+    fn sigma_and_surrogate() {
+        let g = MultSpec::gaussian(0.12);
+        assert_eq!(g.sigma(), 0.12);
+        assert_eq!(g.surrogate_sigma(), Some(0.12));
+        assert!((g.mre() - 0.12 * crate::HALF_NORMAL_MEAN).abs() < 1e-12);
+        let d = MultSpec::parse("drum6").unwrap();
+        assert_eq!(d.sigma(), 0.0);
+        assert_eq!(d.surrogate_sigma(), None);
+        assert_eq!(MultSpec::Exact.surrogate_sigma(), Some(0.0));
+    }
+
+    #[test]
+    fn builds_designs_not_gaussian() {
+        assert_eq!(MultSpec::parse("drum6").unwrap().build().unwrap().name(), "drum6");
+        assert_eq!(MultSpec::Exact.build().unwrap().name(), "exact");
+        assert!(MultSpec::gaussian(0.1).build().is_err());
+    }
+
+    #[test]
+    fn file_tag_is_path_safe() {
+        assert_eq!(MultSpec::parse("lut12:drum6").unwrap().file_tag(), "lut12_drum6");
+        assert_eq!(MultSpec::gaussian(0.045).file_tag(), "gaussian_0.045");
+    }
+
+    #[test]
+    fn gaussian_mre_inverts() {
+        let s = MultSpec::gaussian_mre(0.036);
+        assert!((s.mre() - 0.036).abs() < 1e-12);
+    }
+}

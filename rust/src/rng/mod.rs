@@ -14,7 +14,10 @@
 
 pub mod threefry;
 
-pub use threefry::{counter_normal, threefry2x32, uniform_from_bits};
+pub use threefry::{
+    counter_normal, counter_split, threefry2x32, uniform_from_bits, STREAM_DROP,
+    STREAM_ERR, STREAM_INIT,
+};
 
 /// SplitMix64 — seeds Xoshiro and serves as a tiny standalone PRNG.
 #[derive(Debug, Clone)]

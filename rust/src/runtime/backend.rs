@@ -1,0 +1,145 @@
+//! The execution-backend abstraction behind [`super::TrainSession`].
+//!
+//! A [`Backend`] owns *how* a train/eval/init step is computed; the
+//! session owns the state tensors and the step loop. Two
+//! implementations ship:
+//!
+//! * [`super::PjrtBackend`] — the original path: AOT-lowered XLA graphs
+//!   executed through PJRT (needs `make artifacts` + a real `xla`
+//!   crate).
+//! * [`super::NativeBackend`] — pure-Rust forward/backward for the CNN
+//!   presets in which every GEMM routes through
+//!   [`crate::mult::approx_matmul`], so bit-accurate multiplier designs
+//!   (DRUM, Mitchell, LUT backends, ...) train real networks on stock
+//!   CPU hardware with no PJRT at all.
+//!
+//! [`BackendModel`] is the backend-agnostic model description the
+//! session and coordinator need (batch sizes, input geometry, the
+//! params/state tensor layout): the PJRT backend reads it from the
+//! artifact manifest, the native backend derives it from its built-in
+//! preset table — same names, shapes and order, so checkpoints are
+//! interchangeable.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::manifest::{ModelManifest, TensorSpec};
+use super::session::{EvalStats, StepInputs, StepStats};
+
+/// Backend-agnostic model description (the manifest contract, minus
+/// PJRT entry points).
+#[derive(Debug, Clone)]
+pub struct BackendModel {
+    pub preset: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub input_hw: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    /// Parameter tensors in threading order.
+    pub params: Vec<TensorSpec>,
+    /// BN running-stat tensors in threading order.
+    pub state: Vec<TensorSpec>,
+}
+
+impl BackendModel {
+    pub fn from_manifest(m: &ModelManifest) -> Self {
+        BackendModel {
+            preset: m.preset.clone(),
+            batch: m.batch,
+            eval_batch: m.eval_batch,
+            input_hw: m.input_hw,
+            in_ch: m.in_ch,
+            num_classes: m.num_classes,
+            params: m.params.clone(),
+            state: m.state.clone(),
+        }
+    }
+
+    /// Total state-vector length: params ++ state ++ opt.
+    pub fn n_tensors(&self) -> usize {
+        2 * self.params.len() + self.state.len()
+    }
+
+    /// Elements of one training input batch (`[batch, hw, hw, c]`).
+    pub fn input_elems(&self) -> usize {
+        self.batch * self.input_hw * self.input_hw * self.in_ch
+    }
+
+    /// Elements of one eval input batch.
+    pub fn eval_input_elems(&self) -> usize {
+        self.eval_batch * self.input_hw * self.input_hw * self.in_ch
+    }
+
+    /// Checkpoint tensor names in threading order
+    /// (`param:` / `state:` / `opt:` prefixed).
+    pub fn tensor_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .map(|p| format!("param:{}", p.name))
+            .chain(self.state.iter().map(|s| format!("state:{}", s.name)))
+            .chain(self.params.iter().map(|p| format!("opt:{}", p.name)))
+            .collect()
+    }
+
+    /// Validate a params++state++opt vector against the declared layout.
+    pub fn validate_tensors(&self, tensors: &[Tensor]) -> Result<()> {
+        if tensors.len() != self.n_tensors() {
+            bail!(
+                "{}: state vector has {} tensors, expected {}",
+                self.preset,
+                tensors.len(),
+                self.n_tensors()
+            );
+        }
+        for (t, spec) in tensors.iter().zip(
+            self.params.iter().chain(self.state.iter()).chain(self.params.iter()),
+        ) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: tensor {} shape {:?} != manifest {:?}",
+                    self.preset,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One execution backend bound to one model preset.
+pub trait Backend: Send + Sync {
+    /// Short backend id: `"pjrt"` or `"native"`.
+    fn kind(&self) -> &'static str;
+
+    /// The model this backend executes.
+    fn model(&self) -> &BackendModel;
+
+    /// Freshly initialized state tensors (params ++ state ++ opt) for
+    /// `seed` — deterministic in the seed.
+    fn init(&self, seed: u32) -> Result<Vec<Tensor>>;
+
+    /// One SGD step: consumes the current state vector, returns the
+    /// next one plus step statistics. `x` is `[batch, hw, hw, c]` f32,
+    /// `y` `[batch]` i32.
+    fn train_step(
+        &self,
+        tensors: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        k: StepInputs,
+    ) -> Result<(Vec<Tensor>, StepStats)>;
+
+    /// Evaluate one batch with exact multipliers (the paper's test
+    /// protocol). `params_state` is the params ++ state prefix of the
+    /// state vector.
+    fn eval_batch(
+        &self,
+        params_state: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<EvalStats>;
+}

@@ -1,19 +1,31 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//! Execution runtime: pluggable backends behind one training session.
 //!
-//! The contract with the Python build step is `artifacts/manifest.json`
-//! ([`manifest`]) plus one HLO **text** file per entry point (text, not
-//! serialized proto — see `python/compile/aot.py` for why). [`Engine`]
-//! owns the PJRT CPU client and a compile cache; [`session::TrainSession`]
-//! keeps model/optimizer state resident as device buffers so the hot
-//! step loop never round-trips parameters through the host.
+//! [`session::TrainSession`] owns the model/optimizer/BN state and the
+//! per-step knob ABI; *how* a step executes is a [`backend::Backend`]:
+//!
+//! * [`PjrtBackend`] — the compiled-artifact path. The contract with
+//!   the Python build step is `artifacts/manifest.json` ([`manifest`])
+//!   plus one HLO **text** file per entry point (text, not serialized
+//!   proto — see `python/compile/aot.py` for why). [`Engine`] owns the
+//!   PJRT CPU client and a compile cache.
+//! * [`NativeBackend`] — pure-Rust forward/backward over the
+//!   bit-accurate multiplier engine ([`crate::mult`]); needs no
+//!   artifacts and trains real designs (`drum6`, `lut12:drum6`, ...)
+//!   end to end on stock hardware.
 
+pub mod backend;
 pub mod engine;
 pub mod integrity;
 pub mod manifest;
+pub mod native;
+pub mod pjrt_backend;
 pub mod session;
 
+pub use backend::{Backend, BackendModel};
 pub use engine::{Engine, Executable};
 pub use manifest::{EntrySpec, IoSpec, LayerRow, Manifest, ModelManifest, TensorSpec};
+pub use native::{NativeBackend, NativeConfig};
+pub use pjrt_backend::PjrtBackend;
 pub use session::TrainSession;
 
 use crate::tensor::{DType, Tensor};

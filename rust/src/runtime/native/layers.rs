@@ -1,0 +1,445 @@
+//! Layer kernels for the native CNN backend: im2col/col2im (3x3 SAME
+//! convolution as a GEMM), batch normalization, 2x2 max pooling,
+//! Threefry-counter dropout and softmax cross-entropy — forward *and*
+//! backward, all in plain f32 on NHWC data.
+//!
+//! These mirror `python/compile/model.py` layer for layer (same patch
+//! ordering, same BN axes, same dropout stream construction) so the
+//! native backend trains the same network the lowered graphs do. None
+//! of these kernels multiplies matrices: every GEMM in the backend goes
+//! through `mult::approx_matmul` / `_tn` / `_nt`, keeping the
+//! approximate-multiplier contract in exactly one place.
+
+use crate::rng::threefry::{threefry2x32, uniform_from_bits};
+
+/// NHWC `[n, hw, hw, c]` -> SAME-padded 3x3 patch matrix
+/// `[n*hw*hw, 9c]`, patch features ordered `(dy, dx, channel)` to match
+/// the `[3, 3, cin, cout]` weight layout flattened to `[9*cin, cout]`.
+pub(crate) fn im2col(x: &[f32], n: usize, hw: usize, c: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * hw * hw * c);
+    let row_len = 9 * c;
+    let mut out = vec![0f32; n * hw * hw * row_len];
+    for img in 0..n {
+        for y in 0..hw {
+            for xx in 0..hw {
+                let base = ((img * hw + y) * hw + xx) * row_len;
+                let mut f = 0usize;
+                for dy in 0..3usize {
+                    let sy = y as isize + dy as isize - 1;
+                    for dx in 0..3usize {
+                        let sx = xx as isize + dx as isize - 1;
+                        if sy >= 0
+                            && (sy as usize) < hw
+                            && sx >= 0
+                            && (sx as usize) < hw
+                        {
+                            let src =
+                                ((img * hw + sy as usize) * hw + sx as usize) * c;
+                            out[base + f..base + f + c]
+                                .copy_from_slice(&x[src..src + c]);
+                        }
+                        f += c;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`im2col`]: scatter-add patch gradients `[n*hw*hw, 9c]`
+/// back onto the input image gradient `[n, hw, hw, c]`. Accumulation
+/// order is input-derived and sequential — deterministic.
+pub(crate) fn col2im(dp: &[f32], n: usize, hw: usize, c: usize) -> Vec<f32> {
+    let row_len = 9 * c;
+    debug_assert_eq!(dp.len(), n * hw * hw * row_len);
+    let mut dx = vec![0f32; n * hw * hw * c];
+    for img in 0..n {
+        for y in 0..hw {
+            for xx in 0..hw {
+                let base = ((img * hw + y) * hw + xx) * row_len;
+                let mut f = 0usize;
+                for dy in 0..3usize {
+                    let sy = y as isize + dy as isize - 1;
+                    for dx2 in 0..3usize {
+                        let sx = xx as isize + dx2 as isize - 1;
+                        if sy >= 0
+                            && (sy as usize) < hw
+                            && sx >= 0
+                            && (sx as usize) < hw
+                        {
+                            let dst =
+                                ((img * hw + sy as usize) * hw + sx as usize) * c;
+                            for ch in 0..c {
+                                dx[dst + ch] += dp[base + f + ch];
+                            }
+                        }
+                        f += c;
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Saved forward quantities the BN backward needs.
+pub(crate) struct BnCache {
+    /// Normalized activations (pre gamma/beta).
+    pub xn: Vec<f32>,
+    /// Per-channel `1/sqrt(var + eps)`.
+    pub inv_std: Vec<f32>,
+    /// Per-channel batch mean.
+    pub mean: Vec<f32>,
+    /// Per-channel biased batch variance.
+    pub var: Vec<f32>,
+}
+
+/// Train-mode batch norm over `[rows, ch]` (channels innermost: conv
+/// activations flattened over N*H*W rows, dense over N rows).
+pub(crate) fn bn_train(
+    x: &[f32],
+    rows: usize,
+    ch: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> (Vec<f32>, BnCache) {
+    debug_assert_eq!(x.len(), rows * ch);
+    let m = rows as f32;
+    let mut mean = vec![0f32; ch];
+    for r in 0..rows {
+        for c in 0..ch {
+            mean[c] += x[r * ch + c];
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= m;
+    }
+    let mut var = vec![0f32; ch];
+    for r in 0..rows {
+        for c in 0..ch {
+            let d = x[r * ch + c] - mean[c];
+            var[c] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= m;
+    }
+    let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+    let mut xn = vec![0f32; x.len()];
+    let mut out = vec![0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..ch {
+            let i = r * ch + c;
+            let z = (x[i] - mean[c]) * inv_std[c];
+            xn[i] = z;
+            out[i] = gamma[c] * z + beta[c];
+        }
+    }
+    (out, BnCache { xn, inv_std, mean, var })
+}
+
+/// BN backward: returns `(dx, dgamma, dbeta)`.
+pub(crate) fn bn_train_back(
+    dy: &[f32],
+    cache: &BnCache,
+    gamma: &[f32],
+    rows: usize,
+    ch: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let m = rows as f32;
+    let mut dgamma = vec![0f32; ch];
+    let mut dbeta = vec![0f32; ch];
+    for r in 0..rows {
+        for c in 0..ch {
+            let i = r * ch + c;
+            dgamma[c] += dy[i] * cache.xn[i];
+            dbeta[c] += dy[i];
+        }
+    }
+    let mut dx = vec![0f32; dy.len()];
+    for r in 0..rows {
+        for c in 0..ch {
+            let i = r * ch + c;
+            dx[i] = gamma[c]
+                * cache.inv_std[c]
+                * (dy[i] - dbeta[c] / m - cache.xn[i] * dgamma[c] / m);
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// Eval-mode batch norm with running statistics.
+pub(crate) fn bn_eval(
+    x: &[f32],
+    rows: usize,
+    ch: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+    for r in 0..rows {
+        for c in 0..ch {
+            let i = r * ch + c;
+            out[i] = gamma[c] * (x[i] - mean[c]) * inv_std[c] + beta[c];
+        }
+    }
+    out
+}
+
+/// 2x2/stride-2 max pool on NHWC; also returns the flat source index of
+/// each maximum for the backward scatter.
+pub(crate) fn maxpool2(x: &[f32], n: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert_eq!(x.len(), n * hw * hw * c);
+    let oh = hw / 2;
+    let mut out = vec![0f32; n * oh * oh * c];
+    let mut idx = vec![0u32; n * oh * oh * c];
+    for img in 0..n {
+        for y in 0..oh {
+            for xx in 0..oh {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0u32;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            let src = ((img * hw + 2 * y + dy) * hw + 2 * xx + dx)
+                                * c
+                                + ch;
+                            if x[src] > best {
+                                best = x[src];
+                                bi = src as u32;
+                            }
+                        }
+                    }
+                    let o = ((img * oh + y) * oh + xx) * c + ch;
+                    out[o] = best;
+                    idx[o] = bi;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Max-pool backward: route each output gradient to its argmax source.
+pub(crate) fn maxpool2_back(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; in_len];
+    for (g, &i) in dy.iter().zip(idx) {
+        dx[i as usize] += g;
+    }
+    dx
+}
+
+/// Inverted-dropout factors (`0` or `1/keep`) from the same Threefry
+/// stream construction the lowered graphs use: element `i` keeps iff
+/// `uniform(threefry(seed_drop, stream, i, 0).0) < keep`.
+pub(crate) fn dropout_mask(len: usize, keep: f32, seed: u32, stream: u32) -> Vec<f32> {
+    let inv = 1.0 / keep;
+    (0..len)
+        .map(|i| {
+            let (bits, _) = threefry2x32(seed, stream, i as u32, 0);
+            if uniform_from_bits(bits) < keep {
+                inv
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Softmax cross-entropy over `[n, classes]` logits: returns
+/// `(mean CE loss, minibatch accuracy, dlogits)` with
+/// `dlogits = (softmax - onehot) / n`.
+pub(crate) fn softmax_ce_grad(
+    logits: &[f32],
+    y: &[i32],
+    n: usize,
+    classes: usize,
+) -> (f32, f32, Vec<f32>) {
+    let mut dl = vec![0f32; logits.len()];
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    let scale = 1.0 / n as f32;
+    for r in 0..n {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let (lse, argmax) = log_sum_exp(row);
+        let label = y[r] as usize;
+        loss += (lse - row[label]) as f64;
+        if argmax == label {
+            correct += 1;
+        }
+        for c in 0..classes {
+            let p = (row[c] - lse).exp();
+            let onehot = if c == label { 1.0 } else { 0.0 };
+            dl[r * classes + c] = (p - onehot) * scale;
+        }
+    }
+    (
+        (loss / n as f64) as f32,
+        correct as f32 / n as f32,
+        dl,
+    )
+}
+
+/// Eval-side statistics: `(summed CE loss, correct count)`.
+pub(crate) fn softmax_ce_stats(
+    logits: &[f32],
+    y: &[i32],
+    n: usize,
+    classes: usize,
+) -> (f32, i64) {
+    let mut loss = 0f64;
+    let mut correct = 0i64;
+    for r in 0..n {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let (lse, argmax) = log_sum_exp(row);
+        let label = y[r] as usize;
+        loss += (lse - row[label]) as f64;
+        if argmax == label {
+            correct += 1;
+        }
+    }
+    (loss as f32, correct)
+}
+
+/// Stable `log(sum(exp(row)))` plus the row argmax.
+fn log_sum_exp(row: &[f32]) -> (f32, usize) {
+    let mut mx = f32::NEG_INFINITY;
+    let mut argmax = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > mx {
+            mx = v;
+            argmax = i;
+        }
+    }
+    let mut sum = 0f32;
+    for &v in row {
+        sum += (v - mx).exp();
+    }
+    (mx + sum.ln(), argmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_center_patch_identity() {
+        // A 1x3x3x1 image: the center row of the patch matrix holds the
+        // whole image, edges are zero-padded.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let p = im2col(&x, 1, 3, 1);
+        assert_eq!(p.len(), 9 * 9);
+        // Patch at (1,1) sees the full image in (dy, dx) order.
+        let center = &p[4 * 9..5 * 9];
+        assert_eq!(center, &x[..]);
+        // Patch at (0,0): top-left 2x2 visible, rest padding.
+        let corner = &p[0..9];
+        assert_eq!(corner, &[0., 0., 0., 0., 1., 2., 0., 4., 5.]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // <im2col(x), p> == <x, col2im(p)> for random x, p — the
+        // defining adjoint identity, checked in f64.
+        let mut rng = crate::rng::Xoshiro256::new(9);
+        let (n, hw, c) = (2usize, 4usize, 3usize);
+        let x: Vec<f32> = (0..n * hw * hw * c).map(|_| rng.next_f32() - 0.5).collect();
+        let p: Vec<f32> =
+            (0..n * hw * hw * 9 * c).map(|_| rng.next_f32() - 0.5).collect();
+        let fx = im2col(&x, n, hw, c);
+        let bp = col2im(&p, n, hw, c);
+        let lhs: f64 =
+            fx.iter().zip(&p).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 =
+            x.iter().zip(&bp).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn bn_train_normalizes_and_updates() {
+        let x = vec![1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let (out, cache) = bn_train(&x, 4, 2, &[1.0, 1.0], &[0.0, 0.0], 1e-5);
+        // Per-channel mean ~0, var ~1 after normalization.
+        for c in 0..2 {
+            let vals: Vec<f32> = (0..4).map(|r| out[r * 2 + c]).collect();
+            let mean: f32 = vals.iter().sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+        }
+        assert!((cache.mean[0] - 2.5).abs() < 1e-6);
+        assert!((cache.mean[1] - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bn_backward_matches_finite_difference() {
+        let mut rng = crate::rng::Xoshiro256::new(3);
+        let (rows, ch) = (6usize, 3usize);
+        let x: Vec<f32> = (0..rows * ch).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let gamma: Vec<f32> = (0..ch).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..ch).map(|_| rng.next_f32() - 0.5).collect();
+        let dy: Vec<f32> = (0..rows * ch).map(|_| rng.next_f32() - 0.5).collect();
+        let eps = 1e-5f32;
+        let loss = |x: &[f32]| -> f64 {
+            let (out, _) = bn_train(x, rows, ch, &gamma, &beta, eps);
+            out.iter().zip(&dy).map(|(&o, &g)| o as f64 * g as f64).sum()
+        };
+        let (_, cache) = bn_train(&x, rows, ch, &gamma, &beta, eps);
+        let (dx, _, _) = bn_train_back(&dy, &cache, &gamma, rows, ch);
+        let h = 1e-3f32;
+        for i in [0usize, 5, 11, 17] {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            let got = dx[i] as f64;
+            assert!(
+                (fd - got).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dx[{i}]: fd {fd} vs {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_selects_and_routes() {
+        // 1x2x2x1 -> single output.
+        let x = vec![1.0f32, 5.0, 3.0, 2.0];
+        let (out, idx) = maxpool2(&x, 1, 2, 1);
+        assert_eq!(out, vec![5.0]);
+        assert_eq!(idx, vec![1]);
+        let dx = maxpool2_back(&[2.5], &idx, 4);
+        assert_eq!(dx, vec![0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dropout_mask_rate_and_determinism() {
+        let m1 = dropout_mask(10_000, 0.7, 42, 1000);
+        let m2 = dropout_mask(10_000, 0.7, 42, 1000);
+        assert_eq!(m1, m2);
+        let kept = m1.iter().filter(|&&v| v > 0.0).count();
+        assert!((kept as f64 / 10_000.0 - 0.7).abs() < 0.03, "kept {kept}");
+        // Inverted scaling keeps the expectation.
+        assert!(m1.iter().all(|&v| v == 0.0 || (v - 1.0 / 0.7).abs() < 1e-6));
+        assert_ne!(m1, dropout_mask(10_000, 0.7, 43, 1000));
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let logits = vec![0.0f32; 2 * 4];
+        let (loss, _acc, dl) = softmax_ce_grad(&logits, &[1, 2], 2, 4);
+        assert!((loss - (4f32).ln()).abs() < 1e-6);
+        // Gradient rows sum to zero.
+        for r in 0..2 {
+            let s: f32 = dl[r * 4..(r + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        let (sum, correct) = softmax_ce_stats(&logits, &[1, 2], 2, 4);
+        assert!((sum - 2.0 * (4f32).ln()).abs() < 1e-5);
+        assert!(correct <= 2);
+    }
+}

@@ -1,0 +1,986 @@
+//! [`NativeBackend`]: pure-Rust CNN training on the bit-accurate
+//! multiplier engine — no PJRT, no artifacts, runs anywhere.
+//!
+//! The backend implements the manifest's VGG-style presets
+//! (`python/compile/model.py` layer for layer: 3x3 SAME conv-BN-ReLU
+//! blocks, 2x2 max pool, Threefry dropout, dense-BN-ReLU, softmax
+//! cross-entropy with L2 weight decay, SGD with momentum) with one
+//! crucial property: **every forward and backward GEMM goes through
+//! [`crate::mult::approx_matmul`]** (and its transposed-operand
+//! variants), so the multiplier a run trains with is the *simulated
+//! hardware design itself* — DRUM, Mitchell, truncation, a LUT backend
+//! — not a statistical surrogate. This is the ApproxTrain
+//! (arXiv:2209.04161) architecture: the simulated-multiplier GEMM is a
+//! swappable kernel under an otherwise ordinary training loop.
+//!
+//! Error-injection modes, selected by the run's [`MultSpec`]:
+//!
+//! * `exact` — every GEMM through the exact mantissa pipeline;
+//! * `gaussian:<sigma>` — the paper's weight-level model: each weight
+//!   matrix is perturbed `W*(1 + sigma*eps)` with the *same* Threefry
+//!   field (`(seed_err, layer)` streams) the compiled graphs inject,
+//!   in both forward and backward (custom-VJP semantics: the weight
+//!   gradient is scaled by the same factors). GEMMs run exact.
+//! * a design spec — product-level injection: forward and backward
+//!   GEMMs run the bit-accurate design.
+//!
+//! Determinism: `approx_matmul` is deterministic at any worker count,
+//! dropout/error fields are counter-based, and every other kernel is
+//! sequential — so a training run is bit-reproducible regardless of
+//! thread count (pinned by `tests/native_backend.rs`).
+
+mod layers;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mult::{approx_matmul, approx_matmul_nt, approx_matmul_tn};
+use crate::mult::{Exact, MultSpec, Multiplier};
+use crate::rng::threefry::counter_normal;
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, BackendModel};
+use super::manifest::TensorSpec;
+use super::session::{EvalStats, StepInputs, StepStats};
+
+use layers::BnCache;
+
+/// Dropout stream offsets (shared with `python/compile/model.py`).
+const DROP_STREAM_OFFSET: u32 = 1000;
+/// Init stream offset (He-normal fields per parameter index).
+const INIT_STREAM_OFFSET: u32 = 2000;
+
+static EXACT_MULT: Exact = Exact;
+
+/// Static architecture + training hyperparameters for one native
+/// preset (mirrors `ModelConfig` on the Python side).
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    pub name: String,
+    pub input_hw: usize,
+    pub in_ch: usize,
+    /// Conv widths per block; each block ends in a 2x2 max pool.
+    pub blocks: Vec<Vec<usize>>,
+    /// Hidden dense widths.
+    pub dense: Vec<usize>,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub dropout_conv: f32,
+    pub dropout_dense: f32,
+    pub bn_momentum: f32,
+    pub bn_eps: f32,
+    pub weight_decay: f32,
+    pub sgd_momentum: f32,
+}
+
+impl NativeConfig {
+    /// Built-in presets. `tiny`/`small`/`vgg16` match the manifest's
+    /// architectures; `micro` is a native-only gradient-check scale.
+    pub fn preset(name: &str) -> Result<NativeConfig> {
+        let base = NativeConfig {
+            name: name.to_string(),
+            input_hw: 32,
+            in_ch: 3,
+            blocks: vec![],
+            dense: vec![],
+            num_classes: 10,
+            batch: 64,
+            eval_batch: 256,
+            dropout_conv: 0.3,
+            dropout_dense: 0.5,
+            bn_momentum: 0.9,
+            bn_eps: 1e-5,
+            weight_decay: 5e-4,
+            sgd_momentum: 0.9,
+        };
+        Ok(match name {
+            "micro" => NativeConfig {
+                input_hw: 4,
+                blocks: vec![vec![4]],
+                dense: vec![8],
+                num_classes: 4,
+                batch: 4,
+                eval_batch: 8,
+                dropout_conv: 0.0,
+                dropout_dense: 0.0,
+                ..base
+            },
+            "tiny" => NativeConfig {
+                input_hw: 8,
+                blocks: vec![vec![8], vec![16]],
+                dense: vec![32],
+                batch: 16,
+                eval_batch: 64,
+                dropout_conv: 0.0,
+                dropout_dense: 0.0,
+                ..base
+            },
+            "small" => NativeConfig {
+                blocks: vec![vec![32, 32], vec![64, 64], vec![128, 128]],
+                dense: vec![128],
+                ..base
+            },
+            "vgg16" => NativeConfig {
+                blocks: vec![
+                    vec![64, 64],
+                    vec![128, 128],
+                    vec![256, 256, 256],
+                    vec![512, 512, 512],
+                    vec![512, 512, 512],
+                ],
+                dense: vec![512],
+                batch: 128,
+                ..base
+            },
+            other => bail!(
+                "unknown native preset {other:?} (micro | tiny | small | vgg16)"
+            ),
+        })
+    }
+
+    /// Forward-order flat parameter layout (the manifest contract).
+    fn param_specs(&self) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        let mut ch = self.in_ch;
+        let mut layer: i64 = 0;
+        for (bi, widths) in self.blocks.iter().enumerate() {
+            for (ci, &w) in widths.iter().enumerate() {
+                let p = format!("conv{bi}_{ci}");
+                specs.push(TensorSpec {
+                    name: format!("{p}.w"),
+                    shape: vec![3, 3, ch, w],
+                    kind: "conv_w".into(),
+                    layer,
+                });
+                specs.push(TensorSpec {
+                    name: format!("{p}.b"),
+                    shape: vec![w],
+                    kind: "bias".into(),
+                    layer: -1,
+                });
+                specs.push(TensorSpec {
+                    name: format!("{p}.bn_gamma"),
+                    shape: vec![w],
+                    kind: "bn_gamma".into(),
+                    layer: -1,
+                });
+                specs.push(TensorSpec {
+                    name: format!("{p}.bn_beta"),
+                    shape: vec![w],
+                    kind: "bn_beta".into(),
+                    layer: -1,
+                });
+                ch = w;
+                layer += 1;
+            }
+        }
+        let hw = self.input_hw >> self.blocks.len();
+        let mut feat = ch * hw * hw;
+        for (di, &w) in self.dense.iter().enumerate() {
+            let p = format!("dense{di}");
+            specs.push(TensorSpec {
+                name: format!("{p}.w"),
+                shape: vec![feat, w],
+                kind: "dense_w".into(),
+                layer,
+            });
+            specs.push(TensorSpec {
+                name: format!("{p}.b"),
+                shape: vec![w],
+                kind: "bias".into(),
+                layer: -1,
+            });
+            specs.push(TensorSpec {
+                name: format!("{p}.bn_gamma"),
+                shape: vec![w],
+                kind: "bn_gamma".into(),
+                layer: -1,
+            });
+            specs.push(TensorSpec {
+                name: format!("{p}.bn_beta"),
+                shape: vec![w],
+                kind: "bn_beta".into(),
+                layer: -1,
+            });
+            feat = w;
+            layer += 1;
+        }
+        specs.push(TensorSpec {
+            name: "classifier.w".into(),
+            shape: vec![feat, self.num_classes],
+            kind: "dense_w".into(),
+            layer,
+        });
+        specs.push(TensorSpec {
+            name: "classifier.b".into(),
+            shape: vec![self.num_classes],
+            kind: "bias".into(),
+            layer: -1,
+        });
+        specs
+    }
+
+    /// BN running statistics, forward order.
+    fn state_specs(&self) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for (bi, widths) in self.blocks.iter().enumerate() {
+            for (ci, &w) in widths.iter().enumerate() {
+                for stat in ["bn_mean", "bn_var"] {
+                    specs.push(TensorSpec {
+                        name: format!("conv{bi}_{ci}.{stat}"),
+                        shape: vec![w],
+                        kind: "state".into(),
+                        layer: -1,
+                    });
+                }
+            }
+        }
+        for (di, &w) in self.dense.iter().enumerate() {
+            for stat in ["bn_mean", "bn_var"] {
+                specs.push(TensorSpec {
+                    name: format!("dense{di}.{stat}"),
+                    shape: vec![w],
+                    kind: "state".into(),
+                    layer: -1,
+                });
+            }
+        }
+        specs
+    }
+
+    /// The backend-agnostic model description for this preset.
+    pub fn backend_model(&self) -> BackendModel {
+        BackendModel {
+            preset: self.name.clone(),
+            batch: self.batch,
+            eval_batch: self.eval_batch,
+            input_hw: self.input_hw,
+            in_ch: self.in_ch,
+            num_classes: self.num_classes,
+            params: self.param_specs(),
+            state: self.state_specs(),
+        }
+    }
+}
+
+/// Saved forward context of one GEMM layer (conv or dense).
+struct GemmTape {
+    /// Left GEMM operand (im2col patches / dense input), `[rows, kin]`.
+    input: Vec<f32>,
+    /// The (possibly error-injected) weight matrix used, `[kin, kout]`.
+    wq: Vec<f32>,
+    /// Gaussian weight-injection factors `1 + sigma*eps` (scale the
+    /// weight gradient too — the custom-VJP semantics).
+    factors: Option<Vec<f32>>,
+    bn: Option<BnCache>,
+    /// Post-ReLU output (mask source); `None` for the classifier.
+    relu_out: Option<Vec<f32>>,
+    rows: usize,
+    kin: usize,
+    kout: usize,
+    /// Param index of the weight tensor (`+1` bias, `+2/+3` BN scale).
+    pw: usize,
+    /// `(hw, cin)` for conv layers (col2im geometry), `None` for dense.
+    conv_geom: Option<(usize, usize)>,
+}
+
+/// Full forward tape of one training step.
+struct Forward {
+    logits: Vec<f32>,
+    conv_tapes: Vec<GemmTape>,
+    dense_tapes: Vec<GemmTape>,
+    cls_tape: GemmTape,
+    /// Per block: (argmax indices, pre-pool length).
+    pools: Vec<(Vec<u32>, usize)>,
+    /// Per block: post-pool dropout factors, if dropout is on.
+    conv_drops: Vec<Option<Vec<f32>>>,
+    dense_drop: Option<Vec<f32>>,
+    /// Updated BN running stats, state order.
+    new_state: Vec<Vec<f32>>,
+}
+
+/// The native execution backend bound to one preset + multiplier spec.
+pub struct NativeBackend {
+    cfg: NativeConfig,
+    model: BackendModel,
+    spec: MultSpec,
+    /// Built product-level design (bit-accurate specs only).
+    design: Option<Box<dyn Multiplier>>,
+}
+
+impl NativeBackend {
+    /// Build a backend for `preset` training under `spec`.
+    pub fn new(preset: &str, spec: MultSpec) -> Result<Self> {
+        let cfg = NativeConfig::preset(preset)?;
+        let design = match &spec {
+            MultSpec::Design { .. } => {
+                Some(spec.build().context("building multiplier design")?)
+            }
+            _ => None,
+        };
+        let model = cfg.backend_model();
+        Ok(NativeBackend { cfg, model, spec, design })
+    }
+
+    /// The multiplier spec this backend trains with.
+    pub fn spec(&self) -> &MultSpec {
+        &self.spec
+    }
+
+    /// Active GEMM multiplier and weight-injection sigma for one step.
+    fn step_mode(&self, k: StepInputs) -> (&dyn Multiplier, f32) {
+        if !k.approx {
+            return (&EXACT_MULT, 0.0);
+        }
+        match &self.design {
+            Some(d) => (d.as_ref(), 0.0),
+            None => (&EXACT_MULT, k.sigma),
+        }
+    }
+
+    /// Weight-level Gaussian injection: `wq = w * (1 + sigma*eps)` from
+    /// the `(seed_err, layer)` Threefry stream — the exact field the
+    /// compiled graphs inject.
+    fn inject(
+        w: &[f32],
+        sigma: f32,
+        seed_err: u32,
+        stream: u32,
+    ) -> (Vec<f32>, Option<Vec<f32>>) {
+        if sigma == 0.0 {
+            return (w.to_vec(), None);
+        }
+        let eps = counter_normal(seed_err, stream, 0, w.len());
+        let factors: Vec<f32> = eps.iter().map(|&e| 1.0 + sigma * e).collect();
+        let wq = w.iter().zip(&factors).map(|(&v, &f)| v * f).collect();
+        (wq, Some(factors))
+    }
+
+    /// Train-mode forward pass, recording the tape the backward needs.
+    fn forward_train(
+        &self,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        x: &[f32],
+        n: usize,
+        k: StepInputs,
+    ) -> Result<Forward> {
+        let (gemm, sigma) = self.step_mode(k);
+        let cfg = &self.cfg;
+        let mom = cfg.bn_momentum;
+        let mut new_state: Vec<Vec<f32>> = state.to_vec();
+
+        let mut h = x.to_vec();
+        let mut hw = cfg.input_hw;
+        let mut ch = cfg.in_ch;
+        let mut pi = 0usize;
+        let mut si = 0usize;
+        let mut layer_id = 0u32;
+
+        let mut conv_tapes = Vec::new();
+        let mut pools = Vec::new();
+        let mut conv_drops = Vec::new();
+
+        for (bi, widths) in cfg.blocks.iter().enumerate() {
+            for &width in widths {
+                let rows = n * hw * hw;
+                let kin = 9 * ch;
+                let patches = layers::im2col(&h, n, hw, ch);
+                let (wq, factors) =
+                    Self::inject(&params[pi], sigma, k.seed_err, layer_id);
+                let mut z = approx_matmul(gemm, &patches, &wq, rows, kin, width)?;
+                let b = &params[pi + 1];
+                for r in 0..rows {
+                    for c in 0..width {
+                        z[r * width + c] += b[c];
+                    }
+                }
+                let (mut out, bn) = layers::bn_train(
+                    &z,
+                    rows,
+                    width,
+                    &params[pi + 2],
+                    &params[pi + 3],
+                    cfg.bn_eps,
+                );
+                for (run, batch) in new_state[si].iter_mut().zip(&bn.mean) {
+                    *run = mom * *run + (1.0 - mom) * batch;
+                }
+                for (run, batch) in new_state[si + 1].iter_mut().zip(&bn.var) {
+                    *run = mom * *run + (1.0 - mom) * batch;
+                }
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                h = out;
+                conv_tapes.push(GemmTape {
+                    input: patches,
+                    wq,
+                    factors,
+                    bn: Some(bn),
+                    relu_out: Some(h.clone()),
+                    rows,
+                    kin,
+                    kout: width,
+                    pw: pi,
+                    conv_geom: Some((hw, ch)),
+                });
+                pi += 4;
+                si += 2;
+                layer_id += 1;
+                ch = width;
+            }
+            let in_len = h.len();
+            let (pooled, idx) = layers::maxpool2(&h, n, hw, ch);
+            h = pooled;
+            hw /= 2;
+            pools.push((idx, in_len));
+            if cfg.dropout_conv > 0.0 {
+                let mask = layers::dropout_mask(
+                    h.len(),
+                    1.0 - cfg.dropout_conv,
+                    k.seed_drop,
+                    DROP_STREAM_OFFSET + bi as u32,
+                );
+                for (v, &m) in h.iter_mut().zip(&mask) {
+                    *v *= m;
+                }
+                conv_drops.push(Some(mask));
+            } else {
+                conv_drops.push(None);
+            }
+        }
+
+        let mut feat = hw * hw * ch;
+        let mut dense_tapes = Vec::new();
+        for &width in &cfg.dense {
+            let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
+            let mut z = approx_matmul(gemm, &h, &wq, n, feat, width)?;
+            let b = &params[pi + 1];
+            for r in 0..n {
+                for c in 0..width {
+                    z[r * width + c] += b[c];
+                }
+            }
+            let (mut out, bn) = layers::bn_train(
+                &z,
+                n,
+                width,
+                &params[pi + 2],
+                &params[pi + 3],
+                cfg.bn_eps,
+            );
+            for (run, batch) in new_state[si].iter_mut().zip(&bn.mean) {
+                *run = mom * *run + (1.0 - mom) * batch;
+            }
+            for (run, batch) in new_state[si + 1].iter_mut().zip(&bn.var) {
+                *run = mom * *run + (1.0 - mom) * batch;
+            }
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let input = std::mem::replace(&mut h, out);
+            dense_tapes.push(GemmTape {
+                input,
+                wq,
+                factors,
+                bn: Some(bn),
+                relu_out: Some(h.clone()),
+                rows: n,
+                kin: feat,
+                kout: width,
+                pw: pi,
+                conv_geom: None,
+            });
+            pi += 4;
+            si += 2;
+            layer_id += 1;
+            feat = width;
+        }
+
+        let dense_drop = if cfg.dropout_dense > 0.0 {
+            let mask = layers::dropout_mask(
+                h.len(),
+                1.0 - cfg.dropout_dense,
+                k.seed_drop,
+                DROP_STREAM_OFFSET + 99,
+            );
+            for (v, &m) in h.iter_mut().zip(&mask) {
+                *v *= m;
+            }
+            Some(mask)
+        } else {
+            None
+        };
+
+        let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
+        let mut logits =
+            approx_matmul(gemm, &h, &wq, n, feat, cfg.num_classes)?;
+        let b = &params[pi + 1];
+        for r in 0..n {
+            for c in 0..cfg.num_classes {
+                logits[r * cfg.num_classes + c] += b[c];
+            }
+        }
+        let cls_tape = GemmTape {
+            input: h,
+            wq,
+            factors,
+            bn: None,
+            relu_out: None,
+            rows: n,
+            kin: feat,
+            kout: cfg.num_classes,
+            pw: pi,
+            conv_geom: None,
+        };
+
+        Ok(Forward {
+            logits,
+            conv_tapes,
+            dense_tapes,
+            cls_tape,
+            pools,
+            conv_drops,
+            dense_drop,
+            new_state,
+        })
+    }
+
+    /// Backward through one GEMM+bias layer: accumulates `dW`/`db` into
+    /// `grads` and returns the gradient w.r.t. the layer input. Both
+    /// backward GEMMs run on the *same* multiplier as the forward pass
+    /// — an approximate MAC array is approximate in backprop too.
+    fn gemm_backward(
+        gemm: &dyn Multiplier,
+        tape: &GemmTape,
+        dz: &[f32],
+        grads: &mut [Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        {
+            let gb = &mut grads[tape.pw + 1];
+            for r in 0..tape.rows {
+                for c in 0..tape.kout {
+                    gb[c] += dz[r * tape.kout + c];
+                }
+            }
+        }
+        // dW = inputᵀ · dz, through the transposed-operand GEMM.
+        let mut dw =
+            approx_matmul_tn(gemm, &tape.input, dz, tape.kin, tape.rows, tape.kout)?;
+        if let Some(f) = &tape.factors {
+            for (g, &fa) in dw.iter_mut().zip(f) {
+                *g *= fa;
+            }
+        }
+        {
+            let gw = &mut grads[tape.pw];
+            for (g, &d) in gw.iter_mut().zip(&dw) {
+                *g += d;
+            }
+        }
+        // dInput = dz · wqᵀ.
+        approx_matmul_nt(gemm, dz, &tape.wq, tape.rows, tape.kout, tape.kin)
+    }
+
+    /// Backward through ReLU + BN of one taped layer.
+    fn block_backward(
+        tape: &GemmTape,
+        mut dh: Vec<f32>,
+        params: &[Vec<f32>],
+        grads: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        if let Some(out) = &tape.relu_out {
+            for (g, &o) in dh.iter_mut().zip(out) {
+                if o <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        if let Some(bn) = &tape.bn {
+            let (dx, dgamma, dbeta) = layers::bn_train_back(
+                &dh,
+                bn,
+                &params[tape.pw + 2],
+                tape.rows,
+                tape.kout,
+            );
+            for (g, d) in grads[tape.pw + 2].iter_mut().zip(&dgamma) {
+                *g += d;
+            }
+            for (g, d) in grads[tape.pw + 3].iter_mut().zip(&dbeta) {
+                *g += d;
+            }
+            return dx;
+        }
+        dh
+    }
+
+    /// Full backward pass: parameter gradients of `ce + wd*L2`.
+    fn backward(
+        &self,
+        fwd: &Forward,
+        dlogits: Vec<f32>,
+        params: &[Vec<f32>],
+        k: StepInputs,
+        n: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (gemm, _) = self.step_mode(k);
+        let cfg = &self.cfg;
+        let mut grads: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0f32; p.len()]).collect();
+
+        let mut dh = Self::gemm_backward(gemm, &fwd.cls_tape, &dlogits, &mut grads)?;
+        if let Some(mask) = &fwd.dense_drop {
+            for (g, &m) in dh.iter_mut().zip(mask) {
+                *g *= m;
+            }
+        }
+        for tape in fwd.dense_tapes.iter().rev() {
+            let dz = Self::block_backward(tape, dh, params, &mut grads);
+            dh = Self::gemm_backward(gemm, tape, &dz, &mut grads)?;
+        }
+
+        // Walk conv blocks in reverse; conv_tapes is flat in forward
+        // order, so track the per-block slice boundaries.
+        let mut tape_end = fwd.conv_tapes.len();
+        for bi in (0..cfg.blocks.len()).rev() {
+            if let Some(mask) = &fwd.conv_drops[bi] {
+                for (g, &m) in dh.iter_mut().zip(mask) {
+                    *g *= m;
+                }
+            }
+            let (idx, in_len) = &fwd.pools[bi];
+            dh = layers::maxpool2_back(&dh, idx, *in_len);
+            let tape_start = tape_end - cfg.blocks[bi].len();
+            for tape in fwd.conv_tapes[tape_start..tape_end].iter().rev() {
+                let dz = Self::block_backward(tape, dh, params, &mut grads);
+                let dpatches = Self::gemm_backward(gemm, tape, &dz, &mut grads)?;
+                let (hw, cin) = tape.conv_geom.expect("conv tape geometry");
+                dh = layers::col2im(&dpatches, n, hw, cin);
+            }
+            tape_end = tape_start;
+        }
+
+        // L2 weight decay on conv/dense weights (raw weights, matching
+        // the Keras kernel_regularizer semantics).
+        let wd = cfg.weight_decay;
+        if wd > 0.0 {
+            for (spec, (g, p)) in self
+                .model
+                .params
+                .iter()
+                .zip(grads.iter_mut().zip(params))
+            {
+                if spec.kind == "conv_w" || spec.kind == "dense_w" {
+                    for (gv, &pv) in g.iter_mut().zip(p) {
+                        *gv += 2.0 * wd * pv;
+                    }
+                }
+            }
+        }
+        Ok(grads)
+    }
+
+    /// Eval-mode forward (running BN stats, exact multipliers, no
+    /// dropout) — logits only.
+    fn forward_eval(
+        &self,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        x: &[f32],
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        let gemm: &dyn Multiplier = &EXACT_MULT;
+        let cfg = &self.cfg;
+        let mut h = x.to_vec();
+        let mut hw = cfg.input_hw;
+        let mut ch = cfg.in_ch;
+        let mut pi = 0usize;
+        let mut si = 0usize;
+
+        for widths in &cfg.blocks {
+            for &width in widths {
+                let rows = n * hw * hw;
+                let kin = 9 * ch;
+                let patches = layers::im2col(&h, n, hw, ch);
+                let mut z = approx_matmul(gemm, &patches, &params[pi], rows, kin, width)?;
+                let b = &params[pi + 1];
+                for r in 0..rows {
+                    for c in 0..width {
+                        z[r * width + c] += b[c];
+                    }
+                }
+                let mut out = layers::bn_eval(
+                    &z,
+                    rows,
+                    width,
+                    &params[pi + 2],
+                    &params[pi + 3],
+                    &state[si],
+                    &state[si + 1],
+                    cfg.bn_eps,
+                );
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                h = out;
+                pi += 4;
+                si += 2;
+                ch = width;
+            }
+            let (pooled, _) = layers::maxpool2(&h, n, hw, ch);
+            h = pooled;
+            hw /= 2;
+        }
+
+        let mut feat = hw * hw * ch;
+        for &width in &cfg.dense {
+            let mut z = approx_matmul(gemm, &h, &params[pi], n, feat, width)?;
+            let b = &params[pi + 1];
+            for r in 0..n {
+                for c in 0..width {
+                    z[r * width + c] += b[c];
+                }
+            }
+            let mut out = layers::bn_eval(
+                &z,
+                n,
+                width,
+                &params[pi + 2],
+                &params[pi + 3],
+                &state[si],
+                &state[si + 1],
+                cfg.bn_eps,
+            );
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            h = out;
+            pi += 4;
+            si += 2;
+            feat = width;
+        }
+
+        let mut logits =
+            approx_matmul(gemm, &h, &params[pi], n, feat, cfg.num_classes)?;
+        let b = &params[pi + 1];
+        for r in 0..n {
+            for c in 0..cfg.num_classes {
+                logits[r * cfg.num_classes + c] += b[c];
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Total train-mode loss (`CE + wd*L2`) at the given state — the
+    /// finite-difference gradient-check hook (`tests/native_backend.rs`);
+    /// mutates nothing.
+    pub fn total_loss(
+        &self,
+        tensors: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        k: StepInputs,
+    ) -> Result<f64> {
+        let n_p = self.model.params.len();
+        let n_s = self.model.state.len();
+        let params = to_vecs(&tensors[..n_p])?;
+        let state = to_vecs(&tensors[n_p..n_p + n_s])?;
+        let xs = x.as_f32()?;
+        let ys = y.as_i32()?;
+        let n = self.cfg.batch;
+        check_labels(&ys, n, self.cfg.num_classes)?;
+        let fwd = self.forward_train(&params, &state, &xs, n, k)?;
+        let (ce, _, _) =
+            layers::softmax_ce_grad(&fwd.logits, &ys, n, self.cfg.num_classes);
+        let mut l2 = 0f64;
+        for (spec, p) in self.model.params.iter().zip(&params) {
+            if spec.kind == "conv_w" || spec.kind == "dense_w" {
+                l2 += p.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
+            }
+        }
+        Ok(ce as f64 + self.cfg.weight_decay as f64 * l2)
+    }
+}
+
+/// Extract f32 buffers from a tensor slice.
+fn to_vecs(tensors: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+    tensors.iter().map(|t| t.as_f32()).collect()
+}
+
+/// Label-batch validation: the loss kernels index `logits[.., y[r]]`
+/// directly, so a short batch or out-of-range class id must surface as
+/// an error here, not an index panic.
+fn check_labels(ys: &[i32], n: usize, num_classes: usize) -> Result<()> {
+    if ys.len() != n {
+        bail!("y has {} labels, expected {n}", ys.len());
+    }
+    if let Some(&bad) = ys.iter().find(|&&l| l < 0 || l as usize >= num_classes) {
+        bail!("label {bad} out of range 0..{num_classes}");
+    }
+    Ok(())
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn model(&self) -> &BackendModel {
+        &self.model
+    }
+
+    fn init(&self, seed: u32) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.model.n_tensors());
+        for (i, spec) in self.model.params.iter().enumerate() {
+            let n = spec.element_count();
+            let t = match spec.kind.as_str() {
+                // He-normal from the same init streams the Python-side
+                // init uses (2000+i, disjoint from error/dropout).
+                "conv_w" | "dense_w" => {
+                    let fan_in: usize =
+                        spec.shape[..spec.shape.len() - 1].iter().product();
+                    let std = (2.0 / fan_in as f64).sqrt() as f32;
+                    let z = counter_normal(seed, INIT_STREAM_OFFSET + i as u32, 0, n);
+                    Tensor::from_f32(&spec.shape, z.iter().map(|&v| v * std).collect())?
+                }
+                "bn_gamma" => Tensor::from_f32(&spec.shape, vec![1.0; n])?,
+                _ => Tensor::from_f32(&spec.shape, vec![0.0; n])?,
+            };
+            out.push(t);
+        }
+        for spec in &self.model.state {
+            let n = spec.element_count();
+            let fill = if spec.name.ends_with("bn_var") { 1.0 } else { 0.0 };
+            out.push(Tensor::from_f32(&spec.shape, vec![fill; n])?);
+        }
+        for spec in &self.model.params {
+            out.push(Tensor::from_f32(&spec.shape, vec![0.0; spec.element_count()])?);
+        }
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        tensors: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        k: StepInputs,
+    ) -> Result<(Vec<Tensor>, StepStats)> {
+        let n_p = self.model.params.len();
+        let n_s = self.model.state.len();
+        let params = to_vecs(&tensors[..n_p])?;
+        let state = to_vecs(&tensors[n_p..n_p + n_s])?;
+        let opt = to_vecs(&tensors[n_p + n_s..])?;
+        let xs = x.as_f32()?;
+        let ys = y.as_i32()?;
+        let n = self.cfg.batch;
+        check_labels(&ys, n, self.cfg.num_classes)?;
+
+        let fwd = self.forward_train(&params, &state, &xs, n, k)?;
+        let (ce, acc, dlogits) =
+            layers::softmax_ce_grad(&fwd.logits, &ys, n, self.cfg.num_classes);
+        let grads = self.backward(&fwd, dlogits, &params, k, n)?;
+
+        // SGD with momentum: v' = mom*v + g; p' = p - lr*v'.
+        let mom = self.cfg.sgd_momentum;
+        let mut out = Vec::with_capacity(tensors.len());
+        let mut new_opt: Vec<Vec<f32>> = Vec::with_capacity(n_p);
+        for (v, g) in opt.iter().zip(&grads) {
+            let nv: Vec<f32> =
+                v.iter().zip(g).map(|(&vv, &gv)| mom * vv + gv).collect();
+            new_opt.push(nv);
+        }
+        for (i, p) in params.iter().enumerate() {
+            let nv = &new_opt[i];
+            let data: Vec<f32> =
+                p.iter().zip(nv).map(|(&pv, &vv)| pv - k.lr * vv).collect();
+            out.push(Tensor::from_f32(tensors[i].shape(), data)?);
+        }
+        for (i, s) in fwd.new_state.iter().enumerate() {
+            out.push(Tensor::from_f32(tensors[n_p + i].shape(), s.clone())?);
+        }
+        for (i, v) in new_opt.into_iter().enumerate() {
+            out.push(Tensor::from_f32(tensors[n_p + n_s + i].shape(), v)?);
+        }
+        Ok((out, StepStats { loss: ce, accuracy: acc }))
+    }
+
+    fn eval_batch(
+        &self,
+        params_state: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<EvalStats> {
+        let n_p = self.model.params.len();
+        let params = to_vecs(&params_state[..n_p])?;
+        let state = to_vecs(&params_state[n_p..])?;
+        let xs = x.as_f32()?;
+        let ys = y.as_i32()?;
+        let elems = self.model.input_hw * self.model.input_hw * self.model.in_ch;
+        let n = xs.len() / elems;
+        check_labels(&ys, n, self.cfg.num_classes)?;
+        let logits = self.forward_eval(&params, &state, &xs, n)?;
+        let (loss_sum, correct) =
+            layers::softmax_ce_stats(&logits, &ys, n, self.cfg.num_classes);
+        Ok(EvalStats { loss_sum, correct, total: n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_declare_consistent_layouts() {
+        for name in ["micro", "tiny", "small", "vgg16"] {
+            let cfg = NativeConfig::preset(name).unwrap();
+            let model = cfg.backend_model();
+            // One (w, b, gamma, beta) quad per conv/dense layer plus the
+            // classifier pair; two running stats per BN layer.
+            let n_layers: usize =
+                cfg.blocks.iter().map(|b| b.len()).sum::<usize>() + cfg.dense.len();
+            assert_eq!(model.params.len(), 4 * n_layers + 2, "{name}");
+            assert_eq!(model.state.len(), 2 * n_layers, "{name}");
+            assert_eq!(model.tensor_names().len(), model.n_tensors(), "{name}");
+        }
+        assert!(NativeConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn tiny_matches_manifest_geometry() {
+        // The native `tiny` must agree with the artifact manifest's
+        // tiny (8x8 input, 2 blocks, 3914 params — the count the
+        // failure-injection test pins against the real manifest).
+        let model = NativeConfig::preset("tiny").unwrap().backend_model();
+        let total: usize = model.params.iter().map(|p| p.element_count()).sum();
+        assert_eq!(total, 3914);
+        assert_eq!(model.batch, 16);
+        assert_eq!(model.eval_batch, 64);
+        assert_eq!(model.params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(model.params.last().unwrap().shape, vec![10]);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let b = NativeBackend::new("micro", MultSpec::Exact).unwrap();
+        let t1 = b.init(7).unwrap();
+        let t2 = b.init(7).unwrap();
+        let t3 = b.init(8).unwrap();
+        assert_eq!(t1.len(), b.model().n_tensors());
+        for (a, c) in t1.iter().zip(&t2) {
+            assert_eq!(a, c);
+        }
+        assert!(t1.iter().zip(&t3).any(|(a, c)| a != c));
+        b.model().validate_tensors(&t1).unwrap();
+    }
+}

@@ -1,0 +1,98 @@
+//! [`PjrtBackend`]: the compiled-artifact execution path, extracted
+//! as-is from the pre-refactor `TrainSession` behind the [`Backend`]
+//! trait.
+//!
+//! Executables are `Arc`-held, so the backend is self-contained after
+//! construction; keep the [`Engine`] alive for the life of the backend
+//! all the same — the executables reference its PJRT client.
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, BackendModel};
+use super::engine::{Engine, Executable};
+use super::session::{EvalStats, StepInputs, StepStats};
+
+/// Compiled train/eval/init entry points for one preset.
+pub struct PjrtBackend {
+    model: BackendModel,
+    train: Executable,
+    eval: Executable,
+    init: Executable,
+}
+
+impl PjrtBackend {
+    /// Load (compiling on first use) the preset's three entry points.
+    pub fn new(engine: &Engine, preset: &str) -> Result<Self> {
+        let m = engine.manifest().model(preset)?;
+        Ok(PjrtBackend {
+            model: BackendModel::from_manifest(m),
+            train: engine.load(preset, "train")?,
+            eval: engine.load(preset, "eval")?,
+            init: engine.load(preset, "init")?,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model(&self) -> &BackendModel {
+        &self.model
+    }
+
+    fn init(&self, seed: u32) -> Result<Vec<Tensor>> {
+        self.init.run(&[Tensor::scalar_u32(seed)])
+    }
+
+    fn train_step(
+        &self,
+        tensors: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        k: StepInputs,
+    ) -> Result<(Vec<Tensor>, StepStats)> {
+        // Scalars live on the stack; state tensors are passed by
+        // reference — no per-step copy of the model state on the host
+        // side (EXPERIMENTS.md §Perf). The graphs encode the hybrid
+        // approximate/exact switch purely through sigma, so `k.approx`
+        // carries no extra information here.
+        let scalars = [
+            Tensor::scalar_u32(k.seed_err),
+            Tensor::scalar_u32(k.seed_drop),
+            Tensor::scalar_f32(if k.approx { k.sigma } else { 0.0 }),
+            Tensor::scalar_f32(k.lr),
+        ];
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(tensors.len() + 6);
+        inputs.extend(tensors.iter());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.extend(scalars.iter());
+
+        let mut outputs = self.train.run_refs(&inputs).context("train step")?;
+        let acc = outputs.pop().expect("acc output").scalar_as_f32()?;
+        let loss = outputs.pop().expect("loss output").scalar_as_f32()?;
+        Ok((outputs, StepStats { loss, accuracy: acc }))
+    }
+
+    fn eval_batch(
+        &self,
+        params_state: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<EvalStats> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(params_state.len() + 2);
+        inputs.extend(params_state.iter());
+        inputs.push(x);
+        inputs.push(y);
+        let outputs = self.eval.run_refs(&inputs).context("eval step")?;
+        Ok(EvalStats {
+            loss_sum: outputs[0].scalar_as_f32()?,
+            correct: outputs[1].scalar_as_i32()? as i64,
+            total: self.model.eval_batch,
+        })
+    }
+}

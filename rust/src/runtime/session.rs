@@ -1,16 +1,19 @@
-//! `TrainSession`: model + optimizer + BN state bound to compiled
-//! train/eval/init executables.
+//! `TrainSession`: model + optimizer + BN state threaded through a
+//! pluggable execution [`Backend`].
 //!
-//! The session owns the host copies of all stateful tensors and threads
-//! them through the positional train-step ABI. It exposes exactly the
-//! knobs the paper's procedures need per step: the error sigma, the
-//! error seed (fixed vs resampled), and the learning rate — so the
-//! coordinator's policies stay pure control logic.
+//! The session owns the host copies of all stateful tensors and the
+//! per-step knob ABI ([`StepInputs`]); *how* a step is computed is the
+//! backend's business ([`super::PjrtBackend`] for compiled XLA graphs,
+//! [`super::NativeBackend`] for the pure-Rust bit-accurate path). It
+//! exposes exactly the knobs the paper's procedures need per step — the
+//! error sigma/seed, the active-multiplier switch and the learning rate
+//! — so the coordinator's policies stay pure control logic.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use super::engine::{Engine, Executable};
-use super::manifest::ModelManifest;
+use super::backend::{Backend, BackendModel};
+use super::engine::Engine;
+use super::pjrt_backend::PjrtBackend;
 use crate::tensor::Tensor;
 
 /// Scalar knobs for one training step.
@@ -22,8 +25,15 @@ pub struct StepInputs {
     /// Dropout seed (always varied per step by the trainer).
     pub seed_drop: u32,
     /// Gaussian SD of the relative multiplier error; `0.0` = exact.
+    /// Only meaningful for the `gaussian:<sigma>` surrogate — the PJRT
+    /// graphs consume it as a runtime scalar.
     pub sigma: f32,
     pub lr: f32,
+    /// Whether the configured approximate multiplier is in force this
+    /// step (`false` = exact phase of a hybrid schedule). The native
+    /// backend switches its GEMM design on this; the PJRT graphs encode
+    /// the same switch through `sigma`.
+    pub approx: bool,
 }
 
 /// Outcome of one step.
@@ -43,98 +53,69 @@ pub struct EvalStats {
     pub total: usize,
 }
 
-/// Training-state container bound to one preset's executables.
+/// Training-state container bound to one backend instance.
 pub struct TrainSession {
-    preset: String,
-    train: Executable,
-    eval: Executable,
-    n_params: usize,
-    n_state: usize,
-    batch: usize,
-    eval_batch: usize,
-    input_elems: usize,
-    eval_input_elems: usize,
+    backend: Box<dyn Backend>,
     /// params ++ state ++ opt, manifest order.
     tensors: Vec<Tensor>,
     steps_run: u64,
 }
 
 impl TrainSession {
-    /// Create a session with freshly initialized (seeded) model state by
-    /// running the compiled `init` graph — init happens *in XLA*, so a
-    /// Rust-driven run reproduces the Python-side init bit-for-bit.
+    /// PJRT-backed session (compiled artifacts) with freshly
+    /// initialized state — init runs *in XLA*, so a Rust-driven run
+    /// reproduces the Python-side init bit-for-bit.
     pub fn new(engine: &Engine, preset: &str, seed: u32) -> Result<Self> {
-        let model = engine.manifest().model(preset)?;
-        let init = engine.load(preset, "init")?;
-        let tensors = init.run(&[Tensor::scalar_u32(seed)])?;
-        Self::from_tensors(engine, preset, tensors, model)
+        Self::with_backend(Box::new(PjrtBackend::new(engine, preset)?), seed)
     }
 
-    /// Restore a session from checkpointed tensors (params++state++opt).
+    /// Session over an arbitrary backend with freshly initialized state.
+    pub fn with_backend(backend: Box<dyn Backend>, seed: u32) -> Result<Self> {
+        let tensors = backend.init(seed)?;
+        backend.model().validate_tensors(&tensors)?;
+        Ok(TrainSession { backend, tensors, steps_run: 0 })
+    }
+
+    /// Restore a PJRT session from checkpointed tensors
+    /// (params++state++opt).
     pub fn from_checkpoint(
         engine: &Engine,
         preset: &str,
         tensors: Vec<Tensor>,
     ) -> Result<Self> {
-        let model = engine.manifest().model(preset)?;
-        Self::from_tensors(engine, preset, tensors, model)
+        Self::with_backend_tensors(Box::new(PjrtBackend::new(engine, preset)?), tensors)
     }
 
-    fn from_tensors(
-        engine: &Engine,
-        preset: &str,
+    /// Restore a session over an arbitrary backend from checkpointed
+    /// tensors.
+    pub fn with_backend_tensors(
+        backend: Box<dyn Backend>,
         tensors: Vec<Tensor>,
-        model: &ModelManifest,
     ) -> Result<Self> {
-        let n_params = model.params.len();
-        let n_state = model.state.len();
-        if tensors.len() != 2 * n_params + n_state {
-            bail!(
-                "{preset}: state vector has {} tensors, expected {}",
-                tensors.len(),
-                2 * n_params + n_state
-            );
-        }
-        for (t, spec) in tensors.iter().zip(
-            model.params.iter().chain(model.state.iter()).chain(model.params.iter()),
-        ) {
-            if t.shape() != spec.shape.as_slice() {
-                bail!(
-                    "{preset}: tensor {} shape {:?} != manifest {:?}",
-                    spec.name,
-                    t.shape(),
-                    spec.shape
-                );
-            }
-        }
-        let train = engine.load(preset, "train")?;
-        let eval = engine.load(preset, "eval")?;
-        let hw = model.input_hw;
-        Ok(TrainSession {
-            preset: preset.to_string(),
-            train,
-            eval,
-            n_params,
-            n_state,
-            batch: model.batch,
-            eval_batch: model.eval_batch,
-            input_elems: model.batch * hw * hw * model.in_ch,
-            eval_input_elems: model.eval_batch * hw * hw * model.in_ch,
-            tensors,
-            steps_run: 0,
-        })
+        backend.model().validate_tensors(&tensors)?;
+        Ok(TrainSession { backend, tensors, steps_run: 0 })
     }
 
     pub fn preset(&self) -> &str {
-        &self.preset
+        &self.backend.model().preset
+    }
+
+    /// Which backend is executing: `"pjrt"` or `"native"`.
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind()
+    }
+
+    /// The backend-agnostic model description.
+    pub fn model(&self) -> &BackendModel {
+        self.backend.model()
     }
 
     pub fn batch_size(&self) -> usize {
-        self.batch
+        self.backend.model().batch
     }
 
     pub fn eval_batch_size(&self) -> usize {
-        self.eval_batch
+        self.backend.model().eval_batch
     }
 
     pub fn steps_run(&self) -> u64 {
@@ -148,69 +129,49 @@ impl TrainSession {
 
     /// Model parameters only.
     pub fn params(&self) -> &[Tensor] {
-        &self.tensors[..self.n_params]
+        &self.tensors[..self.backend.model().params.len()]
     }
 
     /// One SGD step on a minibatch.
     ///
     /// `x` must be `[batch, hw, hw, c]` f32, `y` `[batch]` i32.
     pub fn step(&mut self, x: Tensor, y: Tensor, k: StepInputs) -> Result<StepStats> {
-        if x.len() != self.input_elems {
+        let model = self.backend.model();
+        if x.len() != model.input_elems() {
             bail!(
                 "{}: x has {} elements, expected {}",
-                self.preset,
+                model.preset,
                 x.len(),
-                self.input_elems
+                model.input_elems()
             );
         }
-        // Scalars live on the stack; state tensors are passed by
-        // reference — no per-step copy of the model state on the host
-        // side (EXPERIMENTS.md §Perf).
-        let scalars = [
-            Tensor::scalar_u32(k.seed_err),
-            Tensor::scalar_u32(k.seed_drop),
-            Tensor::scalar_f32(k.sigma),
-            Tensor::scalar_f32(k.lr),
-        ];
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.tensors.len() + 6);
-        inputs.extend(self.tensors.iter());
-        inputs.push(&x);
-        inputs.push(&y);
-        inputs.extend(scalars.iter());
-
-        let mut outputs = self.train.run_refs(&inputs).context("train step")?;
-        let acc = outputs.pop().expect("acc output").scalar_as_f32()?;
-        let loss = outputs.pop().expect("loss output").scalar_as_f32()?;
-        if !loss.is_finite() {
-            bail!("{}: non-finite loss at step {}", self.preset, self.steps_run);
+        let (tensors, stats) = self.backend.train_step(&self.tensors, &x, &y, k)?;
+        if !stats.loss.is_finite() {
+            bail!(
+                "{}: non-finite loss at step {}",
+                self.backend.model().preset,
+                self.steps_run
+            );
         }
-        self.tensors = outputs;
+        self.tensors = tensors;
         self.steps_run += 1;
-        Ok(StepStats { loss, accuracy: acc })
+        Ok(stats)
     }
 
     /// Evaluate one batch with exact multipliers (error layers removed,
     /// matching the paper's test procedure).
     pub fn eval_batch(&self, x: Tensor, y: Tensor) -> Result<EvalStats> {
-        if x.len() != self.eval_input_elems {
+        let model = self.backend.model();
+        if x.len() != model.eval_input_elems() {
             bail!(
                 "{}: eval x has {} elements, expected {}",
-                self.preset,
+                model.preset,
                 x.len(),
-                self.eval_input_elems
+                model.eval_input_elems()
             );
         }
-        let mut inputs: Vec<&Tensor> =
-            Vec::with_capacity(self.n_params + self.n_state + 2);
-        inputs.extend(self.tensors[..self.n_params + self.n_state].iter());
-        inputs.push(&x);
-        inputs.push(&y);
-        let outputs = self.eval.run_refs(&inputs).context("eval step")?;
-        Ok(EvalStats {
-            loss_sum: outputs[0].scalar_as_f32()?,
-            correct: outputs[1].scalar_as_i32()? as i64,
-            total: self.eval_batch,
-        })
+        let n = model.params.len() + model.state.len();
+        self.backend.eval_batch(&self.tensors[..n], &x, &y)
     }
 
     /// Replace the full state vector (used by checkpoint restore-in-place).

@@ -1,0 +1,365 @@
+//! Integration: end-to-end CNN training on the native backend — no
+//! PJRT, no artifacts, every GEMM through `mult::approx_matmul`.
+//!
+//! Covers the backend-split acceptance contract:
+//! * a 2-epoch run on the tiny preset completes and the loss decreases;
+//! * a `HybridSearch` over a native run produces a Table-III-shaped row;
+//! * gradients check against finite differences on the `micro` preset;
+//! * training is bit-identical at any thread count;
+//! * `lut12:drum6` trains bit-identically to `drum6` (the PR-1 LUT
+//!   fidelity contract, now at training scale);
+//! * checkpoints round-trip the full multiplier spec.
+
+use approxmul::checkpoint::Store;
+use approxmul::config::{ExperimentConfig, MultiplierPolicy};
+use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
+use approxmul::data::SyntheticCifar;
+use approxmul::mult::{approx_matmul, by_name, MultSpec};
+use approxmul::parallel;
+use approxmul::rng::Xoshiro256;
+use approxmul::runtime::session::StepInputs;
+use approxmul::runtime::{Backend, NativeBackend};
+
+fn native_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_tiny();
+    cfg.epochs = 2;
+    cfg.train_examples = 256;
+    cfg.test_examples = 128;
+    cfg.tag = tag.into();
+    cfg
+}
+
+fn policy(spec: &str) -> MultiplierPolicy {
+    MultiplierPolicy::Approximate { mult: MultSpec::parse(spec).unwrap() }
+}
+
+#[test]
+fn two_epoch_tiny_run_completes_and_learns() {
+    let mut trainer = Trainer::native(native_cfg("nat-learn")).unwrap();
+    assert_eq!(trainer.session().backend_kind(), "native");
+    let outcome = trainer.run().unwrap();
+    assert_eq!(outcome.epochs_run, 2);
+    let first = outcome.history.records.first().unwrap().train_loss;
+    let last = outcome.history.records.last().unwrap().train_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(
+        outcome.final_accuracy > 0.2,
+        "accuracy {:.3} barely above chance",
+        outcome.final_accuracy
+    );
+}
+
+#[test]
+fn bit_accurate_designs_train_and_differ_from_exact() {
+    let mut cfg = native_cfg("nat-exact");
+    cfg.epochs = 1;
+    let exact = Trainer::native(cfg).unwrap().run().unwrap();
+
+    for spec in ["drum6", "mitchell"] {
+        let mut cfg = native_cfg(&format!("nat-{spec}"));
+        cfg.epochs = 1;
+        cfg.policy = policy(spec);
+        let outcome = Trainer::native(cfg).unwrap().run().unwrap();
+        let loss = outcome.history.records[0].train_loss;
+        assert!(loss.is_finite(), "{spec}: loss {loss}");
+        assert_ne!(
+            loss, exact.history.records[0].train_loss,
+            "{spec}: approximate GEMMs had no effect on training"
+        );
+    }
+}
+
+#[test]
+fn gaussian_weight_injection_matches_policy_semantics() {
+    // Same seed, gaussian surrogate vs exact: must differ while the
+    // error is active; sampling mode must matter.
+    let mut cfg = native_cfg("nat-g");
+    cfg.epochs = 1;
+    cfg.policy = policy("gaussian:0.2");
+    let g = Trainer::native(cfg).unwrap().run().unwrap();
+    let mut cfg = native_cfg("nat-g0");
+    cfg.epochs = 1;
+    let e = Trainer::native(cfg).unwrap().run().unwrap();
+    assert_ne!(g.history.records[0].train_loss, e.history.records[0].train_loss);
+
+    let mut cfg_step = native_cfg("nat-gs");
+    cfg_step.epochs = 1;
+    cfg_step.policy = policy("gaussian:0.2");
+    cfg_step.sampling = approxmul::config::ErrorSampling::PerStep;
+    let s = Trainer::native(cfg_step).unwrap().run().unwrap();
+    assert_ne!(
+        s.history.records[0].train_loss,
+        g.history.records[0].train_loss,
+        "per-step resampling had no effect"
+    );
+}
+
+#[test]
+fn training_is_bit_identical_across_thread_counts() {
+    // approx_matmul splits work by the problem, never the worker count;
+    // everything else is sequential — so whole *training runs* must be
+    // bit-reproducible under any parallelism, for the exact design
+    // (native exact GEMM == `mult::approx_matmul` with `Exact`) and a
+    // bit-accurate design alike.
+    let run = |threads: usize, spec: &str, tag: &str| {
+        parallel::set_max_threads(threads);
+        let mut cfg = native_cfg(tag);
+        cfg.epochs = 1;
+        cfg.policy = policy(spec);
+        let trainer_out = Trainer::native(cfg).unwrap().run().unwrap();
+        parallel::set_max_threads(0);
+        trainer_out
+    };
+    for spec in ["exact", "drum6"] {
+        let one = run(1, spec, "nat-t1");
+        let many = run(4, spec, "nat-t4");
+        for (a, b) in one.history.records.iter().zip(&many.history.records) {
+            assert_eq!(
+                a.train_loss, b.train_loss,
+                "{spec}: thread count changed training"
+            );
+            assert_eq!(a.test_acc, b.test_acc, "{spec}");
+        }
+    }
+}
+
+#[test]
+fn identical_native_configs_reproduce_exactly() {
+    let a = Trainer::native(native_cfg("nat-rep")).unwrap().run().unwrap();
+    let b = Trainer::native(native_cfg("nat-rep")).unwrap().run().unwrap();
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.train_loss, rb.train_loss);
+        assert_eq!(ra.test_acc, rb.test_acc);
+    }
+}
+
+#[test]
+fn lut12_drum6_training_is_bit_identical_to_drum6() {
+    // DRUM-6 through a 12-bit LUT is bit-identical for every operand
+    // the mantissa pipeline produces (k=6 < 12, the PR-1 fidelity
+    // contract) — so whole training runs must match bit for bit.
+    let run = |spec: &str| {
+        let mut cfg = ExperimentConfig::preset_tiny();
+        cfg.preset = "micro".into();
+        cfg.epochs = 1;
+        cfg.train_examples = 64;
+        cfg.test_examples = 16;
+        cfg.tag = format!("nat-lut-{}", spec.replace(':', "_"));
+        cfg.policy = policy(spec);
+        let mut trainer = Trainer::native(cfg).unwrap();
+        let outcome = trainer.run().unwrap();
+        let params: Vec<Vec<f32>> = trainer
+            .session()
+            .params()
+            .iter()
+            .map(|t| t.as_f32().unwrap())
+            .collect();
+        (outcome, params)
+    };
+    let (out_d, params_d) = run("drum6");
+    let (out_l, params_l) = run("lut12:drum6");
+    for (a, b) in out_d.history.records.iter().zip(&out_l.history.records) {
+        assert_eq!(a.train_loss, b.train_loss, "LUT diverged from wrapped design");
+        assert_eq!(a.test_acc, b.test_acc);
+    }
+    assert_eq!(params_d, params_l, "final parameters diverged");
+}
+
+#[test]
+fn lut12_drum6_gemm_is_bit_identical_to_drum6() {
+    // The same identity at the GEMM level (the PR-1 harness shape,
+    // on mantissa operands produced from random f32 matrices).
+    let drum = by_name("drum6").unwrap();
+    let lut = by_name("lut12:drum6").unwrap();
+    let mut rng = Xoshiro256::new(77);
+    let a: Vec<f32> = (0..24 * 32).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let b: Vec<f32> = (0..32 * 12).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let c_d = approx_matmul(drum.as_ref(), &a, &b, 24, 32, 12).unwrap();
+    let c_l = approx_matmul(lut.as_ref(), &a, &b, 24, 32, 12).unwrap();
+    assert_eq!(c_d, c_l);
+}
+
+#[test]
+fn native_gradients_match_finite_differences() {
+    // Exact mode on the micro preset: analytic gradients (recovered
+    // from one SGD step at lr=1 with zero momentum state) vs central
+    // finite differences of the total loss (CE + weight decay).
+    let backend = NativeBackend::new("micro", MultSpec::Exact).unwrap();
+    let tensors = backend.init(5).unwrap();
+    let model = backend.model().clone();
+    let ds = SyntheticCifar::for_input(4, 3, 4, 11).generate(8);
+    let (x, y) = ds.gather_batch(&[0, 1, 2, 3]).unwrap();
+    let k = StepInputs { seed_err: 3, seed_drop: 9, sigma: 0.0, lr: 1.0, approx: false };
+
+    let (stepped, _) = backend.train_step(&tensors, &x, &y, k).unwrap();
+    let n_params = model.params.len();
+
+    // Compare at every sampled element; tolerate a tiny fraction of
+    // mismatches (a ±h perturbation can flip a ReLU/pool decision,
+    // which legitimately breaks the FD approximation at that point) —
+    // a wrong backward would fail broadly, not at isolated kinks.
+    let mut checked = 0usize;
+    let mut failures = Vec::new();
+    let mut abs_err_sum = 0f64;
+    let mut mag_sum = 0f64;
+    for ti in 0..n_params {
+        let p0 = tensors[ti].as_f32().unwrap();
+        let p1 = stepped[ti].as_f32().unwrap();
+        // g = (p - p') / lr with lr = 1 and fresh (zero) momentum.
+        let grad: Vec<f64> =
+            p0.iter().zip(&p1).map(|(&a, &b)| a as f64 - b as f64).collect();
+        // A few spread-out elements per tensor.
+        let len = p0.len();
+        for &i in &[0usize, len / 3, (2 * len) / 3, len - 1] {
+            let h = 1e-2f32;
+            let perturb = |delta: f32| -> f64 {
+                let mut t = tensors.clone();
+                let mut data = t[ti].as_f32().unwrap();
+                data[i] += delta;
+                t[ti] = approxmul::tensor::Tensor::from_f32(
+                    tensors[ti].shape(),
+                    data,
+                )
+                .unwrap();
+                backend.total_loss(&t, &x, &y, k).unwrap()
+            };
+            let fd = (perturb(h) - perturb(-h)) / (2.0 * h as f64);
+            let g = grad[i];
+            let tol = 0.05 * fd.abs().max(g.abs()) + 2e-3;
+            if (fd - g).abs() > tol {
+                failures.push(format!(
+                    "tensor {} elem {i}: fd {fd:.6} vs analytic {g:.6}",
+                    model.params[ti].name
+                ));
+            }
+            abs_err_sum += (fd - g).abs();
+            mag_sum += fd.abs() + g.abs();
+            checked += 1;
+        }
+    }
+    assert!(checked >= 4 * n_params, "only {checked} gradient entries checked");
+    assert!(
+        failures.len() * 20 <= checked,
+        "{} / {checked} gradient entries off:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+    let rel = abs_err_sum / mag_sum.max(1e-9);
+    assert!(rel < 0.05, "aggregate gradient mismatch {rel:.4}");
+}
+
+#[test]
+fn hybrid_search_native_produces_table3_row() {
+    let dir = std::env::temp_dir().join(format!("axm-nat-hs-{}", std::process::id()));
+    let mut cfg = native_cfg("nat-hs");
+    cfg.epochs = 3;
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    let mut search = HybridSearch::native(cfg);
+    search.tolerance = 0.02;
+
+    let baseline = search.baseline().unwrap();
+    assert!(baseline.final_accuracy > 0.2);
+
+    // A destructive error level: the search must find that some exact
+    // tail is needed (utilization < 100%) or prove the full run passes.
+    let config = MultSpec::gaussian(0.48);
+    let (approx, tag) = search.approx_run(&config).unwrap();
+    let outcome = search
+        .search(&config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .unwrap();
+    // The Table-III row shape: approx + exact epochs partition the
+    // schedule; utilization is their ratio.
+    assert_eq!(outcome.approx_epochs + outcome.exact_epochs, 3);
+    assert!((0.0..=1.0).contains(&outcome.utilization));
+    assert_eq!(
+        outcome.utilization,
+        outcome.approx_epochs as f64 / 3.0
+    );
+    assert_eq!(outcome.config.canonical(), "gaussian:0.48");
+    if approx.final_accuracy < outcome.target {
+        assert!(outcome.exact_epochs >= 1, "destructive error needs a tail");
+        assert!(outcome.evaluations >= 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hybrid_search_native_over_bit_accurate_design() {
+    // The headline capability: a Table-III row for an actual hardware
+    // design, end to end, with checkpoints carrying the spec.
+    let dir = std::env::temp_dir().join(format!("axm-nat-hsd-{}", std::process::id()));
+    let mut cfg = native_cfg("nat-hsd");
+    cfg.epochs = 2;
+    cfg.train_examples = 128;
+    cfg.test_examples = 64;
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    let mut search = HybridSearch::native(cfg);
+    search.tolerance = 0.05; // generous: tiny-scale noise
+
+    let baseline = search.baseline().unwrap();
+    let config = MultSpec::parse("drum6").unwrap();
+    let (approx, tag) = search.approx_run(&config).unwrap();
+    // The checkpointed approx run recorded the design's identity.
+    let store = Store::new(&dir).unwrap();
+    let (meta, _) = store.load(&tag, 1).unwrap();
+    assert_eq!(meta.mult, "drum6");
+    assert_eq!(meta.sigma, 0.0); // operand-dependent error, no sigma
+
+    let outcome = search
+        .search(&config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .unwrap();
+    assert_eq!(outcome.approx_epochs + outcome.exact_epochs, 2);
+    assert_eq!(outcome.config.canonical(), "drum6");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_sweep_orders_rows_and_baselines() {
+    let mut cfg = native_cfg("nat-sw");
+    cfg.epochs = 1;
+    cfg.train_examples = 128;
+    cfg.test_examples = 64;
+    let cases = vec![
+        (0, MultSpec::exact(), 93.60),
+        (8, MultSpec::gaussian_mre(0.382), 65.65),
+    ];
+    let sweep = Sweep::native(cfg);
+    let mut seen = Vec::new();
+    let rows = sweep.run(&cases, |id, _| seen.push(id)).unwrap();
+    assert_eq!(seen, vec![0, 8]);
+    assert_eq!(rows[0].diff_from_exact, 0.0);
+    for r in &rows {
+        assert!((0.0..=1.0).contains(&r.accuracy));
+    }
+}
+
+#[test]
+fn native_checkpoint_resume_replays_run() {
+    // The property the hybrid search depends on, now on the native
+    // backend: resuming epoch k replays the full run bit-exactly.
+    let dir = std::env::temp_dir().join(format!("axm-nat-res-{}", std::process::id()));
+    let mut cfg = native_cfg("nat-res");
+    cfg.epochs = 3;
+    cfg.train_examples = 128;
+    cfg.test_examples = 64;
+    cfg.out_dir = dir.to_str().unwrap().to_string();
+    cfg.checkpoint_every = 1;
+    cfg.policy = policy("drum6");
+    let full = Trainer::native(cfg.clone()).unwrap().run().unwrap();
+
+    let store = Store::new(&dir).unwrap();
+    let (meta, tensors) = store.load("nat-res", 2).unwrap();
+    assert_eq!(meta.epoch, 2);
+    assert_eq!(meta.mult, "drum6");
+    let mut resumed = Trainer::native(cfg).unwrap();
+    resumed
+        .restore_state(tensors.into_iter().map(|(_, t)| t).collect())
+        .unwrap();
+    let tail = resumed.run_from(2, None).unwrap();
+    assert_eq!(tail.history.records.len(), 1);
+    let r_full = &full.history.records[2];
+    let r_tail = &tail.history.records[0];
+    assert_eq!(r_full.train_loss, r_tail.train_loss);
+    assert_eq!(r_full.test_acc, r_tail.test_acc);
+    std::fs::remove_dir_all(&dir).ok();
+}

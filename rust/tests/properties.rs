@@ -6,9 +6,9 @@ use approxmul::checkpoint;
 use approxmul::config::{LrSchedule, MultiplierPolicy};
 use approxmul::costmodel::{CostModel, HwDesign};
 use approxmul::data::SyntheticCifar;
-use approxmul::error_model::{mre_to_sigma, sigma_to_mre, ErrorConfig, ErrorMatrix};
+use approxmul::error_model::{mre_to_sigma, sigma_to_mre, ErrorMatrix};
 use approxmul::json::Value;
-use approxmul::mult::{Drum, Exact, Mitchell, Multiplier, Truncation};
+use approxmul::mult::{Drum, Exact, Mitchell, MultSpec, Multiplier, Truncation};
 use approxmul::tensor::Tensor;
 use approxmul::testkit::{forall, Gen};
 
@@ -101,6 +101,7 @@ fn prop_checkpoint_roundtrip_random_tensors() {
             epoch: g.usize_in(0, 1000) as u64,
             step: 5,
             sigma: g.f64_in(0.0, 0.5),
+            mult: "drum6".into(),
             tag: "prop".into(),
         };
         let bytes = checkpoint::to_bytes(&meta, &pairs);
@@ -122,6 +123,7 @@ fn prop_checkpoint_bitflip_always_detected() {
             epoch: 1,
             step: 1,
             sigma: 0.0,
+            mult: "exact".into(),
             tag: "flip".into(),
         };
         let mut bytes = checkpoint::to_bytes(&meta, &[("t".into(), &t)]);
@@ -154,7 +156,7 @@ fn prop_policy_utilization_bounds() {
         let total = g.usize_in(1, 500) as u64;
         let switch = g.usize_in(0, 500) as u64;
         let p = MultiplierPolicy::Hybrid {
-            error: ErrorConfig::from_sigma(0.05),
+            mult: MultSpec::gaussian(0.05),
             switch_epoch: switch,
         };
         let u = p.utilization(total);

@@ -6,6 +6,11 @@ use approxmul::runtime::session::StepInputs;
 use approxmul::runtime::{Engine, TrainSession};
 use approxmul::tensor::Tensor;
 
+/// StepInputs shorthand (`approx` tracks sigma, as the trainer does).
+fn knobs(seed_err: u32, seed_drop: u32, sigma: f32, lr: f32) -> StepInputs {
+    StepInputs { seed_err, seed_drop, sigma, lr, approx: sigma > 0.0 }
+}
+
 fn engine() -> Option<Engine> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -51,7 +56,7 @@ fn init_is_deterministic_in_seed() {
 fn step_is_deterministic_and_updates_params() {
     let Some(engine) = engine() else { return };
     let (x, y) = batch(&engine, "tiny", 1);
-    let k = StepInputs { seed_err: 5, seed_drop: 6, sigma: 0.1, lr: 0.05 };
+    let k = knobs(5, 6, 0.1, 0.05);
 
     let mut s1 = TrainSession::new(&engine, "tiny", 3).unwrap();
     let before = s1.params().to_vec();
@@ -79,10 +84,10 @@ fn sigma_zero_matches_between_error_seeds() {
     let mut a = TrainSession::new(&engine, "tiny", 4).unwrap();
     let mut b = TrainSession::new(&engine, "tiny", 4).unwrap();
     let ra = a
-        .step(x.clone(), y.clone(), StepInputs { seed_err: 1, seed_drop: 9, sigma: 0.0, lr: 0.05 })
+        .step(x.clone(), y.clone(), knobs(1, 9, 0.0, 0.05))
         .unwrap();
     let rb = b
-        .step(x, y, StepInputs { seed_err: 999, seed_drop: 9, sigma: 0.0, lr: 0.05 })
+        .step(x, y, knobs(999, 9, 0.0, 0.05))
         .unwrap();
     assert_eq!(ra.loss, rb.loss);
     for (ta, tb) in a.params().iter().zip(b.params()) {
@@ -96,9 +101,9 @@ fn sigma_changes_trajectory() {
     let (x, y) = batch(&engine, "tiny", 3);
     let mut a = TrainSession::new(&engine, "tiny", 5).unwrap();
     let mut b = TrainSession::new(&engine, "tiny", 5).unwrap();
-    a.step(x.clone(), y.clone(), StepInputs { seed_err: 1, seed_drop: 2, sigma: 0.0, lr: 0.05 })
+    a.step(x.clone(), y.clone(), knobs(1, 2, 0.0, 0.05))
         .unwrap();
-    b.step(x, y, StepInputs { seed_err: 1, seed_drop: 2, sigma: 0.3, lr: 0.05 })
+    b.step(x, y, knobs(1, 2, 0.3, 0.05))
         .unwrap();
     assert!(a.params().iter().zip(b.params()).any(|(ta, tb)| ta != tb));
 }
@@ -128,7 +133,7 @@ fn shape_validation_rejects_bad_inputs() {
     let bad_x = Tensor::from_f32(&[1, 2, 2, 3], vec![0.0; 12]).unwrap();
     let y = Tensor::from_i32(&[16], vec![0; 16]).unwrap();
     assert!(s
-        .step(bad_x, y, StepInputs { seed_err: 0, seed_drop: 0, sigma: 0.0, lr: 0.1 })
+        .step(bad_x, y, knobs(0, 0, 0.0, 0.1))
         .is_err());
 }
 
@@ -138,7 +143,7 @@ fn product_preset_runs() {
     let (x, y) = batch(&engine, "tiny_product", 4);
     let mut s = TrainSession::new(&engine, "tiny_product", 2).unwrap();
     let r = s
-        .step(x, y, StepInputs { seed_err: 3, seed_drop: 4, sigma: 0.1, lr: 0.05 })
+        .step(x, y, knobs(3, 4, 0.1, 0.05))
         .unwrap();
     assert!(r.loss.is_finite());
 }
@@ -149,12 +154,12 @@ fn restore_roundtrip() {
     let (x, y) = batch(&engine, "tiny", 5);
     let mut s = TrainSession::new(&engine, "tiny", 9).unwrap();
     let snapshot = s.state_tensors().to_vec();
-    s.step(x.clone(), y.clone(), StepInputs { seed_err: 1, seed_drop: 1, sigma: 0.0, lr: 0.1 })
+    s.step(x.clone(), y.clone(), knobs(1, 1, 0.0, 0.1))
         .unwrap();
     let after_one = s.state_tensors().to_vec();
     // Rewind and replay: identical result.
     s.restore(snapshot).unwrap();
-    s.step(x, y, StepInputs { seed_err: 1, seed_drop: 1, sigma: 0.0, lr: 0.1 })
+    s.step(x, y, knobs(1, 1, 0.0, 0.1))
         .unwrap();
     for (a, b) in s.state_tensors().iter().zip(&after_one) {
         assert_eq!(a, b);

@@ -4,7 +4,7 @@
 
 use approxmul::config::ExperimentConfig;
 use approxmul::coordinator::{HybridSearch, Sweep};
-use approxmul::error_model::ErrorConfig;
+use approxmul::mult::MultSpec;
 use approxmul::runtime::Engine;
 
 fn engine() -> Option<Engine> {
@@ -28,9 +28,9 @@ fn mini_cfg(tag: &str) -> ExperimentConfig {
 fn sweep_produces_comparable_rows() {
     let Some(engine) = engine() else { return };
     let cases = vec![
-        (0, ErrorConfig::exact(), 93.60),
-        (4, ErrorConfig::from_mre(0.036), 93.23),
-        (8, ErrorConfig::from_mre(0.382), 65.65),
+        (0, MultSpec::exact(), 93.60),
+        (4, MultSpec::gaussian_mre(0.036), 93.23),
+        (8, MultSpec::gaussian_mre(0.382), 65.65),
     ];
     let sweep = Sweep::new(&engine, mini_cfg("sw"));
     let mut seen = Vec::new();
@@ -68,10 +68,10 @@ fn hybrid_search_full_procedure() {
 
     // A destructive error level: the search must find that some exact
     // tail is needed (utilization < 100%) or prove the full run passes.
-    let config = ErrorConfig::from_sigma(0.48);
-    let (approx, tag) = search.approx_run(config).unwrap();
+    let config = MultSpec::gaussian(0.48);
+    let (approx, tag) = search.approx_run(&config).unwrap();
     let outcome = search
-        .search(config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .search(&config, baseline.final_accuracy, &tag, approx.final_accuracy)
         .unwrap();
     assert_eq!(outcome.approx_epochs + outcome.exact_epochs, 3);
     assert!((0.0..=1.0).contains(&outcome.utilization));
@@ -92,10 +92,10 @@ fn benign_error_needs_no_tail() {
     search.tolerance = 0.05; // generous: tiny-scale noise
 
     let baseline = search.baseline().unwrap();
-    let config = ErrorConfig::from_sigma(0.018); // DRUM-6 level
-    let (approx, tag) = search.approx_run(config).unwrap();
+    let config = MultSpec::gaussian(0.018); // DRUM-6 level
+    let (approx, tag) = search.approx_run(&config).unwrap();
     let outcome = search
-        .search(config, baseline.final_accuracy, &tag, approx.final_accuracy)
+        .search(&config, baseline.final_accuracy, &tag, approx.final_accuracy)
         .unwrap();
     // Paper row 1: benign error -> full utilization.
     if approx.final_accuracy >= outcome.target {

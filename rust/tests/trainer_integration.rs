@@ -6,7 +6,7 @@
 use approxmul::checkpoint::Store;
 use approxmul::config::{ExperimentConfig, MultiplierPolicy};
 use approxmul::coordinator::Trainer;
-use approxmul::error_model::ErrorConfig;
+use approxmul::mult::MultSpec;
 use approxmul::runtime::Engine;
 
 fn engine() -> Option<Engine> {
@@ -48,7 +48,7 @@ fn hybrid_policy_switches_sigma() {
     let Some(engine) = engine() else { return };
     let mut cfg = quick_cfg("hybrid");
     cfg.policy = MultiplierPolicy::Hybrid {
-        error: ErrorConfig::from_sigma(0.1),
+        mult: MultSpec::gaussian(0.1),
         switch_epoch: 2,
     };
     let mut trainer = Trainer::new(&engine, cfg).unwrap();
@@ -108,7 +108,7 @@ fn per_step_sampling_differs_from_fixed() {
     let Some(engine) = engine() else { return };
     let mut cfg_fixed = quick_cfg("samp-f");
     cfg_fixed.policy =
-        MultiplierPolicy::Approximate { error: ErrorConfig::from_sigma(0.2) };
+        MultiplierPolicy::Approximate { mult: MultSpec::gaussian(0.2) };
     let mut cfg_step = cfg_fixed.clone();
     cfg_step.tag = "samp-s".into();
     cfg_step.sampling = approxmul::config::ErrorSampling::PerStep;
