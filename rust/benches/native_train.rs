@@ -1,10 +1,11 @@
 //! Bench: native-backend train-step throughput per multiplier design —
 //! exact vs the Gaussian surrogate vs bit-accurate DRUM-6 vs its
-//! LUT-accelerated backend. Quantifies what simulating a hardware
-//! design costs relative to exact training, and how much of that the
-//! ApproxTrain-style LUT claws back. Emits `BENCH_native_train.json`
+//! LUT-accelerated backend, on the `tiny` and `small` presets.
+//! Quantifies what simulating a hardware design costs relative to
+//! exact training, and how much the decompose-once prepared GEMM and
+//! the ApproxTrain-style LUT claw back. Emits `BENCH_native_train.json`
 //! via the benchkit JSON helpers so the perf trajectory is tracked
-//! across PRs. `cargo bench native_train`.
+//! across PRs (see BENCH_history.md). `cargo bench native_train`.
 
 use approxmul::benchkit::{fmt_dur, save_json, Bench};
 use approxmul::data::SyntheticCifar;
@@ -13,70 +14,84 @@ use approxmul::mult::MultSpec;
 use approxmul::runtime::session::StepInputs;
 use approxmul::runtime::{Backend, NativeBackend, TrainSession};
 
-const PRESET: &str = "tiny";
+/// (preset, specs, warmup, samples) — the `small` preset is the
+/// speed-target workload (ROADMAP: interactive-speed native training),
+/// benched with fewer samples because one step is large.
+const CASES: &[(&str, &[&str], usize, usize)] = &[
+    ("tiny", &["exact", "gaussian:0.045", "drum6", "lut12:drum6"], 2, 10),
+    ("small", &["exact", "drum6"], 1, 3),
+];
 
 fn main() -> anyhow::Result<()> {
-    let specs = ["exact", "gaussian:0.045", "drum6", "lut12:drum6"];
     let mut json_rows: Vec<Value> = Vec::new();
-    println!("# native train-step throughput ({PRESET} preset)\n");
+    println!("# native train-step throughput\n");
     let mut t = approxmul::report::Table::new(&[
-        "design", "step median", "steps/s", "vs exact",
+        "preset", "design", "step median", "steps/s", "samples/s", "vs exact",
     ]);
-    let mut exact_median = None;
 
-    for spec_str in specs {
-        let spec = MultSpec::parse(spec_str)?;
-        let approx = !spec.is_exact();
-        let sigma = spec.sigma() as f32;
-        let backend = NativeBackend::new(PRESET, spec)?;
-        let model = backend.model().clone();
-        let mut session = TrainSession::with_backend(Box::new(backend), 42)?;
+    for &(preset, specs, warmup, samples) in CASES {
+        let mut exact_median = None;
+        for &spec_str in specs {
+            let spec = MultSpec::parse(spec_str)?;
+            let approx = !spec.is_exact();
+            let sigma = spec.sigma() as f32;
+            let backend = NativeBackend::new(preset, spec)?;
+            let model = backend.model().clone();
+            let mut session = TrainSession::with_backend(Box::new(backend), 42)?;
 
-        let mut ds = SyntheticCifar::for_input(
-            model.input_hw,
-            model.in_ch,
-            model.num_classes,
-            7,
-        )
-        .generate(model.batch);
-        ds.normalize();
-        let (x, y) = ds.gather_batch(&(0..model.batch).collect::<Vec<_>>())?;
+            let mut ds = SyntheticCifar::for_input(
+                model.input_hw,
+                model.in_ch,
+                model.num_classes,
+                7,
+            )
+            .generate(model.batch);
+            ds.normalize();
+            let (x, y) = ds.gather_batch(&(0..model.batch).collect::<Vec<_>>())?;
 
-        let mut bench = Bench::new(2, 10);
-        let mut step = 0u32;
-        bench.run(&format!("{spec_str} train step"), || {
-            step += 1;
-            let s = session
-                .step(
-                    x.clone(),
-                    y.clone(),
-                    StepInputs {
-                        seed_err: 1,
-                        seed_drop: step,
-                        sigma,
-                        lr: 0.01,
-                        approx,
-                    },
-                )
-                .unwrap();
-            std::hint::black_box(s.loss);
-        });
-        let median = bench.results()[0].median();
-        let steps_per_s = 1.0 / median.as_secs_f64().max(1e-12);
-        let base = *exact_median.get_or_insert(median);
-        t.row(vec![
-            spec_str.to_string(),
-            fmt_dur(median),
-            format!("{steps_per_s:.2}"),
-            format!("{:.2}x", median.as_secs_f64() / base.as_secs_f64().max(1e-12)),
-        ]);
-        json_rows.push(object([
-            ("design", Value::from(spec_str)),
-            ("preset", Value::from(PRESET)),
-            ("median_step_ms", (median.as_secs_f64() * 1e3).into()),
-            ("steps_per_s", steps_per_s.into()),
-            ("batch", model.batch.into()),
-        ]));
+            let mut bench = Bench::new(warmup, samples);
+            let mut step = 0u32;
+            bench.run(&format!("{preset}/{spec_str} train step"), || {
+                step += 1;
+                let s = session
+                    .step(
+                        x.clone(),
+                        y.clone(),
+                        StepInputs {
+                            seed_err: 1,
+                            seed_drop: step,
+                            sigma,
+                            lr: 0.01,
+                            approx,
+                        },
+                    )
+                    .unwrap();
+                std::hint::black_box(s.loss);
+            });
+            let median = bench.results().last().unwrap().median();
+            let steps_per_s = 1.0 / median.as_secs_f64().max(1e-12);
+            let samples_per_s = steps_per_s * model.batch as f64;
+            let base = *exact_median.get_or_insert(median);
+            t.row(vec![
+                preset.to_string(),
+                spec_str.to_string(),
+                fmt_dur(median),
+                format!("{steps_per_s:.2}"),
+                format!("{samples_per_s:.1}"),
+                format!(
+                    "{:.2}x",
+                    median.as_secs_f64() / base.as_secs_f64().max(1e-12)
+                ),
+            ]);
+            json_rows.push(object([
+                ("design", Value::from(spec_str)),
+                ("preset", Value::from(preset)),
+                ("median_step_ms", (median.as_secs_f64() * 1e3).into()),
+                ("steps_per_s", steps_per_s.into()),
+                ("samples_per_s", samples_per_s.into()),
+                ("batch", model.batch.into()),
+            ]));
+        }
     }
     print!("{}", t.to_markdown());
 

@@ -21,7 +21,7 @@ use crate::config::{ErrorSampling, ExecBackend, ExperimentConfig};
 use crate::data::augment::Augment;
 use crate::data::batcher::{Batcher, EvalBatcher};
 use crate::data::{Dataset, SyntheticCifar};
-use crate::metrics::{EpochRecord, History, Mean};
+use crate::metrics::{EpochRecord, History};
 use crate::mult::MultSpec;
 use crate::rng::{counter_split, STREAM_DROP, STREAM_ERR, STREAM_INIT};
 use crate::runtime::session::StepInputs;
@@ -116,8 +116,12 @@ impl Trainer {
             Some((train_ds, test_ds)) => {
                 train_ds.check()?;
                 test_ds.check()?;
+                // Static-shape graphs can only pad the final eval batch
+                // by repeating examples, which skews the metrics;
+                // dynamic-batch backends evaluate it unpadded instead.
                 anyhow::ensure!(
-                    test_ds.len() % model.eval_batch == 0,
+                    session.supports_dynamic_batch()
+                        || test_ds.len() % model.eval_batch == 0,
                     "test set ({}) must be a multiple of eval batch ({})",
                     test_ds.len(),
                     model.eval_batch
@@ -163,14 +167,25 @@ impl Trainer {
     }
 
     /// Exact-multiplier accuracy on the held-out set (paper protocol).
+    ///
+    /// Runs through one [`TrainSession::eval_pass`], so per-pass setup
+    /// (the native backend's weight-plane decomposition) happens once
+    /// for the whole set, not once per batch. Dynamic-batch backends
+    /// evaluate the final short batch directly instead of padding it
+    /// with copied examples.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let mut eb = EvalBatcher::new(&self.test_ds, self.session.eval_batch_size());
+        let pass = self.session.eval_pass()?;
+        let batch = self.session.eval_batch_size();
+        let mut eb = if self.session.supports_dynamic_batch() {
+            EvalBatcher::unpadded(&self.test_ds, batch)
+        } else {
+            EvalBatcher::new(&self.test_ds, batch)
+        };
         let mut correct = 0i64;
         let mut loss_sum = 0f64;
         let mut total = 0usize;
         while let Some((x, y, t)) = eb.next()? {
-            debug_assert_eq!(t, self.session.eval_batch_size());
-            let s = self.session.eval_batch(x, y)?;
+            let s = pass.eval_batch(x, y)?;
             correct += s.correct;
             loss_sum += s.loss_sum as f64;
             total += t;
@@ -192,20 +207,33 @@ impl Trainer {
         let mut best_epoch = 0u64;
         let augment = if self.cfg.augment { Augment::default() } else { Augment::none() };
         let batch = self.session.batch_size();
-        let steps_per_epoch = (self.train_ds.len() / batch) as u64;
+        // Dynamic-batch backends train the final short batch instead of
+        // dropping it; static-shape graphs keep the drop-last behavior.
+        let drop_last = !self.session.supports_dynamic_batch();
+        let steps_per_epoch = if drop_last {
+            (self.train_ds.len() / batch) as u64
+        } else {
+            self.train_ds.len().div_ceil(batch) as u64
+        };
 
         for epoch in resume_from..self.cfg.epochs {
             let epoch_started = Instant::now();
             let approx = self.cfg.policy.active_at(epoch);
             let sigma = self.cfg.policy.sigma_at(epoch) as f32;
             let lr = self.cfg.lr.at_epoch(epoch) as f32;
-            let mut loss_mean = Mean::default();
-            let mut acc_mean = Mean::default();
+            // Per-example weighting: with drop_last off, the short
+            // final batch must not count as a full batch in the epoch
+            // means.
+            let mut loss_sum = 0f64;
+            let mut acc_sum = 0f64;
+            let mut seen = 0usize;
 
             let mut batcher =
-                Batcher::new(&self.train_ds, batch, self.cfg.seed, epoch, augment);
+                Batcher::new(&self.train_ds, batch, self.cfg.seed, epoch, augment)
+                    .with_drop_last(drop_last);
             let mut step_in_epoch = 0u64;
             while let Some((x, y)) = batcher.next()? {
+                let batch_n = y.len();
                 let global_step = epoch * steps_per_epoch + step_in_epoch;
                 let seed_err = match self.cfg.sampling {
                     // Fixed per run: the paper's Figure-3 procedure.
@@ -224,16 +252,18 @@ impl Trainer {
                     y,
                     StepInputs { seed_err, seed_drop, sigma, lr, approx },
                 )?;
-                loss_mean.add(stats.loss as f64);
-                acc_mean.add(stats.accuracy as f64);
+                loss_sum += stats.loss as f64 * batch_n as f64;
+                acc_sum += stats.accuracy as f64 * batch_n as f64;
+                seen += batch_n;
                 step_in_epoch += 1;
             }
 
             let (test_acc, test_loss) = self.evaluate()?;
+            let denom = seen.max(1) as f64;
             let record = EpochRecord {
                 epoch,
-                train_loss: loss_mean.get(),
-                train_acc: acc_mean.get(),
+                train_loss: loss_sum / denom,
+                train_acc: acc_sum / denom,
                 test_acc,
                 test_loss,
                 sigma: sigma as f64,

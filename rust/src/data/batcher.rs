@@ -26,7 +26,9 @@ pub struct Batcher<'a> {
 }
 
 impl<'a> Batcher<'a> {
-    /// Batcher for `epoch` of run `seed`.
+    /// Batcher for `epoch` of run `seed`. Drops the final short batch
+    /// by default (the static-shape compiled graphs need full batches);
+    /// see [`Batcher::with_drop_last`].
     pub fn new(
         ds: &'a Dataset,
         batch: usize,
@@ -40,9 +42,23 @@ impl<'a> Batcher<'a> {
         Batcher { ds, order, batch, cursor: 0, augment, rng, drop_last: true }
     }
 
-    /// Number of full batches this epoch will yield.
+    /// Choose whether the final short batch is yielded (`false`) or
+    /// dropped (`true`, the default). The native backend has no
+    /// static-shape constraint, so it can train on every example of an
+    /// epoch whose size is not a multiple of the batch size.
+    pub fn with_drop_last(mut self, drop_last: bool) -> Self {
+        self.drop_last = drop_last;
+        self
+    }
+
+    /// Number of batches this epoch will yield (counts the final short
+    /// batch when `drop_last` is off).
     pub fn batches_per_epoch(&self) -> usize {
-        self.ds.len() / self.batch
+        if self.drop_last {
+            self.ds.len() / self.batch
+        } else {
+            self.ds.len().div_ceil(self.batch)
+        }
     }
 
     /// Next `[batch, hw, hw, c]` / `[batch]` pair, or `None` at epoch end.
@@ -78,22 +94,32 @@ impl<'a> Batcher<'a> {
     }
 }
 
-/// Iterate a full dataset in fixed-size eval batches, padding the last
-/// batch by repeating example 0 (the pad contribution is subtracted by
-/// the caller via the returned true-count).
+/// Iterate a full dataset in fixed-size eval batches. For static-shape
+/// consumers the last batch is padded by repeating example 0 (the pad
+/// contribution is subtracted by the caller via the returned
+/// true-count); dynamic-batch consumers use [`EvalBatcher::unpadded`]
+/// and get the short final batch as-is — no copied pad examples, and
+/// no pad rows silently counted into batch statistics.
 pub struct EvalBatcher<'a> {
     ds: &'a Dataset,
     batch: usize,
     cursor: usize,
+    pad: bool,
 }
 
 impl<'a> EvalBatcher<'a> {
     pub fn new(ds: &'a Dataset, batch: usize) -> Self {
-        EvalBatcher { ds, batch, cursor: 0 }
+        EvalBatcher { ds, batch, cursor: 0, pad: true }
     }
 
-    /// Next `(x, y, true_count)`: `true_count < batch` on the final padded
-    /// batch so metrics can ignore padding.
+    /// Batcher that yields the final short batch instead of padding it.
+    pub fn unpadded(ds: &'a Dataset, batch: usize) -> Self {
+        EvalBatcher { ds, batch, cursor: 0, pad: false }
+    }
+
+    /// Next `(x, y, true_count)`: `true_count < batch` on the final
+    /// batch so metrics can ignore padding (padded mode) — in unpadded
+    /// mode it always equals the yielded batch's size.
     #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> Result<Option<(Tensor, Tensor, usize)>> {
         if self.cursor >= self.ds.len() {
@@ -101,7 +127,9 @@ impl<'a> EvalBatcher<'a> {
         }
         let take = (self.ds.len() - self.cursor).min(self.batch);
         let mut idx: Vec<usize> = (self.cursor..self.cursor + take).collect();
-        idx.resize(self.batch, 0); // pad with example 0
+        if self.pad {
+            idx.resize(self.batch, 0); // pad with example 0
+        }
         self.cursor += take;
         let (x, y) = self.ds.gather_batch(&idx)?;
         Ok(Some((x, y, take)))
@@ -157,6 +185,58 @@ mod tests {
         // order field covered by construction (shuffle is a permutation);
         // see rng tests.
         let _ = &mut seen;
+    }
+
+    #[test]
+    fn keep_last_yields_short_final_batch() {
+        let ds = ds(); // 50 examples
+        let mut b = Batcher::new(&ds, 16, 7, 0, Augment::none()).with_drop_last(false);
+        assert_eq!(b.batches_per_epoch(), 4); // ceil(50/16)
+        let mut sizes = Vec::new();
+        let mut total = 0;
+        while let Some((x, y)) = b.next().unwrap() {
+            assert_eq!(x.shape()[1..], [8, 8, 3][..]);
+            assert_eq!(x.shape()[0], y.len());
+            sizes.push(y.len());
+            total += y.len();
+        }
+        assert_eq!(sizes, vec![16, 16, 16, 2]);
+        assert_eq!(total, 50); // every example of the epoch is seen
+    }
+
+    #[test]
+    fn drop_last_modes_agree_on_full_batches() {
+        // Same seed/epoch: the first full batches are identical in both
+        // modes — only the tail differs.
+        let ds = ds();
+        let mut keep = Batcher::new(&ds, 16, 9, 1, Augment::none()).with_drop_last(false);
+        let mut drop = Batcher::new(&ds, 16, 9, 1, Augment::none());
+        for _ in 0..3 {
+            let (xk, yk) = keep.next().unwrap().unwrap();
+            let (xd, yd) = drop.next().unwrap().unwrap();
+            assert_eq!(xk, xd);
+            assert_eq!(yk, yd);
+        }
+        assert!(drop.next().unwrap().is_none());
+        let (x, _) = keep.next().unwrap().unwrap();
+        assert_eq!(x.shape()[0], 2);
+        assert!(keep.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn eval_batcher_unpadded_yields_short_final() {
+        let ds = ds();
+        let mut b = EvalBatcher::unpadded(&ds, 16);
+        let mut trues = 0;
+        let mut shapes = Vec::new();
+        while let Some((x, y, t)) = b.next().unwrap() {
+            assert_eq!(x.shape()[0], y.len());
+            assert_eq!(y.len(), t);
+            shapes.push(x.shape()[0]);
+            trues += t;
+        }
+        assert_eq!(shapes, vec![16, 16, 16, 2]);
+        assert_eq!(trues, 50);
     }
 
     #[test]

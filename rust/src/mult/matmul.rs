@@ -5,28 +5,75 @@
 //! [`approx_matmul`] closes that gap: every scalar product in
 //! `C = A·B` is computed by decomposing the f32 operands into sign /
 //! exponent / 24-bit mantissa, running the mantissa product through a
-//! bit-accurate [`Multiplier`] (via the batched fast path, one
-//! `mul_batch` per output element's k-chain), renormalizing back to
-//! f32 (truncating ties like the hardware designs do), and accumulating
-//! in f32 in k-order — i.e. exactly what an approximate FP MAC array
-//! would produce. ApproxTrain (arXiv:2209.04161) calls the same
-//! construction `AMDNN`'s simulated GEMM.
+//! bit-accurate [`Multiplier`], renormalizing back to f32 (truncating
+//! ties like the hardware designs do), and accumulating in f32 in
+//! strict k-order — i.e. exactly what an approximate FP MAC array would
+//! produce. ApproxTrain (arXiv:2209.04161) calls the same construction
+//! `AMDNN`'s simulated GEMM.
 //!
-//! Parallel over output rows via [`crate::parallel::par_map`]; output
-//! elements are independent, so results are deterministic at any
-//! worker count.
+//! ## How the prepared GEMM works
+//!
+//! The kernel is built around [`PreparedMatrix`] (see
+//! [`super::prepared`]): each operand is decomposed **once per GEMM** —
+//! A into row-major `[rows × inner]` planes, B packed into
+//! column-major `[cols × inner]` panels — so the k-chain of every
+//! output element streams two contiguous plane slices instead of
+//! re-decomposing `rows × cols` times. On top of that the kernel is
+//! cache-blocked: output rows are split into [`gemm_row_block`]-row
+//! tasks (a pure function of the shape — input-derived, so results
+//! are identical at any worker count) and the j-loop walks
+//! [`GEMM_COL_BLOCK`]-column panels, reusing the A-row planes from L1
+//! and the packed B panel from L2 across the block. Each output
+//! element's mantissa products still go through one
+//! [`Multiplier::mul_batch`] call per k-chain (the monomorphized fast
+//! path), and the chain is reassembled **in k-order**: batch products
+//! and non-finite fallback terms are merged by their k index, so the
+//! f32 accumulation is bit-identical to a scalar [`approx_mul_f32`]
+//! walk of the same chain ([`approx_matmul_reference`] is that walk,
+//! kept as the property-test oracle).
+//!
+//! Callers with an epilogue (the native backend's bias-add and
+//! batch-norm statistics) use [`approx_matmul_prepared`] directly: the
+//! bias add and the per-channel output sums are fused into the output
+//! block loop instead of running as separate full-tensor passes. The
+//! per-channel sums are accumulated per row-block and merged in block
+//! order — deterministic and thread-count independent, because the
+//! block size is a pure function of the shape.
 //!
 //! Non-finite inputs fall back to the native f32 product; zeros and
 //! subnormals flush to (signed) zero, as the integer designs have no
-//! subnormal path.
+//! subnormal path. A flushed term contributes a signed zero to the
+//! chain, which f32 accumulation cannot distinguish from skipping it
+//! (the accumulator can never be `-0.0` mid-chain), so the kernel
+//! skips them.
 
 use anyhow::{bail, Result};
 
 use crate::parallel;
 use crate::rng::Xoshiro256;
 
+use super::prepared::{element_value, EXP_NONFINITE};
 use super::stats::Welford;
-use super::{ErrorStats, Exact, Multiplier};
+use super::{ErrorStats, Exact, Multiplier, PreparedMatrix};
+
+/// Upper bound on rows per parallel task of the blocked kernel.
+pub const GEMM_ROW_BLOCK: usize = 64;
+
+/// Row blocks a GEMM is split into when it has at least that many
+/// rows, so small-row GEMMs (dense layers: rows = batch) still
+/// parallelize instead of collapsing into one task.
+const GEMM_ROW_SPLIT: usize = 16;
+
+/// Columns per B-panel of the blocked kernel's j-loop.
+const GEMM_COL_BLOCK: usize = 48;
+
+/// Rows per parallel task for a `rows`-row GEMM — a pure function of
+/// the row count, **never** the worker count, so the per-block
+/// epilogue partials (and therefore whole training trajectories) are
+/// bit-identical at any thread count.
+pub fn gemm_row_block(rows: usize) -> usize {
+    rows.div_ceil(GEMM_ROW_SPLIT).clamp(1, GEMM_ROW_BLOCK)
+}
 
 /// Decompose a finite f32 into `(sign, biased exponent, 24-bit
 /// mantissa)`; `None` for zero/subnormal (flushed).
@@ -81,9 +128,175 @@ pub fn approx_mul_f32(m: &dyn Multiplier, x: f32, y: f32) -> f32 {
     }
 }
 
+/// Output of [`approx_matmul_prepared`].
+pub struct GemmOutput {
+    /// Row-major `[rows × cols]` product (bias already added when a
+    /// bias was fused).
+    pub out: Vec<f32>,
+    /// Per-column sums of the (biased) output, when requested — the
+    /// batch-norm mean epilogue, accumulated per row-block and merged
+    /// in block order.
+    pub col_sums: Option<Vec<f32>>,
+}
+
+/// The blocked decompose-once kernel: `C = A·B` over prepared planes,
+/// with optional fused epilogues.
+///
+/// * `a` — the left operand, `[rows × inner]` planes;
+/// * `b_packed` — the right operand packed column-major: plane row `j`
+///   holds B's column `j` as a contiguous length-`inner` panel;
+/// * `bias` — fused per-column bias add (`out[i,j] = acc + bias[j]`);
+/// * `with_col_sums` — fused per-column sums of the biased output.
+///
+/// Every output element is bit-identical to a scalar
+/// [`approx_mul_f32`] walk of its k-chain plus the bias add (pinned by
+/// [`approx_matmul_reference`] property tests), parallel over fixed
+/// row blocks, deterministic at any worker count.
+pub fn approx_matmul_prepared(
+    m: &dyn Multiplier,
+    a: &PreparedMatrix,
+    b_packed: &PreparedMatrix,
+    bias: Option<&[f32]>,
+    with_col_sums: bool,
+) -> Result<GemmOutput> {
+    let rows = a.rows();
+    let inner = a.cols();
+    let cols = b_packed.rows();
+    if b_packed.cols() != inner {
+        bail!(
+            "approx_matmul_prepared: A is [{rows}x{inner}] but packed B \
+             holds length-{} panels",
+            b_packed.cols()
+        );
+    }
+    if let Some(b) = bias {
+        if b.len() != cols {
+            bail!(
+                "approx_matmul_prepared: bias has {} entries for {cols} columns",
+                b.len()
+            );
+        }
+    }
+    if rows == 0 || cols == 0 {
+        return Ok(GemmOutput {
+            out: vec![0f32; rows * cols],
+            col_sums: with_col_sums.then(|| vec![0f32; cols]),
+        });
+    }
+
+    let threads = parallel::max_threads();
+    let block = gemm_row_block(rows);
+    let mut out = vec![0f32; rows * cols];
+    let partials: Vec<Option<Vec<f32>>> =
+        parallel::par_chunks_mut(&mut out, block * cols, threads, |bi, chunk| {
+            // Per-task staging for one k-chain: mantissa pairs, their
+            // products, the (sign, exponent-sum) of each batched term,
+            // its k index, and the non-finite fallback terms.
+            let mut ma = vec![0u32; inner];
+            let mut mb = vec![0u32; inner];
+            let mut prod = vec![0u64; inner];
+            let mut sgn = vec![0u32; inner];
+            let mut esum = vec![0i32; inner];
+            let mut slot = vec![0u32; inner];
+            let mut extra_k: Vec<u32> = Vec::new();
+            let mut extra_v: Vec<f32> = Vec::new();
+            let mut sums = with_col_sums.then(|| vec![0f32; cols]);
+
+            let r0 = bi * block;
+            let block_rows = chunk.len() / cols;
+            // Panel loop outermost: the [`GEMM_COL_BLOCK`]-column B
+            // panel stays cache-resident across every row of the
+            // block; the A-row planes are cheap re-slices.
+            let mut j0 = 0usize;
+            while j0 < cols {
+                let j1 = (j0 + GEMM_COL_BLOCK).min(cols);
+                for ri in 0..block_rows {
+                    let (sa, ea, mta) = a.row(r0 + ri);
+                    for j in j0..j1 {
+                        let (sb, eb, mtb) = b_packed.row(j);
+                        let mut active = 0usize;
+                        extra_k.clear();
+                        extra_v.clear();
+                        for k in 0..inner {
+                            let (ex, ey) = (ea[k], eb[k]);
+                            if ex > 0
+                                && ex != EXP_NONFINITE
+                                && ey > 0
+                                && ey != EXP_NONFINITE
+                            {
+                                // Both operands normal: batch the
+                                // mantissa product.
+                                ma[active] = mta[k];
+                                mb[active] = mtb[k];
+                                sgn[active] = (sa[k] ^ sb[k]) as u32;
+                                esum[active] = ex + ey;
+                                slot[active] = k as u32;
+                                active += 1;
+                            } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
+                                // Native product fallback, replayed at
+                                // its k position below.
+                                let x = element_value(sa[k], ex, mta[k]);
+                                let y = element_value(sb[k], ey, mtb[k]);
+                                extra_k.push(k as u32);
+                                extra_v.push(x * y);
+                            }
+                            // Flushed terms contribute a signed zero —
+                            // a no-op in the k-order accumulation.
+                        }
+                        m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
+                        // Reassemble the chain in strict k-order: both
+                        // term lists are k-sorted, so merge them.
+                        let mut acc = 0f32;
+                        let (mut t, mut e) = (0usize, 0usize);
+                        while t < active || e < extra_k.len() {
+                            let kt = if t < active { slot[t] } else { u32::MAX };
+                            let ke = if e < extra_k.len() {
+                                extra_k[e]
+                            } else {
+                                u32::MAX
+                            };
+                            if kt < ke {
+                                acc += renorm(sgn[t], esum[t], 0, prod[t]);
+                                t += 1;
+                            } else {
+                                acc += extra_v[e];
+                                e += 1;
+                            }
+                        }
+                        let v = match bias {
+                            Some(b) => acc + b[j],
+                            None => acc,
+                        };
+                        chunk[ri * cols + j] = v;
+                        if let Some(s) = sums.as_mut() {
+                            s[j] += v;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+            sums
+        });
+
+    let col_sums = if with_col_sums {
+        let mut total = vec![0f32; cols];
+        for p in partials.into_iter().flatten() {
+            for (t, v) in total.iter_mut().zip(&p) {
+                *t += *v;
+            }
+        }
+        Some(total)
+    } else {
+        None
+    };
+    Ok(GemmOutput { out, col_sums })
+}
+
 /// `C[rows×cols] = A[rows×inner] · B[inner×cols]` (row-major slices)
 /// with every scalar product computed bit-accurately by `m` and f32
-/// accumulation in k-order. Parallel over output rows; deterministic.
+/// accumulation in k-order. Operands are prepared once (see the module
+/// docs), the kernel is blocked and parallel over input-derived row
+/// blocks — deterministic at any worker count.
 pub fn approx_matmul(
     m: &dyn Multiplier,
     a: &[f32],
@@ -102,7 +315,9 @@ pub fn approx_matmul(
             b.len()
         );
     }
-    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, inner, 1, cols, 1))
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, inner, 1)?;
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, 1, cols)?;
+    Ok(approx_matmul_prepared(m, &ap, &bp, None, false)?.out)
 }
 
 /// `C[rows×cols] = Aᵀ · B` where `a` is the **untransposed**
@@ -130,7 +345,9 @@ pub fn approx_matmul_tn(
             b.len()
         );
     }
-    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, 1, rows, cols, 1))
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, 1, rows)?;
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, 1, cols)?;
+    Ok(approx_matmul_prepared(m, &ap, &bp, None, false)?.out)
 }
 
 /// `C[rows×cols] = A · Bᵀ` where `b` is the **untransposed**
@@ -154,77 +371,46 @@ pub fn approx_matmul_nt(
             b.len()
         );
     }
-    Ok(approx_matmul_strided(m, a, b, rows, inner, cols, inner, 1, 1, inner))
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, inner, 1)?;
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, inner, 1)?;
+    Ok(approx_matmul_prepared(m, &ap, &bp, None, false)?.out)
 }
 
-/// Shared kernel behind the NN/TN/NT entry points: `A[i,k]` is read at
-/// `a[i*ais + k*aks]` and `B[k,j]` at `b[k*bks + j*bjs]`, so the
-/// transposed variants reuse the same staging/parallel structure with
-/// different strides. Callers validate slice lengths.
-#[allow(clippy::too_many_arguments)]
-fn approx_matmul_strided(
+/// The scalar reference kernel: `acc += approx_mul_f32(m, A[i,k],
+/// B[k,j])` in strict k-order, one virtual call per product, no
+/// batching, no blocking, no parallelism. Slow by construction — it
+/// exists as the bit-identity oracle for the blocked prepared kernel
+/// (`tests/prepared_gemm.rs` pins `approx_matmul` ≡ this for every
+/// design × operand layout × thread count).
+pub fn approx_matmul_reference(
     m: &dyn Multiplier,
     a: &[f32],
     b: &[f32],
     rows: usize,
     inner: usize,
     cols: usize,
-    ais: usize,
-    aks: usize,
-    bks: usize,
-    bjs: usize,
-) -> Vec<f32> {
-    let threads = parallel::max_threads();
-    // Block rows per task (a few blocks per worker for load balance)
-    // so the staging buffers are allocated once per task, not per row.
-    let block = rows.div_ceil(threads.max(1) * 4).max(1);
-    let blocks: Vec<(usize, usize)> = (0..rows)
-        .step_by(block)
-        .map(|r0| (r0, (r0 + block).min(rows)))
-        .collect();
-    let out_blocks = parallel::par_map(&blocks, threads, |_, &(r0, r1)| {
-        // Per-task staging for one k-chain: mantissa pairs, products,
-        // and the (sign, exponent-sum) metadata of the active terms.
-        let mut ma = vec![0u32; inner];
-        let mut mb = vec![0u32; inner];
-        let mut prod = vec![0u64; inner];
-        let mut sign_exp = vec![(0u32, 0i32); inner];
-        let mut chunk = vec![0f32; (r1 - r0) * cols];
-        for i in r0..r1 {
-            for (j, slot) in chunk[(i - r0) * cols..(i - r0 + 1) * cols]
-                .iter_mut()
-                .enumerate()
-            {
-                let mut acc = 0f32;
-                let mut active = 0usize;
-                for k in 0..inner {
-                    let x = a[i * ais + k * aks];
-                    let y = b[k * bks + j * bjs];
-                    if !x.is_finite() || !y.is_finite() {
-                        acc += x * y;
-                        continue;
-                    }
-                    if let (Some((sx, ex, mx)), Some((sy, ey, my))) =
-                        (decompose(x), decompose(y))
-                    {
-                        ma[active] = mx;
-                        mb[active] = my;
-                        sign_exp[active] = (sx ^ sy, ex + ey);
-                        active += 1;
-                    }
-                    // Flushed (zero/subnormal) terms contribute exactly 0.
-                }
-                m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
-                for t in 0..active {
-                    let (sign, exp_sum) = sign_exp[t];
-                    acc += renorm(sign, exp_sum, 0, prod[t]);
-                }
-                *slot = acc;
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != inner * cols {
+        bail!(
+            "approx_matmul_reference: ({rows}x{inner})·({inner}x{cols}) needs \
+             {} and {} elements, got {} and {}",
+            rows * inner,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    let mut out = vec![0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let mut acc = 0f32;
+            for k in 0..inner {
+                acc += approx_mul_f32(m, a[i * inner + k], b[k * cols + j]);
             }
+            out[i * cols + j] = acc;
         }
-        chunk
-    });
-    out_blocks.concat()
+    }
+    Ok(out)
 }
 
 /// Seeded random operand matrices (uniform in `[-1, 1)`) for GEMM
@@ -372,6 +558,91 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernel_matches_scalar_reference() {
+        // Shapes spanning multiple row blocks and column panels, so the
+        // blocking/merge paths are all exercised.
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(23);
+        let (rows, inner, cols) = (2 * GEMM_ROW_BLOCK + 7, 19, GEMM_COL_BLOCK + 5);
+        let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let fast = approx_matmul(&d, &a, &b, rows, inner, cols).unwrap();
+        let slow = approx_matmul_reference(&d, &a, &b, rows, inner, cols).unwrap();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn nonfinite_midchain_accumulates_in_k_order() {
+        // Two finite products whose running sum overflows to +inf,
+        // then a -inf term: true k-order gives (+inf) + (-inf) = NaN.
+        // The old kernel accumulated non-finite terms *before* the
+        // batched finite products and returned -inf here.
+        let big = 1.8e19f32; // big*big ≈ 3.24e38, finite
+        let a = [big, big, f32::NEG_INFINITY];
+        let b = [big, big, 1.0f32];
+        let c = approx_matmul(&Exact, &a, &b, 1, 3, 1).unwrap();
+        assert!(c[0].is_nan(), "k-order violated: got {}", c[0]);
+        let r = approx_matmul_reference(&Exact, &a, &b, 1, 3, 1).unwrap();
+        assert!(r[0].is_nan());
+
+        // NaN and inf planted mid-chain among normals, zeros and
+        // subnormals: blocked kernel ≡ scalar walk, bitwise.
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(29);
+        let (rows, inner, cols) = (5usize, 11usize, 4usize);
+        let mut a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let mut b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        a[3] = f32::INFINITY;
+        a[17] = 0.0;
+        a[25] = f32::NAN;
+        b[5] = f32::NEG_INFINITY;
+        b[9] = -0.0;
+        b[20] = 1.0e-41; // subnormal -> flushed
+        let fast = approx_matmul(&d, &a, &b, rows, inner, cols).unwrap();
+        let slow = approx_matmul_reference(&d, &a, &b, rows, inner, cols).unwrap();
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.to_bits(), s.to_bits(), "{f} vs {s}");
+        }
+    }
+
+    #[test]
+    fn fused_bias_and_col_sums_match_unfused() {
+        let d = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(31);
+        let (rows, inner, cols) = (GEMM_ROW_BLOCK + 9, 13usize, 6usize);
+        let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let bias: Vec<f32> = (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+        let ap = PreparedMatrix::prepare(&a, rows, inner).unwrap();
+        let bp = PreparedMatrix::prepare_strided(&b, cols, inner, 1, cols).unwrap();
+        let fused =
+            approx_matmul_prepared(&d, &ap, &bp, Some(&bias), true).unwrap();
+        let mut plain = approx_matmul(&d, &a, &b, rows, inner, cols).unwrap();
+        for r in 0..rows {
+            for c in 0..cols {
+                plain[r * cols + c] += bias[c];
+            }
+        }
+        assert_eq!(fused.out, plain);
+        // Column sums: per input-derived row block, merged in block order.
+        let sums = fused.col_sums.unwrap();
+        let mut want = vec![0f32; cols];
+        for blk in plain.chunks(gemm_row_block(rows) * cols) {
+            let mut part = vec![0f32; cols];
+            for row in blk.chunks(cols) {
+                for (p, &v) in part.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+            for (w, p) in want.iter_mut().zip(&part) {
+                *w += p;
+            }
+        }
+        assert_eq!(sums, want);
+    }
+
+    #[test]
     fn matmul_is_deterministic_across_calls() {
         let d = Drum::new(6).unwrap();
         let mut rng = Xoshiro256::new(8);
@@ -385,6 +656,7 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         assert!(approx_matmul(&Exact, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
+        assert!(approx_matmul_reference(&Exact, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
         assert!(characterize_matmul(&Exact, 0, 3, 2, 1).is_err());
         assert!(characterize_matmul_set(&[], 2, 0, 2, 1).is_err());
     }
@@ -460,9 +732,8 @@ mod tests {
 
     #[test]
     fn transposed_variants_deterministic_across_calls() {
-        // Thread-count independence is inherited from the shared strided
-        // kernel (blocks are input-derived; see tests/native_backend.rs
-        // for the end-to-end thread sweep). Here: repeat-call identity.
+        // Thread-count independence is pinned end to end by
+        // tests/prepared_gemm.rs; here: repeat-call identity.
         let d = Drum::new(6).unwrap();
         let mut rng = Xoshiro256::new(43);
         let a: Vec<f32> = (0..24 * 16).map(|_| rng.next_f32() - 0.5).collect();

@@ -64,7 +64,10 @@
 //! thread-order dependent, so only its aggregate stats — not per-call
 //! products — are stable under parallel characterization.)
 //! [`approx_matmul`] runs the same bit-accurate multipliers over real
-//! GEMM shapes, parallel over output rows, deterministically.
+//! GEMM shapes through the decompose-once blocked kernel (operands
+//! prepared into [`PreparedMatrix`] planes, input-derived row-block
+//! parallelism) — deterministic at any worker count and bit-identical
+//! to the scalar [`approx_matmul_reference`] walk.
 
 mod broken_array;
 mod drum;
@@ -72,6 +75,7 @@ mod gaussian;
 mod lut;
 mod matmul;
 mod mitchell;
+mod prepared;
 mod roba;
 mod spec;
 mod stats;
@@ -82,9 +86,11 @@ pub use drum::Drum;
 pub use gaussian::GaussianModel;
 pub use lut::LutMultiplier;
 pub use matmul::{
-    approx_matmul, approx_matmul_nt, approx_matmul_tn, approx_mul_f32,
-    characterize_matmul, characterize_matmul_set,
+    approx_matmul, approx_matmul_nt, approx_matmul_prepared, approx_matmul_reference,
+    approx_matmul_tn, approx_mul_f32, characterize_matmul, characterize_matmul_set,
+    gemm_row_block, GemmOutput, GEMM_ROW_BLOCK,
 };
+pub use prepared::PreparedMatrix;
 pub use mitchell::Mitchell;
 pub use roba::Roba;
 pub use spec::MultSpec;

@@ -1,0 +1,226 @@
+//! [`PreparedMatrix`]: one-time decomposition of a GEMM operand into
+//! packed sign / exponent / mantissa planes.
+//!
+//! The original `approx_matmul` kernel decomposed both f32 operands of
+//! *every scalar product* — so the weight matrix of a layer was
+//! decomposed `rows × cols` times per GEMM. Preparing an operand once
+//! (one decomposition per element, laid out so the kernel streams the
+//! planes contiguously) turns that quadratic re-work into a linear
+//! setup pass, which is what makes the blocked kernel in
+//! [`super::matmul`] fast. ApproxTrain (arXiv:2209.04161) applies the
+//! same packing idea to its simulated-multiplier GEMM.
+//!
+//! Encoding, per element:
+//!
+//! * **normal** — `exp` holds the biased exponent (1..=254), `mant` the
+//!   24-bit mantissa with the implicit leading one, `sign` the sign
+//!   bit;
+//! * **flushed** (zero or subnormal) — `exp == EXP_FLUSHED`; the
+//!   integer designs have no subnormal path, so these contribute a
+//!   signed zero to a dot product. The raw f32 bits are preserved in
+//!   `mant` so a chain partner that is non-finite still sees the true
+//!   value (`inf * subnormal` is `±inf`, not `inf * 0 = NaN`);
+//! * **non-finite** (inf/NaN) — `exp == EXP_NONFINITE`, with the raw
+//!   f32 bits preserved in `mant` so the kernel can fall back to the
+//!   native product.
+//!
+//! A `PreparedMatrix` is layout-agnostic: [`PreparedMatrix::prepare_strided`]
+//! reads the source through arbitrary row/column strides, so the same
+//! type serves row-major A operands, column-packed B panels, and the
+//! transposed-operand GEMM variants without materializing an f32
+//! transpose. [`PreparedMatrix::transposed`] re-packs the planes (a
+//! copy, **not** a re-decomposition) when a second layout of the same
+//! matrix is needed — e.g. the weight matrix prepared once per training
+//! step and used by both the forward `A·W` and the backward `dY·Wᵀ`.
+
+use anyhow::{bail, Result};
+
+/// `exp` sentinel: zero/subnormal operand, flushed to signed zero.
+pub(crate) const EXP_FLUSHED: i32 = i32::MIN;
+/// `exp` sentinel: inf/NaN operand; `mant` holds the raw f32 bits.
+pub(crate) const EXP_NONFINITE: i32 = i32::MAX;
+
+/// Reconstruct the original f32 of one prepared element (flushed and
+/// non-finite elements carry their raw bits in `mant`).
+#[inline]
+pub(crate) fn element_value(sign: u8, exp: i32, mant: u32) -> f32 {
+    match exp {
+        EXP_NONFINITE | EXP_FLUSHED => f32::from_bits(mant),
+        e => f32::from_bits(
+            ((sign as u32) << 31) | ((e as u32) << 23) | (mant & 0x007F_FFFF),
+        ),
+    }
+}
+
+/// A `[rows × cols]` matrix decomposed into contiguous row-major
+/// sign / exponent / mantissa planes (see the module docs for the
+/// per-element encoding).
+pub struct PreparedMatrix {
+    rows: usize,
+    cols: usize,
+    sign: Vec<u8>,
+    exp: Vec<i32>,
+    mant: Vec<u32>,
+}
+
+impl PreparedMatrix {
+    /// Prepare a row-major `[rows × cols]` f32 matrix.
+    pub fn prepare(data: &[f32], rows: usize, cols: usize) -> Result<Self> {
+        Self::prepare_strided(data, rows, cols, cols, 1)
+    }
+
+    /// Prepare the logical `[rows × cols]` matrix whose element `(r, c)`
+    /// lives at `data[r*row_stride + c*col_stride]` — one decomposition
+    /// per element, whatever the source layout (row-major, transposed,
+    /// or a column-packed panel view).
+    pub fn prepare_strided(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+        col_stride: usize,
+    ) -> Result<Self> {
+        let n = rows * cols;
+        if n > 0 {
+            let last = (rows - 1) * row_stride + (cols - 1) * col_stride;
+            if last >= data.len() {
+                bail!(
+                    "prepare_strided: [{rows}x{cols}] with strides \
+                     ({row_stride}, {col_stride}) needs {} elements, got {}",
+                    last + 1,
+                    data.len()
+                );
+            }
+        }
+        let mut sign = vec![0u8; n];
+        let mut exp = vec![0i32; n];
+        let mut mant = vec![0u32; n];
+        for r in 0..rows {
+            for c in 0..cols {
+                let x = data[r * row_stride + c * col_stride];
+                let i = r * cols + c;
+                let bits = x.to_bits();
+                if !x.is_finite() {
+                    exp[i] = EXP_NONFINITE;
+                    mant[i] = bits;
+                    continue;
+                }
+                let e = ((bits >> 23) & 0xFF) as i32;
+                sign[i] = (bits >> 31) as u8;
+                if e == 0 {
+                    exp[i] = EXP_FLUSHED;
+                    mant[i] = bits; // raw bits: exact non-finite fallback
+                } else {
+                    exp[i] = e;
+                    mant[i] = (bits & 0x007F_FFFF) | 0x0080_0000;
+                }
+            }
+        }
+        Ok(PreparedMatrix { rows, cols, sign, exp, mant })
+    }
+
+    /// The same matrix with rows and columns swapped — a plane re-pack
+    /// (pure copies), **not** a re-decomposition.
+    pub fn transposed(&self) -> PreparedMatrix {
+        let (rows, cols) = (self.cols, self.rows);
+        let n = rows * cols;
+        let mut sign = vec![0u8; n];
+        let mut exp = vec![0i32; n];
+        let mut mant = vec![0u32; n];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let src = r * self.cols + c;
+                let dst = c * self.rows + r;
+                sign[dst] = self.sign[src];
+                exp[dst] = self.exp[src];
+                mant[dst] = self.mant[src];
+            }
+        }
+        PreparedMatrix { rows, cols, sign, exp, mant }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The three plane slices of row `r` (each of length `cols`).
+    #[inline]
+    pub(crate) fn row(&self, r: usize) -> (&[u8], &[i32], &[u32]) {
+        let s = r * self.cols;
+        let e = s + self.cols;
+        (&self.sign[s..e], &self.exp[s..e], &self.mant[s..e])
+    }
+
+    /// Reconstructed f32 of element `(r, c)` (tests / non-finite paths).
+    pub(crate) fn value(&self, r: usize, c: usize) -> f32 {
+        let i = r * self.cols + c;
+        element_value(self.sign[i], self.exp[i], self.mant[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn roundtrips_normals_zeros_subnormals_and_nonfinite() {
+        let vals = [
+            1.0f32,
+            -2.5,
+            0.0,
+            -0.0,
+            f32::MIN_POSITIVE / 2.0, // subnormal -> flushed
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            3.4e38,
+            -1.0e-38,
+        ];
+        let p = PreparedMatrix::prepare(&vals, 2, 5).unwrap();
+        for r in 0..2 {
+            for c in 0..5 {
+                // Every class — normal, zero, subnormal (flushed but
+                // bits kept), inf, NaN — reconstructs bit-exactly.
+                let x = vals[r * 5 + c];
+                assert_eq!(p.value(r, c).to_bits(), x.to_bits(), "{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_prepare_matches_explicit_transpose() {
+        let mut rng = Xoshiro256::new(11);
+        let (rows, cols) = (7usize, 5usize);
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| rng.next_f32() - 0.5).collect();
+        // data is [rows x cols] row-major; read it as its transpose.
+        let t = PreparedMatrix::prepare_strided(&data, cols, rows, 1, cols).unwrap();
+        let p = PreparedMatrix::prepare(&data, rows, cols).unwrap();
+        assert_eq!(t.rows(), cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(t.value(c, r).to_bits(), p.value(r, c).to_bits());
+            }
+        }
+        // transposed() re-packs to the same planes.
+        let tt = p.transposed();
+        for r in 0..cols {
+            for c in 0..rows {
+                assert_eq!(tt.value(r, c).to_bits(), t.value(r, c).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_rejects_short_slices() {
+        assert!(PreparedMatrix::prepare(&[0.0; 5], 2, 3).is_err());
+        assert!(PreparedMatrix::prepare_strided(&[0.0; 5], 2, 3, 3, 1).is_err());
+        // Empty shapes are fine.
+        assert!(PreparedMatrix::prepare(&[], 0, 3).is_ok());
+    }
+}

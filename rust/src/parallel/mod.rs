@@ -92,6 +92,73 @@ where
         .collect()
 }
 
+/// Split `data` into contiguous `chunk_len`-sized pieces (the last may
+/// be short), apply `f` to each on up to `threads` workers, and return
+/// the per-chunk results **in chunk order**. The chunk schedule depends
+/// only on `(data.len(), chunk_len)` — never on the worker count — and
+/// each chunk is claimed and written by exactly one worker, so callers
+/// that fill an output buffer in place inherit the same thread-count
+/// independence as [`par_map`] without a gather/concat copy.
+///
+/// # Panics
+/// Panics when `chunk_len == 0`.
+pub fn par_chunks_mut<T, R, F>(
+    data: &mut [T],
+    chunk_len: usize,
+    threads: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    assert!(chunk_len > 0, "par_chunks_mut: zero chunk length");
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let n = data.len().div_ceil(chunk_len);
+    let threads = threads.clamp(1, n);
+    if threads <= 1 {
+        return data
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(i, c)| f(i, c))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    // One slot per chunk: the claiming worker takes the chunk out and
+    // leaves the result behind — uncontended bookkeeping, like par_map.
+    type Slot<'s, T, R> = Mutex<(Option<&'s mut [T]>, Option<R>)>;
+    let slots: Vec<Slot<'_, T, R>> = data
+        .chunks_mut(chunk_len)
+        .map(|c| Mutex::new((Some(c), None)))
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let mut slot = slots[i].lock().unwrap();
+                let chunk = slot.0.take().expect("par_chunks_mut: chunk claimed twice");
+                let r = f(i, chunk);
+                slot.1 = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .1
+                .expect("par_chunks_mut: worker exited without filling its slot")
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +195,29 @@ mod tests {
         assert_eq!(max_threads(), 3);
         set_max_threads(0);
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn chunks_mut_fills_in_place_at_any_thread_count() {
+        let fill = |threads: usize| {
+            let mut data = vec![0u64; 1003];
+            let partials = par_chunks_mut(&mut data, 64, threads, |ci, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 64 + k) as u64 * 3 + 1;
+                }
+                chunk.iter().sum::<u64>()
+            });
+            (data, partials)
+        };
+        let (d1, p1) = fill(1);
+        let (d4, p4) = fill(4);
+        assert_eq!(d1, d4);
+        assert_eq!(p1, p4);
+        assert_eq!(p1.len(), 1003usize.div_ceil(64));
+        assert!(d1.iter().enumerate().all(|(i, &v)| v == i as u64 * 3 + 1));
+        // Empty input: no chunks, no results.
+        let mut empty: Vec<u64> = vec![];
+        assert!(par_chunks_mut(&mut empty, 8, 4, |_, _| 0u64).is_empty());
     }
 
     #[test]

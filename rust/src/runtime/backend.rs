@@ -72,6 +72,37 @@ impl BackendModel {
         self.eval_batch * self.input_hw * self.input_hw * self.in_ch
     }
 
+    /// Number of whole examples in a dynamic-batch input of `len`
+    /// elements; errors on empty or ragged inputs. The one definition
+    /// of "a valid dynamic batch" shared by the session's train/eval
+    /// validation and the native backend's batch derivation.
+    pub fn examples_of(&self, len: usize) -> Result<usize> {
+        let per = self.input_hw * self.input_hw * self.in_ch;
+        if len == 0 || len % per != 0 {
+            bail!(
+                "{}: input has {len} elements, not a whole (non-zero) number \
+                 of {per}-element examples",
+                self.preset
+            );
+        }
+        Ok(len / per)
+    }
+
+    /// [`BackendModel::examples_of`] plus an upper bound: dynamic-batch
+    /// backends accept short batches but never more than the declared
+    /// batch capacity (`max_elems` = train or eval input elements).
+    pub fn check_dynamic_len(&self, len: usize, max_elems: usize) -> Result<()> {
+        self.examples_of(len)?;
+        if len > max_elems {
+            bail!(
+                "{}: input has {len} elements, more than the declared \
+                 maximum {max_elems}",
+                self.preset
+            );
+        }
+        Ok(())
+    }
+
     /// Checkpoint tensor names in threading order
     /// (`param:` / `state:` / `opt:` prefixed).
     pub fn tensor_names(&self) -> Vec<String> {
@@ -110,10 +141,37 @@ impl BackendModel {
     }
 }
 
+/// An evaluation pass at fixed parameters: per-pass setup (e.g. the
+/// native backend's one-time weight-plane decomposition) is amortized
+/// across all batches evaluated through it.
+pub trait EvalPass {
+    /// Evaluate one batch with exact multipliers. Backends without a
+    /// static batch shape accept a short final batch.
+    fn eval_batch(&self, x: &Tensor, y: &Tensor) -> Result<EvalStats>;
+}
+
 /// One execution backend bound to one model preset.
 pub trait Backend: Send + Sync {
     /// Short backend id: `"pjrt"` or `"native"`.
     fn kind(&self) -> &'static str;
+
+    /// Whether [`Backend::train_step`]/[`Backend::eval_batch`] accept
+    /// batches smaller than the model's declared batch sizes. Compiled
+    /// static-shape graphs cannot; the native backend can.
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
+
+    /// Start an amortized evaluation pass over `params_state` (the
+    /// params ++ state prefix of the state vector). `None` means the
+    /// backend has no per-pass setup worth amortizing — the caller
+    /// falls back to [`Backend::eval_batch`] per batch.
+    fn eval_pass<'a>(
+        &'a self,
+        _params_state: &'a [Tensor],
+    ) -> Result<Option<Box<dyn EvalPass + 'a>>> {
+        Ok(None)
+    }
 
     /// The model this backend executes.
     fn model(&self) -> &BackendModel;

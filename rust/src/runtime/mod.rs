@@ -21,7 +21,7 @@ pub mod native;
 pub mod pjrt_backend;
 pub mod session;
 
-pub use backend::{Backend, BackendModel};
+pub use backend::{Backend, BackendModel, EvalPass};
 pub use engine::{Engine, Executable};
 pub use manifest::{EntrySpec, IoSpec, LayerRow, Manifest, ModelManifest, TensorSpec};
 pub use native::{NativeBackend, NativeConfig};

@@ -116,6 +116,25 @@ pub(crate) fn bn_train(
     for v in mean.iter_mut() {
         *v /= m;
     }
+    bn_train_with_mean(x, rows, ch, mean, gamma, beta, eps)
+}
+
+/// [`bn_train`] with the per-channel batch mean supplied by the caller
+/// — the fused-GEMM path computes the mean as a per-row-block epilogue
+/// of the convolution/dense GEMM (merged in input-derived block order), so the
+/// mean pass over the full activation tensor is skipped here.
+pub(crate) fn bn_train_with_mean(
+    x: &[f32],
+    rows: usize,
+    ch: usize,
+    mean: Vec<f32>,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> (Vec<f32>, BnCache) {
+    debug_assert_eq!(x.len(), rows * ch);
+    debug_assert_eq!(mean.len(), ch);
+    let m = rows as f32;
     let mut var = vec![0f32; ch];
     for r in 0..rows {
         for c in 0..ch {
@@ -403,6 +422,30 @@ mod tests {
                 "dx[{i}]: fd {fd} vs {got}"
             );
         }
+    }
+
+    #[test]
+    fn bn_with_supplied_mean_matches_bn_train() {
+        let mut rng = crate::rng::Xoshiro256::new(21);
+        let (rows, ch) = (5usize, 4usize);
+        let x: Vec<f32> = (0..rows * ch).map(|_| rng.next_f32() * 3.0 - 1.0).collect();
+        let gamma = vec![1.25f32; ch];
+        let beta = vec![-0.5f32; ch];
+        let mut mean = vec![0f32; ch];
+        for r in 0..rows {
+            for c in 0..ch {
+                mean[c] += x[r * ch + c];
+            }
+        }
+        for v in mean.iter_mut() {
+            *v /= rows as f32;
+        }
+        let (a, ca) = bn_train(&x, rows, ch, &gamma, &beta, 1e-5);
+        let (b, cb) = bn_train_with_mean(&x, rows, ch, mean, &gamma, &beta, 1e-5);
+        assert_eq!(a, b);
+        assert_eq!(ca.mean, cb.mean);
+        assert_eq!(ca.var, cb.var);
+        assert_eq!(ca.xn, cb.xn);
     }
 
     #[test]

@@ -6,12 +6,18 @@
 //! blocks, 2x2 max pool, Threefry dropout, dense-BN-ReLU, softmax
 //! cross-entropy with L2 weight decay, SGD with momentum) with one
 //! crucial property: **every forward and backward GEMM goes through
-//! [`crate::mult::approx_matmul`]** (and its transposed-operand
-//! variants), so the multiplier a run trains with is the *simulated
-//! hardware design itself* — DRUM, Mitchell, truncation, a LUT backend
-//! — not a statistical surrogate. This is the ApproxTrain
-//! (arXiv:2209.04161) architecture: the simulated-multiplier GEMM is a
-//! swappable kernel under an otherwise ordinary training loop.
+//! the bit-accurate prepared kernel**
+//! ([`crate::mult::approx_matmul_prepared`]), so the multiplier a run
+//! trains with is the *simulated hardware design itself* — DRUM,
+//! Mitchell, truncation, a LUT backend — not a statistical surrogate.
+//! This is the ApproxTrain (arXiv:2209.04161) architecture: the
+//! simulated-multiplier GEMM is a swappable kernel under an otherwise
+//! ordinary training loop. Each GEMM operand is decomposed **once**
+//! into [`PreparedMatrix`] planes (the weight matrix once per step,
+//! shared between the forward GEMM and the backward `dY·Wᵀ`; eval
+//! passes share one decomposition across all batches), and the
+//! bias-add / BN-mean epilogues run fused inside the GEMM's output
+//! block loop instead of as separate full-tensor passes.
 //!
 //! Error-injection modes, selected by the run's [`MultSpec`]:
 //!
@@ -33,12 +39,12 @@ mod layers;
 
 use anyhow::{bail, Context, Result};
 
-use crate::mult::{approx_matmul, approx_matmul_nt, approx_matmul_tn};
+use crate::mult::{approx_matmul_prepared, PreparedMatrix};
 use crate::mult::{Exact, MultSpec, Multiplier};
 use crate::rng::threefry::counter_normal;
 use crate::tensor::Tensor;
 
-use super::backend::{Backend, BackendModel};
+use super::backend::{Backend, BackendModel, EvalPass};
 use super::manifest::TensorSpec;
 use super::session::{EvalStats, StepInputs, StepStats};
 
@@ -220,6 +226,32 @@ impl NativeConfig {
         specs
     }
 
+    /// `(kin, kout, param-quad index)` of every GEMM layer in forward
+    /// order — conv blocks, dense layers, classifier. The single
+    /// source of truth for weight-matrix shapes wherever they are
+    /// (re)packed; `param_specs` stays consistent with it by test.
+    fn gemm_layers(&self) -> Vec<(usize, usize, usize)> {
+        let mut v = Vec::new();
+        let mut ch = self.in_ch;
+        let mut pi = 0usize;
+        for widths in &self.blocks {
+            for &w in widths {
+                v.push((9 * ch, w, pi));
+                pi += 4;
+                ch = w;
+            }
+        }
+        let hw = self.input_hw >> self.blocks.len();
+        let mut feat = ch * hw * hw;
+        for &w in &self.dense {
+            v.push((feat, w, pi));
+            pi += 4;
+            feat = w;
+        }
+        v.push((feat, self.num_classes, pi));
+        v
+    }
+
     /// BN running statistics, forward order.
     fn state_specs(&self) -> Vec<TensorSpec> {
         let mut specs = Vec::new();
@@ -267,8 +299,12 @@ impl NativeConfig {
 struct GemmTape {
     /// Left GEMM operand (im2col patches / dense input), `[rows, kin]`.
     input: Vec<f32>,
-    /// The (possibly error-injected) weight matrix used, `[kin, kout]`.
-    wq: Vec<f32>,
+    /// The (possibly error-injected) weight matrix, decomposed **once
+    /// per step** into forward-packed `[kout × kin]` planes. The
+    /// backward `dX = dY·Wᵀ` re-packs these planes (a copy, not a
+    /// re-decomposition); with no injection active, no f32 copy of the
+    /// weights is made at all.
+    w_packed: PreparedMatrix,
     /// Gaussian weight-injection factors `1 + sigma*eps` (scale the
     /// weight gradient too — the custom-VJP semantics).
     factors: Option<Vec<f32>>,
@@ -340,20 +376,33 @@ impl NativeBackend {
 
     /// Weight-level Gaussian injection: `wq = w * (1 + sigma*eps)` from
     /// the `(seed_err, layer)` Threefry stream — the exact field the
-    /// compiled graphs inject.
+    /// compiled graphs inject. With `sigma == 0` no injected copy is
+    /// materialized (`None`, `None`): callers read the raw weights.
     fn inject(
         w: &[f32],
         sigma: f32,
         seed_err: u32,
         stream: u32,
-    ) -> (Vec<f32>, Option<Vec<f32>>) {
+    ) -> (Option<Vec<f32>>, Option<Vec<f32>>) {
         if sigma == 0.0 {
-            return (w.to_vec(), None);
+            return (None, None);
         }
         let eps = counter_normal(seed_err, stream, 0, w.len());
         let factors: Vec<f32> = eps.iter().map(|&e| 1.0 + sigma * e).collect();
         let wq = w.iter().zip(&factors).map(|(&v, &f)| v * f).collect();
-        (wq, Some(factors))
+        (Some(wq), Some(factors))
+    }
+
+    /// Decompose the (possibly injected) `[kin × kout]` weight matrix
+    /// once into forward-packed `[kout × kin]` planes.
+    fn pack_weight(
+        w: &[f32],
+        wq: &Option<Vec<f32>>,
+        kin: usize,
+        kout: usize,
+    ) -> Result<PreparedMatrix> {
+        let src: &[f32] = wq.as_deref().unwrap_or(w);
+        PreparedMatrix::prepare_strided(src, kout, kin, 1, kout)
     }
 
     /// Train-mode forward pass, recording the tape the backward needs.
@@ -388,17 +437,26 @@ impl NativeBackend {
                 let patches = layers::im2col(&h, n, hw, ch);
                 let (wq, factors) =
                     Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-                let mut z = approx_matmul(gemm, &patches, &wq, rows, kin, width)?;
-                let b = &params[pi + 1];
-                for r in 0..rows {
-                    for c in 0..width {
-                        z[r * width + c] += b[c];
-                    }
-                }
-                let (mut out, bn) = layers::bn_train(
+                let w_packed = Self::pack_weight(&params[pi], &wq, kin, width)?;
+                let patches_prep = PreparedMatrix::prepare(&patches, rows, kin)?;
+                // Bias add and the BN mean accumulation run fused in
+                // the GEMM's output block loop.
+                let g = approx_matmul_prepared(
+                    gemm,
+                    &patches_prep,
+                    &w_packed,
+                    Some(&params[pi + 1]),
+                    true,
+                )?;
+                let z = g.out;
+                let sums = g.col_sums.expect("fused col sums");
+                let mean: Vec<f32> =
+                    sums.iter().map(|s| s / rows as f32).collect();
+                let (mut out, bn) = layers::bn_train_with_mean(
                     &z,
                     rows,
                     width,
+                    mean,
                     &params[pi + 2],
                     &params[pi + 3],
                     cfg.bn_eps,
@@ -417,7 +475,7 @@ impl NativeBackend {
                 h = out;
                 conv_tapes.push(GemmTape {
                     input: patches,
-                    wq,
+                    w_packed,
                     factors,
                     bn: Some(bn),
                     relu_out: Some(h.clone()),
@@ -457,17 +515,23 @@ impl NativeBackend {
         let mut dense_tapes = Vec::new();
         for &width in &cfg.dense {
             let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-            let mut z = approx_matmul(gemm, &h, &wq, n, feat, width)?;
-            let b = &params[pi + 1];
-            for r in 0..n {
-                for c in 0..width {
-                    z[r * width + c] += b[c];
-                }
-            }
-            let (mut out, bn) = layers::bn_train(
+            let w_packed = Self::pack_weight(&params[pi], &wq, feat, width)?;
+            let h_prep = PreparedMatrix::prepare(&h, n, feat)?;
+            let g = approx_matmul_prepared(
+                gemm,
+                &h_prep,
+                &w_packed,
+                Some(&params[pi + 1]),
+                true,
+            )?;
+            let z = g.out;
+            let sums = g.col_sums.expect("fused col sums");
+            let mean: Vec<f32> = sums.iter().map(|s| s / n as f32).collect();
+            let (mut out, bn) = layers::bn_train_with_mean(
                 &z,
                 n,
                 width,
+                mean,
                 &params[pi + 2],
                 &params[pi + 3],
                 cfg.bn_eps,
@@ -486,7 +550,7 @@ impl NativeBackend {
             let input = std::mem::replace(&mut h, out);
             dense_tapes.push(GemmTape {
                 input,
-                wq,
+                w_packed,
                 factors,
                 bn: Some(bn),
                 relu_out: Some(h.clone()),
@@ -518,17 +582,19 @@ impl NativeBackend {
         };
 
         let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-        let mut logits =
-            approx_matmul(gemm, &h, &wq, n, feat, cfg.num_classes)?;
-        let b = &params[pi + 1];
-        for r in 0..n {
-            for c in 0..cfg.num_classes {
-                logits[r * cfg.num_classes + c] += b[c];
-            }
-        }
+        let w_packed = Self::pack_weight(&params[pi], &wq, feat, cfg.num_classes)?;
+        let h_prep = PreparedMatrix::prepare(&h, n, feat)?;
+        let logits = approx_matmul_prepared(
+            gemm,
+            &h_prep,
+            &w_packed,
+            Some(&params[pi + 1]),
+            false,
+        )?
+        .out;
         let cls_tape = GemmTape {
             input: h,
-            wq,
+            w_packed,
             factors,
             bn: None,
             relu_out: None,
@@ -569,9 +635,19 @@ impl NativeBackend {
                 }
             }
         }
+        // dz decomposed once; both backward GEMMs read it (the TN side
+        // through a plane re-pack, not a re-decomposition).
+        let dzp = PreparedMatrix::prepare(dz, tape.rows, tape.kout)?;
         // dW = inputᵀ · dz, through the transposed-operand GEMM.
-        let mut dw =
-            approx_matmul_tn(gemm, &tape.input, dz, tape.kin, tape.rows, tape.kout)?;
+        let a_tn = PreparedMatrix::prepare_strided(
+            &tape.input,
+            tape.kin,
+            tape.rows,
+            1,
+            tape.kin,
+        )?;
+        let b_tn = dzp.transposed();
+        let mut dw = approx_matmul_prepared(gemm, &a_tn, &b_tn, None, false)?.out;
         if let Some(f) = &tape.factors {
             for (g, &fa) in dw.iter_mut().zip(f) {
                 *g *= fa;
@@ -583,8 +659,10 @@ impl NativeBackend {
                 *g += d;
             }
         }
-        // dInput = dz · wqᵀ.
-        approx_matmul_nt(gemm, dz, &tape.wq, tape.rows, tape.kout, tape.kin)
+        // dInput = dz · wqᵀ: the step's forward-packed weight planes,
+        // re-packed to W's natural layout — no second decomposition.
+        let b_nt = tape.w_packed.transposed();
+        Ok(approx_matmul_prepared(gemm, &dzp, &b_nt, None, false)?.out)
     }
 
     /// Backward through ReLU + BN of one taped layer.
@@ -686,14 +764,29 @@ impl NativeBackend {
         Ok(grads)
     }
 
+    /// Decompose every weight matrix once into forward-packed planes —
+    /// the per-pass setup an [`EvalPass`] shares across eval batches
+    /// (weights are fixed during evaluation, so this is the one
+    /// decomposition the whole pass needs).
+    fn pack_eval_weights(&self, params: &[Vec<f32>]) -> Result<Vec<PreparedMatrix>> {
+        self.cfg
+            .gemm_layers()
+            .into_iter()
+            .map(|(kin, kout, pi)| {
+                PreparedMatrix::prepare_strided(&params[pi], kout, kin, 1, kout)
+            })
+            .collect()
+    }
+
     /// Eval-mode forward (running BN stats, exact multipliers, no
-    /// dropout) — logits only.
+    /// dropout) over pre-packed weight planes — logits only.
     fn forward_eval(
         &self,
         params: &[Vec<f32>],
         state: &[Vec<f32>],
         x: &[f32],
         n: usize,
+        packed: &[PreparedMatrix],
     ) -> Result<Vec<f32>> {
         let gemm: &dyn Multiplier = &EXACT_MULT;
         let cfg = &self.cfg;
@@ -702,19 +795,22 @@ impl NativeBackend {
         let mut ch = cfg.in_ch;
         let mut pi = 0usize;
         let mut si = 0usize;
+        let mut li = 0usize;
 
         for widths in &cfg.blocks {
             for &width in widths {
                 let rows = n * hw * hw;
                 let kin = 9 * ch;
                 let patches = layers::im2col(&h, n, hw, ch);
-                let mut z = approx_matmul(gemm, &patches, &params[pi], rows, kin, width)?;
-                let b = &params[pi + 1];
-                for r in 0..rows {
-                    for c in 0..width {
-                        z[r * width + c] += b[c];
-                    }
-                }
+                let pp = PreparedMatrix::prepare(&patches, rows, kin)?;
+                let z = approx_matmul_prepared(
+                    gemm,
+                    &pp,
+                    &packed[li],
+                    Some(&params[pi + 1]),
+                    false,
+                )?
+                .out;
                 let mut out = layers::bn_eval(
                     &z,
                     rows,
@@ -733,6 +829,7 @@ impl NativeBackend {
                 h = out;
                 pi += 4;
                 si += 2;
+                li += 1;
                 ch = width;
             }
             let (pooled, _) = layers::maxpool2(&h, n, hw, ch);
@@ -742,13 +839,15 @@ impl NativeBackend {
 
         let mut feat = hw * hw * ch;
         for &width in &cfg.dense {
-            let mut z = approx_matmul(gemm, &h, &params[pi], n, feat, width)?;
-            let b = &params[pi + 1];
-            for r in 0..n {
-                for c in 0..width {
-                    z[r * width + c] += b[c];
-                }
-            }
+            let hp = PreparedMatrix::prepare(&h, n, feat)?;
+            let z = approx_matmul_prepared(
+                gemm,
+                &hp,
+                &packed[li],
+                Some(&params[pi + 1]),
+                false,
+            )?
+            .out;
             let mut out = layers::bn_eval(
                 &z,
                 n,
@@ -767,18 +866,41 @@ impl NativeBackend {
             h = out;
             pi += 4;
             si += 2;
+            li += 1;
             feat = width;
         }
 
-        let mut logits =
-            approx_matmul(gemm, &h, &params[pi], n, feat, cfg.num_classes)?;
-        let b = &params[pi + 1];
-        for r in 0..n {
-            for c in 0..cfg.num_classes {
-                logits[r * cfg.num_classes + c] += b[c];
-            }
-        }
+        let hp = PreparedMatrix::prepare(&h, n, feat)?;
+        let logits = approx_matmul_prepared(
+            gemm,
+            &hp,
+            &packed[li],
+            Some(&params[pi + 1]),
+            false,
+        )?
+        .out;
         Ok(logits)
+    }
+
+    /// Shared eval-batch body: derives the batch size from `x` (no
+    /// static shape — short final batches are fine), runs the packed
+    /// eval forward and reduces to [`EvalStats`].
+    fn eval_stats(
+        &self,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        packed: &[PreparedMatrix],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<EvalStats> {
+        let xs = x.as_f32()?;
+        let ys = y.as_i32()?;
+        let n = self.model.examples_of(xs.len())?;
+        check_labels(&ys, n, self.cfg.num_classes)?;
+        let logits = self.forward_eval(params, state, &xs, n, packed)?;
+        let (loss_sum, correct) =
+            layers::softmax_ce_stats(&logits, &ys, n, self.cfg.num_classes);
+        Ok(EvalStats { loss_sum, correct, total: n })
     }
 
     /// Total train-mode loss (`CE + wd*L2`) at the given state — the
@@ -797,7 +919,7 @@ impl NativeBackend {
         let state = to_vecs(&tensors[n_p..n_p + n_s])?;
         let xs = x.as_f32()?;
         let ys = y.as_i32()?;
-        let n = self.cfg.batch;
+        let n = self.model.examples_of(xs.len())?;
         check_labels(&ys, n, self.cfg.num_classes)?;
         let fwd = self.forward_train(&params, &state, &xs, n, k)?;
         let (ce, _, _) =
@@ -830,9 +952,41 @@ fn check_labels(ys: &[i32], n: usize, num_classes: usize) -> Result<()> {
     Ok(())
 }
 
+/// Amortized evaluation pass over fixed params/state: the weight
+/// planes are decomposed once here and shared by every batch
+/// evaluated through the pass.
+struct NativeEvalPass<'a> {
+    backend: &'a NativeBackend,
+    params: Vec<Vec<f32>>,
+    state: Vec<Vec<f32>>,
+    packed: Vec<PreparedMatrix>,
+}
+
+impl EvalPass for NativeEvalPass<'_> {
+    fn eval_batch(&self, x: &Tensor, y: &Tensor) -> Result<EvalStats> {
+        self.backend
+            .eval_stats(&self.params, &self.state, &self.packed, x, y)
+    }
+}
+
 impl Backend for NativeBackend {
     fn kind(&self) -> &'static str {
         "native"
+    }
+
+    fn supports_dynamic_batch(&self) -> bool {
+        true
+    }
+
+    fn eval_pass<'a>(
+        &'a self,
+        params_state: &'a [Tensor],
+    ) -> Result<Option<Box<dyn EvalPass + 'a>>> {
+        let n_p = self.model.params.len();
+        let params = to_vecs(&params_state[..n_p])?;
+        let state = to_vecs(&params_state[n_p..])?;
+        let packed = self.pack_eval_weights(&params)?;
+        Ok(Some(Box::new(NativeEvalPass { backend: self, params, state, packed })))
     }
 
     fn model(&self) -> &BackendModel {
@@ -883,7 +1037,7 @@ impl Backend for NativeBackend {
         let opt = to_vecs(&tensors[n_p + n_s..])?;
         let xs = x.as_f32()?;
         let ys = y.as_i32()?;
-        let n = self.cfg.batch;
+        let n = self.model.examples_of(xs.len())?;
         check_labels(&ys, n, self.cfg.num_classes)?;
 
         let fwd = self.forward_train(&params, &state, &xs, n, k)?;
@@ -924,15 +1078,8 @@ impl Backend for NativeBackend {
         let n_p = self.model.params.len();
         let params = to_vecs(&params_state[..n_p])?;
         let state = to_vecs(&params_state[n_p..])?;
-        let xs = x.as_f32()?;
-        let ys = y.as_i32()?;
-        let elems = self.model.input_hw * self.model.input_hw * self.model.in_ch;
-        let n = xs.len() / elems;
-        check_labels(&ys, n, self.cfg.num_classes)?;
-        let logits = self.forward_eval(&params, &state, &xs, n)?;
-        let (loss_sum, correct) =
-            layers::softmax_ce_stats(&logits, &ys, n, self.cfg.num_classes);
-        Ok(EvalStats { loss_sum, correct, total: n })
+        let packed = self.pack_eval_weights(&params)?;
+        self.eval_stats(&params, &state, &packed, x, y)
     }
 }
 
@@ -954,6 +1101,31 @@ mod tests {
             assert_eq!(model.tensor_names().len(), model.n_tensors(), "{name}");
         }
         assert!(NativeConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn gemm_layers_agree_with_param_specs() {
+        // The shared layer-shape walk must name exactly the weight
+        // tensors of the declared layout, with matching dimensions.
+        for name in ["micro", "tiny", "small", "vgg16"] {
+            let cfg = NativeConfig::preset(name).unwrap();
+            let specs = cfg.param_specs();
+            let layers = cfg.gemm_layers();
+            let n_layers: usize =
+                cfg.blocks.iter().map(|b| b.len()).sum::<usize>() + cfg.dense.len();
+            assert_eq!(layers.len(), n_layers + 1, "{name}"); // + classifier
+            for (kin, kout, pi) in layers {
+                let spec = &specs[pi];
+                assert!(
+                    spec.kind == "conv_w" || spec.kind == "dense_w",
+                    "{name}: {} is {}",
+                    spec.name,
+                    spec.kind
+                );
+                assert_eq!(spec.element_count(), kin * kout, "{name}: {}", spec.name);
+                assert_eq!(*spec.shape.last().unwrap(), kout, "{name}: {}", spec.name);
+            }
+        }
     }
 
     #[test]

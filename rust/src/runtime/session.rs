@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, BackendModel};
+use super::backend::{Backend, BackendModel, EvalPass};
 use super::engine::Engine;
 use super::pjrt_backend::PjrtBackend;
 use crate::tensor::Tensor;
@@ -118,6 +118,12 @@ impl TrainSession {
         self.backend.model().eval_batch
     }
 
+    /// Whether the backend accepts batches smaller than the declared
+    /// batch sizes (no static-shape graphs).
+    pub fn supports_dynamic_batch(&self) -> bool {
+        self.backend.supports_dynamic_batch()
+    }
+
     pub fn steps_run(&self) -> u64 {
         self.steps_run
     }
@@ -137,7 +143,11 @@ impl TrainSession {
     /// `x` must be `[batch, hw, hw, c]` f32, `y` `[batch]` i32.
     pub fn step(&mut self, x: Tensor, y: Tensor, k: StepInputs) -> Result<StepStats> {
         let model = self.backend.model();
-        if x.len() != model.input_elems() {
+        if self.backend.supports_dynamic_batch() {
+            // No static shape: any whole number of examples up to the
+            // configured batch (short final batches train fine).
+            model.check_dynamic_len(x.len(), model.input_elems())?;
+        } else if x.len() != model.input_elems() {
             bail!(
                 "{}: x has {} elements, expected {}",
                 model.preset,
@@ -174,6 +184,19 @@ impl TrainSession {
         self.backend.eval_batch(&self.tensors[..n], &x, &y)
     }
 
+    /// Start an evaluation pass at the current parameters: per-pass
+    /// setup (the native backend decomposes every weight matrix once)
+    /// is amortized across all batches evaluated through the returned
+    /// handle. Backends without such setup fall back to per-batch
+    /// [`TrainSession::eval_batch`] semantics transparently.
+    pub fn eval_pass(&self) -> Result<SessionEval<'_>> {
+        let model = self.backend.model();
+        let n = model.params.len() + model.state.len();
+        let tensors = &self.tensors[..n];
+        let pass = self.backend.eval_pass(tensors)?;
+        Ok(SessionEval { backend: self.backend.as_ref(), tensors, pass })
+    }
+
     /// Replace the full state vector (used by checkpoint restore-in-place).
     pub fn restore(&mut self, tensors: Vec<Tensor>) -> Result<()> {
         if tensors.len() != self.tensors.len() {
@@ -190,5 +213,39 @@ impl TrainSession {
         }
         self.tensors = tensors;
         Ok(())
+    }
+}
+
+/// One evaluation pass bound to a session's current parameters (see
+/// [`TrainSession::eval_pass`]). Holds the backend's amortized
+/// per-pass state when it provides one; otherwise forwards each batch
+/// to [`Backend::eval_batch`].
+pub struct SessionEval<'a> {
+    backend: &'a dyn Backend,
+    /// params ++ state prefix of the session's state vector.
+    tensors: &'a [Tensor],
+    pass: Option<Box<dyn EvalPass + 'a>>,
+}
+
+impl SessionEval<'_> {
+    /// Evaluate one batch with exact multipliers. Dynamic-batch
+    /// backends accept a short final batch; static-shape backends need
+    /// exactly the model's eval batch.
+    pub fn eval_batch(&self, x: Tensor, y: Tensor) -> Result<EvalStats> {
+        let model = self.backend.model();
+        if self.backend.supports_dynamic_batch() {
+            model.check_dynamic_len(x.len(), model.eval_input_elems())?;
+        } else if x.len() != model.eval_input_elems() {
+            bail!(
+                "{}: eval x has {} elements, expected {}",
+                model.preset,
+                x.len(),
+                model.eval_input_elems()
+            );
+        }
+        match &self.pass {
+            Some(p) => p.eval_batch(&x, &y),
+            None => self.backend.eval_batch(self.tensors, &x, &y),
+        }
     }
 }

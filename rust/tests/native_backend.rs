@@ -19,6 +19,7 @@ use approxmul::parallel;
 use approxmul::rng::Xoshiro256;
 use approxmul::runtime::session::StepInputs;
 use approxmul::runtime::{Backend, NativeBackend};
+use approxmul::tensor::Tensor;
 
 fn native_cfg(tag: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset_tiny();
@@ -362,4 +363,130 @@ fn native_checkpoint_resume_replays_run() {
     assert_eq!(r_full.train_loss, r_tail.train_loss);
     assert_eq!(r_full.test_acc, r_tail.test_acc);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// FNV-1a over the raw words of a tensor list — the training-state
+/// fingerprint the golden test pins.
+fn state_hash(tensors: &[Tensor]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in tensors {
+        for &w in t.raw() {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+#[test]
+fn golden_one_step_training_hash() {
+    // One drum6 step on the tiny preset, fully pinned: if the fused
+    // bias/BN epilogues, the prepared kernel, or the accumulation
+    // order ever silently change the training trajectory, this hash
+    // moves. The golden value is sealed into tests/golden/ on first
+    // run (commit it); later runs must reproduce it bit for bit.
+    let backend =
+        NativeBackend::new("tiny", MultSpec::parse("drum6").unwrap()).unwrap();
+    let tensors = backend.init(42).unwrap();
+    let mut ds = SyntheticCifar::for_input(8, 3, 10, 5).generate(16);
+    ds.normalize();
+    let (x, y) = ds.gather_batch(&(0..16).collect::<Vec<_>>()).unwrap();
+    let k = StepInputs { seed_err: 3, seed_drop: 1, sigma: 0.0, lr: 0.05, approx: true };
+
+    let (out1, s1) = backend.train_step(&tensors, &x, &y, k).unwrap();
+    let (out2, s2) = backend.train_step(&tensors, &x, &y, k).unwrap();
+    let (h1, h2) = (state_hash(&out1), state_hash(&out2));
+    assert_eq!(h1, h2, "one step is not deterministic");
+    assert_eq!(s1.loss.to_bits(), s2.loss.to_bits());
+
+    let got = format!("{h1:016x}");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/native_step_tiny.hash");
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got,
+            want.trim(),
+            "one-step training trajectory changed; if intentional, delete \
+             {} and re-run to re-seal",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, format!("{got}\n")).unwrap();
+            eprintln!("sealed golden one-step hash {got} -> {}", path.display());
+        }
+    }
+}
+
+#[test]
+fn short_final_batch_trains_on_native() {
+    // The native backend has no static batch shape: a session step on
+    // fewer examples than the configured batch must work (the
+    // Batcher's drop_last=false path feeds exactly this).
+    let backend = NativeBackend::new("tiny", MultSpec::Exact).unwrap();
+    let model = backend.model().clone();
+    let mut session =
+        approxmul::runtime::TrainSession::with_backend(Box::new(backend), 11).unwrap();
+    let mut ds = SyntheticCifar::for_input(8, 3, 10, 13).generate(16);
+    ds.normalize();
+    let (x, y) = ds.gather_batch(&[0, 1, 2]).unwrap(); // 3 < batch=16
+    assert_eq!(model.batch, 16);
+    let k = StepInputs { seed_err: 1, seed_drop: 2, sigma: 0.0, lr: 0.01, approx: false };
+    let stats = session.step(x, y, k).unwrap();
+    assert!(stats.loss.is_finite());
+    assert!((0.0..=1.0).contains(&stats.accuracy));
+    // Oversized or ragged inputs are still rejected.
+    let (x17, y17) = {
+        let big = SyntheticCifar::for_input(8, 3, 10, 13).generate(17);
+        big.gather_batch(&(0..17).collect::<Vec<_>>()).unwrap()
+    };
+    assert!(session.step(x17, y17, k).is_err());
+}
+
+#[test]
+fn eval_pass_matches_per_batch_eval_and_handles_short_tail() {
+    let backend = NativeBackend::new("tiny", MultSpec::Exact).unwrap();
+    let session =
+        approxmul::runtime::TrainSession::with_backend(Box::new(backend), 21).unwrap();
+    let mut ds = SyntheticCifar::for_input(8, 3, 10, 17).generate(80);
+    ds.normalize();
+
+    // Full batch: the amortized pass must agree with the per-batch path.
+    let (x, y) = ds.gather_batch(&(0..64).collect::<Vec<_>>()).unwrap();
+    let pass = session.eval_pass().unwrap();
+    let a = pass.eval_batch(x.clone(), y.clone()).unwrap();
+    let b = session.eval_batch(x, y).unwrap();
+    assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+    assert_eq!(a.correct, b.correct);
+    assert_eq!(a.total, b.total);
+
+    // Short tail (80 - 64 = 16 examples) evaluates unpadded.
+    let (xt, yt) = ds.gather_batch(&(64..80).collect::<Vec<_>>()).unwrap();
+    let t = pass.eval_batch(xt, yt).unwrap();
+    assert_eq!(t.total, 16);
+    assert!(t.loss_sum.is_finite());
+}
+
+#[test]
+fn trainer_evaluates_non_multiple_test_set_on_native() {
+    // 50 test examples against eval_batch=64: rejected by static-shape
+    // backends, evaluated unpadded (all 50 counted once) on native.
+    let mut gen = SyntheticCifar::for_input(8, 3, 10, 23);
+    gen.noise = 0.4;
+    let mut train_ds = gen.generate(114);
+    train_ds.normalize();
+    let (train_ds, test_ds) = train_ds.split_tail(50).unwrap();
+    let mut cfg = ExperimentConfig::preset_tiny();
+    cfg.epochs = 1;
+    cfg.tag = "nat-oddtest".into();
+    let mut trainer =
+        Trainer::native_with_data(cfg, train_ds, test_ds).unwrap();
+    let outcome = trainer.run().unwrap();
+    assert_eq!(outcome.epochs_run, 1);
+    assert!((0.0..=1.0).contains(&outcome.final_accuracy));
+    let (acc, loss) = trainer.evaluate().unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(loss.is_finite());
 }

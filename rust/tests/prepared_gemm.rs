@@ -1,0 +1,156 @@
+//! Bit-identity property suite for the decompose-once prepared GEMM.
+//!
+//! The blocked kernel behind `approx_matmul` / `_tn` / `_nt` must be
+//! **bit-identical** to the scalar reference walk
+//! (`approx_matmul_reference`: one `approx_mul_f32` per product, f32
+//! accumulation in strict k-order) for every design × operand layout ×
+//! thread count — including chains with non-finite and flushed
+//! operands planted mid-chain. This pins the whole contract the native
+//! backend trains under: same mantissa products through the same
+//! `Multiplier`, same k-order accumulation, thread-count invariance.
+
+use approxmul::mult::{
+    approx_matmul, approx_matmul_nt, approx_matmul_reference, approx_matmul_tn,
+    by_name, GEMM_ROW_BLOCK,
+};
+use approxmul::parallel;
+use approxmul::rng::Xoshiro256;
+
+const DESIGNS: &[&str] =
+    &["exact", "drum6", "mitchell", "roba", "bam8", "trunc8", "lut12:drum6"];
+
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Random operands with occasional special values (inf, NaN, signed
+/// zero, subnormal) planted through the chains.
+fn operands(rows: usize, inner: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.next_u32() % 64 {
+                0 => f32::INFINITY,
+                1 => f32::NEG_INFINITY,
+                2 => f32::NAN,
+                3 => 0.0,
+                4 => -0.0,
+                5 => 1.0e-41, // subnormal -> flushed
+                _ => 2.0 * rng.next_f32() - 1.0,
+            })
+            .collect()
+    };
+    (gen(rows * inner), gen(inner * cols))
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn prepared_kernel_is_bit_identical_to_reference_across_threads() {
+    // Shape crosses both the row-block and col-panel boundaries so the
+    // blocked paths (multi-block partials, panel edges) are exercised.
+    let (rows, inner, cols) = (GEMM_ROW_BLOCK + 11, 21, 53);
+    for (di, design) in DESIGNS.iter().enumerate() {
+        let m = by_name(design).unwrap();
+        let (a, b) = operands(rows, inner, cols, 1000 + di as u64);
+        let want = approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols)
+            .unwrap();
+
+        // TN stores A untransposed [inner x rows]; NT stores B
+        // untransposed [cols x inner]. Derive both from (a, b) so all
+        // three layouts compute the *same* logical product.
+        let a_t = transpose(&a, rows, inner); // [inner x rows]
+        let b_t = transpose(&b, inner, cols); // [cols x inner]
+
+        for threads in [1usize, 2, 5] {
+            parallel::set_max_threads(threads);
+            let nn = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let tn =
+                approx_matmul_tn(m.as_ref(), &a_t, &b, rows, inner, cols).unwrap();
+            let nt =
+                approx_matmul_nt(m.as_ref(), &a, &b_t, rows, inner, cols).unwrap();
+            parallel::set_max_threads(0);
+            assert_bits_eq(&nn, &want, &format!("{design} NN t={threads}"));
+            assert_bits_eq(&tn, &want, &format!("{design} TN t={threads}"));
+            assert_bits_eq(&nt, &want, &format!("{design} NT t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn all_finite_chains_match_reference_on_small_shapes() {
+    // Purely finite data (the training regime) on shapes below one row
+    // block: the sequential path of the kernel.
+    for (di, design) in DESIGNS.iter().enumerate() {
+        let m = by_name(design).unwrap();
+        let (rows, inner, cols) = (9usize, 16usize, 7usize);
+        let mut rng = Xoshiro256::new(7 + di as u64);
+        let a: Vec<f32> =
+            (0..rows * inner).map(|_| 4.0 * rng.next_f32() - 2.0).collect();
+        let b: Vec<f32> =
+            (0..inner * cols).map(|_| 4.0 * rng.next_f32() - 2.0).collect();
+        let fast = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        assert_bits_eq(&fast, &slow, design);
+    }
+}
+
+#[test]
+fn nonfinite_and_flushed_chains_match_reference() {
+    // Dense special-value chains: every k position cycles through the
+    // special classes, so non-finite fallbacks and flushed skips
+    // interleave with batched products inside single chains.
+    let specials = [
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        0.0,
+        -0.0,
+        1.0e-41,
+        1.5,
+        -2.25,
+    ];
+    let (rows, inner, cols) = (4usize, specials.len() * 2, 3usize);
+    let mut rng = Xoshiro256::new(99);
+    let a: Vec<f32> = (0..rows * inner)
+        .map(|i| {
+            if i % 3 == 0 {
+                specials[(i / 3) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    let b: Vec<f32> = (0..inner * cols)
+        .map(|i| {
+            if i % 4 == 1 {
+                specials[(i / 4) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    for design in DESIGNS {
+        let m = by_name(design).unwrap();
+        let fast = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        assert_bits_eq(&fast, &slow, design);
+    }
+}
