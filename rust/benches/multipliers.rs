@@ -11,13 +11,18 @@
 //! Batch outputs are asserted bit-identical to scalar per design; LUT
 //! outputs are asserted bit-identical where its contract guarantees it
 //! (DRUM-k with k strictly below the 8-bit table width on any
-//! operands; every deterministic design on 8-bit operands). Emits
-//! `BENCH_multipliers.json` with M mult/s per
+//! operands; every deterministic design on 8-bit operands). The signed
+//! subsystem gets the same treatment: `sdrum6` / `booth8` / `sroba`
+//! rows over scalar, batch, and `slut8` paths (rows carry
+//! `"signed": true`). Emits `BENCH_multipliers.json` with M mult/s per
 //! (design, dist, path) so the perf trajectory is tracked across PRs.
 //! `cargo bench multipliers`.
 
 use approxmul::benchkit::{save_json, throughput, Bench};
 use approxmul::json::{object, Value};
+use approxmul::mult::signed::{
+    self, characterize_signed, sample_signed, SignedLut, SignedMultiplier,
+};
 use approxmul::mult::{
     characterize, standard_designs, GaussianModel, LutMultiplier, Multiplier,
     OperandDist,
@@ -35,6 +40,17 @@ fn operands(dist: OperandDist, seed: u64) -> (Vec<u32>, Vec<u32>) {
     for _ in 0..N_OPS {
         a.push(dist.sample(&mut rng));
         b.push(dist.sample(&mut rng));
+    }
+    (a, b)
+}
+
+fn signed_operands(dist: OperandDist, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut a = Vec::with_capacity(N_OPS);
+    let mut b = Vec::with_capacity(N_OPS);
+    for _ in 0..N_OPS {
+        a.push(sample_signed(dist, &mut rng));
+        b.push(sample_signed(dist, &mut rng));
     }
     (a, b)
 }
@@ -123,6 +139,97 @@ fn main() -> anyhow::Result<()> {
                 ("lut_mps", mps[2].into()),
                 ("lut_bits", (LUT_BITS as usize).into()),
                 ("lut_bit_identical", lut_exact_here.into()),
+                ("n_ops", N_OPS.into()),
+            ]));
+        }
+        print!("{}", summary.to_markdown());
+        println!();
+    }
+
+    // 3. Signed designs: error statistics + scalar vs batch vs signed
+    //    LUT throughput, same three host paths over the signed domain.
+    let signed_designs: Vec<Box<dyn SignedMultiplier>> = vec![
+        Box::new(signed::SignedExact),
+        Box::new(signed::SignedDrum::new(6)?),
+        Box::new(signed::Booth::new(8)?),
+        Box::new(signed::SignedRoba),
+    ];
+    let mut t = Table::new(&["design", "MRE", "SD", "bias", "MRE/SD"]);
+    for d in &signed_designs {
+        let s = characterize_signed(d.as_ref(), OperandDist::Uniform16, 300_000, 7);
+        t.row(vec![
+            d.name(),
+            format!("{:.3}%", 100.0 * s.mre),
+            format!("{:.3}%", 100.0 * s.sd),
+            format!("{:+.3}%", 100.0 * s.mean_re),
+            format!("{:.3}", s.gaussianity_ratio()),
+        ]);
+    }
+    println!(
+        "# signed multiplier designs: error statistics (uniform16 magnitudes, \
+         random signs)\n"
+    );
+    print!("{}", t.to_markdown());
+    println!();
+
+    for dist in dists {
+        let (a, b) = signed_operands(dist, 2);
+        let mut out_scalar = vec![0i64; N_OPS];
+        let mut out = vec![0i64; N_OPS];
+        println!("# signed simulation throughput — {} operands\n", dist.name());
+        let mut summary = Table::new(&[
+            "design", "scalar M/s", "batch M/s", "slut M/s", "batch x", "slut x",
+        ]);
+        for d in &signed_designs {
+            let slut = SignedLut::new(d.as_ref(), LUT_BITS)?;
+            let mut bench = Bench::new(1, 7);
+            bench.run(&format!("{} scalar {}", d.name(), dist.name()), || {
+                for i in 0..N_OPS {
+                    out_scalar[i] = d.mul(a[i], b[i]);
+                }
+                std::hint::black_box(&out_scalar);
+            });
+            bench.run(&format!("{} batch  {}", d.name(), dist.name()), || {
+                d.mul_batch(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            });
+            // Bit-identity: batch must equal scalar everywhere (all
+            // signed designs are stateless).
+            assert_eq!(out_scalar, out, "{}: batch != scalar", d.name());
+            bench.run(&format!("{} slut{LUT_BITS}  {}", d.name(), dist.name()), || {
+                slut.mul_batch(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            });
+            // The slut contract holds over arbitrary operands only for
+            // dynamic-range designs with k strictly below the table's
+            // magnitude field (7 bits at slut8): sdrum6 qualifies.
+            let slut_exact_here = d.name() == "sdrum6";
+            if slut_exact_here {
+                assert_eq!(out_scalar, out, "{}: slut != scalar on {}", d.name(), dist.name());
+            }
+
+            let results = bench.results();
+            let mps: Vec<f64> = results
+                .iter()
+                .map(|s| throughput(s.median(), N_OPS as u64) / 1e6)
+                .collect();
+            summary.row(vec![
+                d.name(),
+                format!("{:.1}", mps[0]),
+                format!("{:.1}", mps[1]),
+                format!("{:.1}", mps[2]),
+                format!("{:.2}x", mps[1] / mps[0]),
+                format!("{:.2}x", mps[2] / mps[0]),
+            ]);
+            json_rows.push(object([
+                ("design", Value::from(d.name())),
+                ("dist", dist.name().into()),
+                ("scalar_mps", mps[0].into()),
+                ("batch_mps", mps[1].into()),
+                ("lut_mps", mps[2].into()),
+                ("lut_bits", (LUT_BITS as usize).into()),
+                ("lut_bit_identical", slut_exact_here.into()),
+                ("signed", true.into()),
                 ("n_ops", N_OPS.into()),
             ]));
         }

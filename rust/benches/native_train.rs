@@ -18,7 +18,10 @@ use approxmul::runtime::{Backend, NativeBackend, TrainSession};
 /// speed-target workload (ROADMAP: interactive-speed native training),
 /// benched with fewer samples because one step is large.
 const CASES: &[(&str, &[&str], usize, usize)] = &[
-    ("tiny", &["exact", "gaussian:0.045", "drum6", "lut12:drum6"], 2, 10),
+    // `sdrum6` is the signed-pipeline row: same DRUM core, sign routed
+    // through the design — its cost vs `drum6` is the price of the
+    // signed kernel.
+    ("tiny", &["exact", "gaussian:0.045", "drum6", "lut12:drum6", "sdrum6"], 2, 10),
     ("small", &["exact", "drum6"], 1, 3),
 ];
 

@@ -441,6 +441,21 @@ mod tests {
     }
 
     #[test]
+    fn signed_design_policy_needs_native_backend() {
+        // Signed designs have no surrogate sigma, so the PJRT backend
+        // rejects them with the same hint as unsigned designs.
+        let mut cfg = ExperimentConfig::preset_tiny();
+        cfg.policy = MultiplierPolicy::Approximate {
+            mult: MultSpec::parse("booth8").unwrap(),
+        };
+        assert!(cfg.validate().is_err());
+        cfg.backend = ExecBackend::Native;
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.policy.sigma_at(0), 0.0);
+        assert_eq!(cfg.policy.spec_at(0).canonical(), "booth8");
+    }
+
+    #[test]
     fn backend_parses() {
         assert_eq!(ExecBackend::parse("native").unwrap(), ExecBackend::Native);
         assert_eq!(ExecBackend::parse("pjrt").unwrap(), ExecBackend::Pjrt);

@@ -18,7 +18,8 @@ use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
 use approxmul::costmodel::{cited_designs, CostModel};
 use approxmul::error_model::{paper_table2_specs, ErrorConfig, ErrorMatrix};
 use approxmul::mult::{
-    characterize, characterize_matmul_set, standard_designs, MultSpec, OperandDist,
+    characterize, characterize_matmul_set, signed, standard_designs, MultSpec,
+    OperandDist,
 };
 use approxmul::report::{ascii_histogram, diff_pct, histogram_csv, pct, Table};
 use approxmul::runtime::Engine;
@@ -197,7 +198,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     specs.extend([
         FlagSpec {
             name: "mult",
-            help: "multiplier spec: exact | gaussian:<sd> | drum6 | lut12:drum6 | ...",
+            help: "multiplier spec: exact | gaussian:<sd> | drum6 | lut12:drum6 \
+                   | sdrum6 | booth8 | slut12:sdrum6 | ...",
             takes_value: true,
             default: None,
         },
@@ -630,6 +632,18 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
         designs.extend(luts);
     }
 
+    let mut signed_designs = signed::standard_signed_designs();
+    if let Some(bits) = a.parse_u64("lut")? {
+        let sluts: Vec<Box<dyn signed::SignedMultiplier>> = signed_designs
+            .iter()
+            .map(|d| {
+                signed::SignedLut::new(d.as_ref(), bits as u32)
+                    .map(|l| Box::new(l) as Box<dyn signed::SignedMultiplier>)
+            })
+            .collect::<Result<_>>()?;
+        signed_designs.extend(sluts);
+    }
+
     if let Some(shape) = a.get("gemm") {
         let dims: Vec<usize> = shape
             .split(['x', ','])
@@ -639,11 +653,25 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
             bail!("--gemm wants three dimensions RxKxC, got {shape:?}");
         };
         let mut t = Table::new(&["design", "out MRE", "out SD", "out bias", "min RE", "max RE"]);
-        // One shared exact-reference GEMM for the whole design set.
+        // One shared exact-reference GEMM per design *set*; the signed
+        // set recomputes it from the same seeded matrices (one extra
+        // exact GEMM per invocation), so all rows stay directly
+        // comparable.
         let stats = characterize_matmul_set(&designs, rows, inner, cols, seed)?;
-        for (d, s) in designs.iter().zip(&stats) {
+        let signed_stats = signed::characterize_matmul_signed_set(
+            &signed_designs,
+            rows,
+            inner,
+            cols,
+            seed,
+        )?;
+        let names = designs
+            .iter()
+            .map(|d| d.name())
+            .chain(signed_designs.iter().map(|d| d.name()));
+        for (name, s) in names.zip(stats.iter().chain(&signed_stats)) {
             t.row(vec![
-                d.name(),
+                name,
                 format!("{:.3}%", 100.0 * s.mre),
                 format!("{:.3}%", 100.0 * s.sd),
                 format!("{:+.3}%", 100.0 * s.mean_re),
@@ -655,7 +683,8 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
             "bit-accurate GEMM characterization: C[{rows}x{cols}] = \
              A[{rows}x{inner}]·B[{inner}x{cols}], stats over output elements\n\
              (GEMM mode samples uniform [-1,1) f32 matrices; --dist and --n \
-             do not apply — the sample count is rows x cols)"
+             do not apply — the sample count is rows x cols; s*/booth* rows \
+             run the signed pipeline: operand signs go through the design)"
         );
         print!("{}", t.to_markdown());
         println!(
@@ -680,12 +709,33 @@ fn cmd_characterize(argv: &[String]) -> Result<()> {
             format!("{:.3}", s.gaussianity_ratio()),
         ]);
     }
-    println!("operand distribution: {} ({n} pairs/design)", dist.name());
+    // Signed designs: same magnitudes, random signs, error routed
+    // through the two's-complement pipeline.
+    for d in &signed_designs {
+        let s = signed::characterize_signed(d.as_ref(), dist, n, seed);
+        t.row(vec![
+            d.name(),
+            format!("{:.3}%", 100.0 * s.mre),
+            format!("{:.3}%", 100.0 * s.sd),
+            format!("{:+.3}%", 100.0 * s.mean_re),
+            format!("{:+.2}%", 100.0 * s.min_re),
+            format!("{:+.2}%", 100.0 * s.max_re),
+            format!("{:.3}", s.gaussianity_ratio()),
+        ]);
+    }
+    println!(
+        "operand distribution: {} ({n} pairs/design; signed rows draw the \
+         same magnitudes with random signs)",
+        dist.name()
+    );
     print!("{}", t.to_markdown());
     println!(
-        "\nDRUM [3] published: MRE 1.47%, SD 1.803% — compare row drum6.\n\
+        "\nDRUM [3] published: MRE 1.47%, SD 1.803% — compare rows drum6 and \
+         sdrum6 (sign-magnitude, so the signed row matches the unsigned one).\n\
          Gaussian model rows should show MRE/SD ≈ 0.798; one-sided designs \
-         (mitchell, trunc*) cannot be represented by the paper's model."
+         (mitchell, trunc*) cannot be represented by the paper's model, and \
+         booth<k> rows err by product sign — representable only by the \
+         signed pipeline."
     );
     Ok(())
 }

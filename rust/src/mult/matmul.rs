@@ -64,8 +64,9 @@ pub const GEMM_ROW_BLOCK: usize = 64;
 /// parallelize instead of collapsing into one task.
 const GEMM_ROW_SPLIT: usize = 16;
 
-/// Columns per B-panel of the blocked kernel's j-loop.
-const GEMM_COL_BLOCK: usize = 48;
+/// Columns per B-panel of the blocked kernel's j-loop (shared with
+/// the signed kernel in [`super::signed::matmul`]).
+pub(super) const GEMM_COL_BLOCK: usize = 48;
 
 /// Rows per parallel task for a `rows`-row GEMM — a pure function of
 /// the row count, **never** the worker count, so the per-block
@@ -78,7 +79,7 @@ pub fn gemm_row_block(rows: usize) -> usize {
 /// Decompose a finite f32 into `(sign, biased exponent, 24-bit
 /// mantissa)`; `None` for zero/subnormal (flushed).
 #[inline]
-fn decompose(x: f32) -> Option<(u32, i32, u32)> {
+pub(super) fn decompose(x: f32) -> Option<(u32, i32, u32)> {
     let bits = x.to_bits();
     let exp = ((bits >> 23) & 0xFF) as i32;
     if exp == 0 {
@@ -93,7 +94,7 @@ fn decompose(x: f32) -> Option<(u32, i32, u32)> {
 /// saturates to ±inf on overflow and flushes to signed zero on
 /// underflow.
 #[inline]
-fn renorm(sign: u32, ex: i32, ey: i32, p: u64) -> f32 {
+pub(super) fn renorm(sign: u32, ex: i32, ey: i32, p: u64) -> f32 {
     if p == 0 {
         return f32::from_bits(sign << 31);
     }
@@ -415,7 +416,7 @@ pub fn approx_matmul_reference(
 
 /// Seeded random operand matrices (uniform in `[-1, 1)`) for GEMM
 /// characterization.
-fn seeded_matrices(
+pub(super) fn seeded_matrices(
     rows: usize,
     inner: usize,
     cols: usize,
@@ -429,7 +430,7 @@ fn seeded_matrices(
 
 /// Relative-error statistics of `approx` GEMM output vs the exact
 /// pipeline's output (0 error where the reference is 0).
-fn output_error_stats(approx: &[f32], exact: &[f32]) -> ErrorStats {
+pub(super) fn output_error_stats(approx: &[f32], exact: &[f32]) -> ErrorStats {
     let mut acc = Welford::new();
     for (&ap, &ex) in approx.iter().zip(exact) {
         let re = if ex == 0.0 {

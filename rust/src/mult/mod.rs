@@ -81,6 +81,8 @@ mod spec;
 mod stats;
 mod truncation;
 
+pub mod signed;
+
 pub use broken_array::BrokenArray;
 pub use drum::Drum;
 pub use gaussian::GaussianModel;
@@ -93,6 +95,7 @@ pub use matmul::{
 pub use prepared::PreparedMatrix;
 pub use mitchell::Mitchell;
 pub use roba::Roba;
+pub use signed::SignedMultiplier;
 pub use spec::MultSpec;
 pub use stats::{characterize, characterize_threads, ErrorStats, OperandDist};
 pub use truncation::Truncation;
@@ -178,9 +181,12 @@ impl Multiplier for Exact {
 }
 
 /// Build a multiplier from a spec string: `exact`, `drum<k>`,
-/// `mitchell`, `roba`, `bam<d>`, `trunc<k>`, `gauss<sigma-percent>`,
-/// or `lut<bits>:<inner>` for the LUT-accelerated backend of any of
-/// the above (e.g. `lut8:drum6`).
+/// `mitchell`, `roba`, `bam<d>`, `trunc<k>`, `gauss<sigma-percent>`
+/// (or the training grammar's canonical alias `gaussian:<sigma>`, a
+/// fraction), or `lut<bits>:<inner>` for the LUT-accelerated backend
+/// of any of the above (e.g. `lut8:drum6`). Signed designs
+/// (`sdrum<k>`, `booth<k>`, `sroba`, `slut<bits>:<inner>`) live in
+/// [`signed::by_name`].
 pub fn by_name(spec: &str) -> Result<Box<dyn Multiplier>> {
     if let Some(rest) = spec.strip_prefix("lut") {
         if let Some((bits, inner)) = rest.split_once(':') {
@@ -210,14 +216,112 @@ pub fn by_name(spec: &str) -> Result<Box<dyn Multiplier>> {
         let k: u32 = k.parse()?;
         return Ok(Box::new(Truncation::new(k)?));
     }
+    // `gaussian:<sigma>` / `gauss:<sigma>` are the training grammar's
+    // (MultSpec) spelling, sigma as a fraction; accepted here too so
+    // the two grammars agree on the canonical aliases. `gauss<pct>` is
+    // this grammar's historical percent form.
+    if let Some(v) = spec
+        .strip_prefix("gaussian:")
+        .or_else(|| spec.strip_prefix("gauss:"))
+    {
+        let sigma: f64 = v.parse()?;
+        // Same bound MultSpec::parse applies — the aliases really are
+        // shared, rejections included (NaN fails the range test too).
+        if !(0.0..1.0).contains(&sigma) {
+            bail!("gaussian sigma {sigma} out of sane range [0, 1)");
+        }
+        return Ok(Box::new(GaussianModel::new(sigma, 0)));
+    }
     if let Some(p) = spec.strip_prefix("gauss") {
         let pct: f64 = p.parse()?;
         return Ok(Box::new(GaussianModel::new(pct / 100.0, 0)));
     }
     bail!(
         "unknown multiplier spec {spec:?} (expected exact | drum<k> | mitchell \
-         | roba | bam<d> | trunc<k> | gauss<pct> | lut<bits>:<inner>)"
+         | roba | bam<d> | trunc<k> | gauss<pct> | gaussian:<sigma> | \
+         lut<bits>:<inner>; signed designs — sdrum<k> | booth<k> | sroba | \
+         slut<bits>:<inner> — are built by mult::signed::by_name, and training \
+         runs parse specs with MultSpec::parse)"
     )
+}
+
+/// A built GEMM design: the product multiplier a training run's spec
+/// resolves to, in whichever operand domain it is published for.
+/// Unsigned designs run the sign-externalized mantissa pipeline;
+/// signed designs run the [`signed`] pipeline, where the operand signs
+/// go **through** the multiplier.
+pub enum GemmDesign {
+    Unsigned(Box<dyn Multiplier>),
+    Signed(Box<dyn SignedMultiplier>),
+}
+
+impl GemmDesign {
+    /// Build from a design spec string: signed-grammar specs (decided
+    /// syntactically — the prefixes never overlap) resolve through
+    /// [`signed::by_name`], everything else through [`by_name`].
+    pub fn by_name(spec: &str) -> Result<GemmDesign> {
+        if signed::is_signed_spec(spec) {
+            return Ok(GemmDesign::Signed(signed::by_name(spec)?));
+        }
+        Ok(GemmDesign::Unsigned(by_name(spec)?))
+    }
+
+    /// Design name, e.g. `drum6` or `sdrum6`.
+    pub fn name(&self) -> String {
+        match self {
+            GemmDesign::Unsigned(m) => m.name(),
+            GemmDesign::Signed(m) => m.name(),
+        }
+    }
+
+    /// Borrowed dispatch handle for GEMM call sites.
+    pub fn mode(&self) -> GemmMode<'_> {
+        match self {
+            GemmDesign::Unsigned(m) => GemmMode::Unsigned(m.as_ref()),
+            GemmDesign::Signed(m) => GemmMode::Signed(m.as_ref()),
+        }
+    }
+}
+
+/// A borrowed [`GemmDesign`]: the value GEMM call sites thread through
+/// one training step.
+#[derive(Clone, Copy)]
+pub enum GemmMode<'a> {
+    Unsigned(&'a dyn Multiplier),
+    Signed(&'a dyn SignedMultiplier),
+}
+
+impl GemmMode<'_> {
+    /// Whether operands must carry the signed-mantissa plane
+    /// ([`PreparedMatrix::with_signed_mantissas`]).
+    pub fn is_signed(self) -> bool {
+        matches!(self, GemmMode::Signed(_))
+    }
+
+    /// Run the blocked prepared kernel of this mode's pipeline —
+    /// [`approx_matmul_prepared`] or
+    /// [`signed::approx_matmul_prepared_signed`] — with the same fused
+    /// epilogues and determinism contract.
+    pub fn matmul_prepared(
+        self,
+        a: &PreparedMatrix,
+        b_packed: &PreparedMatrix,
+        bias: Option<&[f32]>,
+        with_col_sums: bool,
+    ) -> Result<GemmOutput> {
+        match self {
+            GemmMode::Unsigned(m) => {
+                approx_matmul_prepared(m, a, b_packed, bias, with_col_sums)
+            }
+            GemmMode::Signed(m) => signed::approx_matmul_prepared_signed(
+                m,
+                a,
+                b_packed,
+                bias,
+                with_col_sums,
+            ),
+        }
+    }
 }
 
 /// The design set the characterization harness sweeps by default.
@@ -261,6 +365,40 @@ mod tests {
         assert!(by_name("bogus").is_err());
         assert!(by_name("lut99:drum6").is_err());
         assert!(by_name("lut8:bogus").is_err());
+    }
+
+    #[test]
+    fn gaussian_aliases_are_shared_with_the_training_grammar() {
+        // `gauss4.5` (percent) and `gaussian:0.045` (fraction) build
+        // the same model: the two grammars agree on the canonical
+        // alias instead of each rejecting the other's spelling.
+        assert_eq!(by_name("gauss4.5").unwrap().name(), "gauss0.0450");
+        assert_eq!(by_name("gaussian:0.045").unwrap().name(), "gauss0.0450");
+        assert_eq!(by_name("gauss:0.045").unwrap().name(), "gauss0.0450");
+        assert!(by_name("gaussian:x").is_err());
+        // The alias carries MultSpec's range check with it.
+        assert!(by_name("gaussian:1.5").is_err());
+        assert!(by_name("gaussian:-0.1").is_err());
+        assert!(by_name("gaussian:nan").is_err());
+        // The unknown-spec error names the signed and training grammars.
+        let err = by_name("sdrum6").unwrap_err().to_string();
+        assert!(err.contains("mult::signed::by_name"), "{err}");
+        assert!(err.contains("MultSpec::parse"), "{err}");
+    }
+
+    #[test]
+    fn gemm_design_resolves_by_domain() {
+        assert_eq!(GemmDesign::by_name("drum6").unwrap().name(), "drum6");
+        assert_eq!(GemmDesign::by_name("sdrum6").unwrap().name(), "sdrum6");
+        assert!(matches!(
+            GemmDesign::by_name("booth8").unwrap().mode(),
+            GemmMode::Signed(_)
+        ));
+        assert!(matches!(
+            GemmDesign::by_name("mitchell").unwrap().mode(),
+            GemmMode::Unsigned(_)
+        ));
+        assert!(GemmDesign::by_name("bogus").is_err());
     }
 
     #[test]

@@ -55,12 +55,22 @@ pub(crate) fn element_value(sign: u8, exp: i32, mant: u32) -> f32 {
 /// A `[rows × cols]` matrix decomposed into contiguous row-major
 /// sign / exponent / mantissa planes (see the module docs for the
 /// per-element encoding).
+///
+/// For the **signed** GEMM path ([`super::signed`]) the matrix can
+/// additionally carry a signed-mantissa plane
+/// ([`PreparedMatrix::with_signed_mantissas`]): `±(1.m × 2^23)` as
+/// two's-complement `i32`, the operand layout a
+/// [`super::signed::SignedMultiplier`] consumes directly — the sign
+/// travels *into* the design instead of being re-applied after it.
 pub struct PreparedMatrix {
     rows: usize,
     cols: usize,
     sign: Vec<u8>,
     exp: Vec<i32>,
     mant: Vec<u32>,
+    /// Signed mantissas (`0` for flushed/non-finite elements), present
+    /// only when prepared for the signed kernel.
+    smant: Option<Vec<i32>>,
 }
 
 impl PreparedMatrix {
@@ -116,17 +126,46 @@ impl PreparedMatrix {
                 }
             }
         }
-        Ok(PreparedMatrix { rows, cols, sign, exp, mant })
+        Ok(PreparedMatrix { rows, cols, sign, exp, mant, smant: None })
+    }
+
+    /// Derive the signed-mantissa plane the signed GEMM kernel
+    /// consumes: `±mant` for normal elements, `0` for flushed and
+    /// non-finite ones (flushed terms are skipped; non-finite terms
+    /// take the raw-bits fallback, never the plane). A pure plane
+    /// derivation — the sign/exp/mant planes are untouched, so the
+    /// same matrix still serves the unsigned kernel bit-identically.
+    pub fn with_signed_mantissas(mut self) -> Self {
+        let smant = self
+            .exp
+            .iter()
+            .zip(self.sign.iter().zip(&self.mant))
+            .map(|(&e, (&s, &m))| match e {
+                EXP_FLUSHED | EXP_NONFINITE => 0i32,
+                _ if s != 0 => -(m as i32),
+                _ => m as i32,
+            })
+            .collect();
+        self.smant = Some(smant);
+        self
+    }
+
+    /// Whether the signed-mantissa plane is present (the signed kernel
+    /// requires it; see [`PreparedMatrix::with_signed_mantissas`]).
+    pub fn has_signed_mantissas(&self) -> bool {
+        self.smant.is_some()
     }
 
     /// The same matrix with rows and columns swapped — a plane re-pack
-    /// (pure copies), **not** a re-decomposition.
+    /// (pure copies), **not** a re-decomposition. Carries the
+    /// signed-mantissa plane along when present.
     pub fn transposed(&self) -> PreparedMatrix {
         let (rows, cols) = (self.cols, self.rows);
         let n = rows * cols;
         let mut sign = vec![0u8; n];
         let mut exp = vec![0i32; n];
         let mut mant = vec![0u32; n];
+        let mut smant = self.smant.as_ref().map(|_| vec![0i32; n]);
         for r in 0..self.rows {
             for c in 0..self.cols {
                 let src = r * self.cols + c;
@@ -134,9 +173,12 @@ impl PreparedMatrix {
                 sign[dst] = self.sign[src];
                 exp[dst] = self.exp[src];
                 mant[dst] = self.mant[src];
+                if let (Some(d), Some(s)) = (smant.as_mut(), self.smant.as_ref()) {
+                    d[dst] = s[src];
+                }
             }
         }
-        PreparedMatrix { rows, cols, sign, exp, mant }
+        PreparedMatrix { rows, cols, sign, exp, mant, smant }
     }
 
     pub fn rows(&self) -> usize {
@@ -153,6 +195,17 @@ impl PreparedMatrix {
         let s = r * self.cols;
         let e = s + self.cols;
         (&self.sign[s..e], &self.exp[s..e], &self.mant[s..e])
+    }
+
+    /// The signed-mantissa slice of row `r`.
+    ///
+    /// # Panics
+    /// Panics when the plane is absent; the signed kernel guards with
+    /// [`PreparedMatrix::has_signed_mantissas`] at entry.
+    #[inline]
+    pub(crate) fn smant_row(&self, r: usize) -> &[i32] {
+        let s = r * self.cols;
+        &self.smant.as_ref().expect("signed-mantissa plane")[s..s + self.cols]
     }
 
     /// Reconstructed f32 of element `(r, c)` (tests / non-finite paths).
@@ -214,6 +267,30 @@ mod tests {
                 assert_eq!(tt.value(r, c).to_bits(), t.value(r, c).to_bits());
             }
         }
+    }
+
+    #[test]
+    fn signed_mantissa_plane_classifies_and_transposes() {
+        let vals = [
+            1.5f32,          // +: +(1.1 << 23)
+            -2.5,            // -: negative mantissa
+            0.0,             // flushed -> 0
+            f32::NAN,        // non-finite -> 0
+            -1.0e-41,        // subnormal -> flushed -> 0
+            -1.0,            // -: exactly -(1 << 23)
+        ];
+        let p = PreparedMatrix::prepare(&vals, 2, 3).unwrap();
+        assert!(!p.has_signed_mantissas());
+        let p = p.with_signed_mantissas();
+        assert!(p.has_signed_mantissas());
+        assert_eq!(p.smant_row(0), &[0x00C0_0000, -0x00A0_0000, 0]);
+        assert_eq!(p.smant_row(1), &[0, 0, -0x0080_0000]);
+        // Unsigned planes untouched; the transpose carries the plane.
+        assert_eq!(p.value(0, 1).to_bits(), (-2.5f32).to_bits());
+        let t = p.transposed();
+        assert!(t.has_signed_mantissas());
+        assert_eq!(t.smant_row(1), &[-0x00A0_0000, 0]);
+        assert_eq!(t.smant_row(2), &[0, -0x0080_0000]);
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Radix-4 Booth-encoded approximate multiplier with a truncated
+//! partial-product tree — the approximate fixed-width Booth family
+//! (e.g. Jiang, Liu & Lombardi, TCAS-I 2016; the "positive/negative"
+//! designs of Spantidi et al., arXiv:2107.09366, are built the same
+//! way).
+//!
+//! The multiplicand `b` is recoded into 16 radix-4 Booth digits
+//! `d_i ∈ {−2, −1, 0, 1, 2}` with `b = Σ d_i·4^i` (exact for 32-bit
+//! two's complement). Each partial product `p_i = d_i·a·4^i` is a
+//! shift/negate of `a`; the approximation is structural: the `k`
+//! least-significant **columns** of the partial-product array are not
+//! generated, i.e. each partial product is truncated to a multiple of
+//! `2^k` before the adder tree. Truncating a two's-complement value
+//! floors it toward −∞, so every generated partial loses `[0, 2^k)` —
+//! the summed product **always under-runs the exact one**:
+//!
+//! * positive products come out low  → negative relative error;
+//! * negative products come out more negative → their magnitude is
+//!   *over*-estimated → positive relative error.
+//!
+//! That is a sign-asymmetric error profile, and it also breaks
+//! negation symmetry: `booth(−a, b) ≠ −booth(a, b)` in general (the
+//! recoded digits of `b` meet a negated multiplicand whose truncated
+//! partials floor differently). `tests/signed_mult.rs` documents both
+//! properties; they are the reason this design cannot be expressed by
+//! the sign-externalized unsigned pipeline.
+//!
+//! `booth0` generates every column and is exact — the identity the
+//! tests anchor on.
+
+use anyhow::{bail, Result};
+
+use super::SignedMultiplier;
+
+/// Radix-4 Booth multiplier with the low `k` partial-product columns
+/// truncated.
+#[derive(Debug, Clone, Copy)]
+pub struct Booth {
+    k: u32,
+}
+
+impl Booth {
+    /// `k` in `[0, 32]` — truncated low columns (`0` = exact Booth).
+    pub fn new(k: u32) -> Result<Self> {
+        if k > 32 {
+            bail!("Booth truncation k must be in [0, 32], got {k}");
+        }
+        Ok(Booth { k })
+    }
+}
+
+impl SignedMultiplier for Booth {
+    fn name(&self) -> String {
+        format!("booth{}", self.k)
+    }
+
+    fn mul(&self, a: i32, b: i32) -> i64 {
+        let a = a as i64;
+        let bits = b as u32 as u64; // two's-complement bit pattern of b
+        let mut acc = 0i64;
+        let mut prev = 0u64; // b[2i-1]; b[-1] = 0
+        for i in 0..16 {
+            let b0 = (bits >> (2 * i)) & 1;
+            let b1 = (bits >> (2 * i + 1)) & 1;
+            // d = -2*b[2i+1] + b[2i] + b[2i-1]; for i = 15, b[31] is the
+            // sign bit, which is exactly the radix-4 recoding of two's
+            // complement.
+            let d = (b0 + prev) as i64 - 2 * b1 as i64;
+            prev = b1;
+            if d != 0 {
+                // Partial product in its final column position; the low
+                // k columns are never generated (>> floors, like the
+                // missing adder cells).
+                let pp = (d * a) << (2 * i);
+                acc += (pp >> self.k) << self.k;
+            }
+        }
+        acc
+    }
+    // `mul_batch` default suffices: the recoding loop is already
+    // branch-light and monomorphizes per k.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn booth0_is_exact() {
+        let m = Booth::new(0).unwrap();
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..50_000 {
+            let a = rng.next_u32() as i32;
+            let b = rng.next_u32() as i32;
+            assert_eq!(m.mul(a, b), a as i64 * b as i64, "{a}*{b}");
+        }
+        for &(a, b) in &[
+            (i32::MIN, i32::MIN),
+            (i32::MIN, i32::MAX),
+            (i32::MIN, -1),
+            (-1, -1),
+            (0, i32::MIN),
+            (i32::MAX, i32::MAX),
+        ] {
+            assert_eq!(m.mul(a, b), a as i64 * b as i64, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn truncation_never_overestimates_the_signed_product() {
+        // Each generated partial is floored, so acc <= exact always —
+        // the mechanism behind the sign-asymmetric relative error.
+        let m = Booth::new(8).unwrap();
+        let mut rng = Xoshiro256::new(13);
+        for _ in 0..50_000 {
+            let a = rng.next_u32() as i32;
+            let b = rng.next_u32() as i32;
+            let exact = a as i64 * b as i64;
+            let approx = m.mul(a, b);
+            assert!(approx <= exact, "{a}*{b}: {approx} > {exact}");
+            // At most 16 partials each short by < 2^k.
+            assert!(exact - approx < 16i64 << 8, "{a}*{b}: gap {}", exact - approx);
+        }
+    }
+
+    #[test]
+    fn larger_k_is_less_accurate() {
+        let err = |k: u32| {
+            let m = Booth::new(k).unwrap();
+            let mut rng = Xoshiro256::new(17);
+            let mut sum = 0f64;
+            for _ in 0..20_000 {
+                let a = (rng.next_u32() >> 16) as i32 - 32768;
+                let b = (rng.next_u32() >> 16) as i32 - 32768;
+                sum += m.relative_error(a, b).abs();
+            }
+            sum
+        };
+        assert!(err(4) < err(8));
+        assert!(err(8) < err(12));
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        assert!(Booth::new(33).is_err());
+        assert!(Booth::new(32).is_ok());
+    }
+}

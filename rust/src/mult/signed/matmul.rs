@@ -1,0 +1,515 @@
+//! The signed prepared GEMM: `C = A·B` where every scalar product's
+//! **sign travels through the multiplier**.
+//!
+//! The unsigned kernel ([`super::super::matmul`]) splits each f32 into
+//! sign / exponent / magnitude, multiplies magnitudes, and re-applies
+//! `sx ^ sy` outside the design — correct for unsigned hardware,
+//! incapable of sign-dependent error. This kernel feeds each
+//! [`SignedMultiplier`] the two's-complement signed mantissas from the
+//! [`PreparedMatrix`] signed plane and takes the product's sign from
+//! the returned `i64`: whatever the design does across the four sign
+//! quadrants is what training sees.
+//!
+//! Everything else deliberately mirrors the unsigned kernel, structure
+//! for structure: decompose-once planes, input-derived row blocks ×
+//! [`GEMM_COL_BLOCK`]-column packed panels, one `mul_batch` per
+//! k-chain, strict k-order reassembly of batched and non-finite
+//! fallback terms, fused bias / column-sum epilogues, thread-count
+//! invariance. [`approx_matmul_reference_signed`] is the pinned scalar
+//! oracle (one [`approx_mul_f32_signed`] per product);
+//! `tests/signed_gemm.rs` pins blocked ≡ scalar per design × operand
+//! layout × thread count.
+//!
+//! One convention is new: if a signed design returns a product of
+//! exactly `0`, the term contributes `+0.0` — the operand signs were
+//! consumed by the design, so there is no external sign left to give
+//! the zero. (No shipped design produces `0` from normal mantissas,
+//! whose magnitudes are at least `2^23`.)
+
+use anyhow::{bail, Result};
+
+use crate::parallel;
+
+use super::super::matmul::{
+    decompose, gemm_row_block, output_error_stats, renorm, seeded_matrices,
+    GemmOutput, GEMM_COL_BLOCK,
+};
+use super::super::prepared::{element_value, EXP_NONFINITE};
+use super::super::{ErrorStats, Exact, PreparedMatrix};
+use super::{signed_mantissa, SignedMultiplier};
+
+/// Renormalize a signed approximate mantissa product: the sign is the
+/// product's own, the magnitude goes through the shared truncating
+/// renormalizer. `p == 0` yields `+0.0` (see the module docs).
+#[inline]
+fn renorm_signed(esum: i32, p: i64) -> f32 {
+    renorm((p < 0) as u32, esum, 0, p.unsigned_abs())
+}
+
+/// One bit-accurate signed approximate f32 product: `m` multiplies the
+/// signed mantissas, the exponent add is exact, the sign comes out of
+/// the design.
+pub fn approx_mul_f32_signed(m: &dyn SignedMultiplier, x: f32, y: f32) -> f32 {
+    if !x.is_finite() || !y.is_finite() {
+        return x * y;
+    }
+    match (decompose(x), decompose(y)) {
+        (Some((sx, ex, mx)), Some((sy, ey, my))) => {
+            let p = m.mul(
+                signed_mantissa(sx as u8, mx),
+                signed_mantissa(sy as u8, my),
+            );
+            renorm_signed(ex + ey, p)
+        }
+        // A flushed operand never reaches the design: the term is a
+        // signed zero, as in the unsigned pipeline.
+        _ => f32::from_bits((x.to_bits() ^ y.to_bits()) & 0x8000_0000),
+    }
+}
+
+/// The blocked decompose-once **signed** kernel: `C = A·B` over
+/// prepared planes with optional fused epilogues — the signed twin of
+/// [`super::super::approx_matmul_prepared`], same operand layouts,
+/// same determinism contract.
+///
+/// Both operands must carry the signed-mantissa plane
+/// ([`PreparedMatrix::with_signed_mantissas`]); preparing it once per
+/// operand is exactly the decompose-once discipline the unsigned path
+/// follows.
+pub fn approx_matmul_prepared_signed(
+    m: &dyn SignedMultiplier,
+    a: &PreparedMatrix,
+    b_packed: &PreparedMatrix,
+    bias: Option<&[f32]>,
+    with_col_sums: bool,
+) -> Result<GemmOutput> {
+    let rows = a.rows();
+    let inner = a.cols();
+    let cols = b_packed.rows();
+    if b_packed.cols() != inner {
+        bail!(
+            "approx_matmul_prepared_signed: A is [{rows}x{inner}] but packed B \
+             holds length-{} panels",
+            b_packed.cols()
+        );
+    }
+    if !a.has_signed_mantissas() || !b_packed.has_signed_mantissas() {
+        bail!(
+            "approx_matmul_prepared_signed: operands lack the signed-mantissa \
+             plane; prepare them with PreparedMatrix::with_signed_mantissas"
+        );
+    }
+    if let Some(b) = bias {
+        if b.len() != cols {
+            bail!(
+                "approx_matmul_prepared_signed: bias has {} entries for {cols} \
+                 columns",
+                b.len()
+            );
+        }
+    }
+    if rows == 0 || cols == 0 {
+        return Ok(GemmOutput {
+            out: vec![0f32; rows * cols],
+            col_sums: with_col_sums.then(|| vec![0f32; cols]),
+        });
+    }
+
+    let threads = parallel::max_threads();
+    let block = gemm_row_block(rows);
+    let mut out = vec![0f32; rows * cols];
+    let partials: Vec<Option<Vec<f32>>> =
+        parallel::par_chunks_mut(&mut out, block * cols, threads, |bi, chunk| {
+            // Per-task staging for one k-chain: signed mantissa pairs,
+            // their products, the exponent sum and k index of each
+            // batched term, and the non-finite fallback terms.
+            let mut ma = vec![0i32; inner];
+            let mut mb = vec![0i32; inner];
+            let mut prod = vec![0i64; inner];
+            let mut esum = vec![0i32; inner];
+            let mut slot = vec![0u32; inner];
+            let mut extra_k: Vec<u32> = Vec::new();
+            let mut extra_v: Vec<f32> = Vec::new();
+            let mut sums = with_col_sums.then(|| vec![0f32; cols]);
+
+            let r0 = bi * block;
+            let block_rows = chunk.len() / cols;
+            let mut j0 = 0usize;
+            while j0 < cols {
+                let j1 = (j0 + GEMM_COL_BLOCK).min(cols);
+                for ri in 0..block_rows {
+                    let (sa, ea, mta) = a.row(r0 + ri);
+                    let sma = a.smant_row(r0 + ri);
+                    for j in j0..j1 {
+                        let (sb, eb, mtb) = b_packed.row(j);
+                        let smb = b_packed.smant_row(j);
+                        let mut active = 0usize;
+                        extra_k.clear();
+                        extra_v.clear();
+                        for k in 0..inner {
+                            let (ex, ey) = (ea[k], eb[k]);
+                            if ex > 0
+                                && ex != EXP_NONFINITE
+                                && ey > 0
+                                && ey != EXP_NONFINITE
+                            {
+                                // Both operands normal: batch the signed
+                                // mantissa product.
+                                ma[active] = sma[k];
+                                mb[active] = smb[k];
+                                esum[active] = ex + ey;
+                                slot[active] = k as u32;
+                                active += 1;
+                            } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
+                                // Native product fallback, replayed at
+                                // its k position below.
+                                let x = element_value(sa[k], ex, mta[k]);
+                                let y = element_value(sb[k], ey, mtb[k]);
+                                extra_k.push(k as u32);
+                                extra_v.push(x * y);
+                            }
+                            // Flushed terms contribute a signed zero —
+                            // a no-op in the k-order accumulation.
+                        }
+                        m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
+                        // Reassemble the chain in strict k-order: both
+                        // term lists are k-sorted, so merge them.
+                        let mut acc = 0f32;
+                        let (mut t, mut e) = (0usize, 0usize);
+                        while t < active || e < extra_k.len() {
+                            let kt = if t < active { slot[t] } else { u32::MAX };
+                            let ke = if e < extra_k.len() {
+                                extra_k[e]
+                            } else {
+                                u32::MAX
+                            };
+                            if kt < ke {
+                                acc += renorm_signed(esum[t], prod[t]);
+                                t += 1;
+                            } else {
+                                acc += extra_v[e];
+                                e += 1;
+                            }
+                        }
+                        let v = match bias {
+                            Some(b) => acc + b[j],
+                            None => acc,
+                        };
+                        chunk[ri * cols + j] = v;
+                        if let Some(s) = sums.as_mut() {
+                            s[j] += v;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+            sums
+        });
+
+    let col_sums = if with_col_sums {
+        let mut total = vec![0f32; cols];
+        for p in partials.into_iter().flatten() {
+            for (t, v) in total.iter_mut().zip(&p) {
+                *t += *v;
+            }
+        }
+        Some(total)
+    } else {
+        None
+    };
+    Ok(GemmOutput { out, col_sums })
+}
+
+/// `C[rows×cols] = A[rows×inner] · B[inner×cols]` (row-major slices)
+/// through the signed blocked kernel — the signed twin of
+/// [`super::super::approx_matmul`].
+pub fn approx_matmul_signed(
+    m: &dyn SignedMultiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != inner * cols {
+        bail!(
+            "approx_matmul_signed: ({rows}x{inner})·({inner}x{cols}) needs {} \
+             and {} elements, got {} and {}",
+            rows * inner,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, inner, 1)?
+        .with_signed_mantissas();
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, 1, cols)?
+        .with_signed_mantissas();
+    Ok(approx_matmul_prepared_signed(m, &ap, &bp, None, false)?.out)
+}
+
+/// `C = Aᵀ·B` with `a` stored untransposed `[inner×rows]` — the signed
+/// twin of [`super::super::approx_matmul_tn`], same bit-identity
+/// contract against the explicit transpose.
+pub fn approx_matmul_signed_tn(
+    m: &dyn SignedMultiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != inner * rows || b.len() != inner * cols {
+        bail!(
+            "approx_matmul_signed_tn: ({inner}x{rows})ᵀ·({inner}x{cols}) needs \
+             {} and {} elements, got {} and {}",
+            inner * rows,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, 1, rows)?
+        .with_signed_mantissas();
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, 1, cols)?
+        .with_signed_mantissas();
+    Ok(approx_matmul_prepared_signed(m, &ap, &bp, None, false)?.out)
+}
+
+/// `C = A·Bᵀ` with `b` stored untransposed `[cols×inner]` — the signed
+/// twin of [`super::super::approx_matmul_nt`].
+pub fn approx_matmul_signed_nt(
+    m: &dyn SignedMultiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != cols * inner {
+        bail!(
+            "approx_matmul_signed_nt: ({rows}x{inner})·({cols}x{inner})ᵀ needs \
+             {} and {} elements, got {} and {}",
+            rows * inner,
+            cols * inner,
+            a.len(),
+            b.len()
+        );
+    }
+    let ap = PreparedMatrix::prepare_strided(a, rows, inner, inner, 1)?
+        .with_signed_mantissas();
+    let bp = PreparedMatrix::prepare_strided(b, cols, inner, inner, 1)?
+        .with_signed_mantissas();
+    Ok(approx_matmul_prepared_signed(m, &ap, &bp, None, false)?.out)
+}
+
+/// The signed scalar reference kernel: one [`approx_mul_f32_signed`]
+/// per product, f32 accumulation in strict k-order, no batching, no
+/// blocking, no parallelism. Slow by construction — it exists as the
+/// bit-identity oracle for the blocked signed kernel
+/// (`tests/signed_gemm.rs` pins blocked ≡ this for every signed design
+/// × operand layout × thread count).
+pub fn approx_matmul_reference_signed(
+    m: &dyn SignedMultiplier,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != rows * inner || b.len() != inner * cols {
+        bail!(
+            "approx_matmul_reference_signed: ({rows}x{inner})·({inner}x{cols}) \
+             needs {} and {} elements, got {} and {}",
+            rows * inner,
+            inner * cols,
+            a.len(),
+            b.len()
+        );
+    }
+    let mut out = vec![0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let mut acc = 0f32;
+            for k in 0..inner {
+                acc += approx_mul_f32_signed(m, a[i * inner + k], b[k * cols + j]);
+            }
+            out[i * cols + j] = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// Signed model-vs-bit-accurate comparison on a real GEMM shape: each
+/// design and the exact pipeline run on the same seeded `[-1, 1)`
+/// matrices (shared with the unsigned harness, so signed and unsigned
+/// rows of the characterization tables are directly comparable).
+/// Returns stats in design order.
+pub fn characterize_matmul_signed_set(
+    designs: &[Box<dyn SignedMultiplier>],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    seed: u64,
+) -> Result<Vec<ErrorStats>> {
+    if rows == 0 || inner == 0 || cols == 0 {
+        bail!("characterize_matmul_signed: empty shape {rows}x{inner}x{cols}");
+    }
+    let (a, b) = seeded_matrices(rows, inner, cols, seed);
+    // The exact signed pipeline is bit-identical to the exact unsigned
+    // one (sign-magnitude with an exact core), so the unsigned exact
+    // GEMM is the shared reference.
+    let exact = super::super::approx_matmul(&Exact, &a, &b, rows, inner, cols)?;
+    designs
+        .iter()
+        .map(|d| {
+            let approx = approx_matmul_signed(d.as_ref(), &a, &b, rows, inner, cols)?;
+            Ok(output_error_stats(&approx, &exact))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Booth, SignedDrum, SignedExact};
+    use super::*;
+    use crate::mult::{approx_mul_f32, Drum};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn exact_signed_pipeline_matches_exact_unsigned_pipeline() {
+        // Sign through the design (SignedExact) ≡ sign outside the
+        // design (Exact): for an exact core the routing is invisible.
+        let mut rng = Xoshiro256::new(19);
+        for _ in 0..50_000 {
+            let x = f32::from_bits(rng.next_u32());
+            let y = f32::from_bits(rng.next_u32());
+            let s = approx_mul_f32_signed(&SignedExact, x, y);
+            let u = approx_mul_f32(&Exact, x, y);
+            assert!(
+                s.to_bits() == u.to_bits() || (s.is_nan() && u.is_nan()),
+                "{x} * {y}: signed {s} vs unsigned {u}"
+            );
+        }
+    }
+
+    #[test]
+    fn sdrum_pipeline_matches_drum_pipeline() {
+        // Sign-magnitude signed DRUM ≡ unsigned DRUM + external sign:
+        // the refactor moves the sign without changing one bit.
+        let sd = SignedDrum::new(6).unwrap();
+        let ud = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(29);
+        for _ in 0..50_000 {
+            let x = 4.0 * rng.next_f32() - 2.0;
+            let y = 4.0 * rng.next_f32() - 2.0;
+            let s = approx_mul_f32_signed(&sd, x, y);
+            let u = approx_mul_f32(&ud, x, y);
+            assert_eq!(s.to_bits(), u.to_bits(), "{x} * {y}");
+        }
+    }
+
+    #[test]
+    fn booth_pipeline_is_sign_asymmetric() {
+        // The property the signed path exists for: negating one operand
+        // does NOT negate the approximate product. k = 24 keeps the
+        // floor-vs-ceil gap of the truncated partials (a multiple of
+        // 2^24 on an odd mantissa) above the renormalizer's own 24-bit
+        // truncation, so the asymmetry survives into the f32 result.
+        let m = Booth::new(24).unwrap();
+        let (x, y) = (1.2345678f32, 1.7654321f32);
+        let pp = approx_mul_f32_signed(&m, x, y);
+        let np = approx_mul_f32_signed(&m, -x, y);
+        assert_ne!(np.to_bits(), (-pp).to_bits(), "booth came out sign-symmetric");
+        // And both stay close to the true product.
+        assert!((pp - x * y).abs() < 1e-2 * (x * y).abs());
+        assert!((np + x * y).abs() < 1e-2 * (x * y).abs());
+    }
+
+    #[test]
+    fn blocked_kernel_matches_scalar_reference() {
+        let d = Booth::new(8).unwrap();
+        let mut rng = Xoshiro256::new(31);
+        let (rows, inner, cols) = (137usize, 19usize, GEMM_COL_BLOCK + 5);
+        let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let fast = approx_matmul_signed(&d, &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference_signed(&d, &a, &b, rows, inner, cols).unwrap();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn fused_bias_and_col_sums_match_unfused() {
+        let d = SignedDrum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(37);
+        let (rows, inner, cols) = (73usize, 13usize, 6usize);
+        let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let bias: Vec<f32> = (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+        let ap = PreparedMatrix::prepare(&a, rows, inner)
+            .unwrap()
+            .with_signed_mantissas();
+        let bp = PreparedMatrix::prepare_strided(&b, cols, inner, 1, cols)
+            .unwrap()
+            .with_signed_mantissas();
+        let fused =
+            approx_matmul_prepared_signed(&d, &ap, &bp, Some(&bias), true).unwrap();
+        let mut plain = approx_matmul_signed(&d, &a, &b, rows, inner, cols).unwrap();
+        for r in 0..rows {
+            for c in 0..cols {
+                plain[r * cols + c] += bias[c];
+            }
+        }
+        assert_eq!(fused.out, plain);
+        let sums = fused.col_sums.unwrap();
+        let mut want = vec![0f32; cols];
+        for blk in plain.chunks(gemm_row_block(rows) * cols) {
+            let mut part = vec![0f32; cols];
+            for row in blk.chunks(cols) {
+                for (p, &v) in part.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+            for (w, p) in want.iter_mut().zip(&part) {
+                *w += p;
+            }
+        }
+        assert_eq!(sums, want);
+    }
+
+    #[test]
+    fn kernel_requires_the_signed_plane() {
+        let ap = PreparedMatrix::prepare(&[1.0f32; 6], 2, 3).unwrap();
+        let bp = PreparedMatrix::prepare(&[1.0f32; 6], 2, 3).unwrap();
+        let r = approx_matmul_prepared_signed(&SignedExact, &ap, &bp, None, false);
+        let err = match r {
+            Ok(_) => panic!("kernel accepted operands without the signed plane"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("signed-mantissa plane"), "{err:#}");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let m = SignedExact;
+        assert!(approx_matmul_signed(&m, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err());
+        assert!(
+            approx_matmul_reference_signed(&m, &[0.0; 5], &[0.0; 6], 2, 3, 2).is_err()
+        );
+        assert!(characterize_matmul_signed_set(&[], 2, 0, 2, 1).is_err());
+    }
+
+    #[test]
+    fn gemm_error_tracks_design_error() {
+        let designs: Vec<Box<dyn SignedMultiplier>> = vec![
+            Box::new(SignedExact),
+            Box::new(SignedDrum::new(6).unwrap()),
+            Box::new(Booth::new(24).unwrap()),
+        ];
+        let stats = characterize_matmul_signed_set(&designs, 16, 32, 16, 5).unwrap();
+        assert_eq!(stats[0].mre, 0.0, "sexact must be error-free");
+        assert!(stats[1].mre > 1e-4 && stats[1].mre < 0.25, "sdrum6 {}", stats[1].mre);
+        assert!(stats[2].mre > 1e-7, "booth24 {}", stats[2].mre);
+    }
+}

@@ -1,0 +1,281 @@
+//! Signed-operand approximate multipliers: two's-complement designs
+//! whose **sign handling is part of the simulated hardware**, not
+//! bookkeeping around it.
+//!
+//! ## Why a second trait
+//!
+//! The unsigned [`super::Multiplier`] pipeline strips the sign of every
+//! f32 operand up front: `approx_mul_f32` multiplies the *magnitudes*
+//! (24-bit mantissas) through the design and re-applies `sx ^ sy` to
+//! the result. That is exactly right for designs published on unsigned
+//! operands — but it makes sign-dependent error **unrepresentable**:
+//! under sign-externalized routing, `(−a)·b = −(a·b)` holds for every
+//! possible design, by construction. Real signed hardware is not so
+//! constrained. Spantidi et al. (arXiv:2107.09366) characterize
+//! "positive/negative" multipliers whose error flips sign with the
+//! product's sign, and truncated two's-complement partial-product trees
+//! (the Booth family) floor toward −∞, overestimating the magnitude of
+//! negative products while underestimating positive ones.
+//!
+//! [`SignedMultiplier`] therefore takes two's-complement `i32` operands
+//! and returns an `i64` product whose sign **comes out of the design**.
+//! The signed GEMM path ([`approx_mul_f32_signed`],
+//! [`approx_matmul_prepared_signed`]) feeds it signed mantissas
+//! (`±(1.m × 2^23)`) and takes the result's sign from the returned
+//! product — the exponent add stays exact, but the sign no longer
+//! bypasses the multiplier. See [`signed_mantissa`] /
+//! `PreparedMatrix::with_signed_mantissas` for the plane layout.
+//!
+//! ## Designs
+//!
+//! * [`SignedDrum`] (`sdrum<k>`) — DRUM's published signed form
+//!   (Hashemi, Bahar & Reda, ICCAD'15 §III.C): a sign-magnitude front
+//!   end around the unsigned DRUM core; sign-symmetric by design.
+//! * [`Booth`] (`booth<k>`) — radix-4 Booth-encoded multiplier with
+//!   the `k` least-significant columns of each partial product
+//!   truncated (the approximate fixed-width Booth family, e.g. Jiang
+//!   et al., TCAS-I'16). Two's-complement end to end; truncation
+//!   floors, so the error is **sign-asymmetric** — the case the
+//!   unsigned pipeline cannot express.
+//! * [`SignedRoba`] (`sroba`) — RoBA's published signed form
+//!   (Zendegani et al., TVLSI'17): sign detect, magnitude datapath,
+//!   sign re-application; sign-symmetric.
+//! * [`SignedLut`] (`slut<bits>:<inner>`) — ApproxTrain-style table
+//!   over the full **signed** domain `[−2^(bits−1), 2^(bits−1))²`.
+//!   Because each (sign, sign) quadrant is tabulated separately, a
+//!   signed LUT can carry sign-asymmetric error — an unsigned LUT
+//!   cannot, whatever it wraps.
+//!
+//! [`SignedExact`] (`sexact`) closes the set for baselines and tests.
+//!
+//! Everything here follows the unsigned subsystem's contracts:
+//! `mul_batch` is the monomorphized fast path and must stay
+//! bit-identical to `mul` (pinned by `tests/signed_mult.rs`), and
+//! [`characterize_signed`] is the same chunk-scheduled deterministic
+//! parallel reduction as [`super::characterize`], over sign-symmetric
+//! operand distributions.
+
+mod booth;
+mod sdrum;
+mod slut;
+mod sroba;
+mod stats;
+
+pub(crate) mod matmul;
+
+pub use booth::Booth;
+pub use matmul::{
+    approx_matmul_prepared_signed, approx_matmul_reference_signed,
+    approx_matmul_signed, approx_matmul_signed_nt, approx_matmul_signed_tn,
+    approx_mul_f32_signed, characterize_matmul_signed_set,
+};
+pub use sdrum::SignedDrum;
+pub use slut::SignedLut;
+pub use sroba::SignedRoba;
+pub use stats::{characterize_signed, characterize_signed_threads, sample_signed};
+
+use anyhow::{bail, Result};
+
+/// An (approximate) signed integer multiplier over two's-complement
+/// operands. The product's sign is produced by the design itself —
+/// nothing external corrects it.
+pub trait SignedMultiplier: Send + Sync {
+    /// Design name, e.g. `sdrum6`.
+    fn name(&self) -> String;
+
+    /// Approximate product of two signed operands.
+    fn mul(&self, a: i32, b: i32) -> i64;
+
+    /// Exact reference for error accounting. Like
+    /// [`super::Multiplier::exact`], the harnesses inline this on hot
+    /// paths; do not override.
+    fn exact(&self, a: i32, b: i32) -> i64 {
+        a as i64 * b as i64
+    }
+
+    /// Signed relative error of one product (0 when the exact product
+    /// is 0, matching the MRE definition's implicit exclusion).
+    fn relative_error(&self, a: i32, b: i32) -> f64 {
+        let exact = self.exact(a, b);
+        if exact == 0 {
+            return 0.0;
+        }
+        (self.mul(a, b) as f64 - exact as f64) / exact as f64
+    }
+
+    /// Approximate products of paired slices: `out[i] = mul(a[i], b[i])`.
+    /// Same contract as [`super::Multiplier::mul_batch`]: one virtual
+    /// call per slice, monomorphized inner loop, bit-identical to the
+    /// scalar path.
+    ///
+    /// # Panics
+    /// Panics when the three slices differ in length.
+    fn mul_batch(&self, a: &[i32], b: &[i32], out: &mut [i64]) {
+        check_signed_batch_lens(a, b, out);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.mul(x, y);
+        }
+    }
+}
+
+/// Shared length guard for `mul_batch` implementations.
+#[inline]
+pub(crate) fn check_signed_batch_lens(a: &[i32], b: &[i32], out: &[i64]) {
+    assert!(
+        a.len() == b.len() && a.len() == out.len(),
+        "mul_batch: slice lengths differ ({}, {}, {})",
+        a.len(),
+        b.len(),
+        out.len()
+    );
+}
+
+/// Exact signed multiplier (baseline / LUT tabulation reference).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignedExact;
+
+impl SignedMultiplier for SignedExact {
+    fn name(&self) -> String {
+        "sexact".into()
+    }
+
+    fn mul(&self, a: i32, b: i32) -> i64 {
+        a as i64 * b as i64
+    }
+    // `mul_batch` default: already a monomorphized widening-multiply
+    // loop for this impl.
+}
+
+/// The signed mantissa a prepared f32 element feeds a
+/// [`SignedMultiplier`]: `±(1.m × 2^23)` as a two's-complement `i32`
+/// (the 25-bit signed value every magnitude in `[2^23, 2^24)` maps to).
+#[inline]
+pub(crate) fn signed_mantissa(sign: u8, mant: u32) -> i32 {
+    if sign != 0 {
+        -(mant as i32)
+    } else {
+        mant as i32
+    }
+}
+
+/// Purely syntactic test: does `spec` belong to the signed grammar?
+/// The signed and unsigned prefixes never overlap, so this decides
+/// which `by_name` a spec resolves against without building anything
+/// (a `slut12` table is 128 MiB — far too heavy for spec routing).
+pub fn is_signed_spec(spec: &str) -> bool {
+    spec == "sexact"
+        || spec == "sroba"
+        || spec.starts_with("sdrum")
+        || spec.starts_with("booth")
+        || spec.starts_with("slut")
+}
+
+/// Build a signed multiplier from a spec string: `sexact`,
+/// `sdrum<k>`, `booth<k>`, `sroba`, or `slut<bits>:<inner>` for the
+/// signed-domain LUT backend of any of the above (e.g. `slut12:sdrum6`).
+/// The unsigned grammar lives in [`super::by_name`]; the two prefixes
+/// never overlap.
+pub fn by_name(spec: &str) -> Result<Box<dyn SignedMultiplier>> {
+    if let Some(rest) = spec.strip_prefix("slut") {
+        if let Some((bits, inner)) = rest.split_once(':') {
+            let bits: u32 = bits.parse()?;
+            let inner = by_name(inner)?;
+            return Ok(Box::new(SignedLut::new(inner.as_ref(), bits)?));
+        }
+    }
+    if spec == "sexact" {
+        return Ok(Box::new(SignedExact));
+    }
+    if spec == "sroba" {
+        return Ok(Box::new(SignedRoba));
+    }
+    if let Some(k) = spec.strip_prefix("sdrum") {
+        let k: u32 = k.parse()?;
+        return Ok(Box::new(SignedDrum::new(k)?));
+    }
+    if let Some(k) = spec.strip_prefix("booth") {
+        let k: u32 = k.parse()?;
+        return Ok(Box::new(Booth::new(k)?));
+    }
+    bail!(
+        "unknown signed multiplier spec {spec:?} (expected sexact | sdrum<k> \
+         | booth<k> | sroba | slut<bits>:<inner>; unsigned designs like \
+         drum<k> live in mult::by_name)"
+    )
+}
+
+/// The signed design set the characterization harness sweeps by
+/// default (mirrors [`super::standard_designs`]).
+pub fn standard_signed_designs() -> Vec<Box<dyn SignedMultiplier>> {
+    vec![
+        Box::new(SignedExact),
+        Box::new(SignedDrum::new(4).unwrap()),
+        Box::new(SignedDrum::new(6).unwrap()),
+        Box::new(SignedDrum::new(8).unwrap()),
+        Box::new(Booth::new(8).unwrap()),
+        Box::new(Booth::new(12).unwrap()),
+        Box::new(SignedRoba),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sexact_is_exact() {
+        let m = SignedExact;
+        assert_eq!(m.mul(0, 0), 0);
+        assert_eq!(m.mul(-3, 7), -21);
+        assert_eq!(m.mul(i32::MIN, i32::MIN), (i32::MIN as i64).pow(2));
+        assert_eq!(m.relative_error(-12345, 6789), 0.0);
+    }
+
+    #[test]
+    fn by_name_parses() {
+        assert_eq!(by_name("sexact").unwrap().name(), "sexact");
+        assert_eq!(by_name("sdrum6").unwrap().name(), "sdrum6");
+        assert_eq!(by_name("booth8").unwrap().name(), "booth8");
+        assert_eq!(by_name("sroba").unwrap().name(), "sroba");
+        assert_eq!(by_name("slut8:sdrum6").unwrap().name(), "slut8:sdrum6");
+        assert!(by_name("sdrum").is_err());
+        assert!(by_name("drum6").is_err()); // unsigned grammar
+        assert!(by_name("slut99:sdrum6").is_err());
+        assert!(by_name("slut8:drum6").is_err()); // unsigned inner
+    }
+
+    #[test]
+    fn signed_mantissa_maps_both_signs() {
+        assert_eq!(signed_mantissa(0, 0x0080_0000), 1 << 23);
+        assert_eq!(signed_mantissa(1, 0x0080_0000), -(1 << 23));
+        assert_eq!(signed_mantissa(1, 0x00FF_FFFF), -0x00FF_FFFF);
+    }
+
+    #[test]
+    fn default_mul_batch_matches_scalar() {
+        let m = by_name("booth8").unwrap();
+        let a = [0i32, 1, -77, i32::MIN, i32::MAX, -1];
+        let b = [5i32, 0, -123_456, -1, i32::MIN, -1];
+        let mut out = [0i64; 6];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slice lengths differ")]
+    fn mul_batch_length_mismatch_panics() {
+        let mut out = [0i64; 2];
+        SignedExact.mul_batch(&[1, 2, 3], &[4, 5, 6], &mut out);
+    }
+
+    #[test]
+    fn standard_set_has_unique_names() {
+        let designs = standard_signed_designs();
+        let mut names: Vec<String> = designs.iter().map(|d| d.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), designs.len());
+    }
+}

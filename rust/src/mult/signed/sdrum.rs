@@ -1,0 +1,107 @@
+//! Signed DRUM (Hashemi, Bahar & Reda, ICCAD 2015, §III.C): the
+//! published design handles signed operands with a sign-magnitude
+//! front end — detect the signs, run the unsigned dynamic-range core
+//! on the magnitudes, and conditionally negate the output.
+//!
+//! Consequence: signed DRUM is exactly **sign-symmetric** —
+//! `sdrum(−a, b) = −sdrum(a, b)` for every operand pair — so its
+//! signed relative-error distribution is the unsigned one, mirrored
+//! through the product sign. `tests/signed_mult.rs` pins both the
+//! symmetry and the equivalence to the unsigned core on magnitudes;
+//! the contrast is [`super::Booth`], which deliberately breaks the
+//! symmetry.
+
+use anyhow::Result;
+
+use super::super::Drum;
+use super::super::Multiplier as _;
+use super::SignedMultiplier;
+
+/// DRUM-k over two's-complement operands (sign-magnitude front end).
+#[derive(Debug, Clone, Copy)]
+pub struct SignedDrum {
+    core: Drum,
+}
+
+impl SignedDrum {
+    /// `k` in `[3, 32]`, as for the unsigned core.
+    pub fn new(k: u32) -> Result<Self> {
+        Ok(SignedDrum { core: Drum::new(k)? })
+    }
+}
+
+impl SignedMultiplier for SignedDrum {
+    fn name(&self) -> String {
+        format!("s{}", self.core.name())
+    }
+
+    fn mul(&self, a: i32, b: i32) -> i64 {
+        // |i32::MIN| = 2^31 overflows i32 but not u32; the magnitude
+        // product (with DRUM's forced-bit overestimate, ≤ ~1.56x at
+        // k = 3) stays below 2^63, so the cast back is exact.
+        let mag = self.core.mul(a.unsigned_abs(), b.unsigned_abs());
+        debug_assert!(mag <= i64::MAX as u64, "magnitude {mag:#x} overflows i64");
+        let p = mag as i64;
+        if (a < 0) != (b < 0) {
+            -p
+        } else {
+            p
+        }
+    }
+    // `mul_batch` default suffices: the monomorphized loop over `mul`
+    // is already the abs + leading-zero + shift kernel.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn small_operands_exact_in_all_quadrants() {
+        let d = SignedDrum::new(6).unwrap();
+        for a in -40i32..40 {
+            for b in -40i32..40 {
+                assert_eq!(d.mul(a, b), a as i64 * b as i64, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_unsigned_core_on_magnitudes() {
+        let d = SignedDrum::new(6).unwrap();
+        let core = Drum::new(6).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..20_000 {
+            let a = rng.next_u32() as i32;
+            let b = rng.next_u32() as i32;
+            let want = core.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
+            let want = if (a < 0) != (b < 0) { -want } else { want };
+            assert_eq!(d.mul(a, b), want, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn extreme_magnitudes_do_not_overflow() {
+        for k in [3u32, 6, 32] {
+            let d = SignedDrum::new(k).unwrap();
+            for &(a, b) in &[
+                (i32::MIN, i32::MIN),
+                (i32::MIN, i32::MAX),
+                (i32::MAX, i32::MAX),
+                (i32::MIN, -1),
+                (i32::MIN, 1),
+            ] {
+                let p = d.mul(a, b);
+                let exact = a as i64 * b as i64;
+                // Within DRUM's published error band, right sign.
+                assert!(
+                    (p as f64 - exact as f64).abs()
+                        <= 0.6 * exact.unsigned_abs() as f64 + 1.0,
+                    "sdrum{k}: {a}*{b} = {p} vs {exact}"
+                );
+                assert!(p.signum() * exact.signum() >= 0, "{a}*{b}");
+            }
+        }
+    }
+}

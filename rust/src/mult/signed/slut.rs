@@ -1,0 +1,246 @@
+//! Signed-domain lookup-table backend: the ApproxTrain idea
+//! (arXiv:2209.04161) extended to two's-complement operands.
+//!
+//! [`SignedLut`] tabulates any [`SignedMultiplier`] over the full
+//! signed square `[−2^(bits−1), 2^(bits−1))²` — all four sign
+//! quadrants, `2^bits × 2^bits` products (128 MiB of `i64` at 12×12).
+//! This is the capability an unsigned LUT structurally lacks: its
+//! table is one quadrant, so any design it wraps is forced
+//! sign-symmetric. A signed table carries whatever sign-asymmetry the
+//! inner design has — `slut12:booth8` preserves Booth's floor-biased
+//! quadrants bit for bit inside the domain.
+//!
+//! Out-of-domain operands take the same leading-one reduction as the
+//! unsigned LUT, applied to the **magnitude** (sign preserved, product
+//! rescaled by the combined shift). Fidelity contract, mirroring
+//! `mult::lut` (pinned by `tests/signed_mult.rs`):
+//!
+//! * both operands in-domain — bit-identical to the inner design;
+//! * `sdrum<k>` with `k < bits − 1` (strict; the magnitude field is
+//!   `bits − 1` wide) — bit-identical over the full `i32` range, by
+//!   the same reduce-composition argument as DRUM-through-unsigned-LUT;
+//! * otherwise — the inner design on magnitude-reduced operands,
+//!   rescaled with sign-aware saturation.
+
+use anyhow::{bail, Result};
+
+use super::{check_signed_batch_lens, SignedMultiplier};
+
+/// Lookup-table backend over the signed operand domain.
+pub struct SignedLut {
+    name: String,
+    bits: u32,
+    /// `2^(bits-1)` — operands in `[-half, half)` index the table
+    /// directly.
+    half: i32,
+    /// Row-major products over the offset-encoded domain:
+    /// `table[((a + half) << bits) | (b + half)] = inner.mul(a, b)`.
+    table: Vec<i64>,
+}
+
+impl SignedLut {
+    /// Widest supported operand, matching the unsigned backend: 12×12
+    /// is a 128 MiB table.
+    pub const MAX_BITS: u32 = 12;
+
+    /// Tabulate `inner` over the signed `bits`-wide domain.
+    pub fn new(inner: &dyn SignedMultiplier, bits: u32) -> Result<Self> {
+        if !(2..=Self::MAX_BITS).contains(&bits) {
+            bail!(
+                "signed LUT operand width must be in [2, {}], got {bits}",
+                Self::MAX_BITS
+            );
+        }
+        let size = 1usize << bits;
+        let half = (size / 2) as i32;
+        let cols: Vec<i32> = (-half..half).collect();
+        let mut row_a = vec![0i32; size];
+        let mut table = vec![0i64; size * size];
+        for (r, a) in (-half..half).enumerate() {
+            row_a.fill(a);
+            inner.mul_batch(&row_a, &cols, &mut table[r * size..(r + 1) * size]);
+        }
+        Ok(SignedLut {
+            name: format!("slut{bits}:{}", inner.name()),
+            bits,
+            half,
+            table,
+        })
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Leading-one reduction of the magnitude to the table's signed
+    /// domain: `(index, shift)` with `value ≈ index << shift` and
+    /// `index ∈ [-half, half)`. The in-domain test is on the *signed*
+    /// value, not the magnitude: `-half` is a tabulated operand (table
+    /// row 0) and must hit the table directly, while `+half` is out of
+    /// domain and reduces.
+    #[inline]
+    fn reduce(&self, v: i32) -> (i32, u32) {
+        if (-self.half..self.half).contains(&v) {
+            return (v, 0);
+        }
+        let mag = v.unsigned_abs();
+        let msb = 31 - mag.leading_zeros();
+        let shift = msb + 2 - self.bits; // magnitude field is bits-1 wide
+        let red = (mag >> shift) as i32;
+        (if v < 0 { -red } else { red }, shift)
+    }
+
+    #[inline]
+    fn lookup(&self, ia: i32, ib: i32) -> i64 {
+        let r = (ia + self.half) as usize;
+        let c = (ib + self.half) as usize;
+        self.table[(r << self.bits) | c]
+    }
+}
+
+/// Rescale a table product by the reduction shifts, saturating on
+/// magnitude overflow instead of wrapping (the signed analogue of the
+/// unsigned backend's `shift_saturating`). Exact for every design
+/// whose in-table magnitudes stay below `2^(63 - shift)` — all the
+/// deterministic hardware designs at training-relevant widths.
+#[inline]
+fn shift_signed_saturating(value: i64, shift: u32) -> i64 {
+    if value == 0 || shift == 0 {
+        return value;
+    }
+    let mag = value.unsigned_abs();
+    if mag.leading_zeros() > shift {
+        value << shift
+    } else if value < 0 {
+        i64::MIN
+    } else {
+        i64::MAX
+    }
+}
+
+impl SignedMultiplier for SignedLut {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn mul(&self, a: i32, b: i32) -> i64 {
+        let (ia, sa) = self.reduce(a);
+        let (ib, sb) = self.reduce(b);
+        shift_signed_saturating(self.lookup(ia, ib), sa + sb)
+    }
+
+    /// Reduce + load loop, bit-identical to the scalar LUT path.
+    fn mul_batch(&self, a: &[i32], b: &[i32], out: &mut [i64]) {
+        check_signed_batch_lens(a, b, out);
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            let (ix, sx) = self.reduce(x);
+            let (iy, sy) = self.reduce(y);
+            *o = shift_signed_saturating(self.lookup(ix, iy), sx + sy);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, Booth, SignedDrum, SignedExact};
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn exhaustive_identity_inside_the_signed_domain() {
+        // All four quadrants: the LUT is the design, bit for bit.
+        // booth6 is deliberately *inexact at the -half edge* (-32 is a
+        // single floored partial: booth6(-32, 1) = -64): a reduction
+        // that wrongly routed -half around the table would return -128
+        // here, so this pins the domain boundary, not just the bulk.
+        let booth = Booth::new(6).unwrap();
+        assert_eq!(booth.mul(-32, 1), -64);
+        let designs: [&dyn SignedMultiplier; 2] = [&SignedExact, &booth];
+        for d in designs {
+            let lut = SignedLut::new(d, 6).unwrap();
+            for a in -32i32..32 {
+                for b in -32i32..32 {
+                    assert_eq!(lut.mul(a, b), d.mul(a, b), "{} {a}*{b}", lut.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sdrum_identity_over_full_signed_range() {
+        // sdrum6 through an 8-bit signed LUT (magnitude field 7 > 6):
+        // identical on arbitrary operands, including the extremes.
+        let d = SignedDrum::new(6).unwrap();
+        let lut = SignedLut::new(&d, 8).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..20_000 {
+            let (a, b) = (rng.next_u32() as i32, rng.next_u32() as i32);
+            assert_eq!(lut.mul(a, b), d.mul(a, b), "{a}*{b}");
+        }
+        for &(a, b) in &[
+            (i32::MIN, i32::MIN),
+            (i32::MIN, i32::MAX),
+            (i32::MIN, -1),
+            (-1, -1),
+            (127, -128),
+            (-128, -128),
+        ] {
+            assert_eq!(lut.mul(a, b), d.mul(a, b), "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn preserves_sign_asymmetry_of_the_inner_design() {
+        // booth8 in-domain: the (+,+) and (-,+) quadrants err
+        // differently, and the signed table reproduces both exactly.
+        let d = Booth::new(8).unwrap();
+        let lut = SignedLut::new(&d, 12).unwrap();
+        let (a, b) = (1499i32, 1733i32);
+        assert_eq!(lut.mul(a, b), d.mul(a, b));
+        assert_eq!(lut.mul(-a, b), d.mul(-a, b));
+        assert_ne!(d.mul(-a, b), -d.mul(a, b), "expected asymmetric operand pair");
+    }
+
+    #[test]
+    fn wide_operands_use_magnitude_reduction() {
+        let lut = SignedLut::new(&SignedExact, 8).unwrap();
+        let a = -0x0001_2345i32; // 17-bit magnitude -> reduced by 10
+        let b = 0x0000_007Fi32; // fits
+        // The reduction shifts the *magnitude* (an arithmetic `a >> 10`
+        // would floor to -73, not -72).
+        let red = -((a.unsigned_abs() >> 10) as i32);
+        assert_eq!(red, -72);
+        assert_eq!(lut.mul(a, b), SignedExact.mul(red, b) << 10);
+    }
+
+    #[test]
+    fn saturates_instead_of_wrapping() {
+        struct Overshoot;
+        impl SignedMultiplier for Overshoot {
+            fn name(&self) -> String {
+                "overshoot".into()
+            }
+            fn mul(&self, a: i32, b: i32) -> i64 {
+                (a as i64 * b as i64) * 3
+            }
+        }
+        let lut = SignedLut::new(&Overshoot, 8).unwrap();
+        assert_eq!(lut.mul(i32::MAX, i32::MAX), i64::MAX);
+        assert_eq!(lut.mul(i32::MIN, i32::MAX), i64::MIN);
+        // In-range products are untouched by the saturation guard.
+        assert_eq!(lut.mul(100, -100), -30_000);
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(SignedLut::new(&SignedExact, 1).is_err());
+        assert!(SignedLut::new(&SignedExact, 13).is_err());
+    }
+
+    #[test]
+    fn zero_operands() {
+        let lut = by_name("slut4:sexact").unwrap();
+        assert_eq!(lut.mul(0, -999), 0);
+        assert_eq!(lut.mul(999, 0), 0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Signed RoBA (Zendegani et al., TVLSI 2017): the published
+//! architecture is natively signed — sign-detection blocks route the
+//! operand *magnitudes* through the rounding/shift datapath and a
+//! final conditional negation restores the product sign. Like
+//! [`super::SignedDrum`], this makes the design exactly
+//! sign-symmetric: `sroba(−a, b) = −sroba(a, b)` always.
+
+use super::super::Multiplier as _;
+use super::super::Roba;
+use super::SignedMultiplier;
+
+/// RoBA over two's-complement operands (published signed form).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignedRoba;
+
+impl SignedMultiplier for SignedRoba {
+    fn name(&self) -> String {
+        "sroba".into()
+    }
+
+    fn mul(&self, a: i32, b: i32) -> i64 {
+        // Magnitude datapath: |i32::MIN| fits u32; RoBA's bounded
+        // overestimate (|RE| <= ~11%) keeps the magnitude below 2^63.
+        let mag = Roba.mul(a.unsigned_abs(), b.unsigned_abs());
+        debug_assert!(mag <= i64::MAX as u64, "magnitude {mag:#x} overflows i64");
+        let p = mag as i64;
+        if (a < 0) != (b < 0) {
+            -p
+        } else {
+            p
+        }
+    }
+    // `mul_batch` default suffices: the shift-expansion kernel has
+    // nothing to hoist.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn powers_of_two_exact_in_all_quadrants() {
+        for i in 0..16 {
+            for j in 0..16 {
+                let (a, b) = (1i32 << i, 1i32 << j);
+                for (x, y) in [(a, b), (-a, b), (a, -b), (-a, -b)] {
+                    assert_eq!(SignedRoba.mul(x, y), x as i64 * y as i64, "{x}*{y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_unsigned_core_on_magnitudes() {
+        let mut rng = Xoshiro256::new(23);
+        for _ in 0..20_000 {
+            let a = rng.next_u32() as i32;
+            let b = rng.next_u32() as i32;
+            let want = Roba.mul(a.unsigned_abs(), b.unsigned_abs()) as i64;
+            let want = if (a < 0) != (b < 0) { -want } else { want };
+            assert_eq!(SignedRoba.mul(a, b), want, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn zero_and_extreme_operands() {
+        assert_eq!(SignedRoba.mul(0, -17), 0);
+        assert_eq!(SignedRoba.mul(i32::MIN, 0), 0);
+        let p = SignedRoba.mul(i32::MIN, i32::MIN);
+        assert_eq!(p, (1i64 << 31) * (1i64 << 31)); // power of two: exact
+        let q = SignedRoba.mul(i32::MIN, i32::MAX);
+        assert!(q < 0);
+        let exact = i32::MIN as i64 * i32::MAX as i64;
+        assert!((q as f64 - exact as f64).abs() <= 0.12 * exact.abs() as f64);
+    }
+}

@@ -1,0 +1,183 @@
+//! Signed error characterization: the same chunk-scheduled
+//! deterministic parallel reduction as [`crate::mult::characterize`],
+//! over sign-symmetric operand distributions.
+//!
+//! Operands reuse the unsigned [`OperandDist`] families for the
+//! *magnitude* (clamped to the `i32` range) and draw the sign from the
+//! same per-chunk stream — so `sdrum6`'s signed MRE lands on the
+//! unsigned `drum6` row (sign-symmetric design, symmetric operands)
+//! while `booth<k>`'s does not (its error depends on the operand
+//! signs). The chunk schedule depends only on `(n, seed)`, never the
+//! worker count, so results are bit-reproducible at any parallelism
+//! level (pinned by `tests/signed_mult.rs`).
+
+use crate::parallel;
+use crate::rng::{SplitMix64, Xoshiro256};
+
+use super::super::stats::{Welford, CHUNK_SAMPLES};
+use super::super::{ErrorStats, OperandDist};
+use super::SignedMultiplier;
+
+/// Operand/product staging length (matches the unsigned harness).
+const BATCH: usize = 4096;
+
+/// One signed operand: a `dist` magnitude (clamped into `i32`, the
+/// `Uniform32` top bit folds away) with a fresh sign bit from the same
+/// stream.
+pub fn sample_signed(dist: OperandDist, rng: &mut Xoshiro256) -> i32 {
+    let mag = (dist.sample(rng) & 0x7FFF_FFFF).max(1) as i32;
+    if rng.next_u32() & 1 == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Decorrelated per-chunk RNG seed (same scheme as the unsigned
+/// harness, domain-separated by the constant).
+fn chunk_seed(seed: u64, chunk: u64) -> u64 {
+    SplitMix64::new(seed ^ chunk.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// One chunk: draw `len` signed operand pairs, run the batched fast
+/// path, and accumulate locally.
+fn run_chunk(
+    m: &dyn SignedMultiplier,
+    dist: OperandDist,
+    len: u64,
+    seed: u64,
+) -> Welford {
+    let mut rng = Xoshiro256::new(seed);
+    let mut acc = Welford::new();
+    let mut a = [0i32; BATCH];
+    let mut b = [0i32; BATCH];
+    let mut out = [0i64; BATCH];
+    let mut left = len;
+    while left > 0 {
+        let k = left.min(BATCH as u64) as usize;
+        for i in 0..k {
+            a[i] = sample_signed(dist, &mut rng);
+            b[i] = sample_signed(dist, &mut rng);
+        }
+        m.mul_batch(&a[..k], &b[..k], &mut out[..k]);
+        for i in 0..k {
+            let exact = a[i] as i64 * b[i] as i64;
+            let re = if exact == 0 {
+                0.0
+            } else {
+                (out[i] as f64 - exact as f64) / exact as f64
+            };
+            acc.push(re);
+        }
+        left -= k as u64;
+    }
+    acc
+}
+
+/// Characterize `m` over `n` random signed operand pairs, in parallel
+/// over [`parallel::max_threads`] workers. Deterministic in `(n, seed)`
+/// regardless of worker count (all signed designs are stateless).
+pub fn characterize_signed(
+    m: &dyn SignedMultiplier,
+    dist: OperandDist,
+    n: u64,
+    seed: u64,
+) -> ErrorStats {
+    characterize_signed_threads(m, dist, n, seed, parallel::max_threads())
+}
+
+/// [`characterize_signed`] with an explicit worker count.
+pub fn characterize_signed_threads(
+    m: &dyn SignedMultiplier,
+    dist: OperandDist,
+    n: u64,
+    seed: u64,
+    threads: usize,
+) -> ErrorStats {
+    if n == 0 {
+        return Welford::new().finish();
+    }
+    let chunks: Vec<(u64, u64)> = (0..n.div_ceil(CHUNK_SAMPLES))
+        .map(|c| {
+            let start = c * CHUNK_SAMPLES;
+            (c, (n - start).min(CHUNK_SAMPLES))
+        })
+        .collect();
+    let accs = parallel::par_map(&chunks, threads, |_, &(c, len)| {
+        run_chunk(m, dist, len, chunk_seed(seed, c))
+    });
+    // Merge in chunk order — deterministic floating-point reduction.
+    accs.into_iter().fold(Welford::new(), Welford::merge).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Booth, SignedDrum, SignedExact};
+    use super::*;
+    use crate::mult::{characterize, Drum};
+
+    #[test]
+    fn sexact_has_zero_error() {
+        let s = characterize_signed(&SignedExact, OperandDist::Uniform16, 10_000, 1);
+        assert_eq!(s.mre, 0.0);
+        assert_eq!(s.sd, 0.0);
+        assert_eq!(s.samples, 10_000);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let d = SignedDrum::new(6).unwrap();
+        let seq =
+            characterize_signed_threads(&d, OperandDist::Uniform16, 200_000, 9, 1);
+        let par =
+            characterize_signed_threads(&d, OperandDist::Uniform16, 200_000, 9, 8);
+        assert_eq!(seq.mre, par.mre);
+        assert_eq!(seq.sd, par.sd);
+        assert_eq!(seq.mean_re, par.mean_re);
+        assert_eq!(seq.min_re, par.min_re);
+        assert_eq!(seq.max_re, par.max_re);
+    }
+
+    #[test]
+    fn sdrum_signed_mre_matches_unsigned_core_band() {
+        // Sign-symmetric design + sign-symmetric operands: the signed
+        // MRE must land in the unsigned design's band (not equal —
+        // different operand streams — but the same statistic).
+        let s = characterize_signed(
+            &SignedDrum::new(6).unwrap(),
+            OperandDist::Uniform16,
+            200_000,
+            7,
+        );
+        let u = characterize(&Drum::new(6).unwrap(), OperandDist::Uniform16, 200_000, 7);
+        assert!((s.mre - u.mre).abs() < 0.004, "signed {} vs unsigned {}", s.mre, u.mre);
+        assert!(s.mean_re.abs() < 0.004, "bias {:.4}", s.mean_re);
+    }
+
+    #[test]
+    fn booth_error_is_sign_asymmetric() {
+        // Booth truncation under-runs the signed product: relative
+        // error is negative on positive products, positive on negative
+        // ones. On symmetric operands the extremes must straddle zero
+        // with comparable magnitude — and a paired-sign sweep shows the
+        // quadrant dependence directly.
+        let m = Booth::new(16).unwrap();
+        let s = characterize_signed(&m, OperandDist::Uniform16, 100_000, 3);
+        assert!(s.min_re < -1e-3, "min {:.5}", s.min_re);
+        assert!(s.max_re > 1e-3, "max {:.5}", s.max_re);
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..1000 {
+            let a = 1 + rng.next_below(60_000) as i32;
+            let b = 1 + rng.next_below(60_000) as i32;
+            assert!(m.relative_error(a, b) <= 0.0, "{a}*{b}");
+            assert!(m.relative_error(-a, b) >= 0.0, "-{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn zero_samples_is_well_defined() {
+        let s = characterize_signed(&SignedExact, OperandDist::Small, 0, 3);
+        assert_eq!(s.samples, 0);
+        assert_eq!(s.mre, 0.0);
+    }
+}

@@ -11,22 +11,31 @@
 //!   Figure 3). This is the only spec the PJRT backend can express,
 //!   because the compiled graphs take sigma as a runtime scalar;
 //! * any [`by_name`] design spec (`drum6`, `mitchell`, `trunc8`,
-//!   `lut12:drum6`, ...) — a bit-accurate design. The native backend
-//!   routes **every forward and backward GEMM** through
+//!   `lut12:drum6`, ...) — a bit-accurate unsigned design. The native
+//!   backend routes **every forward and backward GEMM** through
 //!   [`crate::mult::approx_matmul`] with this design (product-level
-//!   injection, what the hardware actually does).
+//!   injection, what the hardware actually does);
+//! * any [`super::signed::by_name`] design spec (`sdrum6`, `booth8`,
+//!   `sroba`, `slut12:sdrum6`, ...) — a bit-accurate **signed** design:
+//!   the native backend runs the signed GEMM pipeline, where operand
+//!   signs go through the multiplier instead of the exponent
+//!   bookkeeping ([`MultSpec::build_gemm`] resolves which pipeline a
+//!   spec belongs to).
 //!
 //! The product-level `gauss<pct>` model ([`super::GaussianModel`]) is
 //! deliberately rejected here: its noise counter is consumed in thread
 //! order, so training with it would not be reproducible. Use
 //! `gaussian:<sigma>` (deterministic Threefry weight-level fields) or a
-//! deterministic design instead.
+//! deterministic design instead. (`mult::by_name` accepts both
+//! spellings, because characterization has no reproducibility stake in
+//! per-call pairing — only training does.)
 
 use anyhow::{bail, Context, Result};
 
 use crate::HALF_NORMAL_MEAN;
 
-use super::{by_name, Exact, LutMultiplier, Multiplier};
+use super::signed::{self, SignedLut};
+use super::{by_name, Exact, GemmDesign, LutMultiplier, Multiplier};
 
 /// A parsed multiplier specification. See the module docs for the
 /// grammar.
@@ -62,7 +71,9 @@ impl MultSpec {
         if s.starts_with("gauss") {
             bail!(
                 "product-level spec {s:?} is not reproducible under parallel \
-                 training; use gaussian:<sigma> (weight-level) instead"
+                 training; use gaussian:<sigma> (weight-level) instead — \
+                 gauss<pct> remains valid in the characterization grammar \
+                 (mult::by_name), which has no training-order stake"
             );
         }
         // Validate eagerly so config errors surface at parse time, not
@@ -158,13 +169,40 @@ impl MultSpec {
         }
     }
 
-    /// Instantiate the bit-accurate multiplier behind this spec. The
-    /// Gaussian surrogate has no product multiplier — it is weight-level
-    /// by construction — so building it is an error.
+    /// Whether this spec names a **signed** design (two's-complement
+    /// pipeline; see [`super::signed`]). Purely syntactic — the signed
+    /// and unsigned grammars never overlap.
+    pub fn is_signed_design(&self) -> bool {
+        matches!(self, MultSpec::Design { spec } if signed::is_signed_spec(spec))
+    }
+
+    /// Instantiate the bit-accurate **unsigned** multiplier behind this
+    /// spec. The Gaussian surrogate has no product multiplier — it is
+    /// weight-level by construction — and signed designs live in the
+    /// signed pipeline ([`MultSpec::build_gemm`]); both are errors here.
     pub fn build(&self) -> Result<Box<dyn Multiplier>> {
         match self {
             MultSpec::Exact => Ok(Box::new(Exact)),
+            MultSpec::Design { spec } if signed::is_signed_spec(spec) => bail!(
+                "{spec:?} is a signed design; build it with MultSpec::build_gemm \
+                 (or mult::signed::by_name)"
+            ),
             MultSpec::Design { spec } => by_name(spec),
+            MultSpec::Gaussian { .. } => bail!(
+                "{:?} is a weight-level surrogate, not a product multiplier",
+                self.canonical()
+            ),
+        }
+    }
+
+    /// Instantiate the GEMM design behind this spec in its native
+    /// operand domain — unsigned or signed ([`GemmDesign`] carries
+    /// which). This is what the native backend trains with; the
+    /// Gaussian surrogate still has no product multiplier.
+    pub fn build_gemm(&self) -> Result<GemmDesign> {
+        match self {
+            MultSpec::Exact => Ok(GemmDesign::Unsigned(Box::new(Exact))),
+            MultSpec::Design { spec } => GemmDesign::by_name(spec),
             MultSpec::Gaussian { .. } => bail!(
                 "{:?} is a weight-level surrogate, not a product multiplier",
                 self.canonical()
@@ -173,12 +211,16 @@ impl MultSpec {
     }
 }
 
-/// Grammar-only validation of a design spec: LUT wrappers are checked
-/// structurally (width range + inner spec) *without* tabulating — a
-/// `lut12:<inner>` table is 128 MiB and ~16.7M simulated products, far
-/// too heavy to build and discard at config-parse time. Non-LUT specs
-/// are cheap, so [`by_name`] stays the single source of truth for them.
+/// Grammar-only validation of a design spec: LUT wrappers (unsigned
+/// `lut` and signed `slut` alike) are checked structurally (width range
+/// + inner spec) *without* tabulating — a 12-bit table is 128 MiB and
+/// ~16.7M simulated products, far too heavy to build and discard at
+/// config-parse time. Non-LUT specs are cheap, so [`by_name`] /
+/// [`signed::by_name`] stay the single source of truth for them.
 fn validate_design(spec: &str) -> Result<()> {
+    if signed::is_signed_spec(spec) {
+        return validate_signed_design(spec);
+    }
     if let Some(rest) = spec.strip_prefix("lut") {
         if let Some((bits, inner)) = rest.split_once(':') {
             let bits: u32 = bits
@@ -190,10 +232,41 @@ fn validate_design(spec: &str) -> Result<()> {
                     LutMultiplier::MAX_BITS
                 );
             }
+            if signed::is_signed_spec(inner) {
+                bail!(
+                    "lut wraps unsigned designs; {inner:?} is signed \
+                     (use slut{bits}:{inner} for the signed table)"
+                );
+            }
             return validate_design(inner);
         }
     }
     by_name(spec).map(|_| ())
+}
+
+/// Signed arm of [`validate_design`], same structural-LUT discipline.
+fn validate_signed_design(spec: &str) -> Result<()> {
+    if let Some(rest) = spec.strip_prefix("slut") {
+        if let Some((bits, inner)) = rest.split_once(':') {
+            let bits: u32 = bits
+                .parse()
+                .with_context(|| format!("bad signed LUT width in {spec:?}"))?;
+            if !(2..=SignedLut::MAX_BITS).contains(&bits) {
+                bail!(
+                    "signed LUT operand width must be in [2, {}], got {bits}",
+                    SignedLut::MAX_BITS
+                );
+            }
+            if !signed::is_signed_spec(inner) {
+                bail!(
+                    "slut wraps signed designs; {inner:?} is unsigned \
+                     (use lut{bits}:{inner} for the unsigned table)"
+                );
+            }
+            return validate_signed_design(inner);
+        }
+    }
+    signed::by_name(spec).map(|_| ())
 }
 
 #[cfg(test)]
@@ -222,6 +295,49 @@ mod tests {
         assert!(MultSpec::parse("lut99:drum6").is_err());
         assert!(MultSpec::parse("lut8:bogus").is_err());
         assert!(MultSpec::parse("lut8:lut4:drum6").is_ok()); // nested wrappers
+    }
+
+    #[test]
+    fn parses_signed_designs() {
+        for s in ["sdrum6", "booth8", "sroba", "sexact", "slut12:sdrum6"] {
+            let spec = MultSpec::parse(s).unwrap();
+            assert_eq!(spec, MultSpec::Design { spec: s.into() }, "{s}");
+            assert!(spec.is_signed_design(), "{s}");
+            assert_eq!(spec.canonical(), s);
+            // Designs have operand-dependent error: no surrogate sigma.
+            assert_eq!(spec.surrogate_sigma(), None, "{s}");
+        }
+        assert!(!MultSpec::parse("drum6").unwrap().is_signed_design());
+        assert!(MultSpec::parse("sdrum").is_err());
+        assert!(MultSpec::parse("booth99").is_err());
+        // Signed LUT grammar is structural too, and signed-only.
+        assert!(MultSpec::parse("slut99:sdrum6").is_err());
+        assert!(MultSpec::parse("slut8:drum6").is_err());
+        assert!(MultSpec::parse("slut8:slut4:sdrum6").is_ok());
+        assert!(MultSpec::parse("lut8:sdrum6").is_err()); // signed inner in unsigned LUT
+    }
+
+    #[test]
+    fn product_level_gauss_error_points_at_the_other_grammar() {
+        let err = MultSpec::parse("gauss4.5").unwrap_err().to_string();
+        assert!(err.contains("gaussian:<sigma>"), "{err}");
+        assert!(err.contains("mult::by_name"), "{err}");
+    }
+
+    #[test]
+    fn build_gemm_resolves_both_domains() {
+        match MultSpec::parse("drum6").unwrap().build_gemm().unwrap() {
+            GemmDesign::Unsigned(m) => assert_eq!(m.name(), "drum6"),
+            GemmDesign::Signed(_) => panic!("drum6 resolved signed"),
+        }
+        match MultSpec::parse("booth8").unwrap().build_gemm().unwrap() {
+            GemmDesign::Signed(m) => assert_eq!(m.name(), "booth8"),
+            GemmDesign::Unsigned(_) => panic!("booth8 resolved unsigned"),
+        }
+        assert!(MultSpec::gaussian(0.1).build_gemm().is_err());
+        // The unsigned-only builder refuses signed specs with a hint.
+        let err = MultSpec::parse("sdrum6").unwrap().build().unwrap_err();
+        assert!(err.to_string().contains("build_gemm"), "{err:#}");
     }
 
     #[test]

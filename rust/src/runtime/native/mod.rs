@@ -28,7 +28,12 @@
 //!   in both forward and backward (custom-VJP semantics: the weight
 //!   gradient is scaled by the same factors). GEMMs run exact.
 //! * a design spec — product-level injection: forward and backward
-//!   GEMMs run the bit-accurate design.
+//!   GEMMs run the bit-accurate design. Signed designs (`sdrum6`,
+//!   `booth8`, `sroba`, `slut12:sdrum6`, ...) run the **signed**
+//!   prepared kernel ([`crate::mult::signed`]): operands carry their
+//!   sign into the multiplier as two's-complement mantissas, so
+//!   sign-asymmetric error (Booth truncation) reaches training — the
+//!   sign-externalized unsigned pipeline cannot express it.
 //!
 //! Determinism: `approx_matmul` is deterministic at any worker count,
 //! dropout/error fields are counter-based, and every other kernel is
@@ -40,7 +45,7 @@ mod layers;
 use anyhow::{bail, Context, Result};
 
 use crate::mult::{approx_matmul_prepared, PreparedMatrix};
-use crate::mult::{Exact, MultSpec, Multiplier};
+use crate::mult::{Exact, GemmDesign, GemmMode, MultSpec, Multiplier};
 use crate::rng::threefry::counter_normal;
 use crate::tensor::Tensor;
 
@@ -340,8 +345,9 @@ pub struct NativeBackend {
     cfg: NativeConfig,
     model: BackendModel,
     spec: MultSpec,
-    /// Built product-level design (bit-accurate specs only).
-    design: Option<Box<dyn Multiplier>>,
+    /// Built product-level design (bit-accurate specs only) — unsigned
+    /// or signed; [`GemmDesign`] carries which pipeline it runs.
+    design: Option<GemmDesign>,
 }
 
 impl NativeBackend {
@@ -350,7 +356,7 @@ impl NativeBackend {
         let cfg = NativeConfig::preset(preset)?;
         let design = match &spec {
             MultSpec::Design { .. } => {
-                Some(spec.build().context("building multiplier design")?)
+                Some(spec.build_gemm().context("building multiplier design")?)
             }
             _ => None,
         };
@@ -363,14 +369,17 @@ impl NativeBackend {
         &self.spec
     }
 
-    /// Active GEMM multiplier and weight-injection sigma for one step.
-    fn step_mode(&self, k: StepInputs) -> (&dyn Multiplier, f32) {
+    /// Active GEMM mode (multiplier + operand domain) and
+    /// weight-injection sigma for one step. Signed designs run the
+    /// signed prepared kernel: operand signs go through the design,
+    /// not the exponent bookkeeping.
+    fn step_mode(&self, k: StepInputs) -> (GemmMode<'_>, f32) {
         if !k.approx {
-            return (&EXACT_MULT, 0.0);
+            return (GemmMode::Unsigned(&EXACT_MULT), 0.0);
         }
         match &self.design {
-            Some(d) => (d.as_ref(), 0.0),
-            None => (&EXACT_MULT, k.sigma),
+            Some(d) => (d.mode(), 0.0),
+            None => (GemmMode::Unsigned(&EXACT_MULT), k.sigma),
         }
     }
 
@@ -394,15 +403,43 @@ impl NativeBackend {
     }
 
     /// Decompose the (possibly injected) `[kin × kout]` weight matrix
-    /// once into forward-packed `[kout × kin]` planes.
+    /// once into forward-packed `[kout × kin]` planes, with the
+    /// signed-mantissa plane derived up front when the step's GEMM
+    /// mode needs it (once per step, like the decomposition itself).
     fn pack_weight(
         w: &[f32],
         wq: &Option<Vec<f32>>,
         kin: usize,
         kout: usize,
+        gemm: GemmMode<'_>,
     ) -> Result<PreparedMatrix> {
         let src: &[f32] = wq.as_deref().unwrap_or(w);
-        PreparedMatrix::prepare_strided(src, kout, kin, 1, kout)
+        Self::prepare_operand(src, kout, kin, 1, kout, gemm)
+    }
+
+    /// Prepare a row-major activation operand for the step's GEMM mode.
+    fn prepare_activation(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        gemm: GemmMode<'_>,
+    ) -> Result<PreparedMatrix> {
+        Self::prepare_operand(data, rows, cols, cols, 1, gemm)
+    }
+
+    /// The one place the "signed mode carries the signed-mantissa
+    /// plane" rule lives: every prepare in the training path (weights,
+    /// activations, gradients, strided TN views) routes through here.
+    fn prepare_operand(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+        col_stride: usize,
+        gemm: GemmMode<'_>,
+    ) -> Result<PreparedMatrix> {
+        let p = PreparedMatrix::prepare_strided(data, rows, cols, row_stride, col_stride)?;
+        Ok(if gemm.is_signed() { p.with_signed_mantissas() } else { p })
     }
 
     /// Train-mode forward pass, recording the tape the backward needs.
@@ -437,12 +474,13 @@ impl NativeBackend {
                 let patches = layers::im2col(&h, n, hw, ch);
                 let (wq, factors) =
                     Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-                let w_packed = Self::pack_weight(&params[pi], &wq, kin, width)?;
-                let patches_prep = PreparedMatrix::prepare(&patches, rows, kin)?;
+                let w_packed =
+                    Self::pack_weight(&params[pi], &wq, kin, width, gemm)?;
+                let patches_prep =
+                    Self::prepare_activation(&patches, rows, kin, gemm)?;
                 // Bias add and the BN mean accumulation run fused in
                 // the GEMM's output block loop.
-                let g = approx_matmul_prepared(
-                    gemm,
+                let g = gemm.matmul_prepared(
                     &patches_prep,
                     &w_packed,
                     Some(&params[pi + 1]),
@@ -515,10 +553,9 @@ impl NativeBackend {
         let mut dense_tapes = Vec::new();
         for &width in &cfg.dense {
             let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-            let w_packed = Self::pack_weight(&params[pi], &wq, feat, width)?;
-            let h_prep = PreparedMatrix::prepare(&h, n, feat)?;
-            let g = approx_matmul_prepared(
-                gemm,
+            let w_packed = Self::pack_weight(&params[pi], &wq, feat, width, gemm)?;
+            let h_prep = Self::prepare_activation(&h, n, feat, gemm)?;
+            let g = gemm.matmul_prepared(
                 &h_prep,
                 &w_packed,
                 Some(&params[pi + 1]),
@@ -582,16 +619,12 @@ impl NativeBackend {
         };
 
         let (wq, factors) = Self::inject(&params[pi], sigma, k.seed_err, layer_id);
-        let w_packed = Self::pack_weight(&params[pi], &wq, feat, cfg.num_classes)?;
-        let h_prep = PreparedMatrix::prepare(&h, n, feat)?;
-        let logits = approx_matmul_prepared(
-            gemm,
-            &h_prep,
-            &w_packed,
-            Some(&params[pi + 1]),
-            false,
-        )?
-        .out;
+        let w_packed =
+            Self::pack_weight(&params[pi], &wq, feat, cfg.num_classes, gemm)?;
+        let h_prep = Self::prepare_activation(&h, n, feat, gemm)?;
+        let logits = gemm
+            .matmul_prepared(&h_prep, &w_packed, Some(&params[pi + 1]), false)?
+            .out;
         let cls_tape = GemmTape {
             input: h,
             w_packed,
@@ -622,7 +655,7 @@ impl NativeBackend {
     /// backward GEMMs run on the *same* multiplier as the forward pass
     /// — an approximate MAC array is approximate in backprop too.
     fn gemm_backward(
-        gemm: &dyn Multiplier,
+        gemm: GemmMode<'_>,
         tape: &GemmTape,
         dz: &[f32],
         grads: &mut [Vec<f32>],
@@ -636,18 +669,14 @@ impl NativeBackend {
             }
         }
         // dz decomposed once; both backward GEMMs read it (the TN side
-        // through a plane re-pack, not a re-decomposition).
-        let dzp = PreparedMatrix::prepare(dz, tape.rows, tape.kout)?;
+        // through a plane re-pack, not a re-decomposition — the signed
+        // plane, when present, re-packs along).
+        let dzp = Self::prepare_activation(dz, tape.rows, tape.kout, gemm)?;
         // dW = inputᵀ · dz, through the transposed-operand GEMM.
-        let a_tn = PreparedMatrix::prepare_strided(
-            &tape.input,
-            tape.kin,
-            tape.rows,
-            1,
-            tape.kin,
-        )?;
+        let a_tn =
+            Self::prepare_operand(&tape.input, tape.kin, tape.rows, 1, tape.kin, gemm)?;
         let b_tn = dzp.transposed();
-        let mut dw = approx_matmul_prepared(gemm, &a_tn, &b_tn, None, false)?.out;
+        let mut dw = gemm.matmul_prepared(&a_tn, &b_tn, None, false)?.out;
         if let Some(f) = &tape.factors {
             for (g, &fa) in dw.iter_mut().zip(f) {
                 *g *= fa;
@@ -662,7 +691,7 @@ impl NativeBackend {
         // dInput = dz · wqᵀ: the step's forward-packed weight planes,
         // re-packed to W's natural layout — no second decomposition.
         let b_nt = tape.w_packed.transposed();
-        Ok(approx_matmul_prepared(gemm, &dzp, &b_nt, None, false)?.out)
+        Ok(gemm.matmul_prepared(&dzp, &b_nt, None, false)?.out)
     }
 
     /// Backward through ReLU + BN of one taped layer.

@@ -1,0 +1,217 @@
+//! Bit-identity property suite for the **signed** prepared GEMM — the
+//! signed twin of `tests/prepared_gemm.rs`.
+//!
+//! The blocked signed kernel behind `approx_matmul_signed` / `_tn` /
+//! `_nt` must be bit-identical to the signed scalar-walk oracle
+//! (`approx_matmul_reference_signed`: one `approx_mul_f32_signed` per
+//! product, f32 accumulation in strict k-order) for every signed
+//! design × operand layout × thread count — including chains with
+//! non-finite and flushed operands planted mid-chain. On top of that,
+//! two routing pins:
+//!
+//! * `sdrum6` (sign-magnitude) through the signed path is bit-identical
+//!   to `drum6` through the unsigned path — moving the sign *into* the
+//!   design must not change one bit for a design that routes it around
+//!   a magnitude core anyway;
+//! * `booth8` is **not** sign-symmetric at GEMM level — negating A does
+//!   not negate C — which is the behavior the signed path exists to
+//!   express and the unsigned path provably cannot.
+
+use approxmul::mult::signed::{
+    approx_matmul_reference_signed, approx_matmul_signed, approx_matmul_signed_nt,
+    approx_matmul_signed_tn, by_name,
+};
+use approxmul::mult::{approx_matmul, by_name as unsigned_by_name, GEMM_ROW_BLOCK};
+use approxmul::parallel;
+use approxmul::rng::Xoshiro256;
+
+const SIGNED_DESIGNS: &[&str] =
+    &["sexact", "sdrum6", "booth8", "booth24", "sroba", "slut12:sdrum6"];
+
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Random operands with occasional special values (inf, NaN, signed
+/// zero, subnormal) planted through the chains.
+fn operands(rows: usize, inner: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.next_u32() % 64 {
+                0 => f32::INFINITY,
+                1 => f32::NEG_INFINITY,
+                2 => f32::NAN,
+                3 => 0.0,
+                4 => -0.0,
+                5 => 1.0e-41, // subnormal -> flushed
+                _ => 2.0 * rng.next_f32() - 1.0,
+            })
+            .collect()
+    };
+    (gen(rows * inner), gen(inner * cols))
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn signed_kernel_is_bit_identical_to_reference_across_threads() {
+    // Shape crosses both the row-block and col-panel boundaries so the
+    // blocked paths (multi-block partials, panel edges) are exercised.
+    let (rows, inner, cols) = (GEMM_ROW_BLOCK + 11, 21, 53);
+    for (di, design) in SIGNED_DESIGNS.iter().enumerate() {
+        let m = by_name(design).unwrap();
+        let (a, b) = operands(rows, inner, cols, 2000 + di as u64);
+        let want =
+            approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+
+        let a_t = transpose(&a, rows, inner); // [inner x rows]
+        let b_t = transpose(&b, inner, cols); // [cols x inner]
+
+        for threads in [1usize, 2, 5] {
+            parallel::set_max_threads(threads);
+            let nn =
+                approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let tn = approx_matmul_signed_tn(m.as_ref(), &a_t, &b, rows, inner, cols)
+                .unwrap();
+            let nt = approx_matmul_signed_nt(m.as_ref(), &a, &b_t, rows, inner, cols)
+                .unwrap();
+            parallel::set_max_threads(0);
+            assert_bits_eq(&nn, &want, &format!("{design} NN t={threads}"));
+            assert_bits_eq(&tn, &want, &format!("{design} TN t={threads}"));
+            assert_bits_eq(&nt, &want, &format!("{design} NT t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn all_finite_chains_match_reference_on_small_shapes() {
+    // Purely finite data (the training regime) on shapes below one row
+    // block: the sequential path of the kernel.
+    for (di, design) in SIGNED_DESIGNS.iter().enumerate() {
+        let m = by_name(design).unwrap();
+        let (rows, inner, cols) = (9usize, 16usize, 7usize);
+        let mut rng = Xoshiro256::new(71 + di as u64);
+        let a: Vec<f32> =
+            (0..rows * inner).map(|_| 4.0 * rng.next_f32() - 2.0).collect();
+        let b: Vec<f32> =
+            (0..inner * cols).map(|_| 4.0 * rng.next_f32() - 2.0).collect();
+        let fast = approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+        assert_bits_eq(&fast, &slow, design);
+    }
+}
+
+#[test]
+fn nonfinite_and_flushed_chains_match_reference() {
+    // Dense special-value chains: non-finite fallbacks and flushed
+    // skips interleave with batched signed products inside single
+    // chains.
+    let specials = [
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        0.0,
+        -0.0,
+        1.0e-41,
+        1.5,
+        -2.25,
+    ];
+    let (rows, inner, cols) = (4usize, specials.len() * 2, 3usize);
+    let mut rng = Xoshiro256::new(199);
+    let a: Vec<f32> = (0..rows * inner)
+        .map(|i| {
+            if i % 3 == 0 {
+                specials[(i / 3) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    let b: Vec<f32> = (0..inner * cols)
+        .map(|i| {
+            if i % 4 == 1 {
+                specials[(i / 4) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    for design in SIGNED_DESIGNS {
+        let m = by_name(design).unwrap();
+        let fast = approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+        assert_bits_eq(&fast, &slow, design);
+    }
+}
+
+#[test]
+fn sdrum6_gemm_is_bit_identical_to_drum6_gemm() {
+    // The sign-routing pin: a sign-magnitude design behaves identically
+    // whether the sign is routed around the core (unsigned pipeline) or
+    // through it (signed pipeline) — down to the last bit, including
+    // special values.
+    let sd = by_name("sdrum6").unwrap();
+    let ud = unsigned_by_name("drum6").unwrap();
+    let (rows, inner, cols) = (33usize, 24usize, 17usize);
+    let (a, b) = operands(rows, inner, cols, 311);
+    let signed_c = approx_matmul_signed(sd.as_ref(), &a, &b, rows, inner, cols).unwrap();
+    let unsigned_c = approx_matmul(ud.as_ref(), &a, &b, rows, inner, cols).unwrap();
+    assert_bits_eq(&signed_c, &unsigned_c, "sdrum6 vs drum6");
+}
+
+#[test]
+fn booth_gemm_is_not_sign_symmetric() {
+    // Negating A flips every product's sign exactly under any unsigned
+    // design; under Booth truncation the two GEMMs must disagree
+    // somewhere beyond pure negation.
+    let m = by_name("booth24").unwrap();
+    let (rows, inner, cols) = (8usize, 16usize, 8usize);
+    let mut rng = Xoshiro256::new(313);
+    let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() + 0.5).collect();
+    let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() + 0.5).collect();
+    let neg_a: Vec<f32> = a.iter().map(|&v| -v).collect();
+    let c = approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+    let c_neg = approx_matmul_signed(m.as_ref(), &neg_a, &b, rows, inner, cols).unwrap();
+    let asym = c
+        .iter()
+        .zip(&c_neg)
+        .filter(|&(&x, &y)| (-x).to_bits() != y.to_bits())
+        .count();
+    assert!(
+        asym > c.len() / 2,
+        "booth24 came out sign-symmetric on {asym}/{} outputs",
+        c.len()
+    );
+}
+
+#[test]
+fn signed_gemm_is_deterministic_across_calls() {
+    let m = by_name("booth8").unwrap();
+    let mut rng = Xoshiro256::new(317);
+    let a: Vec<f32> = (0..32 * 24).map(|_| rng.next_f32() - 0.5).collect();
+    let b: Vec<f32> = (0..24 * 16).map(|_| rng.next_f32() - 0.5).collect();
+    let c1 = approx_matmul_signed(m.as_ref(), &a, &b, 32, 24, 16).unwrap();
+    let c2 = approx_matmul_signed(m.as_ref(), &a, &b, 32, 24, 16).unwrap();
+    assert_eq!(c1, c2);
+}

@@ -1,0 +1,213 @@
+//! Signed-multiplier semantics suite: two's-complement edge cases,
+//! documented sign-symmetry per design, batch ≡ scalar bit-identity,
+//! and the signed-LUT fidelity contract — the signed twin of
+//! `tests/mult_batch.rs`.
+
+use approxmul::mult::signed::{
+    by_name, characterize_signed, characterize_signed_threads, SignedMultiplier,
+};
+use approxmul::mult::OperandDist;
+use approxmul::rng::Xoshiro256;
+
+const SIGNED_DESIGNS: &[&str] =
+    &["sexact", "sdrum4", "sdrum6", "sdrum8", "booth8", "booth16", "sroba", "slut8:sdrum6"];
+
+/// Two's-complement operand values every design must survive (and get
+/// directionally right): extremes, sign boundaries, zero crossings.
+const EDGE_OPERANDS: &[i32] = &[
+    i32::MIN,
+    i32::MIN + 1,
+    -1,
+    0,
+    1,
+    i32::MAX,
+    -2,
+    2,
+    -65_536,
+    65_535,
+    -(1 << 23), // negative f32-mantissa magnitude
+    (1 << 24) - 1,
+];
+
+#[test]
+fn edge_operands_never_panic_and_keep_sign_and_magnitude_sane() {
+    for spec in SIGNED_DESIGNS {
+        let m = by_name(spec).unwrap();
+        for &a in EDGE_OPERANDS {
+            for &b in EDGE_OPERANDS {
+                let p = m.mul(a, b);
+                let exact = a as i64 * b as i64;
+                if exact == 0 {
+                    // Designs may approximate near-zero products, but a
+                    // zero operand must yield zero (no partial products).
+                    if a == 0 || b == 0 {
+                        assert_eq!(p, 0, "{spec}: {a}*{b}");
+                    }
+                    continue;
+                }
+                // Error stays within a loose band at the extremes (the
+                // exact designs are exact; DRUM/RoBA are within their
+                // published bounds; Booth's worst truncation gap is
+                // 16 * 2^k, tiny next to these magnitudes).
+                assert!(
+                    (p as f64 - exact as f64).abs()
+                        <= 0.6 * exact.unsigned_abs() as f64 + (16i64 << 16) as f64,
+                    "{spec}: {a}*{b} = {p} vs {exact}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn minus_one_squared_is_plus_one_for_all_designs() {
+    // -1 * -1: the smallest-magnitude sign-crossing product; every
+    // design with a non-truncating column path must return exactly +1,
+    // and Booth's truncated tree must flush it to 0 (never a wrong
+    // sign or magnitude blow-up).
+    for spec in &["sexact", "sdrum4", "sdrum6", "sdrum8", "sroba", "slut8:sdrum6"] {
+        let m = by_name(spec).unwrap();
+        assert_eq!(m.mul(-1, -1), 1, "{spec}");
+        assert_eq!(m.mul(-1, 1), -1, "{spec}");
+        assert_eq!(m.mul(1, -1), -1, "{spec}");
+    }
+    let booth = by_name("booth8").unwrap();
+    assert_eq!(booth.mul(-1, -1), 0, "booth truncates the only column");
+    assert_eq!(by_name("booth0").unwrap().mul(-1, -1), 1, "booth0 is exact");
+}
+
+#[test]
+fn i32_min_edge_cases_are_exact_where_the_design_is_exact() {
+    // |i32::MIN| = 2^31 is a power of two: DRUM and RoBA cores are
+    // exact on it, so the signed wrappers must be too.
+    for spec in &["sexact", "sdrum6", "sroba", "slut8:sdrum6"] {
+        let m = by_name(spec).unwrap();
+        assert_eq!(
+            m.mul(i32::MIN, i32::MIN),
+            (i32::MIN as i64) * (i32::MIN as i64),
+            "{spec}"
+        );
+        assert_eq!(m.mul(i32::MIN, 1), i32::MIN as i64, "{spec}");
+        assert_eq!(m.mul(i32::MIN, -1), -(i32::MIN as i64), "{spec}");
+        assert_eq!(m.mul(i32::MIN, 0), 0, "{spec}");
+    }
+}
+
+#[test]
+fn sign_magnitude_designs_are_sign_symmetric() {
+    // sdrum / sroba / slut-of-sdrum route the sign around a magnitude
+    // core: (-a)*b == -(a*b) == a*(-b), bit for bit, everywhere.
+    let mut rng = Xoshiro256::new(51);
+    for spec in &["sexact", "sdrum4", "sdrum6", "sroba", "slut8:sdrum6"] {
+        let m = by_name(spec).unwrap();
+        for _ in 0..20_000 {
+            // i32::MIN has no negation; it gets its own edge-case test.
+            let a = (rng.next_u32() as i32).max(i32::MIN + 1);
+            let b = (rng.next_u32() as i32).max(i32::MIN + 1);
+            let p = m.mul(a, b);
+            assert_eq!(m.mul(-a, b), -p, "{spec}: -a*b");
+            assert_eq!(m.mul(a, -b), -p, "{spec}: a*-b");
+            assert_eq!(m.mul(-a, -b), p, "{spec}: -a*-b");
+        }
+    }
+}
+
+#[test]
+fn booth_deliberately_breaks_sign_symmetry() {
+    // The truncated partial-product tree floors toward -inf: negating
+    // the multiplicand changes which low bits are lost, so
+    // booth(-a, b) != -booth(a, b) whenever truncation is active —
+    // and the product always under-runs the exact signed value.
+    let m = by_name("booth8").unwrap();
+    let mut rng = Xoshiro256::new(53);
+    let mut asymmetric = 0usize;
+    for _ in 0..20_000 {
+        let a = (rng.next_u32() >> 8) as i32 + 1;
+        let b = (rng.next_u32() >> 8) as i32 + 1;
+        let exact = a as i64 * b as i64;
+        assert!(m.mul(a, b) <= exact, "{a}*{b}");
+        assert!(m.mul(-a, b) <= -exact, "-{a}*{b}");
+        if m.mul(-a, b) != -m.mul(a, b) {
+            asymmetric += 1;
+        }
+    }
+    assert!(
+        asymmetric > 15_000,
+        "booth8 looked sign-symmetric on {asymmetric}/20000 pairs"
+    );
+}
+
+#[test]
+fn batch_is_bit_identical_to_scalar_for_every_design() {
+    let mut rng = Xoshiro256::new(55);
+    let mut a: Vec<i32> = (0..4096).map(|_| rng.next_u32() as i32).collect();
+    let mut b: Vec<i32> = (0..4096).map(|_| rng.next_u32() as i32).collect();
+    // Make sure the edge values ride along.
+    for (i, &v) in EDGE_OPERANDS.iter().enumerate() {
+        a[i] = v;
+        b[EDGE_OPERANDS.len() - 1 - i] = v;
+    }
+    for spec in SIGNED_DESIGNS {
+        let m: Box<dyn SignedMultiplier> = by_name(spec).unwrap();
+        let mut out = vec![0i64; a.len()];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], m.mul(a[i], b[i]), "{spec} idx {i}");
+        }
+    }
+}
+
+#[test]
+fn slut_identity_and_truncation_contract() {
+    // In-contract: sdrum6 through slut8 (magnitude field 7 > 6) is the
+    // design, everywhere. Out-of-contract: sdrum8 through slut8 must
+    // differ somewhere (k == magnitude width loses the steering bit).
+    let mut rng = Xoshiro256::new(57);
+    let sd6 = by_name("sdrum6").unwrap();
+    let via8 = by_name("slut8:sdrum6").unwrap();
+    let sd8 = by_name("sdrum8").unwrap();
+    let via8_of8 = by_name("slut8:sdrum8").unwrap();
+    let mut diverged = false;
+    for _ in 0..50_000 {
+        let (a, b) = (rng.next_u32() as i32, rng.next_u32() as i32);
+        assert_eq!(via8.mul(a, b), sd6.mul(a, b), "{a}*{b}");
+        diverged |= via8_of8.mul(a, b) != sd8.mul(a, b);
+    }
+    assert!(diverged, "slut8:sdrum8 unexpectedly matched sdrum8 everywhere");
+}
+
+#[test]
+fn characterization_is_deterministic_and_thread_invariant() {
+    for spec in &["sdrum6", "booth8", "sroba"] {
+        let m = by_name(spec).unwrap();
+        for dist in OperandDist::all() {
+            let seq = characterize_signed_threads(m.as_ref(), dist, 150_000, 11, 1);
+            let par = characterize_signed_threads(m.as_ref(), dist, 150_000, 11, 8);
+            assert_eq!(seq.mre, par.mre, "{spec} {}", dist.name());
+            assert_eq!(seq.sd, par.sd, "{spec} {}", dist.name());
+            assert_eq!(seq.min_re, par.min_re, "{spec} {}", dist.name());
+        }
+    }
+}
+
+#[test]
+fn signed_mre_bands_match_published_unsigned_figures_for_symmetric_designs() {
+    // Sign-magnitude designs inherit the unsigned error statistics
+    // under symmetric operands: sdrum6 lands in DRUM-6's published
+    // band, sroba within RoBA's bound.
+    let s = characterize_signed(
+        by_name("sdrum6").unwrap().as_ref(),
+        OperandDist::Uniform16,
+        200_000,
+        7,
+    );
+    assert!((0.010..0.020).contains(&s.mre), "sdrum6 MRE {:.4}", s.mre);
+    assert!(s.mean_re.abs() < 0.004, "sdrum6 bias {:.4}", s.mean_re);
+    let r = characterize_signed(
+        by_name("sroba").unwrap().as_ref(),
+        OperandDist::Uniform16,
+        200_000,
+        7,
+    );
+    assert!(r.max_re < 0.12 && r.min_re > -0.12, "sroba band {:?}", (r.min_re, r.max_re));
+}
