@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                             sigma,
                             lr: 0.01,
                             approx,
+                            step: 0,
                         },
                     )
                     .unwrap();

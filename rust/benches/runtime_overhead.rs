@@ -84,6 +84,7 @@ fn main() -> anyhow::Result<()> {
                         sigma: 0.0,
                         lr: 0.01,
                         approx: false,
+                        step: 0,
                     },
                 )
                 .unwrap();
@@ -103,6 +104,7 @@ fn main() -> anyhow::Result<()> {
                         sigma: 0.045,
                         lr: 0.01,
                         approx: true,
+                        step: 0,
                     },
                 )
                 .unwrap();

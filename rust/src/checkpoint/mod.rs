@@ -16,15 +16,77 @@
 //! crc32 of everything above
 //! ```
 
+use std::cell::Cell;
+use std::fmt;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::json::Value;
 use crate::tensor::{DType, Tensor};
 
 const MAGIC: &[u8; 8] = b"AXMCKPT1";
+
+/// Machine-readable classification of a checkpoint failure. Recovery
+/// code dispatches on this ([`classify`]); the human-readable message
+/// still carries the file path and byte-level detail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureClass {
+    /// The file does not exist.
+    Missing,
+    /// The byte stream ends before the declared structure does (files
+    /// shorter than the fixed header, or interior length overruns).
+    Truncated,
+    /// The stored CRC-32 disagrees with the content — bit rot, a torn
+    /// write, or mid-file truncation (the tail bytes then parse as a
+    /// wrong CRC).
+    CrcMismatch,
+    /// CRC-valid but structurally nonsense (bad magic/dtype/rank/meta).
+    Malformed,
+    /// An OS-level I/O error other than not-found.
+    Io,
+}
+
+impl FailureClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureClass::Missing => "missing",
+            FailureClass::Truncated => "truncated",
+            FailureClass::CrcMismatch => "crc-mismatch",
+            FailureClass::Malformed => "malformed",
+            FailureClass::Io => "io",
+        }
+    }
+}
+
+/// Typed checkpoint error carried through `anyhow` chains so callers
+/// can recover by class instead of string-matching messages.
+#[derive(Debug)]
+pub struct CkptFault {
+    pub class: FailureClass,
+    msg: String,
+}
+
+impl fmt::Display for CkptFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for CkptFault {}
+
+fn fault(class: FailureClass, msg: String) -> anyhow::Error {
+    anyhow::Error::new(CkptFault { class, msg })
+}
+
+/// Walk an error's chain for a checkpoint-fault classification
+/// (context layers added by callers are skipped transparently).
+pub fn classify(err: &anyhow::Error) -> Option<FailureClass> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<CkptFault>())
+        .map(|f| f.class)
+}
 
 /// Checkpoint metadata (JSON header).
 #[derive(Debug, Clone)]
@@ -41,18 +103,28 @@ pub struct Meta {
     pub mult: String,
     /// Free-form tag (e.g. "table2-case4").
     pub tag: String,
+    /// Original multiplier spec before the watchdog escalated the run
+    /// (None for runs that never escalated). Records that the weights
+    /// were *not* trained end-to-end under `mult`.
+    pub escalated_from: Option<String>,
 }
 
 impl Meta {
     fn to_json(&self) -> Value {
-        crate::json::object([
+        // `escalated_from` is emitted only when set, so non-escalated
+        // checkpoints keep the exact legacy key set.
+        let mut pairs = vec![
             ("preset", Value::from(self.preset.as_str())),
             ("epoch", Value::from(self.epoch as usize)),
             ("step", Value::from(self.step as usize)),
             ("sigma", Value::from(self.sigma)),
             ("mult", Value::from(self.mult.as_str())),
             ("tag", Value::from(self.tag.as_str())),
-        ])
+        ];
+        if let Some(from) = &self.escalated_from {
+            pairs.push(("escalated_from", Value::from(from.as_str())));
+        }
+        crate::json::object(pairs)
     }
 
     fn from_json(v: &Value) -> Result<Self> {
@@ -64,6 +136,10 @@ impl Meta {
             None if sigma > 0.0 => format!("gaussian:{sigma}"),
             None => "exact".to_string(),
         };
+        let escalated_from = match v.opt("escalated_from") {
+            Some(e) => Some(e.as_str()?.to_string()),
+            None => None,
+        };
         Ok(Meta {
             preset: v.get("preset")?.as_str()?.to_string(),
             epoch: v.get("epoch")?.as_i64()? as u64,
@@ -71,6 +147,7 @@ impl Meta {
             sigma,
             mult,
             tag: v.get("tag")?.as_str()?.to_string(),
+            escalated_from,
         })
     }
 }
@@ -107,36 +184,49 @@ pub fn to_bytes(meta: &Meta, named: &[(String, &Tensor)]) -> Vec<u8> {
 /// Parse checkpoint bytes.
 pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
     if bytes.len() < MAGIC.len() + 8 {
-        bail!("checkpoint truncated ({} bytes)", bytes.len());
+        return Err(fault(
+            FailureClass::Truncated,
+            format!("checkpoint truncated ({} bytes)", bytes.len()),
+        ));
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
     let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
     let computed = crc32(body);
     if stored != computed {
-        bail!("checkpoint CRC mismatch: stored {stored:#10x}, computed {computed:#10x}");
+        return Err(fault(
+            FailureClass::CrcMismatch,
+            format!("checkpoint CRC mismatch: stored {stored:#10x}, computed {computed:#10x}"),
+        ));
     }
+    let malformed = |msg: String| fault(FailureClass::Malformed, msg);
     let mut r = Reader { b: body, pos: 0 };
     let magic = r.take(8)?;
     if magic != MAGIC {
-        bail!("bad checkpoint magic");
+        return Err(malformed("bad checkpoint magic".into()));
     }
     let meta_len = r.u32()? as usize;
     let meta_bytes = r.take(meta_len)?;
-    let meta = Meta::from_json(&Value::parse(std::str::from_utf8(meta_bytes)?)?)?;
+    let meta_str = std::str::from_utf8(meta_bytes)
+        .map_err(|e| malformed(format!("checkpoint meta is not UTF-8: {e}")))?;
+    let meta = Value::parse(meta_str)
+        .and_then(|v| Meta::from_json(&v))
+        .map_err(|e| malformed(format!("bad checkpoint meta: {e}")))?;
     let count = r.u32()? as usize;
     let mut tensors = Vec::with_capacity(count);
     for _ in 0..count {
         let name_len = r.u32()? as usize;
-        let name = std::str::from_utf8(r.take(name_len)?)?.to_string();
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .map_err(|e| malformed(format!("tensor name is not UTF-8: {e}")))?
+            .to_string();
         let dtype = match r.u8()? {
             0 => DType::F32,
             1 => DType::I32,
             2 => DType::U32,
-            d => bail!("bad dtype tag {d}"),
+            d => return Err(malformed(format!("bad dtype tag {d}"))),
         };
         let rank = r.u32()? as usize;
         if rank > 8 {
-            bail!("absurd rank {rank}");
+            return Err(malformed(format!("absurd rank {rank}")));
         }
         let mut dims = Vec::with_capacity(rank);
         for _ in 0..rank {
@@ -161,7 +251,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
         tensors.push((name, t));
     }
     if r.pos != body.len() {
-        bail!("trailing bytes in checkpoint");
+        return Err(malformed("trailing bytes in checkpoint".into()));
     }
     Ok((meta, tensors))
 }
@@ -175,7 +265,10 @@ struct Reader<'a> {
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.b.len() {
-            bail!("checkpoint truncated at offset {}", self.pos);
+            return Err(fault(
+                FailureClass::Truncated,
+                format!("checkpoint truncated at offset {}", self.pos),
+            ));
         }
         let s = &self.b[self.pos..self.pos + n];
         self.pos += n;
@@ -195,9 +288,25 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// One-shot injected store failure, armed by the fault harness
+/// ([`crate::testkit::faults`]) to exercise recovery paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFault {
+    /// Simulate a torn write: the *final* checkpoint path ends up with
+    /// only the first `keep` bytes (as after a crash between a
+    /// non-durable rename and the data reaching disk).
+    TearNextSave { keep: usize },
+    /// Simulate a transient I/O failure: leave a partial `.ckpt.tmp`
+    /// behind and return a classified `Io` error.
+    FailNextSave,
+}
+
 /// Disk-backed checkpoint store with epoch-indexed naming.
 pub struct Store {
     dir: PathBuf,
+    /// Armed fault, consumed by the next `save`. `Cell` because the
+    /// store is handed out behind `&self` and never crosses threads.
+    fault: Cell<Option<StoreFault>>,
 }
 
 impl Store {
@@ -205,24 +314,62 @@ impl Store {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating {}", dir.display()))?;
-        Ok(Store { dir })
+        Ok(Store { dir, fault: Cell::new(None) })
     }
 
     pub fn path_for(&self, tag: &str, epoch: u64) -> PathBuf {
         self.dir.join(format!("{tag}-epoch{epoch:04}.ckpt"))
     }
 
-    /// Write atomically (tmp + rename).
+    /// Arm (or clear) a one-shot save fault. Test-harness hook.
+    pub fn inject_fault(&self, f: Option<StoreFault>) {
+        self.fault.set(f);
+    }
+
+    /// Write durably and atomically: unique tmp in the same directory,
+    /// fsync the file, rename over the final name, then fsync the
+    /// directory so the rename itself survives a crash.
     pub fn save(&self, meta: &Meta, named: &[(String, &Tensor)]) -> Result<PathBuf> {
         let path = self.path_for(&meta.tag, meta.epoch);
-        let tmp = path.with_extension("ckpt.tmp");
+        // Per-process tmp name: two runs sharing an out-dir must not
+        // clobber each other's in-flight writes.
+        let tmp = self.dir.join(format!(
+            "{}-epoch{:04}.ckpt.{}.tmp",
+            meta.tag,
+            meta.epoch,
+            std::process::id()
+        ));
         let bytes = to_bytes(meta, named);
+        match self.fault.take() {
+            Some(StoreFault::TearNextSave { keep }) => {
+                let keep = keep.min(bytes.len());
+                std::fs::write(&path, &bytes[..keep])
+                    .with_context(|| format!("tearing {}", path.display()))?;
+                return Ok(path);
+            }
+            Some(StoreFault::FailNextSave) => {
+                std::fs::write(&tmp, &bytes[..bytes.len() / 2]).ok();
+                return Err(fault(
+                    FailureClass::Io,
+                    format!("injected I/O failure saving {}", path.display()),
+                ));
+            }
+            None => {}
+        }
+        let io = |msg: String| move |e: std::io::Error| fault(FailureClass::Io, format!("{msg}: {e}"));
         let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(&bytes)?;
-        f.sync_all()?;
+            .map_err(io(format!("creating {}", tmp.display())))?;
+        f.write_all(&bytes)
+            .map_err(io(format!("writing {}", tmp.display())))?;
+        f.sync_all()
+            .map_err(io(format!("syncing {}", tmp.display())))?;
         drop(f);
-        std::fs::rename(&tmp, &path)?;
+        std::fs::rename(&tmp, &path)
+            .map_err(io(format!("renaming {} -> {}", tmp.display(), path.display())))?;
+        #[cfg(unix)]
+        std::fs::File::open(&self.dir)
+            .and_then(|d| d.sync_all())
+            .map_err(io(format!("syncing directory {}", self.dir.display())))?;
         Ok(path)
     }
 
@@ -233,13 +380,102 @@ impl Store {
     pub fn load_path(&self, path: &Path) -> Result<(Meta, Vec<(String, Tensor)>)> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?
-            .read_to_end(&mut bytes)?;
+            .map_err(|e| {
+                let class = if e.kind() == std::io::ErrorKind::NotFound {
+                    FailureClass::Missing
+                } else {
+                    FailureClass::Io
+                };
+                fault(class, format!("opening {}: {e}", path.display()))
+            })?
+            .read_to_end(&mut bytes)
+            .map_err(|e| fault(FailureClass::Io, format!("reading {}: {e}", path.display())))?;
         from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 
     pub fn exists(&self, tag: &str, epoch: u64) -> bool {
         self.path_for(tag, epoch).exists()
+    }
+
+    /// Epochs with a (possibly corrupt) checkpoint file for `tag`,
+    /// ascending. Stray `.tmp` files are excluded by construction.
+    pub fn list_epochs(&self, tag: &str) -> Result<Vec<u64>> {
+        let prefix = format!("{tag}-epoch");
+        let mut epochs = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(num) = name
+                .strip_prefix(&prefix)
+                .and_then(|rest| rest.strip_suffix(".ckpt"))
+            {
+                if let Ok(e) = num.parse::<u64>() {
+                    epochs.push(e);
+                }
+            }
+        }
+        epochs.sort_unstable();
+        epochs.dedup();
+        Ok(epochs)
+    }
+
+    /// Newest checkpoint for `tag` that passes the CRC/structure
+    /// checks, scanning backward past corrupt, truncated or unreadable
+    /// files (each skip is logged with its failure class). `Ok(None)`
+    /// when no valid checkpoint exists at all.
+    pub fn latest_valid(
+        &self,
+        tag: &str,
+    ) -> Result<Option<(u64, Meta, Vec<(String, Tensor)>)>> {
+        for epoch in self.list_epochs(tag)?.into_iter().rev() {
+            match self.load(tag, epoch) {
+                Ok((meta, tensors)) => return Ok(Some((epoch, meta, tensors))),
+                Err(e) => {
+                    let class = classify(&e).map(FailureClass::name).unwrap_or("unknown");
+                    log::warn!(
+                        "skipping checkpoint {} ({class}): {e:#}",
+                        self.path_for(tag, epoch).display()
+                    );
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Retention: delete all but the newest `keep` checkpoints for
+    /// `tag`, plus any stale tmp files for `tag` left by *other*
+    /// processes (dead runs). Returns the number of files removed.
+    /// `keep == 0` keeps everything.
+    pub fn gc_keep_last(&self, tag: &str, keep: usize) -> Result<usize> {
+        let mut removed = 0usize;
+        if keep > 0 {
+            let epochs = self.list_epochs(tag)?;
+            if epochs.len() > keep {
+                for &epoch in &epochs[..epochs.len() - keep] {
+                    let p = self.path_for(tag, epoch);
+                    std::fs::remove_file(&p)
+                        .with_context(|| format!("removing {}", p.display()))?;
+                    removed += 1;
+                }
+            }
+        }
+        let prefix = format!("{tag}-epoch");
+        let my_tmp = format!(".{}.tmp", std::process::id());
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.starts_with(&prefix) && name.ends_with(".tmp") && !name.ends_with(&my_tmp) {
+                std::fs::remove_file(entry.path())
+                    .with_context(|| format!("removing stale {name}"))?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
     }
 }
 
@@ -277,6 +513,7 @@ mod tests {
                 sigma: 0.045,
                 mult: "gaussian:0.045".into(),
                 tag: "unit".into(),
+                escalated_from: None,
             },
             vec![
                 ("w".into(), Tensor::from_f32(&[2, 2], vec![1., -2., 3., 0.5]).unwrap()),
@@ -371,5 +608,135 @@ mod tests {
     fn crc_known_answer() {
         // CRC32("123456789") = 0xCBF43926 (classic check value).
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn failure_classification() {
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let bytes = to_bytes(&meta, &named);
+        // Sub-header file: truncated.
+        let e = from_bytes(&bytes[..10]).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::Truncated));
+        // Mid-file truncation of a real file: the tail bytes are
+        // misread as the CRC, so it classifies as a CRC mismatch.
+        let e = from_bytes(&bytes[..bytes.len() / 2]).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::CrcMismatch));
+        // Payload bit flip: CRC mismatch.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        let e = from_bytes(&flipped).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::CrcMismatch));
+        // Valid CRC over garbage magic: malformed.
+        let mut body = bytes[..bytes.len() - 4].to_vec();
+        body[0] ^= 0xFF;
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let e = from_bytes(&body).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::Malformed));
+        // Unrelated errors don't classify.
+        assert_eq!(classify(&anyhow::anyhow!("nope")), None);
+    }
+
+    #[test]
+    fn escalated_from_roundtrips_and_stays_optional() {
+        let (mut meta, _) = sample();
+        meta.escalated_from = Some("drum6".into());
+        let bytes = to_bytes(&meta, &[]);
+        let (m2, _) = from_bytes(&bytes).unwrap();
+        assert_eq!(m2.escalated_from.as_deref(), Some("drum6"));
+        // Unset -> key absent from the JSON header entirely.
+        let (plain, _) = sample();
+        let bytes = to_bytes(&plain, &[]);
+        let (m3, _) = from_bytes(&bytes).unwrap();
+        assert_eq!(m3.escalated_from, None);
+        assert!(!String::from_utf8_lossy(&bytes).contains("escalated_from"));
+    }
+
+    fn temp_store(label: &str) -> (Store, PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("axm-ckpt-{label}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        (Store::new(&dir).unwrap(), dir)
+    }
+
+    fn save_epochs(store: &Store, epochs: &[u64]) {
+        let (mut meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        for &e in epochs {
+            meta.epoch = e;
+            store.save(&meta, &named).unwrap();
+        }
+    }
+
+    #[test]
+    fn retention_keeps_last_k_and_sweeps_stale_tmps() {
+        let (store, dir) = temp_store("gc");
+        save_epochs(&store, &[1, 2, 3, 4, 5]);
+        // A stale tmp from a "dead" process (different pid suffix).
+        let stale = dir.join("unit-epoch0009.ckpt.99999999.tmp");
+        std::fs::write(&stale, b"partial").unwrap();
+        // Our own in-flight tmp must survive.
+        let mine = dir.join(format!("unit-epoch0009.ckpt.{}.tmp", std::process::id()));
+        std::fs::write(&mine, b"partial").unwrap();
+        let removed = store.gc_keep_last("unit", 3).unwrap();
+        assert_eq!(removed, 3); // epochs 1, 2 + stale tmp
+        assert_eq!(store.list_epochs("unit").unwrap(), vec![3, 4, 5]);
+        assert!(!stale.exists());
+        assert!(mine.exists());
+        // keep == 0 means retain everything.
+        assert_eq!(store.gc_keep_last("unit", 0).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_scans_past_corruption() {
+        let (store, dir) = temp_store("scan");
+        save_epochs(&store, &[1, 2, 3]);
+        // Corrupt the newest, truncate the next; epoch 1 stays good.
+        let p3 = store.path_for("unit", 3);
+        let mut b = std::fs::read(&p3).unwrap();
+        let mid = b.len() / 2;
+        b[mid] ^= 0xFF;
+        std::fs::write(&p3, &b).unwrap();
+        let p2 = store.path_for("unit", 2);
+        let b = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &b[..10]).unwrap();
+        let (epoch, meta, tensors) = store.latest_valid("unit").unwrap().unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(meta.epoch, 1);
+        assert_eq!(tensors.len(), 3);
+        // All candidates bad -> Ok(None), not an error.
+        let p1 = store.path_for("unit", 1);
+        std::fs::write(&p1, b"junk").unwrap();
+        assert!(store.latest_valid("unit").unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_store_faults_fire_once() {
+        let (store, dir) = temp_store("fault");
+        let (meta, tensors) = sample();
+        let named: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        // Torn write: save "succeeds" but the file is unreadable.
+        store.inject_fault(Some(StoreFault::TearNextSave { keep: 64 }));
+        store.save(&meta, &named).unwrap();
+        let e = store.load("unit", 3).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::CrcMismatch));
+        // Failed save: classified Io error, tmp debris left behind.
+        store.inject_fault(Some(StoreFault::FailNextSave));
+        let e = store.save(&meta, &named).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::Io));
+        // One-shot: the next save is clean and readable again.
+        store.save(&meta, &named).unwrap();
+        assert!(store.load("unit", 3).is_ok());
+        // Missing file classifies as Missing.
+        let e = store.load("unit", 77).unwrap_err();
+        assert_eq!(classify(&e), Some(FailureClass::Missing));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

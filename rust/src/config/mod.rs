@@ -146,6 +146,42 @@ impl MultiplierPolicy {
     }
 }
 
+/// Watchdog + recovery policy for the resilient training runtime
+/// ([`crate::coordinator::health`] / [`crate::coordinator::recovery`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WatchdogConfig {
+    /// Escalation ladder: on a repeat trip at the same step, the run's
+    /// approximate multiplier is replaced by the next rung (the
+    /// Figure-4 hybrid switch as a *reactive* policy). Usually ends in
+    /// `exact`.
+    pub ladder: Vec<MultSpec>,
+    /// Rollback/retry budget before the run is declared unrecoverable.
+    pub max_retries: u32,
+    /// Base backoff between checkpoint-IO retries (doubles per
+    /// attempt).
+    pub backoff_ms: u64,
+    /// Verified-good checkpoints to retain (`Store::gc_keep_last`);
+    /// 0 keeps everything.
+    pub keep: usize,
+    /// Loss-spike window length (steps) for the divergence heuristic.
+    pub window: usize,
+    /// A loss > `spike_factor` × windowed mean counts as divergence.
+    pub spike_factor: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            ladder: vec![MultSpec::Exact],
+            max_retries: 3,
+            backoff_ms: 50,
+            keep: 3,
+            window: 8,
+            spike_factor: 4.0,
+        }
+    }
+}
+
 /// A full training-run configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -174,6 +210,9 @@ pub struct ExperimentConfig {
     /// ignored when real data is supplied). Tuned so the presets
     /// saturate below 100% — Table II needs headroom to damage.
     pub data_noise: f64,
+    /// Resilient-runtime policy; `None` = watchdog off (the default:
+    /// trajectories bit-identical to pre-watchdog builds).
+    pub watchdog: Option<WatchdogConfig>,
 }
 
 impl ExperimentConfig {
@@ -195,6 +234,7 @@ impl ExperimentConfig {
             tag: "run".into(),
             patience: 0,
             data_noise: 2.5,
+            watchdog: None,
         }
     }
 
@@ -216,6 +256,7 @@ impl ExperimentConfig {
             tag: "tiny".into(),
             patience: 0,
             data_noise: 2.5,
+            watchdog: None,
         }
     }
 
@@ -247,6 +288,34 @@ impl ExperimentConfig {
                          express gaussian:<sigma> — use the native backend",
                         mult.canonical()
                     );
+                }
+            }
+        }
+        if let Some(w) = &self.watchdog {
+            if self.out_dir.is_empty() {
+                bail!("watchdog needs an out_dir: rollback restores from checkpoints");
+            }
+            if self.checkpoint_every == 0 {
+                bail!("watchdog needs checkpoint_every >= 1 (rollback targets)");
+            }
+            if w.max_retries == 0 {
+                bail!("watchdog max_retries must be >= 1");
+            }
+            if w.window < 2 {
+                bail!("watchdog window must be >= 2 steps");
+            }
+            if w.spike_factor <= 1.0 {
+                bail!("watchdog spike_factor must be > 1");
+            }
+            if self.backend == ExecBackend::Pjrt {
+                for rung in &w.ladder {
+                    if rung.surrogate_sigma().is_none() {
+                        bail!(
+                            "escalation rung {:?} is bit-accurate; the PJRT backend \
+                             can only express gaussian:<sigma> — use the native backend",
+                            rung.canonical()
+                        );
+                    }
                 }
             }
         }
@@ -311,6 +380,39 @@ impl ExperimentConfig {
                     every: every.as_i64()? as u64,
                 },
                 None => LrSchedule::Constant { lr: base },
+            };
+        }
+        if let Some(w) = v.opt("watchdog") {
+            // `true` takes the default policy; an object tunes it.
+            cfg.watchdog = match w.as_bool() {
+                Ok(true) => Some(WatchdogConfig::default()),
+                Ok(false) => None,
+                Err(_) => {
+                    let mut wd = WatchdogConfig::default();
+                    if let Some(l) = w.opt("ladder") {
+                        wd.ladder = l
+                            .as_array()?
+                            .iter()
+                            .map(|s| MultSpec::parse(s.as_str()?))
+                            .collect::<Result<_>>()?;
+                    }
+                    if let Some(n) = w.opt("max_retries") {
+                        wd.max_retries = n.as_i64()? as u32;
+                    }
+                    if let Some(n) = w.opt("backoff_ms") {
+                        wd.backoff_ms = n.as_i64()? as u64;
+                    }
+                    if let Some(n) = w.opt("keep") {
+                        wd.keep = n.as_usize()?;
+                    }
+                    if let Some(n) = w.opt("window") {
+                        wd.window = n.as_usize()?;
+                    }
+                    if let Some(n) = w.opt("spike_factor") {
+                        wd.spike_factor = n.as_f64()?;
+                    }
+                    Some(wd)
+                }
             };
         }
         if let Some(p) = v.opt("policy") {
@@ -453,6 +555,71 @@ mod tests {
         assert!(cfg.validate().is_ok());
         assert_eq!(cfg.policy.sigma_at(0), 0.0);
         assert_eq!(cfg.policy.spec_at(0).canonical(), "booth8");
+    }
+
+    #[test]
+    fn watchdog_validation() {
+        let mut cfg = ExperimentConfig::preset_tiny();
+        cfg.watchdog = Some(WatchdogConfig::default());
+        // Needs a checkpoint target to roll back to.
+        assert!(cfg.validate().is_err());
+        cfg.out_dir = "/tmp/wd".into();
+        assert!(cfg.validate().is_err());
+        cfg.checkpoint_every = 1;
+        assert!(cfg.validate().is_ok());
+        // Degenerate heuristics rejected.
+        cfg.watchdog.as_mut().unwrap().window = 1;
+        assert!(cfg.validate().is_err());
+        cfg.watchdog.as_mut().unwrap().window = 8;
+        cfg.watchdog.as_mut().unwrap().spike_factor = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.watchdog.as_mut().unwrap().spike_factor = 4.0;
+        cfg.watchdog.as_mut().unwrap().max_retries = 0;
+        assert!(cfg.validate().is_err());
+        // Bit-accurate ladder rung on PJRT: rejected (exact is fine —
+        // its surrogate sigma is 0.0, not None).
+        cfg.watchdog = Some(WatchdogConfig {
+            ladder: vec![MultSpec::parse("drum6").unwrap(), MultSpec::Exact],
+            ..WatchdogConfig::default()
+        });
+        assert!(cfg.validate().is_err());
+        cfg.backend = ExecBackend::Native;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn json_watchdog_parsing() {
+        let v = Value::parse(
+            r#"{
+                "preset": "tiny", "backend": "native", "out_dir": "/tmp/wd",
+                "checkpoint_every": 1, "watchdog": true
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.watchdog, Some(WatchdogConfig::default()));
+        let v = Value::parse(
+            r#"{
+                "preset": "tiny", "backend": "native", "out_dir": "/tmp/wd",
+                "checkpoint_every": 2,
+                "watchdog": {
+                    "ladder": ["sdrum6", "exact"], "max_retries": 5,
+                    "backoff_ms": 10, "keep": 2, "window": 4, "spike_factor": 3.0
+                }
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        let w = cfg.watchdog.unwrap();
+        assert_eq!(w.ladder.len(), 2);
+        assert_eq!(w.ladder[0].canonical(), "sdrum6");
+        assert_eq!(w.max_retries, 5);
+        assert_eq!(w.keep, 2);
+        assert_eq!(w.window, 4);
+        assert_eq!(w.spike_factor, 3.0);
+        // `false` explicitly turns it off.
+        let v = Value::parse(r#"{"preset": "tiny", "watchdog": false}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&v).unwrap().watchdog, None);
     }
 
     #[test]

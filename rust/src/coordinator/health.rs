@@ -1,0 +1,207 @@
+//! Step-level training health monitoring — the watchdog's sensor.
+//!
+//! After every committed step the monitor checks (1) loss finiteness,
+//! (2) a windowed loss-spike heuristic (finite but exploding loss —
+//! what accumulated approximate-multiplication error looks like before
+//! it reaches NaN, cf. arXiv:2007.10500), and (3) bit-level finiteness
+//! of every state tensor (params ++ BN state ++ momentum), which
+//! catches the insidious case where a poisoned gradient commits NaN
+//! parameters behind a perfectly finite loss. A failed check raises a
+//! typed [`Trip`] through the `anyhow` chain; recovery
+//! ([`super::recovery`]) classifies and reacts, the monitor only
+//! detects.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::config::WatchdogConfig;
+use crate::metrics::{FailureKind, HealthLog};
+use crate::tensor::Tensor;
+
+/// Typed watchdog trip, carried through the error chain so
+/// [`super::recovery::classify_failure`] can recover it without string
+/// matching.
+#[derive(Debug, Clone)]
+pub struct Trip {
+    pub kind: FailureKind,
+    pub epoch: u64,
+    /// Global step (epoch * steps_per_epoch + step_in_epoch).
+    pub step: u64,
+    pub detail: String,
+}
+
+impl fmt::Display for Trip {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "watchdog trip at step {} (epoch {}): {} — {}",
+            self.step,
+            self.epoch,
+            self.kind.name(),
+            self.detail
+        )
+    }
+}
+
+impl std::error::Error for Trip {}
+
+/// Windowed loss monitor. Purely observational: it never touches the
+/// training state, so running it changes no trajectory.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    window: usize,
+    spike_factor: f64,
+    recent: VecDeque<f64>,
+}
+
+impl HealthMonitor {
+    pub fn new(window: usize, spike_factor: f64) -> Self {
+        HealthMonitor { window, spike_factor, recent: VecDeque::with_capacity(window) }
+    }
+
+    /// Feed one step's loss; `Some` classifies a failure. The window
+    /// only accumulates healthy losses, so one spike can't drag the
+    /// baseline up and mask the next.
+    pub fn observe_loss(&mut self, loss: f64) -> Option<(FailureKind, String)> {
+        if !loss.is_finite() {
+            self.recent.clear();
+            return Some((FailureKind::NonFinite, format!("loss is {loss}")));
+        }
+        if self.recent.len() == self.window {
+            let mean: f64 = self.recent.iter().sum::<f64>() / self.window as f64;
+            if mean > 0.0 && loss > self.spike_factor * mean {
+                self.recent.clear();
+                return Some((
+                    FailureKind::Divergence,
+                    format!(
+                        "loss {loss:.4} exceeds {:.1}x the {}-step mean {mean:.4}",
+                        self.spike_factor, self.window
+                    ),
+                ));
+            }
+            self.recent.pop_front();
+        }
+        self.recent.push_back(loss);
+        None
+    }
+}
+
+/// One resilient span's watch state: the loss monitor plus a borrow of
+/// the run-wide [`HealthLog`] and the recovery knobs the trainer's save
+/// path needs. Rebuilt per rollback span, so the spike window never
+/// carries stale pre-rollback losses.
+pub struct WatchCtx<'a> {
+    monitor: HealthMonitor,
+    pub health: &'a mut HealthLog,
+    /// Checkpoint-IO retry budget (mirrors `WatchdogConfig`).
+    pub retries: u32,
+    pub backoff_ms: u64,
+    /// Checkpoints to retain after each verified save.
+    pub keep: usize,
+}
+
+impl<'a> WatchCtx<'a> {
+    pub fn new(cfg: &WatchdogConfig, health: &'a mut HealthLog) -> Self {
+        WatchCtx {
+            monitor: HealthMonitor::new(cfg.window, cfg.spike_factor),
+            health,
+            retries: cfg.max_retries,
+            backoff_ms: cfg.backoff_ms,
+            keep: cfg.keep,
+        }
+    }
+
+    /// Inspect one committed step: its loss and the post-step state
+    /// tensors. Raises a [`Trip`] on any failed check.
+    pub fn observe(
+        &mut self,
+        epoch: u64,
+        step: u64,
+        loss: f64,
+        tensors: &[Tensor],
+    ) -> Result<()> {
+        self.health.steps_checked += 1;
+        let found = self.monitor.observe_loss(loss).or_else(|| {
+            tensors.iter().position(|t| !t.all_finite()).map(|i| {
+                (
+                    FailureKind::NonFinite,
+                    format!("state tensor #{i} contains NaN/Inf after the step"),
+                )
+            })
+        });
+        match found {
+            Some((kind, detail)) => {
+                Err(anyhow::Error::new(Trip { kind, epoch, step, detail }))
+            }
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_stable_loss_never_trips() {
+        let mut m = HealthMonitor::new(4, 3.0);
+        for i in 0..50 {
+            let loss = 2.0 - 0.01 * i as f64;
+            assert!(m.observe_loss(loss).is_none(), "step {i}");
+        }
+    }
+
+    #[test]
+    fn non_finite_loss_trips_immediately() {
+        let mut m = HealthMonitor::new(4, 3.0);
+        let (kind, _) = m.observe_loss(f64::NAN).unwrap();
+        assert_eq!(kind, FailureKind::NonFinite);
+        let (kind, _) = m.observe_loss(f64::INFINITY).unwrap();
+        assert_eq!(kind, FailureKind::NonFinite);
+    }
+
+    #[test]
+    fn loss_spike_classifies_as_divergence() {
+        let mut m = HealthMonitor::new(4, 3.0);
+        for _ in 0..4 {
+            assert!(m.observe_loss(1.0).is_none());
+        }
+        // 2x the mean: tolerated (normal minibatch noise).
+        assert!(m.observe_loss(2.0).is_none());
+        // >3x the mean: divergence. (The LUT-bit-flip fault shows up
+        // exactly like this — finite but exploding loss.)
+        let (kind, detail) = m.observe_loss(30.0).unwrap();
+        assert_eq!(kind, FailureKind::Divergence);
+        assert!(detail.contains("exceeds"));
+        // Window cleared on trip: the next steps re-warm-up.
+        assert!(m.observe_loss(30.0).is_none());
+    }
+
+    #[test]
+    fn spike_needs_a_full_window() {
+        let mut m = HealthMonitor::new(8, 3.0);
+        // Early training: loss can swing wildly before the window
+        // fills; no divergence verdict yet.
+        for loss in [5.0, 1.0, 40.0, 2.0] {
+            assert!(m.observe_loss(loss).is_none());
+        }
+    }
+
+    #[test]
+    fn watch_ctx_scans_tensors_and_counts_steps() {
+        let cfg = WatchdogConfig::default();
+        let mut log = HealthLog::default();
+        let mut w = WatchCtx::new(&cfg, &mut log);
+        let good = Tensor::from_f32(&[2], vec![1.0, -1.0]).unwrap();
+        let bad = Tensor::from_f32(&[2], vec![1.0, f32::NAN]).unwrap();
+        assert!(w.observe(0, 0, 1.0, &[good.clone()]).is_ok());
+        let err = w.observe(0, 1, 1.0, &[good, bad]).unwrap_err();
+        let trip = err.downcast_ref::<Trip>().unwrap();
+        assert_eq!(trip.kind, FailureKind::NonFinite);
+        assert_eq!(trip.step, 1);
+        assert!(trip.detail.contains("#1"));
+        assert_eq!(log.steps_checked, 2);
+    }
+}

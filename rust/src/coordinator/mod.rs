@@ -4,6 +4,10 @@
 //!   multiplier policy + error-sampling mode + lr schedule are applied
 //!   per step by varying the compiled graph's scalar inputs; evaluation
 //!   always runs exact (the paper removes the error layers for testing).
+//! * [`health`] / [`recovery`] — the resilient-training runtime: a
+//!   per-step divergence watchdog, typed failure classification, and
+//!   the rollback-and-escalate policy the trainer runs under
+//!   `cfg.watchdog`.
 //! * [`sweep`] — Table II regeneration: one full training run per
 //!   (MRE, SD) configuration, accuracy vs the exact baseline.
 //! * [`search`] — Figure 4's hybrid switch-epoch search: a single
@@ -11,10 +15,14 @@
 //!   from candidate epochs to find the maximal approximate utilization
 //!   that still reaches the target accuracy (Table III).
 
+pub mod health;
+pub mod recovery;
 pub mod search;
 pub mod sweep;
 pub mod trainer;
 
+pub use health::{HealthMonitor, Trip, WatchCtx};
+pub use recovery::{classify_failure, TripReport};
 pub use search::{HybridSearch, SearchOutcome};
 pub use sweep::{Sweep, SweepRow};
 pub use trainer::{TrainOutcome, Trainer};

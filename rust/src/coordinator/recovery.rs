@@ -1,0 +1,140 @@
+//! Failure classification and backoff policy for the resilient trainer.
+//!
+//! The watchdog reacts differently to different failures:
+//!
+//! * **non-finite / divergence** — training-path failures; roll back to
+//!   the newest verified checkpoint, and if the *same* step trips again
+//!   after a clean (bit-identical) replay, escalate the multiplier one
+//!   rung up the configured ladder — a deterministic trip will recur
+//!   deterministically, so a second trip at the same step is evidence
+//!   of a systematic numeric failure, not a transient.
+//! * **checkpoint-IO** — store failures; retried with exponential
+//!   backoff at the save site, fatal if the budget is exhausted
+//!   (rolling back onto a broken store would loop forever).
+//!
+//! Classification is typed, not string-matched: every failure the
+//! runtime can raise carries a marker in its `anyhow` chain
+//! ([`health::Trip`], [`runtime::NonFiniteLoss`], the checkpoint
+//! store's `CkptFault`), recovered here by downcast.
+
+use std::time::Duration;
+
+use crate::checkpoint;
+use crate::metrics::FailureKind;
+use crate::runtime::NonFiniteLoss;
+
+use super::health::Trip;
+
+/// A classified training failure, extracted from an error chain.
+#[derive(Debug, Clone)]
+pub struct TripReport {
+    pub kind: FailureKind,
+    /// Global step at the failure, when the failing layer knew it
+    /// (checkpoint-store errors don't).
+    pub step: Option<u64>,
+    pub detail: String,
+}
+
+/// Classify an error as a recoverable training failure. `None` means
+/// the error is not a health trip (config error, bug, ...) and must
+/// surface unchanged rather than trigger a rollback.
+pub fn classify_failure(err: &anyhow::Error) -> Option<TripReport> {
+    for cause in err.chain() {
+        if let Some(trip) = cause.downcast_ref::<Trip>() {
+            return Some(TripReport {
+                kind: trip.kind,
+                step: Some(trip.step),
+                detail: trip.detail.clone(),
+            });
+        }
+        if let Some(nf) = cause.downcast_ref::<NonFiniteLoss>() {
+            return Some(TripReport {
+                kind: FailureKind::NonFinite,
+                step: Some(nf.step),
+                detail: format!("{nf}"),
+            });
+        }
+    }
+    if let Some(class) = checkpoint::classify(err) {
+        return Some(TripReport {
+            kind: FailureKind::CheckpointIo,
+            step: None,
+            detail: format!("checkpoint store failure ({})", class.name()),
+        });
+    }
+    None
+}
+
+/// Exponential backoff: `base_ms << attempt`, capped at 5 s so an
+/// exhausted retry budget is reached in bounded wall time.
+pub fn backoff_delay(base_ms: u64, attempt: u32) -> Duration {
+    let ms = base_ms.saturating_mul(1u64 << attempt.min(16));
+    Duration::from_millis(ms.min(5_000))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{FailureClass, Store, StoreFault};
+
+    #[test]
+    fn classifies_trips_through_context_chains() {
+        let base = anyhow::Error::new(Trip {
+            kind: FailureKind::Divergence,
+            epoch: 2,
+            step: 17,
+            detail: "loss spike".into(),
+        })
+        .context("epoch 2 failed")
+        .context("training run aborted");
+        let report = classify_failure(&base).unwrap();
+        assert_eq!(report.kind, FailureKind::Divergence);
+        assert_eq!(report.step, Some(17));
+    }
+
+    #[test]
+    fn classifies_session_non_finite_loss() {
+        let err = anyhow::Error::new(NonFiniteLoss { step: 9 }).context("step failed");
+        let report = classify_failure(&err).unwrap();
+        assert_eq!(report.kind, FailureKind::NonFinite);
+        assert_eq!(report.step, Some(9));
+    }
+
+    #[test]
+    fn classifies_checkpoint_store_failures() {
+        let dir = std::env::temp_dir().join(format!("axm-recovery-{}", std::process::id()));
+        let store = Store::new(&dir).unwrap();
+        store.inject_fault(Some(StoreFault::FailNextSave));
+        let meta = checkpoint::Meta {
+            preset: "p".into(),
+            epoch: 1,
+            step: 1,
+            sigma: 0.0,
+            mult: "exact".into(),
+            tag: "t".into(),
+            escalated_from: None,
+        };
+        let named: Vec<(String, &crate::tensor::Tensor)> = Vec::new();
+        let err = store.save(&meta, &named).unwrap_err();
+        let report = classify_failure(&err).unwrap();
+        assert_eq!(report.kind, FailureKind::CheckpointIo);
+        assert_eq!(report.step, None);
+        assert!(report.detail.contains(FailureClass::Io.name()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unrelated_errors_stay_unclassified() {
+        let err = anyhow::anyhow!("bad config: epochs must be >= 1");
+        assert!(classify_failure(&err).is_none());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_delay(50, 0), Duration::from_millis(50));
+        assert_eq!(backoff_delay(50, 1), Duration::from_millis(100));
+        assert_eq!(backoff_delay(50, 3), Duration::from_millis(400));
+        assert_eq!(backoff_delay(50, 30), Duration::from_millis(5_000));
+        assert_eq!(backoff_delay(0, 5), Duration::from_millis(0));
+    }
+}

@@ -18,10 +18,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::Store;
+use crate::checkpoint::{self, Meta, Store};
 use crate::config::{ExecBackend, ExperimentConfig, MultiplierPolicy};
 use crate::mult::MultSpec;
 use crate::runtime::Engine;
+use crate::tensor::Tensor;
 
 use super::trainer::{TrainOutcome, Trainer};
 
@@ -93,31 +94,94 @@ impl<'e> HybridSearch<'e> {
     }
 
     /// Phase 2 evaluation of one candidate: resume from the epoch-`k`
-    /// approximate checkpoint and finish exactly.
-    fn try_switch_epoch(&self, config: &MultSpec, tag: &str, k: u64) -> Result<f64> {
+    /// approximate checkpoint and finish exactly. If the epoch-`k` file
+    /// is corrupt/unreadable, the nearest earlier intact checkpoint is
+    /// substituted (a smaller, still-valid candidate) — returns the
+    /// `(epoch actually used, final accuracy)` pair so the search can
+    /// adapt its bracket.
+    fn try_switch_epoch(
+        &self,
+        config: &MultSpec,
+        tag: &str,
+        k: u64,
+    ) -> Result<(u64, f64)> {
         let store = Store::new(&self.base.out_dir)?;
+        let (used, _meta, tensors) = self.load_candidate(&store, config, tag, k)?;
         let mut cfg = self.base.clone();
-        cfg.tag = format!("{}-tail{k}", tag);
+        cfg.tag = format!("{}-tail{used}", tag);
         cfg.policy =
-            MultiplierPolicy::Hybrid { mult: config.clone(), switch_epoch: k };
+            MultiplierPolicy::Hybrid { mult: config.clone(), switch_epoch: used };
         cfg.checkpoint_every = 0;
         let mut trainer = self.trainer(cfg)?;
-        let (meta, tensors) = store
-            .load(tag, k)
-            .with_context(|| format!("loading approx checkpoint epoch {k}"))?;
-        // The checkpoint must come from the same multiplier we are
-        // searching: a resumed tail under a different design would
-        // silently produce a Table-III row for nothing in particular.
-        if meta.mult != config.canonical() {
-            bail!(
-                "checkpoint {tag} epoch {k} was trained with {:?}, search is for {:?}",
-                meta.mult,
-                config.canonical()
-            );
-        }
         trainer.restore_state(tensors.into_iter().map(|(_, t)| t).collect())?;
-        let outcome = trainer.run_from(k, None)?;
-        Ok(outcome.final_accuracy)
+        let outcome = trainer.run_from(used, None)?;
+        Ok((used, outcome.final_accuracy))
+    }
+
+    /// Load the epoch-`k` checkpoint for `tag`, scanning backward to
+    /// the nearest earlier epoch whose file is intact when `k`'s is
+    /// not. Each skip is logged with its classified failure
+    /// ([`checkpoint::classify`]); only when *no* epoch at or below `k`
+    /// loads does the search abort, and then with the classified cause
+    /// and file path rather than a bare I/O error.
+    fn load_candidate(
+        &self,
+        store: &Store,
+        config: &MultSpec,
+        tag: &str,
+        k: u64,
+    ) -> Result<(u64, Meta, Vec<(String, Tensor)>)> {
+        let candidates: Vec<u64> = store
+            .list_epochs(tag)
+            .with_context(|| format!("listing checkpoints for {tag}"))?
+            .into_iter()
+            .filter(|&e| e <= k)
+            .collect();
+        let mut last_err: Option<anyhow::Error> = None;
+        for epoch in candidates.into_iter().rev() {
+            match store.load(tag, epoch) {
+                Ok((meta, tensors)) => {
+                    // The checkpoint must come from the same multiplier
+                    // we are searching: a resumed tail under a different
+                    // design would silently produce a Table-III row for
+                    // nothing in particular. This is a config error, not
+                    // a corrupt file — never skip past it.
+                    if meta.mult != config.canonical() {
+                        bail!(
+                            "checkpoint {tag} epoch {epoch} was trained with {:?}, \
+                             search is for {:?}",
+                            meta.mult,
+                            config.canonical()
+                        );
+                    }
+                    if epoch < k {
+                        log::warn!(
+                            "search {}: candidate epoch {k} unreadable, \
+                             substituting intact epoch {epoch}",
+                            config.canonical()
+                        );
+                    }
+                    return Ok((epoch, meta, tensors));
+                }
+                Err(e) => {
+                    let class = checkpoint::classify(&e)
+                        .map(|c| c.name())
+                        .unwrap_or("unclassified");
+                    log::warn!(
+                        "search {}: skipping checkpoint {} ({class}): {e:#}",
+                        config.canonical(),
+                        store.path_for(tag, epoch).display()
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        match last_err {
+            Some(e) => Err(e.context(format!(
+                "no loadable {tag} checkpoint at or below epoch {k}"
+            ))),
+            None => bail!("no checkpoints found for {tag} at or below epoch {k}"),
+        }
     }
 
     /// Full Figure-4 search for one multiplier configuration.
@@ -157,19 +221,31 @@ impl<'e> HybridSearch<'e> {
         let mut best_acc = baseline_acc;
         while hi - lo > 1 {
             let mid = (lo + hi) / 2;
-            let acc = self.try_switch_epoch(config, approx_tag, mid)?;
+            // `used <= mid`: a corrupt mid-checkpoint falls back to the
+            // nearest intact earlier epoch.
+            let (used, acc) = self.try_switch_epoch(config, approx_tag, mid)?;
             evaluations += 1;
             log::info!(
-                "search {}: switch@{mid} -> acc {:.4} (target {:.4})",
+                "search {}: switch@{used} -> acc {:.4} (target {:.4})",
                 config.canonical(),
                 acc,
                 target
             );
             if acc >= target {
-                lo = mid;
                 best_acc = acc;
+                if used > lo {
+                    lo = used;
+                } else {
+                    // Everything in (lo, mid] was unreadable and fell
+                    // back to lo itself: those epochs can never be
+                    // resumed from, so conservatively shrink the
+                    // bracket and keep the known-good lo.
+                    hi = mid;
+                }
             } else {
-                hi = mid;
+                // Accuracy is non-increasing in the switch epoch, so a
+                // miss at `used` rules out every k >= used.
+                hi = used.max(lo + 1);
             }
         }
         Ok(SearchOutcome {

@@ -11,21 +11,43 @@
 //! each consumer gets its own domain-tagged, statistically independent
 //! stream, replacing the old `base.wrapping_add(step)` arithmetic
 //! whose streams were shifts of each other and collided structurally.
+//!
+//! # Resilient mode
+//!
+//! With `cfg.watchdog` set, the run is wrapped in a
+//! rollback-and-escalate loop: every committed step is health-checked
+//! ([`super::health`]), checkpoints are verified on write and retained
+//! last-K, and a trip rolls the session back to the newest valid
+//! checkpoint. Because all per-step randomness is a pure function of
+//! `(run seed, domain, global step)`, the rolled-back replay is
+//! bit-identical to the original trajectory — so a trip that recurs at
+//! the *same* global step is deterministic, and the watchdog responds
+//! by escalating the multiplier one rung up the configured ladder
+//! (e.g. `drum6 -> exact`) instead of looping forever. With the
+//! watchdog off, the step loop is byte-for-byte the historical one:
+//! golden trajectories are unchanged.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::{Meta, Store};
-use crate::config::{ErrorSampling, ExecBackend, ExperimentConfig};
+use crate::config::{
+    ErrorSampling, ExecBackend, ExperimentConfig, MultiplierPolicy, WatchdogConfig,
+};
 use crate::data::augment::Augment;
 use crate::data::batcher::{Batcher, EvalBatcher};
 use crate::data::{Dataset, SyntheticCifar};
-use crate::metrics::{EpochRecord, History};
+use crate::metrics::{EpochRecord, FailureKind, HealthEvent, HealthLog, History};
 use crate::mult::MultSpec;
 use crate::rng::{counter_split, STREAM_DROP, STREAM_ERR, STREAM_INIT};
 use crate::runtime::session::StepInputs;
 use crate::runtime::{BackendModel, Engine, NativeBackend, TrainSession};
+use crate::testkit::faults::FaultPlan;
+
+use super::health::WatchCtx;
+use super::recovery;
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
@@ -35,9 +57,13 @@ pub struct TrainOutcome {
     pub final_accuracy: f64,
     pub epochs_run: u64,
     pub wall_secs: f64,
+    /// Watchdog activity (all-zero when the watchdog is off or idle).
+    pub health: HealthLog,
 }
 
 /// Callback invoked after every epoch (progress logging, live plots).
+/// In resilient mode it also fires for *replayed* epochs after a
+/// rollback — consumers keyed on `record.epoch` are idempotent.
 pub type EpochHook<'h> = dyn FnMut(&EpochRecord) + 'h;
 
 /// Build the session the config asks for. The engine is only needed
@@ -68,6 +94,10 @@ pub struct Trainer {
     test_ds: Dataset,
     session: TrainSession,
     store: Option<Store>,
+    /// Canonical spec of the multiplier the run *started* with, set on
+    /// the first watchdog escalation and recorded in checkpoint meta so
+    /// a resumed run knows its trajectory is post-recovery.
+    escalated_from: Option<String>,
 }
 
 impl Trainer {
@@ -150,7 +180,7 @@ impl Trainer {
         } else {
             Some(Store::new(&cfg.out_dir)?)
         };
-        Ok(Trainer { cfg, model, train_ds, test_ds, session, store })
+        Ok(Trainer { cfg, model, train_ds, test_ds, session, store, escalated_from: None })
     }
 
     pub fn config(&self) -> &ExperimentConfig {
@@ -159,6 +189,18 @@ impl Trainer {
 
     pub fn session(&self) -> &TrainSession {
         &self.session
+    }
+
+    /// The checkpoint store, when `out_dir` is set. Fault-injection
+    /// tests reach through this to corrupt files between epochs.
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
+    }
+
+    /// Arm a deterministic training-path fault on the backend
+    /// ([`crate::testkit::faults`]). Test harness hook.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        self.session.set_fault_plan(plan)
     }
 
     /// Restore session state from a checkpoint's tensors (hybrid resume).
@@ -193,9 +235,20 @@ impl Trainer {
         Ok((correct as f64 / total as f64, loss_sum / total as f64))
     }
 
+    /// Training steps one epoch takes under the current batching mode.
+    fn steps_per_epoch(&self) -> u64 {
+        let batch = self.session.batch_size();
+        if self.session.supports_dynamic_batch() {
+            self.train_ds.len().div_ceil(batch) as u64
+        } else {
+            (self.train_ds.len() / batch) as u64
+        }
+    }
+
     /// Run the configured number of epochs. `resume_from` skips the
     /// first `n` epochs (data order and seeds replay identically — the
-    /// hybrid search relies on this).
+    /// hybrid search relies on this). With `cfg.watchdog` set, the run
+    /// is supervised: see the module docs.
     pub fn run_from(
         &mut self,
         resume_from: u64,
@@ -203,20 +256,58 @@ impl Trainer {
     ) -> Result<TrainOutcome> {
         let started = Instant::now();
         let mut history = History::default();
-        let mut best = f64::MIN;
-        let mut best_epoch = 0u64;
+        let mut health = HealthLog::default();
+        match self.cfg.watchdog.clone() {
+            None => self.run_span(resume_from, &mut history, &mut hook, None)?,
+            Some(w) => {
+                self.run_resilient(resume_from, &mut history, &mut hook, &w, &mut health)?
+            }
+        }
+        let best_accuracy = history
+            .records
+            .iter()
+            .map(|r| r.test_acc)
+            .fold(f64::MIN, f64::max);
+        Ok(TrainOutcome {
+            best_accuracy: if history.records.is_empty() { 0.0 } else { best_accuracy },
+            final_accuracy: history.final_test_acc().unwrap_or(0.0),
+            epochs_run: history.records.len() as u64,
+            wall_secs: started.elapsed().as_secs_f64(),
+            health,
+            history,
+        })
+    }
+
+    /// Run all epochs from scratch.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        self.run_from(0, None)
+    }
+
+    /// One uninterrupted span of epochs `start..cfg.epochs`. This is
+    /// the historical epoch loop; `watch` (resilient mode only) adds
+    /// post-step health checks and verified/retained checkpointing but
+    /// never alters the trajectory itself.
+    fn run_span(
+        &mut self,
+        start: u64,
+        history: &mut History,
+        hook: &mut Option<&mut EpochHook<'_>>,
+        mut watch: Option<&mut WatchCtx<'_>>,
+    ) -> Result<()> {
+        // Re-seed the early-stopping state from records that survived a
+        // rollback, so patience counts from the true best epoch.
+        let (mut best, mut best_epoch) =
+            history.records.iter().fold((f64::MIN, 0u64), |(b, be), r| {
+                if r.test_acc > b { (r.test_acc, r.epoch) } else { (b, be) }
+            });
         let augment = if self.cfg.augment { Augment::default() } else { Augment::none() };
         let batch = self.session.batch_size();
         // Dynamic-batch backends train the final short batch instead of
         // dropping it; static-shape graphs keep the drop-last behavior.
         let drop_last = !self.session.supports_dynamic_batch();
-        let steps_per_epoch = if drop_last {
-            (self.train_ds.len() / batch) as u64
-        } else {
-            self.train_ds.len().div_ceil(batch) as u64
-        };
+        let steps_per_epoch = self.steps_per_epoch();
 
-        for epoch in resume_from..self.cfg.epochs {
+        for epoch in start..self.cfg.epochs {
             let epoch_started = Instant::now();
             let approx = self.cfg.policy.active_at(epoch);
             let sigma = self.cfg.policy.sigma_at(epoch) as f32;
@@ -250,8 +341,16 @@ impl Trainer {
                 let stats = self.session.step(
                     x,
                     y,
-                    StepInputs { seed_err, seed_drop, sigma, lr, approx },
+                    StepInputs { seed_err, seed_drop, sigma, lr, approx, step: global_step },
                 )?;
+                if let Some(w) = watch.as_deref_mut() {
+                    w.observe(
+                        epoch,
+                        global_step,
+                        stats.loss as f64,
+                        self.session.state_tensors(),
+                    )?;
+                }
                 loss_sum += stats.loss as f64 * batch_n as f64;
                 acc_sum += stats.accuracy as f64 * batch_n as f64;
                 seen += batch_n;
@@ -289,7 +388,14 @@ impl Trainer {
                 let due = self.cfg.checkpoint_every > 0
                     && (epoch + 1) % self.cfg.checkpoint_every == 0;
                 if due || epoch + 1 == self.cfg.epochs {
-                    self.save_checkpoint(store, epoch, sigma as f64)?;
+                    match watch.as_deref_mut() {
+                        Some(w) => {
+                            self.save_checkpoint_watched(store, epoch, sigma as f64, w)?
+                        }
+                        None => {
+                            self.save_checkpoint(store, epoch, sigma as f64)?;
+                        }
+                    }
                 }
             }
 
@@ -301,23 +407,173 @@ impl Trainer {
                 break;
             }
         }
-
-        let final_accuracy = history.final_test_acc().unwrap_or(0.0);
-        Ok(TrainOutcome {
-            best_accuracy: if history.records.is_empty() { 0.0 } else { best },
-            final_accuracy,
-            epochs_run: history.records.len() as u64,
-            wall_secs: started.elapsed().as_secs_f64(),
-            history,
-        })
+        Ok(())
     }
 
-    /// Run all epochs from scratch.
-    pub fn run(&mut self) -> Result<TrainOutcome> {
-        self.run_from(0, None)
+    /// The watchdog's supervision loop: run spans until one completes,
+    /// classifying each failure and responding with rollback (training
+    /// failures), escalation (a failure that recurs at the same global
+    /// step after a bit-identical replay), or a bounded bail-out
+    /// (checkpoint-IO failures, exhausted budgets, unclassified errors).
+    fn run_resilient(
+        &mut self,
+        resume_from: u64,
+        history: &mut History,
+        hook: &mut Option<&mut EpochHook<'_>>,
+        w: &WatchdogConfig,
+        health: &mut HealthLog,
+    ) -> Result<()> {
+        let mut start = resume_from;
+        let mut rung = 0usize;
+        let mut last_trip: Option<u64> = None;
+        let steps_per_epoch = self.steps_per_epoch().max(1);
+        loop {
+            let result = {
+                let mut watch = WatchCtx::new(w, &mut *health);
+                self.run_span(start, history, hook, Some(&mut watch))
+            };
+            let err = match result {
+                Ok(()) => return Ok(()),
+                Err(e) => e,
+            };
+            let Some(report) = recovery::classify_failure(&err) else {
+                // Not a health failure (config error, bug, ...): never
+                // roll back over it, surface it unchanged.
+                return Err(err);
+            };
+            let step = report.step.unwrap_or(0);
+            let epoch = step / steps_per_epoch;
+            health.trips.push(HealthEvent {
+                epoch,
+                step,
+                kind: report.kind,
+                detail: report.detail.clone(),
+            });
+            log::warn!(
+                "[{}] watchdog trip at step {step} (epoch {epoch}): {} — {}",
+                self.cfg.tag,
+                report.kind.name(),
+                report.detail
+            );
+            if report.kind == FailureKind::CheckpointIo {
+                // The save path already retried with backoff; a store
+                // that still fails can't anchor a rollback.
+                return Err(err.context(
+                    "checkpoint store unrecoverable: watchdog cannot roll back onto it",
+                ));
+            }
+            if health.rollbacks >= w.max_retries as u64 {
+                return Err(err.context(format!(
+                    "watchdog retry budget exhausted ({})",
+                    health.summary()
+                )));
+            }
+            if last_trip == Some(step) {
+                // The replay after a clean rollback re-tripped at the
+                // same global step: deterministic trajectories make
+                // that a systematic numeric failure, so escalate the
+                // multiplier instead of rolling back forever.
+                let Some(spec) = w.ladder.get(rung).cloned() else {
+                    return Err(err.context(format!(
+                        "escalation ladder exhausted ({})",
+                        health.summary()
+                    )));
+                };
+                rung += 1;
+                self.escalate_to(&spec)?;
+                health.escalations.push((step, spec.canonical()));
+                log::warn!(
+                    "[{}] escalating multiplier to {} after repeated trip at step {step}",
+                    self.cfg.tag,
+                    spec.canonical()
+                );
+            }
+            last_trip = Some(step);
+            start = self.rollback(w)?;
+            health.rollbacks += 1;
+            // Replayed epochs re-push their records; drop the stale ones.
+            history.records.retain(|r| r.epoch < start);
+        }
     }
 
-    fn save_checkpoint(&self, store: &Store, epoch: u64, sigma: f64) -> Result<()> {
+    /// Restore the newest valid checkpoint (scanning past corrupt
+    /// files), or re-initialize from the run seed when none exists.
+    /// Returns the epoch to resume from. Per-step seeds need no
+    /// re-derivation: they are pure functions of the global step.
+    fn rollback(&mut self, w: &WatchdogConfig) -> Result<u64> {
+        let mut attempt = 0u32;
+        loop {
+            let loaded = self
+                .store
+                .as_ref()
+                .context("watchdog rollback requires a checkpoint store (out_dir)")?
+                .latest_valid(&self.cfg.tag);
+            match loaded {
+                Ok(Some((epoch, meta, tensors))) => {
+                    log::warn!(
+                        "[{}] rolling back to checkpoint epoch {epoch} (step {})",
+                        self.cfg.tag,
+                        meta.step
+                    );
+                    self.session
+                        .restore(tensors.into_iter().map(|(_, t)| t).collect())?;
+                    self.session.set_steps_run(meta.step);
+                    return Ok(epoch);
+                }
+                Ok(None) => {
+                    log::warn!(
+                        "[{}] no valid checkpoint to roll back to — reinitializing from seed",
+                        self.cfg.tag
+                    );
+                    self.session.reinit(counter_split(self.cfg.seed, STREAM_INIT, 0))?;
+                    return Ok(0);
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > w.max_retries {
+                        return Err(e.context("checkpoint store unreadable during rollback"));
+                    }
+                    std::thread::sleep(recovery::backoff_delay(w.backoff_ms, attempt - 1));
+                }
+            }
+        }
+    }
+
+    /// Swap the active multiplier for `spec` (one watchdog ladder
+    /// rung). The native backend bakes its design in, so it is rebuilt
+    /// around the session's current tensors; PJRT consumes sigma as a
+    /// runtime scalar and needs no rebuild. Rebuilding intentionally
+    /// drops any armed fault plan — the escalated replay runs clean.
+    fn escalate_to(&mut self, spec: &MultSpec) -> Result<()> {
+        if self.escalated_from.is_none() {
+            self.escalated_from = Some(
+                self.cfg
+                    .policy
+                    .mult()
+                    .map(|m| m.canonical())
+                    .unwrap_or_else(|| "exact".to_string()),
+            );
+        }
+        self.cfg.policy = match &self.cfg.policy {
+            MultiplierPolicy::Hybrid { switch_epoch, .. } => MultiplierPolicy::Hybrid {
+                mult: spec.clone(),
+                switch_epoch: *switch_epoch,
+            },
+            _ => MultiplierPolicy::Approximate { mult: spec.clone() },
+        };
+        if matches!(self.cfg.backend, ExecBackend::Native) {
+            let backend = NativeBackend::new(&self.cfg.preset, spec.clone())?;
+            let steps = self.session.steps_run();
+            let tensors = self.session.state_tensors().to_vec();
+            let mut session =
+                TrainSession::with_backend_tensors(Box::new(backend), tensors)?;
+            session.set_steps_run(steps);
+            self.session = session;
+        }
+        Ok(())
+    }
+
+    fn save_checkpoint(&self, store: &Store, epoch: u64, sigma: f64) -> Result<PathBuf> {
         let named: Vec<(String, &crate::tensor::Tensor)> = self
             .model
             .tensor_names()
@@ -331,8 +587,48 @@ impl Trainer {
             sigma,
             mult: self.cfg.policy.spec_at(epoch).canonical(),
             tag: self.cfg.tag.clone(),
+            escalated_from: self.escalated_from.clone(),
         };
-        store.save(&meta, &named)?;
-        Ok(())
+        store.save(&meta, &named)
+    }
+
+    /// Resilient-mode checkpointing: save, read the file straight back
+    /// (a checkpoint only counts once it parses and its CRC verifies —
+    /// this is what catches a torn write immediately instead of at the
+    /// next rollback), then apply last-K retention. Failures retry with
+    /// exponential backoff up to the watchdog budget.
+    fn save_checkpoint_watched(
+        &self,
+        store: &Store,
+        epoch: u64,
+        sigma: f64,
+        w: &mut WatchCtx<'_>,
+    ) -> Result<()> {
+        let mut attempt = 0u32;
+        loop {
+            let result = self
+                .save_checkpoint(store, epoch, sigma)
+                .and_then(|path| store.load_path(&path).map(|_| ()));
+            match result {
+                Ok(()) => {
+                    store.gc_keep_last(&self.cfg.tag, w.keep)?;
+                    return Ok(());
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > w.retries {
+                        return Err(e.context(format!(
+                            "checkpoint save failed after {attempt} attempts"
+                        )));
+                    }
+                    w.health.save_retries += 1;
+                    log::warn!(
+                        "[{}] checkpoint save/verify failed (attempt {attempt}): {e:#}; retrying",
+                        self.cfg.tag
+                    );
+                    std::thread::sleep(recovery::backoff_delay(w.backoff_ms, attempt - 1));
+                }
+            }
+        }
     }
 }

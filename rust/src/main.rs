@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use approxmul::cli::{self, Args, FlagSpec};
 use approxmul::config::{
     ErrorSampling, ExecBackend, ExperimentConfig, LrSchedule, MultiplierPolicy,
+    WatchdogConfig,
 };
 use approxmul::coordinator::{HybridSearch, Sweep, Trainer};
 use approxmul::costmodel::{cited_designs, CostModel};
@@ -212,6 +213,32 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             default: None,
         },
         FlagSpec { name: "csv", help: "write history CSV here", takes_value: true, default: None },
+        FlagSpec {
+            name: "watchdog",
+            help: "enable the divergence watchdog (rollback on NaN/Inf or \
+                   loss spikes; needs --out-dir)",
+            takes_value: false,
+            default: None,
+        },
+        FlagSpec {
+            name: "escalate",
+            help: "comma-separated multiplier ladder for repeated trips \
+                   (e.g. drum6,exact); implies --watchdog",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec {
+            name: "watchdog-keep",
+            help: "verified checkpoints to retain (default 3)",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec {
+            name: "watchdog-retries",
+            help: "rollback/save retry budget (default 3)",
+            takes_value: true,
+            default: None,
+        },
     ]);
     if wants_help(argv) {
         print!("{}", cli::help("train", "run one training experiment", &specs));
@@ -231,6 +258,33 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         (false, None) => MultiplierPolicy::Approximate { mult },
         (false, Some(k)) => MultiplierPolicy::Hybrid { mult, switch_epoch: k },
     };
+    if a.flag("watchdog") || a.get("escalate").is_some() {
+        let mut w = WatchdogConfig::default();
+        if let Some(ladder) = a.get("escalate") {
+            w.ladder = ladder
+                .split(',')
+                .map(|s| MultSpec::parse(s.trim()))
+                .collect::<Result<_>>()
+                .context("parsing --escalate ladder")?;
+        }
+        if let Some(k) = a.parse_usize("watchdog-keep")? {
+            w.keep = k;
+        }
+        if let Some(r) = a.parse_u64("watchdog-retries")? {
+            w.max_retries = r as u32;
+        }
+        if cfg.out_dir.is_empty() {
+            bail!(
+                "--watchdog needs --out-dir: rollback restores from the \
+                 checkpoint store"
+            );
+        }
+        // The watchdog can only roll back to what was saved.
+        if cfg.checkpoint_every == 0 {
+            cfg.checkpoint_every = 1;
+        }
+        cfg.watchdog = Some(w);
+    }
     cfg.validate()?;
     let engine = optional_engine(&cfg, &a)?;
     let mut trainer = match &engine {
@@ -259,6 +313,18 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         pct(outcome.final_accuracy),
         outcome.wall_secs
     );
+    if !outcome.health.trips.is_empty() || outcome.health.rollbacks > 0 {
+        println!("watchdog: {}", outcome.health.summary());
+        for t in &outcome.health.trips {
+            println!(
+                "  trip @ step {} (epoch {}): {} — {}",
+                t.step,
+                t.epoch,
+                t.kind.name(),
+                t.detail
+            );
+        }
+    }
     let losses: Vec<f64> =
         outcome.history.records.iter().map(|r| r.train_loss).collect();
     let accs: Vec<f64> =

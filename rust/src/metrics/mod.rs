@@ -102,6 +102,72 @@ impl History {
     }
 }
 
+/// Classified training-runtime failure — the watchdog's trip taxonomy
+/// ([`crate::coordinator::health`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// NaN/Inf in the loss, parameters, state or optimizer momentum.
+    NonFinite,
+    /// Finite but spiking loss (windowed heuristic).
+    Divergence,
+    /// The checkpoint store failed to save or restore.
+    CheckpointIo,
+}
+
+impl FailureKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureKind::NonFinite => "non-finite",
+            FailureKind::Divergence => "divergence",
+            FailureKind::CheckpointIo => "checkpoint-io",
+        }
+    }
+}
+
+/// One watchdog trip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthEvent {
+    pub epoch: u64,
+    /// Global step (epoch * steps_per_epoch + step_in_epoch).
+    pub step: u64,
+    pub kind: FailureKind,
+    pub detail: String,
+}
+
+/// Aggregate runtime-health record of one training run. Empty (all
+/// zeros) whenever the watchdog is off or never tripped.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HealthLog {
+    /// Steps the health monitor inspected.
+    pub steps_checked: u64,
+    pub trips: Vec<HealthEvent>,
+    /// Rollbacks to a checkpoint (or to scratch) performed.
+    pub rollbacks: u64,
+    /// `(global step, spec escalated to)` per ladder advance.
+    pub escalations: Vec<(u64, String)>,
+    /// Checkpoint saves that needed a backoff retry.
+    pub save_retries: u64,
+}
+
+impl HealthLog {
+    /// One-line operator summary.
+    pub fn summary(&self) -> String {
+        let esc: Vec<String> = self
+            .escalations
+            .iter()
+            .map(|(step, spec)| format!("{spec}@{step}"))
+            .collect();
+        format!(
+            "{} steps checked, {} trips, {} rollbacks, escalations [{}], {} save retries",
+            self.steps_checked,
+            self.trips.len(),
+            self.rollbacks,
+            esc.join(", "),
+            self.save_retries
+        )
+    }
+}
+
 /// Streaming mean (loss/accuracy accumulation inside an epoch).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Mean {

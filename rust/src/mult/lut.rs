@@ -81,6 +81,26 @@ impl LutMultiplier {
     fn lookup(&self, ia: u32, ib: u32) -> u64 {
         self.table[((ia << self.bits) | ib) as usize]
     }
+
+    /// Fault-injection hook ([`crate::testkit::faults`]): flip one bit
+    /// of the tabulated product for operand pair `(a, b)`. Models a
+    /// stuck/soft-errored cell in a hardware product ROM; every lookup
+    /// that reduces to `(a, b)` then returns the corrupted product, so
+    /// training sees a deterministic, persistent numeric fault rather
+    /// than a crash.
+    pub fn flip_table_bit(&mut self, a: u32, b: u32, bit: u32) -> Result<()> {
+        if a >= self.size || b >= self.size {
+            bail!(
+                "LUT fault operands ({a}, {b}) outside table domain [0, {})",
+                self.size
+            );
+        }
+        if bit >= 64 {
+            bail!("LUT fault bit {bit} outside u64 product");
+        }
+        self.table[((a << self.bits) | b) as usize] ^= 1u64 << bit;
+        Ok(())
+    }
 }
 
 /// Rescale a table product by the reduction shifts, saturating instead
@@ -190,6 +210,36 @@ mod tests {
         let lut = LutMultiplier::new(&Mitchell, 4).unwrap();
         assert_eq!(lut.mul(0, 999), 0);
         assert_eq!(lut.mul(999, 0), 0);
+    }
+
+    #[test]
+    fn flipped_table_bit_corrupts_exactly_that_product() {
+        let d = Drum::new(4).unwrap();
+        let mut faulty = LutMultiplier::new(&d, 6).unwrap();
+        let clean = LutMultiplier::new(&d, 6).unwrap();
+        faulty.flip_table_bit(36, 17, 3).unwrap();
+        // The faulted cell differs by exactly the flipped bit...
+        assert_eq!(faulty.mul(36, 17), clean.mul(36, 17) ^ (1 << 3));
+        // ...and every other in-domain product is untouched.
+        for a in 0..64u32 {
+            for b in 0..64u32 {
+                if (a, b) != (36, 17) {
+                    assert_eq!(faulty.mul(a, b), clean.mul(a, b), "{a}*{b}");
+                }
+            }
+        }
+        // Out-of-domain operands that *reduce* onto the faulted cell
+        // inherit the corruption (rescaled by the reduction shift):
+        // 36 << 6 has msb 11, so reduce() keeps the top 6 bits = 36.
+        assert_eq!(faulty.mul(36 << 6, 17), (clean.mul(36, 17) ^ (1 << 3)) << 6);
+    }
+
+    #[test]
+    fn flip_rejects_out_of_domain_faults() {
+        let mut lut = LutMultiplier::new(&Exact, 6).unwrap();
+        assert!(lut.flip_table_bit(64, 0, 0).is_err());
+        assert!(lut.flip_table_bit(0, 64, 0).is_err());
+        assert!(lut.flip_table_bit(0, 0, 64).is_err());
     }
 
     #[test]

@@ -96,6 +96,30 @@ impl SignedLut {
         let c = (ib + self.half) as usize;
         self.table[(r << self.bits) | c]
     }
+
+    /// Fault-injection hook ([`crate::testkit::faults`]), the signed
+    /// analogue of `LutMultiplier::flip_table_bit`: flip one bit of the
+    /// tabulated product for signed operand pair `(a, b)`. The i64
+    /// products are stored two's-complement, so `bit == 63` flips the
+    /// sign — the harshest single-cell ROM fault.
+    pub fn flip_table_bit(&mut self, a: i32, b: i32, bit: u32) -> Result<()> {
+        if !(-self.half..self.half).contains(&a) || !(-self.half..self.half).contains(&b)
+        {
+            bail!(
+                "signed LUT fault operands ({a}, {b}) outside table domain \
+                 [{}, {})",
+                -self.half,
+                self.half
+            );
+        }
+        if bit >= 64 {
+            bail!("signed LUT fault bit {bit} outside i64 product");
+        }
+        let r = (a + self.half) as usize;
+        let c = (b + self.half) as usize;
+        self.table[(r << self.bits) | c] ^= 1i64 << bit;
+        Ok(())
+    }
 }
 
 /// Rescale a table product by the reduction shifts, saturating on
@@ -211,6 +235,33 @@ mod tests {
         let red = -((a.unsigned_abs() >> 10) as i32);
         assert_eq!(red, -72);
         assert_eq!(lut.mul(a, b), SignedExact.mul(red, b) << 10);
+    }
+
+    #[test]
+    fn flipped_table_bit_corrupts_exactly_that_product() {
+        let d = SignedDrum::new(4).unwrap();
+        let mut faulty = SignedLut::new(&d, 6).unwrap();
+        let clean = SignedLut::new(&d, 6).unwrap();
+        // Negative row, sign bit: the harshest single-cell fault.
+        faulty.flip_table_bit(-13, 7, 63).unwrap();
+        assert_eq!(faulty.mul(-13, 7), clean.mul(-13, 7) ^ (1i64 << 63));
+        for a in -32i32..32 {
+            for b in -32i32..32 {
+                if (a, b) != (-13, 7) {
+                    assert_eq!(faulty.mul(a, b), clean.mul(a, b), "{a}*{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flip_rejects_out_of_domain_faults() {
+        let mut lut = SignedLut::new(&SignedExact, 6).unwrap();
+        assert!(lut.flip_table_bit(32, 0, 0).is_err());
+        assert!(lut.flip_table_bit(0, -33, 0).is_err());
+        assert!(lut.flip_table_bit(0, 0, 64).is_err());
+        // -32 is table row 0 — a valid fault target.
+        assert!(lut.flip_table_bit(-32, -32, 5).is_ok());
     }
 
     #[test]

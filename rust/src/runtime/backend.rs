@@ -23,6 +23,7 @@
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::testkit::faults::FaultPlan;
 
 use super::manifest::{ModelManifest, TensorSpec};
 use super::session::{EvalStats, StepInputs, StepStats};
@@ -175,6 +176,14 @@ pub trait Backend: Send + Sync {
 
     /// The model this backend executes.
     fn model(&self) -> &BackendModel;
+
+    /// Arm a deterministic training-path fault
+    /// ([`crate::testkit::faults`]). Backends without injection hooks
+    /// refuse loudly — a fault plan that silently does nothing would
+    /// turn a recovery test into a false pass.
+    fn set_fault_plan(&mut self, _plan: FaultPlan) -> Result<()> {
+        bail!("{} backend has no fault-injection hooks", self.kind())
+    }
 
     /// Freshly initialized state tensors (params ++ state ++ opt) for
     /// `seed` — deterministic in the seed.

@@ -42,12 +42,15 @@
 
 mod layers;
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
 use anyhow::{bail, Context, Result};
 
 use crate::mult::{approx_matmul_prepared, PreparedMatrix};
 use crate::mult::{Exact, GemmDesign, GemmMode, MultSpec, Multiplier};
 use crate::rng::threefry::counter_normal;
 use crate::tensor::Tensor;
+use crate::testkit::faults::{FaultPlan, FaultSite};
 
 use super::backend::{Backend, BackendModel, EvalPass};
 use super::manifest::TensorSpec;
@@ -340,6 +343,13 @@ struct Forward {
     new_state: Vec<Vec<f32>>,
 }
 
+/// A fault plan armed on the backend, plus its consumed-fire count.
+/// `AtomicU32` because [`Backend::train_step`] takes `&self`.
+struct ArmedFault {
+    plan: FaultPlan,
+    fires: AtomicU32,
+}
+
 /// The native execution backend bound to one preset + multiplier spec.
 pub struct NativeBackend {
     cfg: NativeConfig,
@@ -348,6 +358,9 @@ pub struct NativeBackend {
     /// Built product-level design (bit-accurate specs only) — unsigned
     /// or signed; [`GemmDesign`] carries which pipeline it runs.
     design: Option<GemmDesign>,
+    /// Armed training-path fault ([`crate::testkit::faults`]); `None`
+    /// in production — the un-faulted path is untouched.
+    fault: Option<ArmedFault>,
 }
 
 impl NativeBackend {
@@ -361,12 +374,34 @@ impl NativeBackend {
             _ => None,
         };
         let model = cfg.backend_model();
-        Ok(NativeBackend { cfg, model, spec, design })
+        Ok(NativeBackend { cfg, model, spec, design, fault: None })
     }
 
     /// The multiplier spec this backend trains with.
     pub fn spec(&self) -> &MultSpec {
         &self.spec
+    }
+
+    /// Consume one fire of the armed fault if it targets this phase of
+    /// global step `step`; returns the `(layer, value)` to poison with.
+    fn fault_fire(&self, step: u64, grad_phase: bool) -> Option<(u32, f32)> {
+        let armed = self.fault.as_ref()?;
+        if armed.plan.step != step {
+            return None;
+        }
+        let (layer, value) = match (armed.plan.site, grad_phase) {
+            (FaultSite::Activation { layer, value }, false) => (layer, value),
+            (FaultSite::Gradient { layer, value }, true) => (layer, value),
+            _ => return None,
+        };
+        let max = armed.plan.max_fires;
+        armed
+            .fires
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < max).then_some(n + 1)
+            })
+            .ok()
+            .map(|_| (layer, value))
     }
 
     /// Active GEMM mode (multiplier + operand domain) and
@@ -443,6 +478,10 @@ impl NativeBackend {
     }
 
     /// Train-mode forward pass, recording the tape the backward needs.
+    /// `fault` is an armed activation poison `(gemm layer, fill value)`
+    /// — the whole layer output is overwritten (a single poisoned
+    /// element could be dropped by max-pooling, where NaN loses every
+    /// `>` comparison); `None` on the production path.
     fn forward_train(
         &self,
         params: &[Vec<f32>],
@@ -450,6 +489,7 @@ impl NativeBackend {
         x: &[f32],
         n: usize,
         k: StepInputs,
+        fault: Option<(u32, f32)>,
     ) -> Result<Forward> {
         let (gemm, sigma) = self.step_mode(k);
         let cfg = &self.cfg;
@@ -508,6 +548,11 @@ impl NativeBackend {
                 for v in out.iter_mut() {
                     if *v < 0.0 {
                         *v = 0.0;
+                    }
+                }
+                if let Some((fl, fv)) = fault {
+                    if fl == layer_id {
+                        out.fill(fv);
                     }
                 }
                 h = out;
@@ -584,6 +629,11 @@ impl NativeBackend {
                     *v = 0.0;
                 }
             }
+            if let Some((fl, fv)) = fault {
+                if fl == layer_id {
+                    out.fill(fv);
+                }
+            }
             let input = std::mem::replace(&mut h, out);
             dense_tapes.push(GemmTape {
                 input,
@@ -622,9 +672,14 @@ impl NativeBackend {
         let w_packed =
             Self::pack_weight(&params[pi], &wq, feat, cfg.num_classes, gemm)?;
         let h_prep = Self::prepare_activation(&h, n, feat, gemm)?;
-        let logits = gemm
+        let mut logits = gemm
             .matmul_prepared(&h_prep, &w_packed, Some(&params[pi + 1]), false)?
             .out;
+        if let Some((fl, fv)) = fault {
+            if fl == layer_id {
+                logits.fill(fv);
+            }
+        }
         let cls_tape = GemmTape {
             input: h,
             w_packed,
@@ -950,7 +1005,7 @@ impl NativeBackend {
         let ys = y.as_i32()?;
         let n = self.model.examples_of(xs.len())?;
         check_labels(&ys, n, self.cfg.num_classes)?;
-        let fwd = self.forward_train(&params, &state, &xs, n, k)?;
+        let fwd = self.forward_train(&params, &state, &xs, n, k, None)?;
         let (ce, _, _) =
             layers::softmax_ce_grad(&fwd.logits, &ys, n, self.cfg.num_classes);
         let mut l2 = 0f64;
@@ -1022,6 +1077,21 @@ impl Backend for NativeBackend {
         &self.model
     }
 
+    fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        let n_layers = self.cfg.gemm_layers().len();
+        let layer = match plan.site {
+            FaultSite::Activation { layer, .. } | FaultSite::Gradient { layer, .. } => layer,
+        };
+        if layer as usize >= n_layers {
+            bail!(
+                "fault layer {layer} out of range: {} has {n_layers} GEMM layers",
+                self.cfg.name
+            );
+        }
+        self.fault = Some(ArmedFault { plan, fires: AtomicU32::new(0) });
+        Ok(())
+    }
+
     fn init(&self, seed: u32) -> Result<Vec<Tensor>> {
         let mut out = Vec::with_capacity(self.model.n_tensors());
         for (i, spec) in self.model.params.iter().enumerate() {
@@ -1069,10 +1139,20 @@ impl Backend for NativeBackend {
         let n = self.model.examples_of(xs.len())?;
         check_labels(&ys, n, self.cfg.num_classes)?;
 
-        let fwd = self.forward_train(&params, &state, &xs, n, k)?;
+        let act_fault = self.fault_fire(k.step, false);
+        let fwd = self.forward_train(&params, &state, &xs, n, k, act_fault)?;
         let (ce, acc, dlogits) =
             layers::softmax_ce_grad(&fwd.logits, &ys, n, self.cfg.num_classes);
-        let grads = self.backward(&fwd, dlogits, &params, k, n)?;
+        let mut grads = self.backward(&fwd, dlogits, &params, k, n)?;
+        if let Some((layer, value)) = self.fault_fire(k.step, true) {
+            // Poison the layer's weight gradient: the loss stays finite
+            // this step, so the optimizer commits NaN parameters — the
+            // failure mode only a post-step parameter scan catches.
+            let (_, _, pw) = self.cfg.gemm_layers()[layer as usize];
+            for g in grads[pw].iter_mut() {
+                *g = value;
+            }
+        }
 
         // SGD with momentum: v' = mom*v + g; p' = p - lr*v'.
         let mom = self.cfg.sgd_momentum;
@@ -1169,6 +1249,54 @@ mod tests {
         assert_eq!(model.eval_batch, 64);
         assert_eq!(model.params[0].shape, vec![3, 3, 3, 8]);
         assert_eq!(model.params.last().unwrap().shape, vec![10]);
+    }
+
+    fn micro_batch() -> (Tensor, Tensor, StepInputs) {
+        let x = Tensor::from_f32(&[4, 4, 4, 3], vec![0.1; 4 * 4 * 4 * 3]).unwrap();
+        let y = Tensor::from_i32(&[4], vec![0, 1, 2, 3]).unwrap();
+        let k = StepInputs {
+            seed_err: 1,
+            seed_drop: 1,
+            sigma: 0.0,
+            lr: 0.01,
+            approx: false,
+            step: 0,
+        };
+        (x, y, k)
+    }
+
+    #[test]
+    fn armed_activation_fault_fires_at_its_step_within_budget() {
+        let mut b = NativeBackend::new("micro", MultSpec::Exact).unwrap();
+        b.set_fault_plan(FaultPlan::nan_activation(1, 0)).unwrap();
+        let tensors = b.init(3).unwrap();
+        let (x, y, k0) = micro_batch();
+        // Step 0: not the target step — clean.
+        let (t1, s0) = b.train_step(&tensors, &x, &y, k0).unwrap();
+        assert!(s0.loss.is_finite());
+        // Step 1: the fault fires and the loss blows up.
+        let k1 = StepInputs { step: 1, ..k0 };
+        let (_, s1) = b.train_step(&t1, &x, &y, k1).unwrap();
+        assert!(!s1.loss.is_finite());
+        // Budget of 1 exhausted: revisiting step 1 is clean again (the
+        // rollback-then-escalate replay path relies on this).
+        let (_, s2) = b.train_step(&t1, &x, &y, k1).unwrap();
+        assert!(s2.loss.is_finite());
+        // Out-of-range layer is refused up front.
+        assert!(b.set_fault_plan(FaultPlan::nan_activation(0, 99)).is_err());
+    }
+
+    #[test]
+    fn gradient_fault_poisons_params_behind_a_finite_loss() {
+        let mut b = NativeBackend::new("micro", MultSpec::Exact).unwrap();
+        b.set_fault_plan(FaultPlan::nan_gradient(0, 0)).unwrap();
+        let tensors = b.init(3).unwrap();
+        let (x, y, k) = micro_batch();
+        let (out, stats) = b.train_step(&tensors, &x, &y, k).unwrap();
+        // The insidious case: this step's loss is fine...
+        assert!(stats.loss.is_finite());
+        // ...but the committed first-layer weights are poisoned.
+        assert!(!out[0].all_finite());
     }
 
     #[test]

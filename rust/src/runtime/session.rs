@@ -34,7 +34,29 @@ pub struct StepInputs {
     /// backend switches its GEMM design on this; the PJRT graphs encode
     /// the same switch through `sigma`.
     pub approx: bool,
+    /// The trainer's global step (epoch * steps_per_epoch +
+    /// step_in_epoch). Diagnostic and fault-keying only
+    /// ([`crate::testkit::faults::FaultPlan`]): it never feeds seeds or
+    /// math, so trajectories are independent of it.
+    pub step: u64,
 }
+
+/// Typed marker for the session's non-finite-loss guard, carried
+/// through the `anyhow` chain so the watchdog can classify the failure
+/// without string matching.
+#[derive(Debug, Clone, Copy)]
+pub struct NonFiniteLoss {
+    /// `steps_run` at the time of the trip (session-local count).
+    pub step: u64,
+}
+
+impl std::fmt::Display for NonFiniteLoss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-finite loss at step {}", self.step)
+    }
+}
+
+impl std::error::Error for NonFiniteLoss {}
 
 /// Outcome of one step.
 #[derive(Debug, Clone, Copy)]
@@ -128,6 +150,29 @@ impl TrainSession {
         self.steps_run
     }
 
+    /// Reset the step counter — checkpoint restore rewinds it to the
+    /// snapshot's recorded step so diagnostics stay truthful.
+    pub fn set_steps_run(&mut self, n: u64) {
+        self.steps_run = n;
+    }
+
+    /// Re-initialize the state tensors from scratch at `seed` (rollback
+    /// target of last resort when no valid checkpoint exists).
+    pub fn reinit(&mut self, seed: u32) -> Result<()> {
+        let tensors = self.backend.init(seed)?;
+        self.backend.model().validate_tensors(&tensors)?;
+        self.tensors = tensors;
+        self.steps_run = 0;
+        Ok(())
+    }
+
+    /// Arm a deterministic training-path fault on the backend
+    /// ([`crate::testkit::faults`]). Errors if the backend has no
+    /// injection hooks.
+    pub fn set_fault_plan(&mut self, plan: crate::testkit::faults::FaultPlan) -> Result<()> {
+        self.backend.set_fault_plan(plan)
+    }
+
     /// All stateful tensors (params ++ state ++ opt) — checkpoint payload.
     pub fn state_tensors(&self) -> &[Tensor] {
         &self.tensors
@@ -157,11 +202,15 @@ impl TrainSession {
         }
         let (tensors, stats) = self.backend.train_step(&self.tensors, &x, &y, k)?;
         if !stats.loss.is_finite() {
-            bail!(
-                "{}: non-finite loss at step {}",
-                self.backend.model().preset,
-                self.steps_run
-            );
+            // State is NOT committed: the session stays at its pre-step
+            // tensors, so a caller that survives this error still holds
+            // a coherent snapshot.
+            return Err(anyhow::Error::new(NonFiniteLoss { step: self.steps_run })
+                .context(format!(
+                    "{}: non-finite loss at step {}",
+                    self.backend.model().preset,
+                    self.steps_run
+                )));
         }
         self.tensors = tensors;
         self.steps_run += 1;

@@ -176,6 +176,17 @@ impl Tensor {
         Ok(self.data[0] as i32)
     }
 
+    /// Whether every f32 element is finite, checked at the bit level on
+    /// the raw words (exponent all-ones ⇔ NaN/Inf) — no f32 copy, so
+    /// the watchdog can scan every parameter each step. Integer tensors
+    /// are trivially finite.
+    pub fn all_finite(&self) -> bool {
+        match self.dtype {
+            DType::F32 => self.data.iter().all(|&w| (w >> 23) & 0xFF != 0xFF),
+            DType::I32 | DType::U32 => true,
+        }
+    }
+
     // -- mutation -----------------------------------------------------------
 
     pub fn f32_mut(&mut self) -> Result<F32View<'_>> {
@@ -301,6 +312,20 @@ mod tests {
         // Empty-tensor statistics still error cleanly.
         let e = Tensor::zeros(&[0], DType::F32);
         assert!(e.mean().is_err() && e.std().is_err() && e.abs_mean().is_err());
+    }
+
+    #[test]
+    fn all_finite_bit_scan() {
+        let good = Tensor::from_f32(&[3], vec![0.0, -1.5e30, f32::MIN_POSITIVE]).unwrap();
+        assert!(good.all_finite());
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let t = Tensor::from_f32(&[2], vec![1.0, bad]).unwrap();
+            assert!(!t.all_finite(), "{bad} not caught");
+        }
+        // Integer tensors are finite whatever their bits say: -1i32 has
+        // the all-ones exponent pattern as a word.
+        assert!(Tensor::from_i32(&[1], vec![-1]).unwrap().all_finite());
+        assert!(Tensor::from_u32(&[1], vec![u32::MAX]).unwrap().all_finite());
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Deterministic fault-injection plans for the training path.
+//!
+//! A [`FaultPlan`] describes *one* failure to manufacture at a specific
+//! global step: a poisoned layer activation, a poisoned weight
+//! gradient, or (via [`StoreFault`], re-exported from `checkpoint`) a
+//! torn/failed checkpoint write. Backends that support injection
+//! accept a plan through `Backend::set_fault_plan`; everything is keyed
+//! on the trainer's global step so faults land at the same place on
+//! every run — recovery tests must be reproducible, not probabilistic.
+//!
+//! Fault plans never touch the RNG streams or the math of un-faulted
+//! steps: with `max_fires` exhausted (or no plan armed) the trajectory
+//! is bit-identical to a clean run.
+
+pub use crate::checkpoint::StoreFault;
+
+/// Where in the training step to inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSite {
+    /// Overwrite the post-activation output of GEMM layer `layer`
+    /// (conv layers first, then dense, then classifier — the backend's
+    /// `gemm_layers` order) with `value` during the forward pass. The
+    /// whole layer output is filled: a single poisoned element can be
+    /// silently dropped by max-pooling (NaN loses every `>`
+    /// comparison), and the harness wants a guaranteed trip.
+    Activation { layer: u32, value: f32 },
+    /// Overwrite the weight gradient of GEMM layer `layer` with
+    /// `value` after the backward pass, so the optimizer commits
+    /// poisoned parameters while the step's loss is still finite.
+    Gradient { layer: u32, value: f32 },
+}
+
+/// A deterministic one-site fault: fire at global step `step`, at most
+/// `max_fires` times (re-visits of the same step after a rollback
+/// re-fire until the budget runs out).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Global step (epoch * steps_per_epoch + step_in_epoch) to hit.
+    pub step: u64,
+    pub site: FaultSite,
+    /// Total number of times the fault may fire across the run.
+    pub max_fires: u32,
+}
+
+impl FaultPlan {
+    /// NaN the whole output of `layer` at `step`, once.
+    pub fn nan_activation(step: u64, layer: u32) -> Self {
+        FaultPlan {
+            step,
+            site: FaultSite::Activation { layer, value: f32::NAN },
+            max_fires: 1,
+        }
+    }
+
+    /// NaN the weight gradient of `layer` at `step`, once.
+    pub fn nan_gradient(step: u64, layer: u32) -> Self {
+        FaultPlan {
+            step,
+            site: FaultSite::Gradient { layer, value: f32::NAN },
+            max_fires: 1,
+        }
+    }
+
+    pub fn with_fires(mut self, n: u32) -> Self {
+        self.max_fires = n;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_site_and_budget() {
+        let p = FaultPlan::nan_activation(7, 1);
+        assert_eq!(p.step, 7);
+        assert_eq!(p.max_fires, 1);
+        match p.site {
+            FaultSite::Activation { layer, value } => {
+                assert_eq!(layer, 1);
+                assert!(value.is_nan());
+            }
+            _ => panic!("wrong site"),
+        }
+        let p = FaultPlan::nan_gradient(3, 0).with_fires(2);
+        assert_eq!(p.max_fires, 2);
+        assert!(matches!(p.site, FaultSite::Gradient { layer: 0, .. }));
+    }
+}

@@ -14,6 +14,8 @@
 
 use crate::rng::Xoshiro256;
 
+pub mod faults;
+
 /// Random case generator handed to each property iteration.
 pub struct Gen {
     rng: Xoshiro256,

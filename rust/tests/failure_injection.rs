@@ -1,9 +1,15 @@
 //! Failure injection: every load-time contract violation must fail
 //! loudly with a useful error, never as silent numerical garbage.
+//!
+//! Two sections: the PJRT artifact contract (skipped when no compiled
+//! artifacts are checked out) and the checkpoint-store contract (always
+//! runs — the store is backend-independent).
 
 use std::fs;
 
+use approxmul::checkpoint::{self, FailureClass, Store};
 use approxmul::runtime::{Engine, Manifest};
+use approxmul::tensor::Tensor;
 
 fn artifacts_exist() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
@@ -89,5 +95,113 @@ fn malformed_hlo_text_rejected_at_compile() {
     fs::write(dir.join("train_tiny.hlo.txt"), "HloModule broken\nENTRY {").unwrap();
     let engine = Engine::from_artifacts(&dir).unwrap();
     assert!(engine.load("tiny", "train").is_err());
+    fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint store (no artifacts needed)
+
+/// Fresh store in a scratch dir with `n` one-tensor checkpoints
+/// (epochs 1..=n) under tag "fi".
+fn seeded_store(name: &str, n: u64) -> (std::path::PathBuf, Store) {
+    let dir = std::env::temp_dir().join(format!("axm-fi-ckpt-{name}-{}", std::process::id()));
+    fs::remove_dir_all(&dir).ok();
+    let store = Store::new(&dir).unwrap();
+    for epoch in 1..=n {
+        let t = Tensor::from_f32(&[2], vec![epoch as f32, -1.0]).unwrap();
+        let meta = checkpoint::Meta {
+            preset: "micro".into(),
+            epoch,
+            step: epoch * 4,
+            sigma: 0.0,
+            mult: "drum6".into(),
+            tag: "fi".into(),
+            escalated_from: None,
+        };
+        store.save(&meta, &[("w".into(), &t)]).unwrap();
+    }
+    (dir, store)
+}
+
+fn class_of(err: &anyhow::Error) -> FailureClass {
+    checkpoint::classify(err).unwrap_or_else(|| panic!("unclassified: {err:#}"))
+}
+
+#[test]
+fn truncated_checkpoint_rejected_loudly() {
+    let (dir, store) = seeded_store("trunc", 1);
+    let path = store.path_for("fi", 1);
+    let bytes = fs::read(&path).unwrap();
+    // Sub-header stub: too short to even hold the trailing CRC.
+    fs::write(&path, &bytes[..10]).unwrap();
+    let err = store.load("fi", 1).unwrap_err();
+    assert_eq!(class_of(&err), FailureClass::Truncated, "{err:#}");
+    // Torn mid-payload: the tail bytes parse as a (wrong) CRC, so the
+    // realistic torn-write classification is CrcMismatch.
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = store.load("fi", 1).unwrap_err();
+    assert_eq!(class_of(&err), FailureClass::CrcMismatch, "{err:#}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn flipped_payload_bit_rejected() {
+    let (dir, store) = seeded_store("bitflip", 1);
+    let path = store.path_for("fi", 1);
+    let mut bytes = fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    fs::write(&path, &bytes).unwrap();
+    let err = store.load("fi", 1).unwrap_err();
+    assert_eq!(class_of(&err), FailureClass::CrcMismatch, "{err:#}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn flipped_crc_trailer_rejected() {
+    let (dir, store) = seeded_store("crcflip", 1);
+    let path = store.path_for("fi", 1);
+    let mut bytes = fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+    let err = store.load("fi", 1).unwrap_err();
+    assert_eq!(class_of(&err), FailureClass::CrcMismatch, "{err:#}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn missing_checkpoint_classified() {
+    let (dir, store) = seeded_store("missing", 1);
+    let err = store.load("fi", 7).unwrap_err();
+    assert_eq!(class_of(&err), FailureClass::Missing, "{err:#}");
+    fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn latest_valid_skips_corruption_and_ignores_stale_tmps() {
+    let (dir, store) = seeded_store("latest", 3);
+    // A dead run's torn tmp must be invisible to recovery...
+    let stale = dir.join("fi-epoch0009.ckpt.99999999.tmp");
+    fs::write(&stale, b"partial").unwrap();
+    // ...and the corrupt newest checkpoint must be scanned past.
+    let newest = store.path_for("fi", 3);
+    let bytes = fs::read(&newest).unwrap();
+    fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+    let (epoch, meta, tensors) = store.latest_valid("fi").unwrap().unwrap();
+    assert_eq!(epoch, 2);
+    assert_eq!(meta.step, 8);
+    assert_eq!(tensors[0].1.as_f32().unwrap()[0], 2.0);
+    // Retention sweeps the stale tmp file too.
+    store.gc_keep_last("fi", 2).unwrap();
+    assert!(!stale.exists(), "stale tmp survived gc");
+    // With every file corrupted, recovery reports "nothing valid"
+    // rather than erroring or returning garbage.
+    for epoch in store.list_epochs("fi").unwrap() {
+        let p = store.path_for("fi", epoch);
+        let b = fs::read(&p).unwrap();
+        fs::write(&p, &b[..b.len() / 2]).unwrap();
+    }
+    assert!(store.latest_valid("fi").unwrap().is_none());
     fs::remove_dir_all(dir).ok();
 }

@@ -268,7 +268,7 @@ fn native_gradients_match_finite_differences() {
     let model = backend.model().clone();
     let ds = SyntheticCifar::for_input(4, 3, 4, 11).generate(8);
     let (x, y) = ds.gather_batch(&[0, 1, 2, 3]).unwrap();
-    let k = StepInputs { seed_err: 3, seed_drop: 9, sigma: 0.0, lr: 1.0, approx: false };
+    let k = StepInputs { seed_err: 3, seed_drop: 9, sigma: 0.0, lr: 1.0, approx: false, step: 0 };
 
     let (stepped, _) = backend.train_step(&tensors, &x, &y, k).unwrap();
     let n_params = model.params.len();
@@ -477,7 +477,7 @@ fn check_or_seal_golden(spec: &str, golden_file: &str) {
     let mut ds = SyntheticCifar::for_input(8, 3, 10, 5).generate(16);
     ds.normalize();
     let (x, y) = ds.gather_batch(&(0..16).collect::<Vec<_>>()).unwrap();
-    let k = StepInputs { seed_err: 3, seed_drop: 1, sigma: 0.0, lr: 0.05, approx: true };
+    let k = StepInputs { seed_err: 3, seed_drop: 1, sigma: 0.0, lr: 0.05, approx: true, step: 0 };
 
     let (out1, s1) = backend.train_step(&tensors, &x, &y, k).unwrap();
     let (out2, s2) = backend.train_step(&tensors, &x, &y, k).unwrap();
@@ -549,7 +549,7 @@ fn short_final_batch_trains_on_native() {
     ds.normalize();
     let (x, y) = ds.gather_batch(&[0, 1, 2]).unwrap(); // 3 < batch=16
     assert_eq!(model.batch, 16);
-    let k = StepInputs { seed_err: 1, seed_drop: 2, sigma: 0.0, lr: 0.01, approx: false };
+    let k = StepInputs { seed_err: 1, seed_drop: 2, sigma: 0.0, lr: 0.01, approx: false, step: 0 };
     let stats = session.step(x, y, k).unwrap();
     assert!(stats.loss.is_finite());
     assert!((0.0..=1.0).contains(&stats.accuracy));

@@ -103,6 +103,7 @@ fn prop_checkpoint_roundtrip_random_tensors() {
             sigma: g.f64_in(0.0, 0.5),
             mult: "drum6".into(),
             tag: "prop".into(),
+            escalated_from: None,
         };
         let bytes = checkpoint::to_bytes(&meta, &pairs);
         let (m2, t2) = checkpoint::from_bytes(&bytes).unwrap();
@@ -125,6 +126,7 @@ fn prop_checkpoint_bitflip_always_detected() {
             sigma: 0.0,
             mult: "exact".into(),
             tag: "flip".into(),
+            escalated_from: None,
         };
         let mut bytes = checkpoint::to_bytes(&meta, &[("t".into(), &t)]);
         let pos = g.usize_in(0, bytes.len() - 1);

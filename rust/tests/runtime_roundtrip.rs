@@ -8,7 +8,7 @@ use approxmul::tensor::Tensor;
 
 /// StepInputs shorthand (`approx` tracks sigma, as the trainer does).
 fn knobs(seed_err: u32, seed_drop: u32, sigma: f32, lr: f32) -> StepInputs {
-    StepInputs { seed_err, seed_drop, sigma, lr, approx: sigma > 0.0 }
+    StepInputs { seed_err, seed_drop, sigma, lr, approx: sigma > 0.0, step: 0 }
 }
 
 fn engine() -> Option<Engine> {
