@@ -1,0 +1,12 @@
+// detlint fixture: both findings below are suppressed by well-formed
+// allow markers — the scan must report two suppressions (with their
+// reasons), zero violations, and zero stale markers.
+
+pub struct Cache {
+    // detlint: allow(D1) -- lookup-only cache keyed by spec name, never iterated
+    map: std::collections::HashMap<u32, u32>,
+}
+
+pub fn round_half_up(x: f32) -> u32 {
+    (x + 0.5) as u32 // detlint: allow(S1) -- fixture: range proven by caller
+}

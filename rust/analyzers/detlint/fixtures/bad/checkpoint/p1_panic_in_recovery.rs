@@ -1,0 +1,6 @@
+// detlint fixture: P1 must fire exactly once on the `.unwrap()` below.
+
+pub fn load_meta(bytes: &[u8]) -> u32 {
+    let arr: [u8; 4] = bytes[..4].try_into().unwrap();
+    u32::from_le_bytes(arr)
+}

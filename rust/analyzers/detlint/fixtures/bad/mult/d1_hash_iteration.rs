@@ -1,0 +1,6 @@
+// detlint fixture: D1 must fire exactly once on the HashMap below.
+// (Fixtures are scanned as text, never compiled.)
+
+pub fn lookup(table: &std::collections::HashMap<u32, u32>, key: u32) -> Option<u32> {
+    table.get(&key).copied()
+}

@@ -1,0 +1,6 @@
+// detlint fixture: S1 must fire exactly once on the float->int `as`
+// cast below (the `0.5` literal is the float evidence).
+
+pub fn quantize(x: f32, scale: f32) -> u32 {
+    (x * scale + 0.5) as u32
+}

@@ -1,0 +1,10 @@
+// detlint fixture: D2 must fire exactly once on the wall-clock read
+// below. The import is deliberately absent — `std::time` in a `use`
+// would be a second D2 hit, and this corpus pins exactly-once firing.
+
+pub fn step_with_stray_timing(x: f32) -> f32 {
+    let t0 = Instant::now();
+    let y = x * 2.0;
+    let _ = t0;
+    y
+}

@@ -1,0 +1,7 @@
+// detlint fixture: D3 must fire exactly once on the float `.sum()`
+// reduction below (f32 in the statement window is the float evidence).
+
+pub fn loss_total(xs: &[f32]) -> f32 {
+    let total: f32 = xs.iter().sum();
+    total
+}

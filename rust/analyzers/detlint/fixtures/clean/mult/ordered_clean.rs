@@ -1,0 +1,16 @@
+// detlint fixture: the idiomatic deterministic shapes — ordered map,
+// explicit fixed-order accumulation loop — must scan clean.
+
+use std::collections::BTreeMap;
+
+pub fn ordered_sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
+pub fn keyed(map: &BTreeMap<u32, u32>, k: u32) -> Option<u32> {
+    map.get(&k).copied()
+}

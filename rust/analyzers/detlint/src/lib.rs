@@ -1,0 +1,1034 @@
+//! detlint — determinism-and-resilience lints for the approxmul tree.
+//!
+//! The reproduction's methodology rests on source-level invariants that
+//! `rustc` cannot enforce: bit-identical trajectories (rollback replay,
+//! thread-invariant GEMM, hybrid-switch comparability), panic-free
+//! recovery paths, and byte-stable emitted artifacts. This crate makes
+//! those conventions machine-checked with a lightweight line/token-level
+//! scanner (no `syn`, no dependencies):
+//!
+//! * **D1** — no `HashMap`/`HashSet` in trajectory/artifact modules.
+//!   Hash iteration order is seeded per process; one stray `for` over a
+//!   hash map leaks that order into a trajectory or an emitted file.
+//!   Keyed lookup is fine, but must carry an audit marker so the
+//!   "never iterated" claim is reviewed, not assumed.
+//! * **D2** — no `Instant::now`/`SystemTime`/`std::time` in step-math
+//!   modules. Wall-clock reads in the step path make replay diverge.
+//!   `benchkit` is exempt by scope (it exists to time things); backoff
+//!   and throughput telemetry carry audit markers.
+//! * **D3** — no raw `std::thread::spawn` outside `parallel/`, and no
+//!   float `.sum()`/float-accumulator `fold` reductions in the numeric
+//!   spine. Reductions there must be sequential in a fixed order (or go
+//!   through the k-ordered kernels); annotated exceptions document why
+//!   a site is deterministic.
+//! * **P1** — no `unwrap()`/`expect()`/panic-family macros in the
+//!   resilience spine (`checkpoint`, the coordinator's health/recovery/
+//!   trainer, `testkit/faults`). Typed errors are the contract there: a
+//!   panic turns a recoverable fault into an abort.
+//! * **S1** — no unchecked `as` float→int casts in `mult/`
+//!   bit-decomposition paths; the checked helpers in `mult::cast` are
+//!   the single audited crossing.
+//!
+//! Suppression is explicit and auditable:
+//! `// detlint: allow(<rule>[, <rule>...]) -- <reason>` on the
+//! offending line, or alone on the line above it. Markers without a
+//! reason, with unknown rule names, or that suppress nothing are
+//! reported (the first two fail the run; stale markers warn).
+//!
+//! Scanning is text-based on purpose: it has no false negatives from
+//! conditional compilation, runs in milliseconds with no toolchain
+//! beyond `rustc`, and its few heuristics (statement-window float
+//! evidence for bare `.sum()`/`as` casts) are pinned by the fixture
+//! corpus under `fixtures/`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// All known rule identifiers, in report order.
+pub const RULE_IDS: [&str; 5] = ["D1", "D2", "D3", "P1", "S1"];
+
+/// Path scopes, as `/`-separated segment sequences matched anywhere in
+/// a file's path. `runtime/native` matches `rust/src/runtime/native/x.rs`
+/// but not `rust/src/runtime/engine.rs`.
+const D1_SCOPE: &[&str] = &[
+    "mult",
+    "runtime",
+    "coordinator",
+    "rng",
+    "tensor",
+    "data",
+    "config",
+    "metrics",
+    "benchkit",
+    "report",
+    "json",
+    "checkpoint",
+];
+const D2_SCOPE: &[&str] = &["mult", "runtime/native", "rng", "tensor", "data", "coordinator"];
+/// Modules allowed to spawn threads (the deterministic fork-join
+/// substrate every parallel caller routes through).
+const D3_SPAWN_EXEMPT: &[&str] = &["parallel"];
+const D3_REDUCE_SCOPE: &[&str] = &["mult", "runtime/native", "tensor", "data", "rng"];
+const P1_SCOPE: &[&str] = &[
+    "checkpoint",
+    "coordinator/health.rs",
+    "coordinator/recovery.rs",
+    "coordinator/trainer.rs",
+    "testkit/faults.rs",
+];
+const S1_SCOPE: &[&str] = &["mult"];
+
+/// Static description of one rule (for `--list-rules` and docs).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    /// `deny` rules fail the run; `warn` rules only report.
+    pub severity: &'static str,
+    pub scope: &'static [&'static str],
+    pub summary: &'static str,
+    pub rationale: &'static str,
+}
+
+pub const RULES: [RuleInfo; 5] = [
+    RuleInfo {
+        id: "D1",
+        severity: "deny",
+        scope: D1_SCOPE,
+        summary: "no HashMap/HashSet in trajectory or artifact modules",
+        rationale: "hash iteration order is per-process random; iterating one leaks \
+                    that order into trajectories or emitted files. Use BTreeMap/BTreeSet, \
+                    or annotate a lookup-only use.",
+    },
+    RuleInfo {
+        id: "D2",
+        severity: "deny",
+        scope: D2_SCOPE,
+        summary: "no Instant::now/SystemTime/std::time in step-math modules",
+        rationale: "wall-clock reads in the step path break bit-identical rollback \
+                    replay. benchkit is exempt by scope; backoff delays and throughput \
+                    telemetry carry audit markers.",
+    },
+    RuleInfo {
+        id: "D3",
+        severity: "deny",
+        scope: D3_REDUCE_SCOPE,
+        summary: "no raw thread::spawn outside parallel/; no float sum/fold \
+                  reductions in the numeric spine",
+        rationale: "ad-hoc threading and reassociated float reductions make results \
+                    depend on scheduling. Use parallel::par_map/par_chunks_mut and the \
+                    k-ordered GEMM kernels; annotate sequential fixed-order sums.",
+    },
+    RuleInfo {
+        id: "P1",
+        severity: "deny",
+        scope: P1_SCOPE,
+        summary: "no unwrap/expect/panic-family in the resilience spine",
+        rationale: "the watchdog's contract is that every fault surfaces as a typed \
+                    error it can classify and recover from; a panic escalates a \
+                    recoverable fault into an abort.",
+    },
+    RuleInfo {
+        id: "S1",
+        severity: "deny",
+        scope: S1_SCOPE,
+        summary: "no unchecked `as` float->int casts in mult/ decomposition paths",
+        rationale: "bare float->int `as` casts saturate/truncate silently and have \
+                    caused bit-domain bugs; route through the audited helpers in \
+                    mult::cast.",
+    },
+];
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// One used `detlint: allow` marker (the audit trail).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// A malformed or stale marker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MarkerProblem {
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Aggregated scan results.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub suppressions: Vec<Suppression>,
+    /// Malformed markers: fail the run (an unparseable suppression is
+    /// worse than a violation — it silently suppresses nothing).
+    pub marker_problems: Vec<MarkerProblem>,
+    /// Markers that suppressed nothing: warn only.
+    pub stale_markers: Vec<MarkerProblem>,
+}
+
+impl Report {
+    pub fn merge(&mut self, other: Report) {
+        self.files_scanned += other.files_scanned;
+        self.violations.extend(other.violations);
+        self.suppressions.extend(other.suppressions);
+        self.marker_problems.extend(other.marker_problems);
+        self.stale_markers.extend(other.stale_markers);
+    }
+
+    /// True when the run should exit nonzero.
+    pub fn failed(&self) -> bool {
+        !self.violations.is_empty() || !self.marker_problems.is_empty()
+    }
+}
+
+// --------------------------------------------------------------------------
+// Lexing: blank comments/strings/chars out of the source so pattern
+// matching never fires inside literals, while keeping byte offsets (and
+// therefore line numbers) intact.
+// --------------------------------------------------------------------------
+
+struct Blanked {
+    /// Same length as the input; comment and literal bytes replaced by
+    /// spaces (newlines kept, so line structure is preserved).
+    code: Vec<u8>,
+    /// `(line, text)` of every `//` comment, for marker parsing.
+    comments: Vec<(usize, String)>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn find_byte(hay: &[u8], from: usize, needle: u8) -> Option<usize> {
+    hay.iter().skip(from).position(|&b| b == needle).map(|p| p + from)
+}
+
+fn find_from(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() || from > hay.len() - needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+fn blank_range(out: &mut [u8], a: usize, b: usize) {
+    let b = b.min(out.len());
+    if a >= b {
+        return;
+    }
+    for slot in &mut out[a..b] {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+fn count_newlines(bytes: &[u8], a: usize, b: usize) -> usize {
+    let b = b.min(bytes.len());
+    if a >= b {
+        return 0;
+    }
+    bytes[a..b].iter().filter(|&&c| c == b'\n').count()
+}
+
+fn blank(src: &str) -> Blanked {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if b[i..].starts_with(b"//") {
+            let j = find_byte(b, i, b'\n').unwrap_or(n);
+            comments.push((line, String::from_utf8_lossy(&b[i..j]).into_owned()));
+            blank_range(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment (nested, per Rust).
+        if b[i..].starts_with(b"/*") {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            blank_range(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        let left_bound = i == 0 || !is_ident(b[i - 1]);
+        // Raw (and byte-raw) strings: r"..", r#".."#, br"..", br#".."#.
+        // `r`/`br` followed by hashes but no quote is a raw identifier
+        // (r#fn) — fall through in that case.
+        if left_bound && (c == b'r' || (c == b'b' && b[i..].starts_with(b"br"))) {
+            let mut k = if c == b'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while k < n && b[k] == b'#' {
+                hashes += 1;
+                k += 1;
+            }
+            if k < n && b[k] == b'"' {
+                let mut j = k + 1;
+                let end;
+                loop {
+                    match find_byte(b, j, b'"') {
+                        Some(q) => {
+                            let mut h = 0usize;
+                            while h < hashes && q + 1 + h < n && b[q + 1 + h] == b'#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                end = q + 1 + hashes;
+                                break;
+                            }
+                            j = q + 1;
+                        }
+                        None => {
+                            end = n;
+                            break;
+                        }
+                    }
+                }
+                line += count_newlines(b, i, end);
+                blank_range(&mut out, i, end);
+                i = end;
+                continue;
+            }
+        }
+        // Plain and byte strings.
+        let str_open = if c == b'"' {
+            Some(i)
+        } else if left_bound && c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+            Some(i + 1)
+        } else {
+            None
+        };
+        if let Some(q0) = str_open {
+            let mut j = q0 + 1;
+            while j < n {
+                match b[j] {
+                    // An escape always consumes the next byte; a
+                    // string-continuation escape consumes a newline,
+                    // which must still be counted.
+                    b'\\' => {
+                        if j + 1 < n && b[j + 1] == b'\n' {
+                            line += 1;
+                        }
+                        j += 2;
+                    }
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            let j = j.min(n);
+            blank_range(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: '\...' and 'x' are literals (this
+        // also neutralizes '{' / ';' so brace/statement tracking on the
+        // blanked text stays correct); anything else is a lifetime.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let j = find_byte(b, i + 2, b'\'').map(|p| p + 1).unwrap_or(n);
+                blank_range(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                blank_range(&mut out, i, i + 3);
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    Blanked { code: out, comments }
+}
+
+// --------------------------------------------------------------------------
+// Test-region masking: code under `#[cfg(test)]` / `#[test]` plays by
+// different rules (unwraps and HashSets in tests are fine).
+// --------------------------------------------------------------------------
+
+fn test_mask(code: &[u8]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    for pat in [&b"#[cfg(test)]"[..], &b"#[test]"[..]] {
+        let mut from = 0usize;
+        while let Some(p) = find_from(code, from, pat) {
+            from = p + pat.len();
+            let nb = find_byte(code, from, b'{');
+            let ns = find_byte(code, from, b';');
+            let end = match (nb, ns) {
+                (None, None) => code.len(),
+                (None, Some(s)) => s + 1,
+                (Some(brace), Some(s)) if s < brace => s + 1,
+                (Some(brace), _) => {
+                    let mut depth = 0usize;
+                    let mut j = brace;
+                    let mut end = code.len();
+                    while j < code.len() {
+                        match code[j] {
+                            b'{' => depth += 1,
+                            b'}' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    end = j + 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    end
+                }
+            };
+            for m in &mut mask[p..end.min(mask.len())] {
+                *m = true;
+            }
+        }
+    }
+    mask
+}
+
+// --------------------------------------------------------------------------
+// Allow markers.
+// --------------------------------------------------------------------------
+
+struct Marker {
+    /// Line the comment sits on.
+    line: usize,
+    /// Line the marker applies to (same line, or the next one for a
+    /// comment-only line).
+    target: usize,
+    rules: Vec<String>,
+    reason: String,
+}
+
+/// `Some(Err(..))` = a detlint marker that failed to parse; `None` = not
+/// a marker at all. A marker must be the *whole* comment (after the
+/// `//`/`///`/`//!` introducer): prose that merely mentions
+/// `detlint: allow(...)` mid-sentence is not a marker, so docs — these
+/// docs included — can describe the syntax without tripping the parser.
+fn parse_marker(text: &str) -> Option<Result<(Vec<String>, String), String>> {
+    let t = text.trim_start_matches(|c| c == '/' || c == '!').trim_start();
+    let rest = t.strip_prefix("detlint:")?.trim_start();
+    let rest = match rest.strip_prefix("allow(") {
+        Some(r) => r,
+        None => return Some(Err("expected `allow(<rules>)` after `detlint:`".into())),
+    };
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => return Some(Err("unclosed `allow(`".into())),
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Some(Err("empty rule list in `allow()`".into()));
+    }
+    for r in &rules {
+        if !RULE_IDS.contains(&r.as_str()) {
+            return Some(Err(format!("unknown rule `{r}` in allow marker")));
+        }
+    }
+    let tail = rest[close + 1..].trim_start();
+    let reason = match tail.strip_prefix("--") {
+        Some(r) => r.trim().to_string(),
+        None => return Some(Err("marker missing `-- <reason>`".into())),
+    };
+    if reason.is_empty() {
+        return Some(Err("marker missing `-- <reason>`".into()));
+    }
+    Some(Ok((rules, reason)))
+}
+
+// --------------------------------------------------------------------------
+// Scope matching.
+// --------------------------------------------------------------------------
+
+/// Does `path` fall under any of `scopes`? A scope is a `/`-separated
+/// run of path segments matched anywhere in the (normalized) path.
+pub fn in_scope(path: &str, scopes: &[&str]) -> bool {
+    let norm = path.replace('\\', "/");
+    let segs: Vec<&str> = norm.split('/').filter(|s| !s.is_empty()).collect();
+    scopes.iter().any(|scope| {
+        let want: Vec<&str> = scope.split('/').collect();
+        !want.is_empty()
+            && segs.len() >= want.len()
+            && segs.windows(want.len()).any(|w| w == want.as_slice())
+    })
+}
+
+// --------------------------------------------------------------------------
+// Pattern helpers.
+// --------------------------------------------------------------------------
+
+fn bounded(code: &[u8], start: usize, end: usize) -> bool {
+    let before_ok = start == 0 || !is_ident(code[start - 1]);
+    let after_ok = end >= code.len() || !is_ident(code[end]);
+    before_ok && after_ok
+}
+
+fn find_word_all(code: &[u8], word: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_from(code, from, word) {
+        if bounded(code, p, p + word.len()) {
+            out.push(p);
+        }
+        from = p + 1;
+    }
+    out
+}
+
+fn find_all(code: &[u8], pat: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_from(code, from, pat) {
+        out.push(p);
+        from = p + 1;
+    }
+    out
+}
+
+/// Start of the statement containing `pos` (after the previous `;`,
+/// `{`, or `}` in the blanked code).
+fn stmt_start(code: &[u8], pos: usize) -> usize {
+    code[..pos]
+        .iter()
+        .rposition(|&c| c == b';' || c == b'{' || c == b'}')
+        .map(|p| p + 1)
+        .unwrap_or(0)
+}
+
+/// Heuristic: does this code slice mention float arithmetic? Word
+/// `f32`/`f64` or a float literal counts; the bit-domain constructors
+/// `f32::from_bits`/`f64::from_bits` are ignored (they take integers).
+fn float_evidence(text: &[u8]) -> bool {
+    let mut t = text.to_vec();
+    for pat in [&b"f32::from_bits"[..], &b"f64::from_bits"[..]] {
+        let mut from = 0usize;
+        while let Some(p) = find_from(&t, from, pat) {
+            blank_range(&mut t, p, p + pat.len());
+            from = p + pat.len();
+        }
+    }
+    if !find_word_all(&t, b"f32").is_empty() || !find_word_all(&t, b"f64").is_empty() {
+        return true;
+    }
+    t.windows(3)
+        .any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+}
+
+const INT_TYPES: [&str; 12] = [
+    "i8", "i16", "i32", "i64", "i128", "isize", "u8", "u16", "u32", "u64", "u128",
+    "usize",
+];
+
+// --------------------------------------------------------------------------
+// The scanner.
+// --------------------------------------------------------------------------
+
+struct Candidate {
+    pos: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Scan one file's source. `path` is used for scoping and reporting;
+/// scope matching is segment-based, so both repo-relative and absolute
+/// paths work.
+pub fn scan_source(path: &str, src: &str) -> Report {
+    let Blanked { code, comments } = blank(src);
+    let mask = test_mask(&code);
+
+    // Line bookkeeping.
+    let mut line_starts: Vec<usize> = vec![0];
+    for (i, &b) in code.iter().enumerate() {
+        if b == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let line_of = |pos: usize| -> usize {
+        match line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    };
+    let line_is_blank = |line: usize| -> bool {
+        let a = line_starts[line - 1];
+        let b = line_starts.get(line).copied().unwrap_or(code.len());
+        code[a..b].iter().all(|&c| c == b' ' || c == b'\n')
+    };
+
+    // Markers.
+    let mut report = Report { files_scanned: 1, ..Report::default() };
+    let mut markers: Vec<Marker> = Vec::new();
+    for (line, text) in &comments {
+        match parse_marker(text) {
+            None => {}
+            Some(Err(msg)) => report.marker_problems.push(MarkerProblem {
+                path: path.to_string(),
+                line: *line,
+                message: msg,
+            }),
+            Some(Ok((rules, reason))) => {
+                // A comment-only line covers the next line; a trailing
+                // comment covers its own.
+                let target = if line_is_blank(*line) {
+                    *line + 1
+                } else {
+                    *line
+                };
+                markers.push(Marker { line: *line, target, rules, reason });
+            }
+        }
+    }
+    let mut allow: BTreeMap<usize, BTreeMap<String, String>> = BTreeMap::new();
+    for m in &markers {
+        let entry = allow.entry(m.target).or_default();
+        for r in &m.rules {
+            entry.insert(r.clone(), m.reason.clone());
+        }
+    }
+
+    // Collect candidates per rule.
+    let mut cands: Vec<Candidate> = Vec::new();
+    if in_scope(path, D1_SCOPE) {
+        for word in [&b"HashMap"[..], &b"HashSet"[..]] {
+            for p in find_word_all(&code, word) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "D1",
+                    message: format!(
+                        "hash-ordered container `{}` in a trajectory/artifact module \
+                         (iteration order leaks; use BTreeMap/BTreeSet or annotate a \
+                         lookup-only use)",
+                        String::from_utf8_lossy(word)
+                    ),
+                });
+            }
+        }
+    }
+    if in_scope(path, D2_SCOPE) {
+        for pat in [&b"Instant::now"[..], &b"SystemTime"[..], &b"std::time"[..]] {
+            for p in find_word_all(&code, pat) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "D2",
+                    message: format!(
+                        "wall-clock `{}` in a step-math module (breaks bit-identical \
+                         replay; move timing out of the step path or annotate \
+                         telemetry-only use)",
+                        String::from_utf8_lossy(pat)
+                    ),
+                });
+            }
+        }
+    }
+    if !in_scope(path, D3_SPAWN_EXEMPT) {
+        for p in find_word_all(&code, b"thread::spawn") {
+            cands.push(Candidate {
+                pos: p,
+                rule: "D3",
+                message: "raw `thread::spawn` outside parallel/ (use \
+                          parallel::par_map / par_chunks_mut, which keep results \
+                          thread-count invariant)"
+                    .into(),
+            });
+        }
+    }
+    if in_scope(path, D3_REDUCE_SCOPE) {
+        for pat in [&b".sum::<f32>"[..], &b".sum::<f64>"[..]] {
+            for p in find_all(&code, pat) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "D3",
+                    message: "float `.sum()` reduction in the numeric spine (must be \
+                              sequential in a fixed order — annotate why this one is, \
+                              or route through the k-ordered kernels)"
+                        .into(),
+                });
+            }
+        }
+        for p in find_all(&code, b".sum()") {
+            if float_evidence(&code[stmt_start(&code, p)..p]) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "D3",
+                    message: "float `.sum()` reduction in the numeric spine (must be \
+                              sequential in a fixed order — annotate why this one is, \
+                              or route through the k-ordered kernels)"
+                        .into(),
+                });
+            }
+        }
+        for p in find_all(&code, b".fold(") {
+            let end = (p + 6 + 64).min(code.len());
+            if float_evidence(&code[p + 6..end]) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "D3",
+                    message: "float-accumulator `.fold(..)` reduction in the numeric \
+                              spine (order-sensitive; annotate or restructure)"
+                        .into(),
+                });
+            }
+        }
+    }
+    if in_scope(path, P1_SCOPE) {
+        for pat in [&b".unwrap()"[..], &b".expect("[..]] {
+            for p in find_all(&code, pat) {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "P1",
+                    message: format!(
+                        "`{}` in the resilience spine (typed errors are the contract \
+                         here: a panic turns a recoverable fault into an abort)",
+                        String::from_utf8_lossy(&pat[1..])
+                    ),
+                });
+            }
+        }
+        let macros = [&b"panic!"[..], &b"unreachable!"[..], &b"todo!"[..], &b"unimplemented!"[..]];
+        for mac in macros {
+            let word = &mac[..mac.len() - 1];
+            let mut from = 0usize;
+            while let Some(p) = find_from(&code, from, mac) {
+                if bounded(&code, p, p + word.len()) {
+                    cands.push(Candidate {
+                        pos: p,
+                        rule: "P1",
+                        message: format!(
+                            "`{}` in the resilience spine (raise a typed error instead)",
+                            String::from_utf8_lossy(mac)
+                        ),
+                    });
+                }
+                from = p + 1;
+            }
+        }
+    }
+    if in_scope(path, S1_SCOPE) {
+        for p in find_word_all(&code, b"as") {
+            let mut k = p + 2;
+            while k < code.len() && (code[k] == b' ' || code[k] == b'\t' || code[k] == b'\n') {
+                k += 1;
+            }
+            let ty_start = k;
+            while k < code.len() && is_ident(code[k]) {
+                k += 1;
+            }
+            let ty = String::from_utf8_lossy(&code[ty_start..k]).into_owned();
+            if INT_TYPES.contains(&ty.as_str())
+                && float_evidence(&code[stmt_start(&code, p)..p])
+            {
+                cands.push(Candidate {
+                    pos: p,
+                    rule: "S1",
+                    message: format!(
+                        "float->int `as {ty}` cast in a mult/ decomposition path \
+                         (silently saturates/truncates; use the checked helpers in \
+                         mult::cast)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Resolve candidates against the test mask and allow markers.
+    cands.sort_by_key(|c| (c.pos, c.rule));
+    let mut used: BTreeSet<(usize, String)> = BTreeSet::new();
+    for c in cands {
+        if mask[c.pos] {
+            continue;
+        }
+        let line = line_of(c.pos);
+        if let Some(rules) = allow.get(&line) {
+            if let Some(reason) = rules.get(c.rule) {
+                used.insert((line, c.rule.to_string()));
+                report.suppressions.push(Suppression {
+                    rule: c.rule.to_string(),
+                    path: path.to_string(),
+                    line,
+                    reason: reason.clone(),
+                });
+                continue;
+            }
+        }
+        report.violations.push(Violation {
+            rule: c.rule,
+            path: path.to_string(),
+            line,
+            message: c.message,
+        });
+    }
+    for m in &markers {
+        for r in &m.rules {
+            if !used.contains(&(m.target, r.clone())) {
+                report.stale_markers.push(MarkerProblem {
+                    path: path.to_string(),
+                    line: m.line,
+                    message: format!("stale marker: allow({r}) suppressed nothing"),
+                });
+            }
+        }
+    }
+    report
+}
+
+/// Scan a file or directory tree (only `.rs` files), in sorted path
+/// order so output is deterministic.
+pub fn scan_path(path: &std::path::Path) -> std::io::Result<Report> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs_files(path, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        report.merge(scan_source(&rel, &src));
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(
+    path: &std::path::Path,
+    out: &mut Vec<std::path::PathBuf>,
+) -> std::io::Result<()> {
+    let meta = std::fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<std::path::PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(path)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for e in entries {
+        let m = std::fs::metadata(&e)?;
+        if m.is_dir() {
+            collect_rs_files(&e, out)?;
+        } else if e.extension().is_some_and(|x| x == "rs") {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(path: &str, src: &str) -> Vec<(String, usize)> {
+        scan_source(path, src)
+            .violations
+            .into_iter()
+            .map(|x| (x.rule.to_string(), x.line))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "// HashMap in a comment\nlet s = \"HashMap\"; /* HashMap */\n";
+        assert!(v("src/mult/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let src = "let s = r#\"HashMap \"quoted\" \"#;\nlet c = '\"';\nlet b = b\"HashMap\";\n";
+        assert!(v("src/mult/x.rs", src).is_empty());
+        // A char-literal brace must not desync statement tracking.
+        let src2 = "fn f() { let open = '{'; let m: HashMap<u32, u32> = x; }\n";
+        assert_eq!(v("src/mult/x.rs", src2), vec![("D1".to_string(), 1)]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet m: HashMap<u8, u8> = y;\n";
+        assert_eq!(v("src/tensor/mod.rs", src), vec![("D1".to_string(), 2)]);
+    }
+
+    #[test]
+    fn d1_out_of_scope_is_ignored() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(v("src/cli/mod.rs", src).is_empty());
+        assert_eq!(v("src/config/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn d2_scope_exempts_benchkit() {
+        let src = "use std::time::Instant;\n";
+        assert!(v("src/benchkit/mod.rs", src).is_empty());
+        assert_eq!(v("src/runtime/native/mod.rs", src).len(), 1);
+        // runtime/ outside native/ is not step math.
+        assert!(v("src/runtime/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_spawn_everywhere_but_parallel() {
+        let src = "std::thread::spawn(|| {});\n";
+        assert_eq!(v("src/report/mod.rs", src).len(), 1);
+        assert!(v("src/parallel/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_float_sum_needs_float_evidence() {
+        let int_sum = "fn f(x: &[u64]) -> u64 { x.iter().sum() }\n";
+        assert!(v("src/data/mod.rs", int_sum).is_empty());
+        let float_sum = "fn f(x: &[f32]) -> f32 { let s: f32 = x.iter().sum(); s }\n";
+        assert_eq!(v("src/data/mod.rs", float_sum).len(), 1);
+        let turbofish = "let s = xs.iter().sum::<f64>();\n";
+        assert_eq!(v("src/tensor/mod.rs", turbofish).len(), 1);
+        let float_fold = "let m = xs.iter().fold(f64::MIN, f64::max);\n";
+        assert_eq!(v("src/tensor/mod.rs", float_fold).len(), 1);
+        let welford_fold = "accs.into_iter().fold(Welford::new(), Welford::merge);\n";
+        assert!(v("src/mult/stats.rs", welford_fold).is_empty());
+    }
+
+    #[test]
+    fn p1_fires_in_spine_only_outside_tests() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn g() { y.unwrap(); }\n}\n";
+        let got = v("src/checkpoint/mod.rs", src);
+        assert_eq!(got, vec![("P1".to_string(), 1)]);
+        // unwrap_or is fine.
+        assert!(v("src/checkpoint/mod.rs", "x.unwrap_or(0);\n").is_empty());
+        // Not spine: no P1.
+        assert!(v("src/coordinator/sweep.rs", "x.unwrap();\n").is_empty());
+        assert_eq!(v("src/coordinator/trainer.rs", "panic!(\"boom\");\n").len(), 1);
+    }
+
+    #[test]
+    fn test_attr_on_fn_is_masked() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn live() { y.unwrap(); }\n";
+        assert_eq!(v("src/checkpoint/mod.rs", src), vec![("P1".to_string(), 3)]);
+    }
+
+    #[test]
+    fn s1_flags_float_casts_not_bit_casts() {
+        let float_cast = "let q = (x * 0.5) as u32;\n";
+        assert_eq!(v("src/mult/gaussian.rs", float_cast), vec![("S1".to_string(), 1)]);
+        let bit_repack = "let w = f32::from_bits((sign << 31) | ((er as u32) << 23));\n";
+        assert!(v("src/mult/matmul.rs", bit_repack).is_empty());
+        let int_cast = "let k = (bits >> 23) as i32;\n";
+        assert!(v("src/mult/prepared.rs", int_cast).is_empty());
+        // Out of mult/: not S1's business.
+        assert!(v("src/tensor/mod.rs", float_cast).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_suppresses_and_records() {
+        let src = "// detlint: allow(D1) -- lookup-only cache, never iterated\n\
+                   let m: HashMap<u32, u32> = x;\n";
+        let r = scan_source("src/mult/x.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.suppressions.len(), 1);
+        assert_eq!(r.suppressions[0].rule, "D1");
+        assert!(r.suppressions[0].reason.contains("lookup-only"));
+        assert!(r.stale_markers.is_empty());
+    }
+
+    #[test]
+    fn same_line_marker_works() {
+        let src = "let m: HashMap<u32, u32> = x; // detlint: allow(D1) -- fixture\n";
+        let r = scan_source("src/mult/x.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.suppressions.len(), 1);
+    }
+
+    #[test]
+    fn malformed_markers_are_problems() {
+        let no_reason = "// detlint: allow(D1)\nlet m: HashMap<u8, u8> = x;\n";
+        let r = scan_source("src/mult/x.rs", no_reason);
+        assert_eq!(r.marker_problems.len(), 1);
+        assert_eq!(r.violations.len(), 1); // marker invalid -> no suppression
+        let unknown = "// detlint: allow(D9) -- whatever\n";
+        let r = scan_source("src/mult/x.rs", unknown);
+        assert_eq!(r.marker_problems.len(), 1);
+    }
+
+    #[test]
+    fn stale_marker_warns() {
+        let src = "// detlint: allow(P1) -- nothing here\nlet x = 1;\n";
+        let r = scan_source("src/checkpoint/mod.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.stale_markers.len(), 1);
+        assert!(!r.failed()); // stale markers warn, not fail
+    }
+
+    #[test]
+    fn string_continuation_escape_keeps_line_numbers() {
+        // `\` + newline inside a string consumes the newline; losing it
+        // desyncs every later line number and detaches same-line
+        // markers from their code (found on the real tree).
+        let src = "let s = \"a \\\n b\";\nx.unwrap(); // detlint: allow(P1) -- continuation test\n";
+        let r = scan_source("src/checkpoint/mod.rs", src);
+        assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
+        assert_eq!(r.suppressions.len(), 1);
+        assert_eq!(r.suppressions[0].line, 3);
+        assert!(r.stale_markers.is_empty());
+    }
+
+    #[test]
+    fn scope_matching_is_segment_based() {
+        assert!(in_scope("rust/src/runtime/native/mod.rs", &["runtime/native"]));
+        assert!(!in_scope("rust/src/runtime/engine.rs", &["runtime/native"]));
+        assert!(in_scope("/abs/path/rust/src/mult/lut.rs", &["mult"]));
+        assert!(!in_scope("rust/src/multiplier/x.rs", &["mult"]));
+        assert!(in_scope("fixtures/bad/checkpoint/p1.rs", &["checkpoint"]));
+    }
+
+    #[test]
+    fn rules_table_is_consistent() {
+        assert_eq!(RULES.len(), RULE_IDS.len());
+        for (r, id) in RULES.iter().zip(RULE_IDS.iter()) {
+            assert_eq!(r.id, *id);
+            assert!(!r.summary.is_empty() && !r.rationale.is_empty());
+            assert!(r.severity == "deny" || r.severity == "warn");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! detlint CLI.
+//!
+//! ```text
+//! detlint [--json] <path>...     scan files/trees (exit 0 clean, 1 findings)
+//! detlint --list-rules [--json]  print the rule table
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = violations or malformed markers, 2 = usage
+//! or I/O error. Stale (unused) allow markers are reported but do not
+//! fail the run.
+
+use std::process::ExitCode;
+
+use detlint::{Report, RULES};
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn print_rules(json: bool) {
+    if json {
+        let rows: Vec<String> = RULES
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"id\":\"{}\",\"severity\":\"{}\",\"scope\":[{}],\"summary\":\"{}\",\"rationale\":\"{}\"}}",
+                    r.id,
+                    r.severity,
+                    r.scope
+                        .iter()
+                        .map(|s| format!("\"{}\"", json_escape(s)))
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    json_escape(r.summary),
+                    json_escape(r.rationale),
+                )
+            })
+            .collect();
+        println!("[{}]", rows.join(","));
+        return;
+    }
+    for r in &RULES {
+        println!("{} [{}] — {}", r.id, r.severity, r.summary);
+        println!("    scope: {}", r.scope.join(", "));
+        println!("    {}", r.rationale);
+    }
+}
+
+fn print_report(report: &Report, json: bool) {
+    if json {
+        let vs: Vec<String> = report
+            .violations
+            .iter()
+            .map(|v| {
+                format!(
+                    "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                    v.rule,
+                    json_escape(&v.path),
+                    v.line,
+                    json_escape(&v.message)
+                )
+            })
+            .collect();
+        let ss: Vec<String> = report
+            .suppressions
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"reason\":\"{}\"}}",
+                    json_escape(&s.rule),
+                    json_escape(&s.path),
+                    s.line,
+                    json_escape(&s.reason)
+                )
+            })
+            .collect();
+        let mp = |p: &detlint::MarkerProblem| {
+            format!(
+                "{{\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                json_escape(&p.path),
+                p.line,
+                json_escape(&p.message)
+            )
+        };
+        let probs: Vec<String> = report.marker_problems.iter().map(mp).collect();
+        let stale: Vec<String> = report.stale_markers.iter().map(mp).collect();
+        println!(
+            "{{\"files_scanned\":{},\"violations\":[{}],\"suppressions\":[{}],\"marker_problems\":[{}],\"stale_markers\":[{}],\"ok\":{}}}",
+            report.files_scanned,
+            vs.join(","),
+            ss.join(","),
+            probs.join(","),
+            stale.join(","),
+            !report.failed()
+        );
+        return;
+    }
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.message);
+    }
+    for p in &report.marker_problems {
+        println!("{}:{}: [marker] {}", p.path, p.line, p.message);
+    }
+    for s in &report.stale_markers {
+        println!("{}:{}: [stale] {}", s.path, s.line, s.message);
+    }
+    println!(
+        "detlint: {} file(s), {} violation(s), {} suppression(s), {} marker problem(s), {} stale marker(s)",
+        report.files_scanned,
+        report.violations.len(),
+        report.suppressions.len(),
+        report.marker_problems.len(),
+        report.stale_markers.len()
+    );
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut list_rules = false;
+    let mut paths: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--list-rules" => list_rules = true,
+            "--help" | "-h" => {
+                eprintln!("usage: detlint [--json] <path>... | detlint --list-rules [--json]");
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{a}`");
+                return ExitCode::from(2);
+            }
+            a => paths.push(a.to_string()),
+        }
+    }
+    if list_rules {
+        print_rules(json);
+        return ExitCode::SUCCESS;
+    }
+    if paths.is_empty() {
+        eprintln!("usage: detlint [--json] <path>... | detlint --list-rules [--json]");
+        return ExitCode::from(2);
+    }
+    let mut report = Report::default();
+    for p in &paths {
+        match detlint::scan_path(std::path::Path::new(p)) {
+            Ok(r) => report.merge(r),
+            Err(e) => {
+                eprintln!("detlint: {p}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    print_report(&report, json);
+    if report.failed() {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,151 @@
+//! Fixture-corpus self-tests: each known-bad file trips its rule exactly
+//! once, the allow-marker file suppresses with a recorded reason, the
+//! clean file scans clean, and the CLI's exit codes match the contract.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use detlint::{scan_path, scan_source};
+
+fn fixture(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel)
+}
+
+fn scan_fixture(rel: &str) -> detlint::Report {
+    let path = fixture(rel);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    // Scope matching is segment-based, so the path under fixtures/
+    // (bad/mult/..., bad/runtime/native/...) lands in the right rule
+    // scopes exactly like the mirrored src/ tree would.
+    scan_source(&path.to_string_lossy().replace('\\', "/"), &src)
+}
+
+#[test]
+fn each_bad_fixture_fires_its_rule_exactly_once() {
+    let cases = [
+        ("bad/mult/d1_hash_iteration.rs", "D1"),
+        ("bad/runtime/native/d2_wall_clock.rs", "D2"),
+        ("bad/runtime/native/d3_unordered_reduction.rs", "D3"),
+        ("bad/checkpoint/p1_panic_in_recovery.rs", "P1"),
+        ("bad/mult/s1_unchecked_cast.rs", "S1"),
+    ];
+    for (rel, rule) in cases {
+        let r = scan_fixture(rel);
+        assert_eq!(
+            r.violations.len(),
+            1,
+            "{rel}: expected exactly one violation, got {:?}",
+            r.violations
+        );
+        assert_eq!(r.violations[0].rule, rule, "{rel}: wrong rule");
+        assert!(r.suppressions.is_empty(), "{rel}: unexpected suppressions");
+        assert!(r.marker_problems.is_empty(), "{rel}: marker problems");
+        assert!(r.failed(), "{rel}: report must fail");
+    }
+}
+
+#[test]
+fn allow_marker_fixture_suppresses_with_recorded_reasons() {
+    let r = scan_fixture("allowed/mult/allow_marker.rs");
+    assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
+    assert_eq!(r.suppressions.len(), 2, "suppressions: {:?}", r.suppressions);
+    let mut rules: Vec<&str> = r.suppressions.iter().map(|s| s.rule.as_str()).collect();
+    rules.sort_unstable();
+    assert_eq!(rules, ["D1", "S1"]);
+    for s in &r.suppressions {
+        assert!(!s.reason.is_empty(), "suppression without reason: {s:?}");
+    }
+    let d1 = r.suppressions.iter().find(|s| s.rule == "D1").unwrap();
+    assert!(d1.reason.contains("never iterated"), "reason not recorded: {d1:?}");
+    assert!(r.marker_problems.is_empty());
+    assert!(r.stale_markers.is_empty(), "stale: {:?}", r.stale_markers);
+    assert!(!r.failed());
+}
+
+#[test]
+fn clean_fixture_scans_clean() {
+    let r = scan_fixture("clean/mult/ordered_clean.rs");
+    assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
+    assert!(r.suppressions.is_empty());
+    assert!(r.marker_problems.is_empty());
+    assert!(r.stale_markers.is_empty());
+    assert!(!r.failed());
+}
+
+#[test]
+fn whole_corpus_counts_add_up() {
+    let r = scan_path(&fixture("")).expect("scan fixtures/");
+    assert_eq!(r.files_scanned, 7);
+    assert_eq!(r.violations.len(), 5, "violations: {:?}", r.violations);
+    assert_eq!(r.suppressions.len(), 2);
+    assert!(r.marker_problems.is_empty());
+    assert!(r.stale_markers.is_empty());
+    assert!(r.failed());
+}
+
+#[test]
+fn cli_exit_codes_match_contract() {
+    let bin = env!("CARGO_BIN_EXE_detlint");
+
+    // Bad corpus -> exit 1, findings on stdout.
+    let out = Command::new(bin)
+        .arg(fixture("bad"))
+        .output()
+        .expect("run detlint on bad corpus");
+    assert_eq!(out.status.code(), Some(1), "bad corpus must exit 1");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for rule in ["D1", "D2", "D3", "P1", "S1"] {
+        assert!(stdout.contains(&format!("[{rule}]")), "missing {rule} in:\n{stdout}");
+    }
+
+    // Clean corpus -> exit 0.
+    let out = Command::new(bin)
+        .arg(fixture("clean"))
+        .output()
+        .expect("run detlint on clean corpus");
+    assert_eq!(out.status.code(), Some(0), "clean corpus must exit 0");
+
+    // Allowed corpus -> exit 0, suppressions surfaced in --json.
+    let out = Command::new(bin)
+        .arg("--json")
+        .arg(fixture("allowed"))
+        .output()
+        .expect("run detlint --json on allowed corpus");
+    assert_eq!(out.status.code(), Some(0), "allowed corpus must exit 0");
+    let js = String::from_utf8_lossy(&out.stdout);
+    assert!(js.contains("\"ok\":true"), "json: {js}");
+    assert!(js.contains("\"rule\":\"D1\"") && js.contains("\"rule\":\"S1\""), "json: {js}");
+    assert!(js.contains("never iterated"), "reason missing from json: {js}");
+
+    // --list-rules -> exit 0, all five ids present.
+    let out = Command::new(bin)
+        .arg("--list-rules")
+        .output()
+        .expect("run detlint --list-rules");
+    assert_eq!(out.status.code(), Some(0));
+    let rules = String::from_utf8_lossy(&out.stdout);
+    for id in ["D1", "D2", "D3", "P1", "S1"] {
+        assert!(rules.contains(id), "--list-rules missing {id}: {rules}");
+    }
+
+    // Unknown flag / missing path -> exit 2.
+    let out = Command::new(bin).arg("--bogus").output().expect("run detlint --bogus");
+    assert_eq!(out.status.code(), Some(2));
+    let out = Command::new(bin).output().expect("run detlint with no args");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn json_output_is_deterministic_across_runs() {
+    let bin = env!("CARGO_BIN_EXE_detlint");
+    let run = || {
+        Command::new(bin)
+            .arg("--json")
+            .arg(fixture(""))
+            .output()
+            .expect("run detlint --json on fixtures")
+            .stdout
+    };
+    assert_eq!(run(), run(), "detlint --json must be byte-stable");
+}

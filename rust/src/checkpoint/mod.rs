@@ -181,6 +181,30 @@ pub fn to_bytes(meta: &Meta, named: &[(String, &Tensor)]) -> Vec<u8> {
     out
 }
 
+/// Little-endian field decodes surfaced as typed faults instead of
+/// panics: the resilience spine must never abort on malformed bytes
+/// (detlint rule P1), so even the "slice is exactly 4 bytes by
+/// construction" conversions go through the classified error path.
+fn le_u32(b: &[u8]) -> Result<u32> {
+    let arr: [u8; 4] = b.try_into().map_err(|_| {
+        fault(
+            FailureClass::Truncated,
+            format!("u32 field has {} bytes", b.len()),
+        )
+    })?;
+    Ok(u32::from_le_bytes(arr))
+}
+
+fn le_u64(b: &[u8]) -> Result<u64> {
+    let arr: [u8; 8] = b.try_into().map_err(|_| {
+        fault(
+            FailureClass::Truncated,
+            format!("u64 field has {} bytes", b.len()),
+        )
+    })?;
+    Ok(u64::from_le_bytes(arr))
+}
+
 /// Parse checkpoint bytes.
 pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
     if bytes.len() < MAGIC.len() + 8 {
@@ -190,7 +214,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
         ));
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let stored = le_u32(crc_bytes)?;
     let computed = crc32(body);
     if stored != computed {
         return Err(fault(
@@ -236,8 +260,8 @@ pub fn from_bytes(bytes: &[u8]) -> Result<(Meta, Vec<(String, Tensor)>)> {
         let payload = r.take(n * 4)?;
         let words: Vec<u32> = payload
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+            .map(le_u32)
+            .collect::<Result<Vec<u32>>>()?;
         let t = match dtype {
             DType::F32 => Tensor::from_f32(
                 &dims,
@@ -280,11 +304,11 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        le_u32(self.take(4)?)
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        le_u64(self.take(8)?)
     }
 }
 

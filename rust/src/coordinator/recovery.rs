@@ -17,6 +17,7 @@
 //! ([`health::Trip`], [`runtime::NonFiniteLoss`], the checkpoint
 //! store's `CkptFault`), recovered here by downcast.
 
+// detlint: allow(D2) -- Duration is the backoff-delay type only; recovery replay itself is step-indexed, not clocked
 use std::time::Duration;
 
 use crate::checkpoint;

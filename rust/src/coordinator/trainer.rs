@@ -28,6 +28,7 @@
 //! golden trajectories are unchanged.
 
 use std::path::PathBuf;
+// detlint: allow(D2) -- wall-clock is telemetry-only here (wall_secs in History); no step math reads it
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -254,7 +255,7 @@ impl Trainer {
         resume_from: u64,
         mut hook: Option<&mut EpochHook<'_>>,
     ) -> Result<TrainOutcome> {
-        let started = Instant::now();
+        let started = Instant::now(); // detlint: allow(D2) -- run-level wall_secs telemetry, never fed back into training
         let mut history = History::default();
         let mut health = HealthLog::default();
         match self.cfg.watchdog.clone() {
@@ -308,7 +309,7 @@ impl Trainer {
         let steps_per_epoch = self.steps_per_epoch();
 
         for epoch in start..self.cfg.epochs {
-            let epoch_started = Instant::now();
+            let epoch_started = Instant::now(); // detlint: allow(D2) -- per-epoch wall_secs telemetry, never fed back into training
             let approx = self.cfg.policy.active_at(epoch);
             let sigma = self.cfg.policy.sigma_at(epoch) as f32;
             let lr = self.cfg.lr.at_epoch(epoch) as f32;

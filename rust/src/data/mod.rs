@@ -99,7 +99,9 @@ impl Dataset {
                 .step_by(c)
                 .copied()
                 .collect();
+            // detlint: allow(D3) -- one-time dataset normalization, sequential in sample order
             let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            // detlint: allow(D3) -- one-time dataset normalization, sequential in sample order
             let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f32>()
                 / vals.len() as f32;
             let std = var.sqrt().max(1e-6);

@@ -37,7 +37,7 @@ impl History {
         self.records
             .iter()
             .map(|r| (r.epoch, r.test_acc))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     pub fn final_test_acc(&self) -> Option<f64> {

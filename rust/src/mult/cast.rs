@@ -1,0 +1,39 @@
+//! Audited float→int crossings for the multiplier subsystem.
+//!
+//! Bare float→int `as` casts saturate and truncate silently, and a
+//! mis-rounded crossing in a bit-decomposition path corrupts products
+//! without any error surfacing. detlint rule S1 therefore bans them in
+//! `mult/`; the helpers here are the single reviewed crossing, each one
+//! stating its domain and clamping behaviour.
+
+/// Clamp `v` into the representable product range `[0, u64::MAX]` and
+/// truncate toward zero, exactly as a real unsigned hardware multiplier
+/// bounds its output. NaN maps to 0 (`max(0.0)` on NaN yields 0.0).
+///
+/// The clamped `as` cast below is bit-for-bit the expression the
+/// Gaussian model has always used, so trajectories are unchanged.
+#[inline]
+pub fn sat_f64_to_u64(v: f64) -> u64 {
+    // detlint: allow(S1) -- this helper IS the audited crossing: input clamped to [0, u64::MAX], NaN -> 0
+    v.max(0.0).min(u64::MAX as f64) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturates_and_truncates() {
+        assert_eq!(sat_f64_to_u64(0.0), 0);
+        assert_eq!(sat_f64_to_u64(-1.5), 0);
+        assert_eq!(sat_f64_to_u64(f64::NEG_INFINITY), 0);
+        assert_eq!(sat_f64_to_u64(f64::NAN), 0);
+        assert_eq!(sat_f64_to_u64(41.999), 41);
+        assert_eq!(sat_f64_to_u64(f64::INFINITY), u64::MAX);
+        // u64::MAX as f64 rounds up to 2^64, which `as` saturates back.
+        assert_eq!(sat_f64_to_u64(u64::MAX as f64), u64::MAX);
+        assert_eq!(sat_f64_to_u64(1e300), u64::MAX);
+        // Exactly representable large value round-trips.
+        assert_eq!(sat_f64_to_u64((1u64 << 53) as f64), 1u64 << 53);
+    }
+}

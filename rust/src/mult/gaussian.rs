@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::rng::threefry::normal_pair;
 
+use super::cast::sat_f64_to_u64;
 use super::{check_batch_lens, Multiplier};
 
 /// Threefry stream nonce for multiplier noise ("mult" in ASCII).
@@ -46,7 +47,7 @@ impl Multiplier for GaussianModel {
         let v = exact as f64 * (1.0 + self.sigma * z as f64);
         // Clamp into the representable product range (a real multiplier
         // cannot return a negative or > 64-bit product).
-        v.max(0.0).min(u64::MAX as f64) as u64
+        sat_f64_to_u64(v)
     }
 
     /// Reserves the whole noise-counter range with one atomic add, then
@@ -59,7 +60,7 @@ impl Multiplier for GaussianModel {
             let exact = x as u64 * y as u64;
             let (z, _) = normal_pair(self.seed, NONCE, base.wrapping_add(i as u32), 0);
             let v = exact as f64 * (1.0 + self.sigma * z as f64);
-            *o = v.max(0.0).min(u64::MAX as f64) as u64;
+            *o = sat_f64_to_u64(v);
         }
     }
 }

@@ -70,6 +70,7 @@
 //! to the scalar [`approx_matmul_reference`] walk.
 
 mod broken_array;
+pub mod cast;
 mod drum;
 mod gaussian;
 mod lut;

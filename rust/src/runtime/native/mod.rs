@@ -1011,6 +1011,7 @@ impl NativeBackend {
         let mut l2 = 0f64;
         for (spec, p) in self.model.params.iter().zip(&params) {
             if spec.kind == "conv_w" || spec.kind == "dense_w" {
+                // detlint: allow(D3) -- L2 term: sequential sum in parameter order, reporting-only f64
                 l2 += p.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
             }
         }

@@ -213,6 +213,7 @@ impl Tensor {
             bail!("mean of empty tensor");
         }
         let n = self.len() as f64;
+        // detlint: allow(D3) -- sequential iterator over the flat view, fixed element order
         Ok(self.f32s()?.map(|x| x as f64).sum::<f64>() / n)
     }
 
@@ -223,6 +224,7 @@ impl Tensor {
         // Two passes over the view (numerically stable, still no clone).
         let n = self.len() as f64;
         let m = self.mean()?;
+        // detlint: allow(D3) -- sequential iterator over the flat view, fixed element order
         let var = self.f32s()?.map(|x| (x as f64 - m).powi(2)).sum::<f64>() / n;
         Ok(var.sqrt())
     }
@@ -232,6 +234,7 @@ impl Tensor {
             bail!("abs_mean of empty tensor");
         }
         let n = self.len() as f64;
+        // detlint: allow(D3) -- sequential iterator over the flat view, fixed element order
         Ok(self.f32s()?.map(|x| (x as f64).abs()).sum::<f64>() / n)
     }
 }

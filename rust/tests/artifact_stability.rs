@@ -1,0 +1,121 @@
+//! Byte-stability of emitted artifacts (detlint rule D1's runtime twin).
+//!
+//! Everything the tree writes to disk — checkpoints, JSON configs,
+//! metrics, bench reports — must serialize to the *same bytes* for the
+//! same logical content, independent of construction order or process.
+//! `json::Value::Object` is a `BTreeMap` precisely for this; these tests
+//! pin the property end to end so a future change that reintroduces
+//! hash-ordered serialization fails loudly rather than producing
+//! un-diffable artifacts and un-hashable checkpoint metadata.
+
+use std::collections::BTreeMap;
+
+use approxmul::checkpoint::{self, Meta};
+use approxmul::json::{self, Value};
+use approxmul::tensor::Tensor;
+
+fn meta() -> Meta {
+    Meta {
+        preset: "tiny".to_string(),
+        epoch: 3,
+        step: 1234,
+        sigma: 0.0,
+        mult: "drum6".to_string(),
+        tag: "stability".to_string(),
+        escalated_from: None,
+    }
+}
+
+#[test]
+fn json_object_serialization_is_key_order_independent() {
+    // Same members, inserted in opposite orders, must print identically.
+    let fwd = json::object(vec![
+        ("alpha", Value::from(1usize)),
+        ("beta", Value::from("two")),
+        ("gamma", Value::from(3.5)),
+    ]);
+    let rev = json::object(vec![
+        ("gamma", Value::from(3.5)),
+        ("beta", Value::from("two")),
+        ("alpha", Value::from(1usize)),
+    ]);
+    assert_eq!(fwd.to_string(), rev.to_string());
+
+    // And the underlying representation is an ordered map, not a
+    // hash-ordered one: keys come back sorted.
+    let keys: Vec<&String> = fwd.as_object().unwrap().keys().collect();
+    assert_eq!(keys, ["alpha", "beta", "gamma"]);
+}
+
+#[test]
+fn json_roundtrip_is_byte_stable() {
+    let src = r#"{"z":1,"a":{"nested":[1,2,3],"b":true},"m":"text"}"#;
+    let once = Value::parse(src).unwrap().to_string();
+    let twice = Value::parse(&once).unwrap().to_string();
+    assert_eq!(once, twice, "parse/print must reach a fixed point");
+}
+
+#[test]
+fn checkpoint_bytes_are_identical_across_builds() {
+    let t1 = Tensor::from_f32(&[2, 3], vec![1.0, -2.5, 0.0, 3.25, -0.125, 9.0]).unwrap();
+    let t2 = Tensor::from_f32(&[4], vec![0.5, 0.25, -1.0, 2.0]).unwrap();
+
+    // Two independently built snapshots of the same logical state.
+    let a = checkpoint::to_bytes(
+        &meta(),
+        &[("w".to_string(), &t1), ("b".to_string(), &t2)],
+    );
+    let b = checkpoint::to_bytes(
+        &meta(),
+        &[("w".to_string(), &t1), ("b".to_string(), &t2)],
+    );
+    assert_eq!(a, b, "same state must serialize to the same bytes");
+
+    // And the round trip preserves them exactly.
+    let (m, tensors) = checkpoint::from_bytes(&a).unwrap();
+    let named: Vec<(String, &Tensor)> =
+        tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+    let c = checkpoint::to_bytes(&m, &named);
+    assert_eq!(a, c, "decode/encode must be a byte-level fixed point");
+}
+
+#[test]
+fn checkpoint_meta_json_is_deterministic() {
+    let bytes = checkpoint::to_bytes(&meta(), &[]);
+    let (m, _) = checkpoint::from_bytes(&bytes).unwrap();
+    let bytes2 = checkpoint::to_bytes(&m, &[]);
+    assert_eq!(bytes, bytes2);
+}
+
+#[test]
+fn malformed_length_fields_surface_typed_faults_not_panics() {
+    // The decoder must never panic on hostile length fields. Flip the
+    // first tensor's name-length field to u32::MAX and re-seal the CRC
+    // so the corruption reaches the structural decoder: the reader must
+    // answer with a classified Truncated fault, not an abort.
+    let t = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+    let good = checkpoint::to_bytes(&meta(), &[("w".to_string(), &t)]);
+    let meta_len = u32::from_le_bytes(good[8..12].try_into().unwrap()) as usize;
+    let name_len_off = 8 + 4 + meta_len + 4; // magic | meta_len | meta | count
+    let mut evil = good.clone();
+    evil[name_len_off..name_len_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let body_len = evil.len() - 4;
+    let crc = checkpoint::crc32(&evil[..body_len]);
+    evil[body_len..].copy_from_slice(&crc.to_le_bytes());
+
+    let err = checkpoint::from_bytes(&evil).expect_err("hostile length must fail");
+    assert_eq!(
+        checkpoint::classify(&err),
+        Some(checkpoint::FailureClass::Truncated),
+        "hostile length field must classify as Truncated, got: {err:#}"
+    );
+}
+
+#[test]
+fn btreemap_is_the_artifact_map_type() {
+    // Compile-time pin: Value::Object exposes a BTreeMap. If someone
+    // swaps the representation for a hash map this stops compiling.
+    let v = json::object(vec![("k", Value::from(1usize))]);
+    let m: &BTreeMap<String, Value> = v.as_object().unwrap();
+    assert_eq!(m.len(), 1);
+}
