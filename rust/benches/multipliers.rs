@@ -15,8 +15,10 @@
 //! subsystem gets the same treatment: `sdrum6` / `booth8` / `sroba`
 //! rows over scalar, batch, and `slut8` paths (rows carry
 //! `"signed": true`). Emits `BENCH_multipliers.json` with M mult/s per
-//! (design, dist, path) so the perf trajectory is tracked across PRs.
-//! `cargo bench multipliers`.
+//! (design, dist, path) so the perf trajectory is tracked across PRs;
+//! every row carries `"simd"` (was the binary built with
+//! `--features simd`?) so scalar and simd runs of the same SHA are
+//! unambiguous in A/B comparisons. `cargo bench multipliers`.
 
 use approxmul::benchkit::{save_json, throughput, Bench};
 use approxmul::json::{object, Value};
@@ -139,6 +141,7 @@ fn main() -> anyhow::Result<()> {
                 ("lut_mps", mps[2].into()),
                 ("lut_bits", (LUT_BITS as usize).into()),
                 ("lut_bit_identical", lut_exact_here.into()),
+                ("simd", cfg!(feature = "simd").into()),
                 ("n_ops", N_OPS.into()),
             ]));
         }
@@ -230,6 +233,7 @@ fn main() -> anyhow::Result<()> {
                 ("lut_bits", (LUT_BITS as usize).into()),
                 ("lut_bit_identical", slut_exact_here.into()),
                 ("signed", true.into()),
+                ("simd", cfg!(feature = "simd").into()),
                 ("n_ops", N_OPS.into()),
             ]));
         }

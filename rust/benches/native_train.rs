@@ -5,7 +5,9 @@
 //! exact training, and how much the decompose-once prepared GEMM and
 //! the ApproxTrain-style LUT claw back. Emits `BENCH_native_train.json`
 //! via the benchkit JSON helpers so the perf trajectory is tracked
-//! across PRs (see BENCH_history.md). `cargo bench native_train`.
+//! across PRs (see BENCH_history.md); rows carry `"simd"` for A/B
+//! comparisons across scalar and `--features simd` builds of the same
+//! SHA. `cargo bench native_train`.
 
 use approxmul::benchkit::{fmt_dur, save_json, Bench};
 use approxmul::data::SyntheticCifar;
@@ -20,8 +22,16 @@ use approxmul::runtime::{Backend, NativeBackend, TrainSession};
 const CASES: &[(&str, &[&str], usize, usize)] = &[
     // `sdrum6` is the signed-pipeline row: same DRUM core, sign routed
     // through the design — its cost vs `drum6` is the price of the
-    // signed kernel.
-    ("tiny", &["exact", "gaussian:0.045", "drum6", "lut12:drum6", "sdrum6"], 2, 10),
+    // signed kernel. `lut8:drum6` is the flat-table row: under
+    // `--features simd` its GEMM inner loop is the vectorized table
+    // gather, so comparing it across scalar/simd runs of the same SHA
+    // isolates the flat-table kernel's win.
+    (
+        "tiny",
+        &["exact", "gaussian:0.045", "drum6", "lut8:drum6", "lut12:drum6", "sdrum6"],
+        2,
+        10,
+    ),
     ("small", &["exact", "drum6"], 1, 3),
 ];
 
@@ -94,6 +104,7 @@ fn main() -> anyhow::Result<()> {
                 ("steps_per_s", steps_per_s.into()),
                 ("samples_per_s", samples_per_s.into()),
                 ("batch", model.batch.into()),
+                ("simd", cfg!(feature = "simd").into()),
             ]));
         }
     }

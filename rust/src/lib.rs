@@ -44,6 +44,11 @@
 //! (`table2`, `table3`, `fig2`, `arch`, `characterize`, `costmodel`,
 //! `train`); see `approxmul --help`.
 
+// The `simd` feature builds explicit vector microkernels on
+// `std::simd` (nightly portable_simd). Feature-off builds are
+// unchanged stable Rust.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod benchkit;
 pub mod checkpoint;
 pub mod cli;

@@ -12,7 +12,26 @@
 
 use anyhow::{bail, Result};
 
-use super::Multiplier;
+use super::{check_batch_lens, Multiplier};
+
+/// Dynamic-range truncation of one operand: returns
+/// `(approximated value, shift)` with `value < 2^k`. Free function so
+/// both the method path and the hoisted batch loop share one body.
+#[inline]
+pub(super) fn reduce_k(v: u32, k: u32) -> (u32, u32) {
+    if v == 0 {
+        return (0, 0);
+    }
+    let msb = 31 - v.leading_zeros(); // position of leading one
+    if msb < k {
+        // Fits entirely: exact.
+        return (v, 0);
+    }
+    let shift = msb + 1 - k;
+    // Keep top-k bits, then force the lowest kept bit to 1
+    // (the unbiasing trick).
+    ((v >> shift) | 1, shift)
+}
 
 /// DRUM-k approximate multiplier.
 #[derive(Debug, Clone, Copy)]
@@ -29,22 +48,17 @@ impl Drum {
         Ok(Drum { k })
     }
 
-    /// Dynamic-range truncation of one operand: returns
-    /// `(approximated value, shift)` with `value < 2^k`.
+    /// The retained-bit count (the signed wrapper's kernel descriptor
+    /// needs it).
+    #[cfg(feature = "simd")]
+    pub(crate) fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// Dynamic-range truncation of one operand (see [`reduce_k`]).
     #[inline]
     fn reduce(&self, v: u32) -> (u32, u32) {
-        if v == 0 {
-            return (0, 0);
-        }
-        let msb = 31 - v.leading_zeros(); // position of leading one
-        if msb < self.k {
-            // Fits entirely: exact.
-            return (v, 0);
-        }
-        let shift = msb + 1 - self.k;
-        // Keep top-k bits, then force the lowest kept bit to 1
-        // (the unbiasing trick).
-        ((v >> shift) | 1, shift)
+        reduce_k(v, self.k)
     }
 }
 
@@ -58,8 +72,29 @@ impl Multiplier for Drum {
         let (tb, sb) = self.reduce(b);
         (ta as u64 * tb as u64) << (sa + sb)
     }
-    // `mul_batch` default suffices: the monomorphized loop over `mul`
-    // is already the branch-light leading-zero + shift kernel.
+
+    /// Hoisted-`k` reduction loop (scalar builds) or the explicit
+    /// vector kernel (`simd` feature) — bit-identical to `mul` either
+    /// way (`tests/mult_batch.rs`, `tests/simd_parity.rs`).
+    fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        check_batch_lens(a, b, out);
+        #[cfg(feature = "simd")]
+        super::simd::drum_mul_batch(self.k, a, b, out);
+        #[cfg(not(feature = "simd"))]
+        {
+            let k = self.k;
+            for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+                let (ta, sa) = reduce_k(x, k);
+                let (tb, sb) = reduce_k(y, k);
+                *o = (ta as u64 * tb as u64) << (sa + sb);
+            }
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<super::simd::UnsignedKernel<'_>> {
+        Some(super::simd::UnsignedKernel::Drum { k: self.k })
+    }
 }
 
 #[cfg(test)]

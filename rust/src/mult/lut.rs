@@ -133,7 +133,12 @@ impl Multiplier for LutMultiplier {
         shift_saturating(self.lookup(ia, ib), sa + sb)
     }
 
-    /// Reduce + load loop, bit-identical to the scalar LUT path.
+    /// Reduce + load loop, bit-identical to the scalar LUT path. Kept
+    /// scalar even under the `simd` feature: general-domain operands
+    /// need the data-dependent leading-one reduction, and gathers
+    /// don't pay there. The GEMM's mantissa domain is different — its
+    /// reduction is a constant shift, so [`LutMultiplier::simd_kernel`]
+    /// hands the prepared kernel the flat table instead.
     fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         check_batch_lens(a, b, out);
         for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
@@ -141,6 +146,14 @@ impl Multiplier for LutMultiplier {
             let (iy, sy) = self.reduce(y);
             *o = shift_saturating(self.lookup(ix, iy), sx + sy);
         }
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<super::simd::UnsignedKernel<'_>> {
+        Some(super::simd::UnsignedKernel::Flat {
+            table: &self.table,
+            bits: self.bits,
+        })
     }
 }
 

@@ -30,7 +30,12 @@
 //! and non-finite fallback terms are merged by their k index, so the
 //! f32 accumulation is bit-identical to a scalar [`approx_mul_f32`]
 //! walk of the same chain ([`approx_matmul_reference`] is that walk,
-//! kept as the property-test oracle).
+//! kept as the property-test oracle). Under the `simd` cargo feature,
+//! designs that expose a kernel descriptor
+//! ([`Multiplier::simd_kernel`]) swap the per-element engine for the
+//! vector chain microkernel ([`super::simd`]) — class test, mantissa
+//! products and renormalization lane-parallel, final accumulation
+//! still strict k-order scalar, outputs still bit-identical.
 //!
 //! Callers with an epilogue (the native backend's bias-add and
 //! batch-norm statistics) use [`approx_matmul_prepared`] directly: the
@@ -129,6 +134,93 @@ pub fn approx_mul_f32(m: &dyn Multiplier, x: f32, y: f32) -> f32 {
     }
 }
 
+/// Per-task staging for the scalar-batch chain engine: compacted
+/// mantissa pairs, their products, the (sign, exponent-sum, k index)
+/// of each batched term, and the non-finite fallback terms.
+struct ChainBufs {
+    ma: Vec<u32>,
+    mb: Vec<u32>,
+    prod: Vec<u64>,
+    sgn: Vec<u32>,
+    esum: Vec<i32>,
+    slot: Vec<u32>,
+    extra_k: Vec<u32>,
+    extra_v: Vec<f32>,
+}
+
+impl ChainBufs {
+    fn new(inner: usize) -> Self {
+        ChainBufs {
+            ma: vec![0u32; inner],
+            mb: vec![0u32; inner],
+            prod: vec![0u64; inner],
+            sgn: vec![0u32; inner],
+            esum: vec![0i32; inner],
+            slot: vec![0u32; inner],
+            extra_k: Vec::new(),
+            extra_v: Vec::new(),
+        }
+    }
+}
+
+/// One output element's k-chain through the scalar-batch engine:
+/// compact the both-normal operand pairs, one [`Multiplier::mul_batch`]
+/// call over them, then a strict k-order merge of batched and
+/// non-finite fallback terms. Under the `simd` feature, designs with a
+/// kernel descriptor take [`super::simd::unsigned_chain_sum`] instead;
+/// both engines produce bit-identical sums.
+fn chain_sum(
+    m: &dyn Multiplier,
+    a_row: (&[u8], &[i32], &[u32]),
+    b_row: (&[u8], &[i32], &[u32]),
+    bufs: &mut ChainBufs,
+) -> f32 {
+    let (sa, ea, mta) = a_row;
+    let (sb, eb, mtb) = b_row;
+    let inner = ea.len();
+    let mut active = 0usize;
+    bufs.extra_k.clear();
+    bufs.extra_v.clear();
+    for k in 0..inner {
+        let (ex, ey) = (ea[k], eb[k]);
+        if ex > 0 && ex != EXP_NONFINITE && ey > 0 && ey != EXP_NONFINITE {
+            // Both operands normal: batch the mantissa product.
+            bufs.ma[active] = mta[k];
+            bufs.mb[active] = mtb[k];
+            bufs.sgn[active] = (sa[k] ^ sb[k]) as u32;
+            bufs.esum[active] = ex + ey;
+            bufs.slot[active] = k as u32;
+            active += 1;
+        } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
+            // Native product fallback, replayed at its k position in
+            // the merge below.
+            let x = element_value(sa[k], ex, mta[k]);
+            let y = element_value(sb[k], ey, mtb[k]);
+            bufs.extra_k.push(k as u32);
+            bufs.extra_v.push(x * y);
+        }
+        // Flushed terms contribute a signed zero — a no-op in the
+        // k-order accumulation.
+    }
+    m.mul_batch(&bufs.ma[..active], &bufs.mb[..active], &mut bufs.prod[..active]);
+    // Reassemble the chain in strict k-order: both term lists are
+    // k-sorted, so merge them.
+    let mut acc = 0f32;
+    let (mut t, mut e) = (0usize, 0usize);
+    while t < active || e < bufs.extra_k.len() {
+        let kt = if t < active { bufs.slot[t] } else { u32::MAX };
+        let ke = if e < bufs.extra_k.len() { bufs.extra_k[e] } else { u32::MAX };
+        if kt < ke {
+            acc += renorm(bufs.sgn[t], bufs.esum[t], 0, bufs.prod[t]);
+            t += 1;
+        } else {
+            acc += bufs.extra_v[e];
+            e += 1;
+        }
+    }
+    acc
+}
+
 /// Output of [`approx_matmul_prepared`].
 pub struct GemmOutput {
     /// Row-major `[rows × cols]` product (bias already added when a
@@ -187,20 +279,17 @@ pub fn approx_matmul_prepared(
 
     let threads = parallel::max_threads();
     let block = gemm_row_block(rows);
+    // The kernel descriptor is `Copy` and resolved once per GEMM; the
+    // dispatch inside the task closure is branch-predicted away.
+    #[cfg(feature = "simd")]
+    let kernel = m.simd_kernel();
     let mut out = vec![0f32; rows * cols];
     let partials: Vec<Option<Vec<f32>>> =
         parallel::par_chunks_mut(&mut out, block * cols, threads, |bi, chunk| {
-            // Per-task staging for one k-chain: mantissa pairs, their
-            // products, the (sign, exponent-sum) of each batched term,
-            // its k index, and the non-finite fallback terms.
-            let mut ma = vec![0u32; inner];
-            let mut mb = vec![0u32; inner];
-            let mut prod = vec![0u64; inner];
-            let mut sgn = vec![0u32; inner];
-            let mut esum = vec![0i32; inner];
-            let mut slot = vec![0u32; inner];
-            let mut extra_k: Vec<u32> = Vec::new();
-            let mut extra_v: Vec<f32> = Vec::new();
+            let mut bufs = ChainBufs::new(inner);
+            // Per-task term-bit scratch for the SIMD chain engine.
+            #[cfg(feature = "simd")]
+            let mut terms = vec![0u32; inner];
             let mut sums = with_col_sums.then(|| vec![0f32; cols]);
 
             let r0 = bi * block;
@@ -212,58 +301,18 @@ pub fn approx_matmul_prepared(
             while j0 < cols {
                 let j1 = (j0 + GEMM_COL_BLOCK).min(cols);
                 for ri in 0..block_rows {
-                    let (sa, ea, mta) = a.row(r0 + ri);
+                    let a_row = a.row(r0 + ri);
                     for j in j0..j1 {
-                        let (sb, eb, mtb) = b_packed.row(j);
-                        let mut active = 0usize;
-                        extra_k.clear();
-                        extra_v.clear();
-                        for k in 0..inner {
-                            let (ex, ey) = (ea[k], eb[k]);
-                            if ex > 0
-                                && ex != EXP_NONFINITE
-                                && ey > 0
-                                && ey != EXP_NONFINITE
-                            {
-                                // Both operands normal: batch the
-                                // mantissa product.
-                                ma[active] = mta[k];
-                                mb[active] = mtb[k];
-                                sgn[active] = (sa[k] ^ sb[k]) as u32;
-                                esum[active] = ex + ey;
-                                slot[active] = k as u32;
-                                active += 1;
-                            } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
-                                // Native product fallback, replayed at
-                                // its k position below.
-                                let x = element_value(sa[k], ex, mta[k]);
-                                let y = element_value(sb[k], ey, mtb[k]);
-                                extra_k.push(k as u32);
-                                extra_v.push(x * y);
-                            }
-                            // Flushed terms contribute a signed zero —
-                            // a no-op in the k-order accumulation.
-                        }
-                        m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
-                        // Reassemble the chain in strict k-order: both
-                        // term lists are k-sorted, so merge them.
-                        let mut acc = 0f32;
-                        let (mut t, mut e) = (0usize, 0usize);
-                        while t < active || e < extra_k.len() {
-                            let kt = if t < active { slot[t] } else { u32::MAX };
-                            let ke = if e < extra_k.len() {
-                                extra_k[e]
-                            } else {
-                                u32::MAX
-                            };
-                            if kt < ke {
-                                acc += renorm(sgn[t], esum[t], 0, prod[t]);
-                                t += 1;
-                            } else {
-                                acc += extra_v[e];
-                                e += 1;
-                            }
-                        }
+                        let b_row = b_packed.row(j);
+                        #[cfg(feature = "simd")]
+                        let acc = match kernel {
+                            Some(uk) => super::simd::unsigned_chain_sum(
+                                uk, a_row, b_row, &mut terms,
+                            ),
+                            None => chain_sum(m, a_row, b_row, &mut bufs),
+                        };
+                        #[cfg(not(feature = "simd"))]
+                        let acc = chain_sum(m, a_row, b_row, &mut bufs);
                         let v = match bias {
                             Some(b) => acc + b[j],
                             None => acc,

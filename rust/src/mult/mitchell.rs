@@ -8,7 +8,7 @@
 //! counterexample design for the paper's error model and an instructive
 //! ablation row in `characterize`.
 
-use super::Multiplier;
+use super::{check_batch_lens, Multiplier};
 
 /// Fixed-point fractional bits used for the log representation.
 const FRAC_BITS: u32 = 32;
@@ -54,8 +54,30 @@ impl Multiplier for Mitchell {
         }
         Self::antilog_fixed(Self::log2_fixed(a) + Self::log2_fixed(b))
     }
-    // `mul_batch` default suffices: the monomorphized loop over `mul`
-    // inlines the log/antilog kernel with nothing left to hoist.
+
+    /// Explicit batch loop: the scalar build keeps the fused
+    /// log-add-antilog body with the zero test decided per element
+    /// before any kernel work; the `simd` build runs the branchless
+    /// vector kernel. Bit-identical to `mul` either way
+    /// (`tests/mult_batch.rs`, `tests/simd_parity.rs`).
+    fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        check_batch_lens(a, b, out);
+        #[cfg(feature = "simd")]
+        super::simd::mitchell_mul_batch(a, b, out);
+        #[cfg(not(feature = "simd"))]
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = if x == 0 || y == 0 {
+                0
+            } else {
+                Self::antilog_fixed(Self::log2_fixed(x) + Self::log2_fixed(y))
+            };
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<super::simd::UnsignedKernel<'_>> {
+        Some(super::simd::UnsignedKernel::Mitchell)
+    }
 }
 
 #[cfg(test)]

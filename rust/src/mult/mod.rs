@@ -38,7 +38,10 @@
 //! keep the default, which is already the monomorphized loop. Either
 //! way the batch path is bit-identical to the scalar path
 //! (`tests/mult_batch.rs` pins this per design × operand
-//! distribution).
+//! distribution). With the `simd` cargo feature the hot designs'
+//! batch loops and the prepared GEMM's inner chains additionally route
+//! through explicit vector kernels ([`simd`]) — same bits, pinned by
+//! `tests/simd_parity.rs`.
 //!
 //! [`LutMultiplier`] is the ApproxTrain-style (arXiv:2209.04161)
 //! lookup-table backend: it tabulates any design over a configurable
@@ -83,6 +86,8 @@ mod stats;
 mod truncation;
 
 pub mod signed;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 pub use broken_array::BrokenArray;
 pub use drum::Drum;
@@ -151,6 +156,17 @@ pub trait Multiplier: Send + Sync {
             *o = self.mul(x, y);
         }
     }
+
+    /// The explicit-SIMD GEMM kernel descriptor for this design, when
+    /// one exists (`simd` feature only). `None` — the default — keeps
+    /// the prepared GEMM on the scalar-batch chain engine.
+    /// Implementations must be bit-identical to `mul` over the
+    /// mantissa domain; `tests/simd_parity.rs` pins GEMM outputs
+    /// against the scalar oracles under the feature.
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<simd::UnsignedKernel<'_>> {
+        None
+    }
 }
 
 /// Shared length guard for `mul_batch` implementations.
@@ -179,6 +195,11 @@ impl Multiplier for Exact {
     }
     // `mul_batch` default: already a monomorphized widening-multiply
     // loop for this impl.
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<simd::UnsignedKernel<'_>> {
+        Some(simd::UnsignedKernel::Exact)
+    }
 }
 
 /// Build a multiplier from a spec string: `exact`, `drum<k>`,

@@ -32,6 +32,20 @@
 //! copy, **not** a re-decomposition) when a second layout of the same
 //! matrix is needed — e.g. the weight matrix prepared once per training
 //! step and used by both the forward `A·W` and the backward `dY·Wᵀ`.
+//!
+//! ## Plane layout and vector loads
+//!
+//! Each plane (`signs: Vec<u8>`, `exps: Vec<i32>`, `mants: Vec<u32>`,
+//! and optionally `smants: Vec<i32>`) is one contiguous row-major
+//! allocation; a k-chain is a contiguous run of each plane, which is
+//! exactly what the `simd`-feature chain microkernel
+//! (`crate::mult::simd`) relies on: it issues unaligned vector loads
+//! (`Simd::from_slice`) straight off the row slices returned by
+//! [`PreparedMatrix::row`] / [`PreparedMatrix::smant_row`], with no
+//! gather or re-pack step. `Vec`'s natural alignment is sufficient —
+//! the kernels use unaligned loads throughout — so no over-alignment
+//! is applied; keeping the planes as plain `Vec`s also keeps the
+//! feature-off layout byte-for-byte identical.
 
 use anyhow::{bail, Result};
 

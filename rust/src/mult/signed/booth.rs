@@ -77,8 +77,23 @@ impl SignedMultiplier for Booth {
         }
         acc
     }
-    // `mul_batch` default suffices: the recoding loop is already
-    // branch-light and monomorphizes per k.
+    // Scalar builds keep the `mul_batch` default: the recoding loop is
+    // already branch-light and monomorphizes per k.
+
+    /// Explicit vector kernel (`simd` feature): the 16 recoding steps
+    /// run unconditionally across lanes (`d == 0` contributes a zero
+    /// partial) — bit-identical to the default loop
+    /// (`tests/simd_parity.rs`).
+    #[cfg(feature = "simd")]
+    fn mul_batch(&self, a: &[i32], b: &[i32], out: &mut [i64]) {
+        super::check_signed_batch_lens(a, b, out);
+        crate::mult::simd::booth_mul_batch(self.k, a, b, out);
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<crate::mult::simd::SignedKernel<'_>> {
+        Some(crate::mult::simd::SignedKernel::Booth { k: self.k })
+    }
 }
 
 #[cfg(test)]

@@ -18,7 +18,10 @@
 //! invariance. [`approx_matmul_reference_signed`] is the pinned scalar
 //! oracle (one [`approx_mul_f32_signed`] per product);
 //! `tests/signed_gemm.rs` pins blocked ≡ scalar per design × operand
-//! layout × thread count.
+//! layout × thread count. Under the `simd` cargo feature, designs
+//! exposing a [`SignedMultiplier::simd_kernel`] descriptor run the
+//! vector chain microkernel ([`crate::mult::simd`]) instead of the
+//! scalar-batch engine — same strict k-order accumulation, same bits.
 //!
 //! One convention is new: if a signed design returns a product of
 //! exactly `0`, the term contributes `+0.0` — the operand signs were
@@ -65,6 +68,94 @@ pub fn approx_mul_f32_signed(m: &dyn SignedMultiplier, x: f32, y: f32) -> f32 {
         // signed zero, as in the unsigned pipeline.
         _ => f32::from_bits((x.to_bits() ^ y.to_bits()) & 0x8000_0000),
     }
+}
+
+/// Per-task staging buffers for the signed scalar-batch chain engine —
+/// the signed twin of the unsigned kernel's `ChainBufs`: signed
+/// mantissa pairs, their products, the exponent sum and k index of
+/// each batched term, and the non-finite fallback terms.
+struct SignedChainBufs {
+    ma: Vec<i32>,
+    mb: Vec<i32>,
+    prod: Vec<i64>,
+    esum: Vec<i32>,
+    slot: Vec<u32>,
+    extra_k: Vec<u32>,
+    extra_v: Vec<f32>,
+}
+
+impl SignedChainBufs {
+    fn new(inner: usize) -> Self {
+        SignedChainBufs {
+            ma: vec![0i32; inner],
+            mb: vec![0i32; inner],
+            prod: vec![0i64; inner],
+            esum: vec![0i32; inner],
+            slot: vec![0u32; inner],
+            extra_k: Vec::new(),
+            extra_v: Vec::new(),
+        }
+    }
+}
+
+/// One output element's k-chain through the signed scalar-batch
+/// engine: class-test every k, batch the signed mantissa products of
+/// the both-normal terms through one `mul_batch` call, then reassemble
+/// batched and non-finite fallback terms in strict k-order. Row tuples
+/// are `(signs, exps, mants, smants)` — the unsigned planes feed the
+/// non-finite fallback, the signed plane feeds the design.
+fn chain_sum_signed(
+    m: &dyn SignedMultiplier,
+    a_row: (&[u8], &[i32], &[u32], &[i32]),
+    b_row: (&[u8], &[i32], &[u32], &[i32]),
+    bufs: &mut SignedChainBufs,
+) -> f32 {
+    let (sa, ea, mta, sma) = a_row;
+    let (sb, eb, mtb, smb) = b_row;
+    let inner = ea.len();
+    let mut active = 0usize;
+    bufs.extra_k.clear();
+    bufs.extra_v.clear();
+    for k in 0..inner {
+        let (ex, ey) = (ea[k], eb[k]);
+        if ex > 0 && ex != EXP_NONFINITE && ey > 0 && ey != EXP_NONFINITE {
+            // Both operands normal: batch the signed mantissa product.
+            bufs.ma[active] = sma[k];
+            bufs.mb[active] = smb[k];
+            bufs.esum[active] = ex + ey;
+            bufs.slot[active] = k as u32;
+            active += 1;
+        } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
+            // Native product fallback, replayed at its k position below.
+            let x = element_value(sa[k], ex, mta[k]);
+            let y = element_value(sb[k], ey, mtb[k]);
+            bufs.extra_k.push(k as u32);
+            bufs.extra_v.push(x * y);
+        }
+        // Flushed terms contribute a signed zero — a no-op in the
+        // k-order accumulation.
+    }
+    m.mul_batch(&bufs.ma[..active], &bufs.mb[..active], &mut bufs.prod[..active]);
+    // Reassemble the chain in strict k-order: both term lists are
+    // k-sorted, so merge them.
+    let mut acc = 0f32;
+    let (mut t, mut e) = (0usize, 0usize);
+    while t < active || e < bufs.extra_k.len() {
+        let kt = if t < active { bufs.slot[t] } else { u32::MAX };
+        let ke = if e < bufs.extra_k.len() {
+            bufs.extra_k[e]
+        } else {
+            u32::MAX
+        };
+        if kt < ke {
+            acc += renorm_signed(bufs.esum[t], bufs.prod[t]);
+            t += 1;
+        } else {
+            acc += bufs.extra_v[e];
+            e += 1;
+        }
+    }
+    acc
 }
 
 /// The blocked decompose-once **signed** kernel: `C = A·B` over
@@ -117,19 +208,16 @@ pub fn approx_matmul_prepared_signed(
 
     let threads = parallel::max_threads();
     let block = gemm_row_block(rows);
+    // Resolve the design's explicit-SIMD kernel descriptor once per
+    // GEMM; `None` keeps every element on the scalar-batch engine.
+    #[cfg(feature = "simd")]
+    let kernel = m.simd_kernel();
     let mut out = vec![0f32; rows * cols];
     let partials: Vec<Option<Vec<f32>>> =
         parallel::par_chunks_mut(&mut out, block * cols, threads, |bi, chunk| {
-            // Per-task staging for one k-chain: signed mantissa pairs,
-            // their products, the exponent sum and k index of each
-            // batched term, and the non-finite fallback terms.
-            let mut ma = vec![0i32; inner];
-            let mut mb = vec![0i32; inner];
-            let mut prod = vec![0i64; inner];
-            let mut esum = vec![0i32; inner];
-            let mut slot = vec![0u32; inner];
-            let mut extra_k: Vec<u32> = Vec::new();
-            let mut extra_v: Vec<f32> = Vec::new();
+            let mut bufs = SignedChainBufs::new(inner);
+            #[cfg(feature = "simd")]
+            let mut terms = vec![0u32; inner];
             let mut sums = with_col_sums.then(|| vec![0f32; cols]);
 
             let r0 = bi * block;
@@ -143,54 +231,17 @@ pub fn approx_matmul_prepared_signed(
                     for j in j0..j1 {
                         let (sb, eb, mtb) = b_packed.row(j);
                         let smb = b_packed.smant_row(j);
-                        let mut active = 0usize;
-                        extra_k.clear();
-                        extra_v.clear();
-                        for k in 0..inner {
-                            let (ex, ey) = (ea[k], eb[k]);
-                            if ex > 0
-                                && ex != EXP_NONFINITE
-                                && ey > 0
-                                && ey != EXP_NONFINITE
-                            {
-                                // Both operands normal: batch the signed
-                                // mantissa product.
-                                ma[active] = sma[k];
-                                mb[active] = smb[k];
-                                esum[active] = ex + ey;
-                                slot[active] = k as u32;
-                                active += 1;
-                            } else if ex == EXP_NONFINITE || ey == EXP_NONFINITE {
-                                // Native product fallback, replayed at
-                                // its k position below.
-                                let x = element_value(sa[k], ex, mta[k]);
-                                let y = element_value(sb[k], ey, mtb[k]);
-                                extra_k.push(k as u32);
-                                extra_v.push(x * y);
-                            }
-                            // Flushed terms contribute a signed zero —
-                            // a no-op in the k-order accumulation.
-                        }
-                        m.mul_batch(&ma[..active], &mb[..active], &mut prod[..active]);
-                        // Reassemble the chain in strict k-order: both
-                        // term lists are k-sorted, so merge them.
-                        let mut acc = 0f32;
-                        let (mut t, mut e) = (0usize, 0usize);
-                        while t < active || e < extra_k.len() {
-                            let kt = if t < active { slot[t] } else { u32::MAX };
-                            let ke = if e < extra_k.len() {
-                                extra_k[e]
-                            } else {
-                                u32::MAX
-                            };
-                            if kt < ke {
-                                acc += renorm_signed(esum[t], prod[t]);
-                                t += 1;
-                            } else {
-                                acc += extra_v[e];
-                                e += 1;
-                            }
-                        }
+                        let a_row = (sa, ea, mta, sma);
+                        let b_row = (sb, eb, mtb, smb);
+                        #[cfg(feature = "simd")]
+                        let acc = match kernel {
+                            Some(sk) => crate::mult::simd::signed_chain_sum(
+                                sk, a_row, b_row, &mut terms,
+                            ),
+                            None => chain_sum_signed(m, a_row, b_row, &mut bufs),
+                        };
+                        #[cfg(not(feature = "simd"))]
+                        let acc = chain_sum_signed(m, a_row, b_row, &mut bufs);
                         let v = match bias {
                             Some(b) => acc + b[j],
                             None => acc,

@@ -116,6 +116,15 @@ pub trait SignedMultiplier: Send + Sync {
             *o = self.mul(x, y);
         }
     }
+
+    /// Signed twin of [`super::Multiplier::simd_kernel`]: the
+    /// explicit-SIMD GEMM kernel descriptor, when one exists (`simd`
+    /// feature only); `None` keeps the prepared signed GEMM on the
+    /// scalar-batch chain engine.
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<crate::mult::simd::SignedKernel<'_>> {
+        None
+    }
 }
 
 /// Shared length guard for `mul_batch` implementations.
@@ -144,6 +153,11 @@ impl SignedMultiplier for SignedExact {
     }
     // `mul_batch` default: already a monomorphized widening-multiply
     // loop for this impl.
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<crate::mult::simd::SignedKernel<'_>> {
+        Some(crate::mult::simd::SignedKernel::Exact)
+    }
 }
 
 /// The signed mantissa a prepared f32 element feeds a

@@ -48,8 +48,21 @@ impl SignedMultiplier for SignedDrum {
             p
         }
     }
-    // `mul_batch` default suffices: the monomorphized loop over `mul`
-    // is already the abs + leading-zero + shift kernel.
+    // Scalar builds keep the `mul_batch` default: the monomorphized
+    // loop over `mul` is already the abs + leading-zero + shift kernel.
+
+    /// Explicit vector kernel (`simd` feature) — bit-identical to the
+    /// default loop (`tests/simd_parity.rs`).
+    #[cfg(feature = "simd")]
+    fn mul_batch(&self, a: &[i32], b: &[i32], out: &mut [i64]) {
+        super::check_signed_batch_lens(a, b, out);
+        crate::mult::simd::sdrum_mul_batch(self.core.k(), a, b, out);
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<crate::mult::simd::SignedKernel<'_>> {
+        Some(crate::mult::simd::SignedKernel::SDrum { k: self.core.k() })
+    }
 }
 
 #[cfg(test)]

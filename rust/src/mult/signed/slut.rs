@@ -153,7 +153,11 @@ impl SignedMultiplier for SignedLut {
         shift_signed_saturating(self.lookup(ia, ib), sa + sb)
     }
 
-    /// Reduce + load loop, bit-identical to the scalar LUT path.
+    /// Reduce + load loop, bit-identical to the scalar LUT path. Kept
+    /// scalar even under the `simd` feature for the same reason as the
+    /// unsigned backend: only the GEMM's mantissa domain makes the
+    /// reduction a constant shift, and there [`SignedLut::simd_kernel`]
+    /// hands the prepared kernel the flat table directly.
     fn mul_batch(&self, a: &[i32], b: &[i32], out: &mut [i64]) {
         check_signed_batch_lens(a, b, out);
         for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
@@ -161,6 +165,15 @@ impl SignedMultiplier for SignedLut {
             let (iy, sy) = self.reduce(y);
             *o = shift_signed_saturating(self.lookup(ix, iy), sx + sy);
         }
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<crate::mult::simd::SignedKernel<'_>> {
+        Some(crate::mult::simd::SignedKernel::Flat {
+            table: &self.table,
+            bits: self.bits,
+            half: self.half,
+        })
     }
 }
 

@@ -1,0 +1,225 @@
+//! Vector batch kernels: the `simd`-feature bodies of the hot designs'
+//! `mul_batch`, plus the per-block cores the GEMM chain microkernel
+//! ([`super::chain`]) reuses on mantissa lanes.
+//!
+//! Every public function must stay bit-identical to the design's
+//! scalar `mul` loop (`tests/simd_parity.rs` pins this across the full
+//! operand edge set; `tools/check_simd_recipes.py` cross-validates the
+//! branchless recipes). Tails are handled by zero-padding the final
+//! sub-[`LANES`] block: a zero operand produces a zero product in
+//! every kernel here, so padding lanes are inert and their outputs are
+//! simply not copied back.
+
+use std::simd::prelude::*;
+
+use super::{I32s, I64s, U32s, U64s, LANES};
+
+/// DRUM's dynamic-range reduction, lane-wise: `(kept bits with forced
+/// LSB, shift)` per lane; zero lanes reduce to `(0, 0)`.
+#[inline]
+pub(super) fn drum_reduce(v: U32s, k: U32s) -> (U32s, U32s) {
+    let zero = U32s::splat(0);
+    let nz = v.simd_ne(zero);
+    // Zero lanes run the core on a dummy 1 (msb 0, never reduced) and
+    // are zeroed again at the end — keeps `31 - leading_zeros` and the
+    // shifts in range without per-lane branches.
+    let vv = nz.select(v, U32s::splat(1));
+    let msb = U32s::splat(31) - vv.leading_zeros();
+    let big = msb.simd_ge(k);
+    let shift = big.select(msb + U32s::splat(1) - k, zero);
+    let t = big.select((vv >> shift) | U32s::splat(1), vv);
+    (nz.select(t, zero), shift)
+}
+
+/// One block of DRUM-k products. `k >= 3` (enforced by `Drum::new`)
+/// bounds each operand shift at 29, so the recombination shift stays
+/// below 64.
+#[inline]
+pub(super) fn drum_block(a: U32s, b: U32s, k: U32s) -> U64s {
+    let (ta, sa) = drum_reduce(a, k);
+    let (tb, sb) = drum_reduce(b, k);
+    (ta.cast::<u64>() * tb.cast::<u64>()) << (sa + sb).cast::<u64>()
+}
+
+/// One block of truncation products: mask the low k bits, multiply.
+#[inline]
+pub(super) fn trunc_block(a: U32s, b: U32s, mask: U32s) -> U64s {
+    (a & mask).cast::<u64>() * (b & mask).cast::<u64>()
+}
+
+const FRAC_MASK: u64 = (1u64 << 32) - 1;
+
+/// Mitchell's 32-bit fixed-point log2, lane-wise; callers route zero
+/// lanes to a dummy 1 first (`msb = 0` keeps the `32 - msb` shift at
+/// most 32, in range for u64 lanes).
+#[inline]
+fn log2_fixed(v: U32s) -> U64s {
+    let msb = U32s::splat(31) - v.leading_zeros();
+    let frac =
+        (v.cast::<u64>() << (U32s::splat(32) - msb).cast::<u64>()) & U64s::splat(FRAC_MASK);
+    (msb.cast::<u64>() << U64s::splat(32)) | frac
+}
+
+/// One block of Mitchell products: log-add-antilog with both antilog
+/// shift legs computed clamped and selected, zero lanes forced to 0.
+#[inline]
+pub(super) fn mitchell_block(a: U32s, b: U32s) -> U64s {
+    let zero32 = U32s::splat(0);
+    let nza = a.simd_ne(zero32);
+    let nzb = b.simd_ne(zero32);
+    let one = U32s::splat(1);
+    let l = log2_fixed(nza.select(a, one)) + log2_fixed(nzb.select(b, one));
+    let int = l >> U64s::splat(32);
+    let mant = U64s::splat(1u64 << 32) | (l & U64s::splat(FRAC_MASK));
+    let ge = int.simd_ge(U64s::splat(32));
+    let shl = ge.select(int - U64s::splat(32), U64s::splat(0));
+    let shr = ge.select(U64s::splat(0), U64s::splat(32) - int);
+    let p = (mant << shl) >> shr;
+    (nza & nzb).cast::<i64>().select(p, U64s::splat(0))
+}
+
+/// One block of exact 24×24 widening products.
+#[inline]
+pub(super) fn exact_block(a: U32s, b: U32s) -> U64s {
+    a.cast::<u64>() * b.cast::<u64>()
+}
+
+/// One block of signed-DRUM products: bit-preserving conditional
+/// negate to magnitudes (`i32::MIN` maps to `2^31`, exactly
+/// `unsigned_abs`), the DRUM core, then a sign-mask conditional negate
+/// of the widened product.
+#[inline]
+pub(super) fn sdrum_block(a: I32s, b: I32s, k: U32s) -> I64s {
+    let sa = a >> I32s::splat(31); // arithmetic: 0 or -1 per lane
+    let sb = b >> I32s::splat(31);
+    let mag_a = ((a ^ sa) - sa).cast::<u32>();
+    let mag_b = ((b ^ sb) - sb).cast::<u32>();
+    // DRUM's overestimate keeps the magnitude below 2^63 (the scalar
+    // path debug-asserts it), so the i64 cast is value-preserving.
+    let mag = drum_block(mag_a, mag_b, k).cast::<i64>();
+    let neg = (sa ^ sb).cast::<i64>(); // sign-extends to 0 or -1
+    (mag ^ neg) - neg
+}
+
+/// One block of radix-4 Booth products with k-bit column truncation.
+/// The recoding loop runs all 16 digit positions unconditionally —
+/// `d == 0` lanes contribute a zero partial product, no branch needed.
+/// Worst-case accumulator magnitude is `~2^61.4`, comfortably in i64.
+#[inline]
+pub(super) fn booth_block(a: I32s, b: I32s, k: u32) -> I64s {
+    let a64 = a.cast::<i64>();
+    // Two's-complement bit pattern of b, zero-extended to u64 lanes.
+    let bits = b.cast::<u32>().cast::<u64>();
+    let one = U64s::splat(1);
+    let kk = I64s::splat(k as i64);
+    let mut acc = I64s::splat(0);
+    let mut prev = U64s::splat(0);
+    for i in 0..16u64 {
+        let b0 = (bits >> U64s::splat(2 * i)) & one;
+        let b1 = (bits >> U64s::splat(2 * i + 1)) & one;
+        let d = (b0 + prev).cast::<i64>() - (b1 + b1).cast::<i64>();
+        prev = b1;
+        let pp = (d * a64) << I64s::splat(2 * i as i64);
+        acc += (pp >> kk) << kk;
+    }
+    acc
+}
+
+/// Zero-pad a sub-[`LANES`] remainder pair into full blocks.
+#[inline]
+fn tail_u32(a: &[u32], b: &[u32]) -> (U32s, U32s) {
+    let mut ta = [0u32; LANES];
+    let mut tb = [0u32; LANES];
+    ta[..a.len()].copy_from_slice(a);
+    tb[..b.len()].copy_from_slice(b);
+    (U32s::from_array(ta), U32s::from_array(tb))
+}
+
+/// Signed twin of [`tail_u32`].
+#[inline]
+fn tail_i32(a: &[i32], b: &[i32]) -> (I32s, I32s) {
+    let mut ta = [0i32; LANES];
+    let mut tb = [0i32; LANES];
+    ta[..a.len()].copy_from_slice(a);
+    tb[..b.len()].copy_from_slice(b);
+    (I32s::from_array(ta), I32s::from_array(tb))
+}
+
+/// DRUM-k over paired slices (lengths validated by the caller's
+/// `check_batch_lens`).
+pub(crate) fn drum_mul_batch(k: u32, a: &[u32], b: &[u32], out: &mut [u64]) {
+    let kk = U32s::splat(k);
+    let mut i = 0;
+    while i + LANES <= a.len() {
+        let p = drum_block(U32s::from_slice(&a[i..]), U32s::from_slice(&b[i..]), kk);
+        p.copy_to_slice(&mut out[i..i + LANES]);
+        i += LANES;
+    }
+    if i < a.len() {
+        let (ta, tb) = tail_u32(&a[i..], &b[i..]);
+        let p = drum_block(ta, tb, kk).to_array();
+        out[i..].copy_from_slice(&p[..a.len() - i]);
+    }
+}
+
+/// Truncation-k over paired slices.
+pub(crate) fn trunc_mul_batch(k: u32, a: &[u32], b: &[u32], out: &mut [u64]) {
+    let mask = U32s::splat(!0u32 << k);
+    let mut i = 0;
+    while i + LANES <= a.len() {
+        let p = trunc_block(U32s::from_slice(&a[i..]), U32s::from_slice(&b[i..]), mask);
+        p.copy_to_slice(&mut out[i..i + LANES]);
+        i += LANES;
+    }
+    if i < a.len() {
+        let (ta, tb) = tail_u32(&a[i..], &b[i..]);
+        let p = trunc_block(ta, tb, mask).to_array();
+        out[i..].copy_from_slice(&p[..a.len() - i]);
+    }
+}
+
+/// Mitchell over paired slices.
+pub(crate) fn mitchell_mul_batch(a: &[u32], b: &[u32], out: &mut [u64]) {
+    let mut i = 0;
+    while i + LANES <= a.len() {
+        let p = mitchell_block(U32s::from_slice(&a[i..]), U32s::from_slice(&b[i..]));
+        p.copy_to_slice(&mut out[i..i + LANES]);
+        i += LANES;
+    }
+    if i < a.len() {
+        let (ta, tb) = tail_u32(&a[i..], &b[i..]);
+        let p = mitchell_block(ta, tb).to_array();
+        out[i..].copy_from_slice(&p[..a.len() - i]);
+    }
+}
+
+/// Signed DRUM-k over paired slices.
+pub(crate) fn sdrum_mul_batch(k: u32, a: &[i32], b: &[i32], out: &mut [i64]) {
+    let kk = U32s::splat(k);
+    let mut i = 0;
+    while i + LANES <= a.len() {
+        let p = sdrum_block(I32s::from_slice(&a[i..]), I32s::from_slice(&b[i..]), kk);
+        p.copy_to_slice(&mut out[i..i + LANES]);
+        i += LANES;
+    }
+    if i < a.len() {
+        let (ta, tb) = tail_i32(&a[i..], &b[i..]);
+        let p = sdrum_block(ta, tb, kk).to_array();
+        out[i..].copy_from_slice(&p[..a.len() - i]);
+    }
+}
+
+/// Booth-k over paired slices.
+pub(crate) fn booth_mul_batch(k: u32, a: &[i32], b: &[i32], out: &mut [i64]) {
+    let mut i = 0;
+    while i + LANES <= a.len() {
+        let p = booth_block(I32s::from_slice(&a[i..]), I32s::from_slice(&b[i..]), k);
+        p.copy_to_slice(&mut out[i..i + LANES]);
+        i += LANES;
+    }
+    if i < a.len() {
+        let (ta, tb) = tail_i32(&a[i..], &b[i..]);
+        let p = booth_block(ta, tb, k).to_array();
+        out[i..].copy_from_slice(&p[..a.len() - i]);
+    }
+}

@@ -1,0 +1,333 @@
+//! The register-blocked GEMM chain microkernel (`simd` feature).
+//!
+//! `approx_matmul_prepared{,_signed}` call [`unsigned_chain_sum`] /
+//! [`signed_chain_sum`] once per output element when the design
+//! exposes a kernel descriptor: the operand-class test, the mantissa
+//! products, and the sign/exponent renormalization all run [`LANES`]
+//! k-positions at a time, writing each term's f32 **bits** into a
+//! per-task buffer; the final accumulation then walks that buffer
+//! scalar, in strict k-order, so every output is bit-identical to the
+//! scalar-batch chain (and therefore to `approx_matmul_reference`).
+//!
+//! Why a full per-k term buffer instead of the scalar engine's compact
+//! lists: flushed, skipped and padding lanes store `+0.0`, and adding
+//! `+0.0` to an f32 accumulator is a bit-level no-op — the accumulator
+//! can never be `-0.0` mid-chain (it starts at `+0.0`, and IEEE
+//! round-to-nearest only produces `-0.0` from `(-0.0) + (-0.0)`). The
+//! scalar engine's skipping of flushed terms relies on the very same
+//! argument, so the two paths agree bit for bit
+//! (`tools/check_simd_recipes.py` checks the equivalence on chains
+//! seeded with inf/NaN/signed-zero/subnormal terms). Non-finite
+//! k-positions are patched into the buffer scalar, with the same
+//! native-f32 product fallback as the scalar engine.
+
+use std::simd::prelude::*;
+
+use crate::mult::prepared::{element_value, EXP_FLUSHED, EXP_NONFINITE};
+
+use super::batch::{
+    booth_block, drum_block, exact_block, mitchell_block, sdrum_block, trunc_block,
+};
+use super::{I32s, I64s, SignedKernel, U32s, U64s, UnsignedKernel, LANES};
+
+/// In-range dummy mantissa routed into masked-off lanes: keeps every
+/// kernel's lane math (shifts, flat-table indices) well-defined
+/// without affecting results — dummy lanes are selected away after the
+/// block. `EXP_NONFINITE` elements in particular carry raw f32 bits in
+/// the mantissa plane, which must never reach a table gather.
+const DUMMY_MANT: u32 = 1 << 23;
+
+/// The vector transcription of `matmul::renorm(sign, esum, 0, p)`,
+/// returning f32 bits per lane. Select order matters and mirrors the
+/// scalar early-returns in reverse: packed → overflow → underflow →
+/// `p == 0` last.
+#[inline]
+fn renorm_bits(sign: U32s, esum: I32s, p: U64s) -> U32s {
+    let pz = p.simd_eq(U64s::splat(0));
+    // Zero lanes run on a dummy 1 so `63 - leading_zeros` stays valid.
+    let pp = pz.select(U64s::splat(1), p);
+    let q = U64s::splat(63) - pp.leading_zeros();
+    let gt = q.simd_gt(U64s::splat(23));
+    // Both mantissa legs with clamped shifts, then select — `23 - q`
+    // would be out of range on `gt` lanes and vice versa.
+    let shr = gt.select(q - U64s::splat(23), U64s::splat(0));
+    let mant_hi = (pp >> shr).cast::<u32>();
+    let gt32 = gt.cast::<i32>();
+    let shl = gt32.select(U32s::splat(0), U32s::splat(23) - q.cast::<u32>());
+    let mant_lo = pp.cast::<u32>() << shl;
+    let mant = gt32.select(mant_hi, mant_lo);
+    let er = esum + q.cast::<i32>() - I32s::splat(173);
+    let sign31 = sign << U32s::splat(31);
+    let packed =
+        sign31 | (er.cast::<u32>() << U32s::splat(23)) | (mant & U32s::splat(0x007F_FFFF));
+    let bits = er
+        .simd_ge(I32s::splat(255))
+        .select(sign31 | U32s::splat(0x7F80_0000), packed);
+    let bits = er.simd_le(I32s::splat(0)).select(sign31, bits);
+    pz.cast::<i32>().select(sign31, bits)
+}
+
+/// Flat-table LUT products on mantissa-domain lanes (`[2^23, 2^24)`):
+/// the LUT's dynamic-range reduction collapses to the constant shift
+/// `24 - bits` per operand, so the product table itself is the inner
+/// loop, followed by the lane-wise `shift_saturating` recombination.
+#[inline]
+fn lut_flat_block(table: &[u64], bits: u32, ma: U32s, mb: U32s) -> U64s {
+    let shift = U32s::splat(24 - bits);
+    let idx = ((ma >> shift) << U32s::splat(bits)) | (mb >> shift);
+    let mut pa = [0u64; LANES];
+    for (p, ix) in pa.iter_mut().zip(idx.to_array()) {
+        *p = table[ix as usize];
+    }
+    let v = U64s::from_array(pa);
+    let total = U64s::splat(2 * (24 - bits) as u64);
+    let ok = v.leading_zeros().simd_ge(total);
+    let r = ok.select(v << total, U64s::splat(u64::MAX));
+    v.simd_eq(U64s::splat(0)).select(U64s::splat(0), r)
+}
+
+/// Signed twin of [`lut_flat_block`]: `|v| ∈ [2^23, 2^24)` lanes make
+/// the signed reduction the constant magnitude shift `25 - bits`, with
+/// the sign folded back before the `(ia + half, ib + half)` table
+/// index, then the lane-wise `shift_signed_saturating` recombination
+/// (`total >= 26 > 0`, so its shift-by-zero leg never applies here).
+#[inline]
+fn slut_flat_block(table: &[i64], bits: u32, half: i32, ma: I32s, mb: I32s) -> I64s {
+    let shift = U32s::splat(25 - bits);
+    let sa = ma >> I32s::splat(31);
+    let sb = mb >> I32s::splat(31);
+    let mag_a = (((ma ^ sa) - sa).cast::<u32>() >> shift).cast::<i32>();
+    let mag_b = (((mb ^ sb) - sb).cast::<u32>() >> shift).cast::<i32>();
+    let ia = ((mag_a ^ sa) - sa) + I32s::splat(half);
+    let ib = ((mag_b ^ sb) - sb) + I32s::splat(half);
+    let idx = (ia.cast::<u32>() << U32s::splat(bits)) | ib.cast::<u32>();
+    let mut pa = [0i64; LANES];
+    for (p, ix) in pa.iter_mut().zip(idx.to_array()) {
+        *p = table[ix as usize];
+    }
+    let v = I64s::from_array(pa);
+    let total = 2 * (25 - bits);
+    let negm = v >> I64s::splat(63);
+    let mag = ((v ^ negm) - negm).cast::<u64>();
+    let ok = mag.leading_zeros().simd_gt(U64s::splat(total as u64));
+    let sat = v
+        .simd_lt(I64s::splat(0))
+        .select(I64s::splat(i64::MIN), I64s::splat(i64::MAX));
+    let r = ok.cast::<i64>().select(v << I64s::splat(total as i64), sat);
+    v.simd_eq(I64s::splat(0)).select(I64s::splat(0), r)
+}
+
+/// One [`LANES`]-wide block of an unsigned k-chain: class test, dummy
+/// routing, mantissa products, vector renorm. Returns each lane's term
+/// as f32 bits (`+0.0` for flushed/skipped lanes) plus a bitmask of
+/// the lanes needing the scalar non-finite fallback.
+#[inline]
+fn chain_block(
+    kernel: UnsignedKernel<'_>,
+    ex: I32s,
+    ey: I32s,
+    mx: U32s,
+    my: U32s,
+    sx: U32s,
+    sy: U32s,
+) -> (U32s, u64) {
+    let zero = I32s::splat(0);
+    let nf = I32s::splat(EXP_NONFINITE);
+    let both = ex.simd_gt(zero) & ex.simd_ne(nf) & ey.simd_gt(zero) & ey.simd_ne(nf);
+    let dm = U32s::splat(DUMMY_MANT);
+    let p = match kernel {
+        UnsignedKernel::Exact => exact_block(both.select(mx, dm), both.select(my, dm)),
+        UnsignedKernel::Drum { k } => {
+            drum_block(both.select(mx, dm), both.select(my, dm), U32s::splat(k))
+        }
+        UnsignedKernel::Trunc { k } => {
+            trunc_block(both.select(mx, dm), both.select(my, dm), U32s::splat(!0u32 << k))
+        }
+        UnsignedKernel::Mitchell => {
+            mitchell_block(both.select(mx, dm), both.select(my, dm))
+        }
+        UnsignedKernel::Flat { table, bits } => {
+            lut_flat_block(table, bits, both.select(mx, dm), both.select(my, dm))
+        }
+    };
+    let bits = renorm_bits(sx ^ sy, ex + ey, p);
+    // A non-finite exponent on either side excludes the lane from
+    // `both` by construction, so the two masks are disjoint.
+    let nonf = ex.simd_eq(nf) | ey.simd_eq(nf);
+    (both.select(bits, U32s::splat(0)), nonf.to_bitmask())
+}
+
+/// Signed twin of [`chain_block`]: the product's own sign drives the
+/// renorm (`renorm_signed`), operands come from the signed-mantissa
+/// plane.
+#[inline]
+fn signed_chain_block(
+    kernel: SignedKernel<'_>,
+    ex: I32s,
+    ey: I32s,
+    vx: I32s,
+    vy: I32s,
+) -> (U32s, u64) {
+    let zero = I32s::splat(0);
+    let nf = I32s::splat(EXP_NONFINITE);
+    let both = ex.simd_gt(zero) & ex.simd_ne(nf) & ey.simd_gt(zero) & ey.simd_ne(nf);
+    let dm = I32s::splat(DUMMY_MANT as i32);
+    let ka = both.select(vx, dm);
+    let kb = both.select(vy, dm);
+    let p = match kernel {
+        SignedKernel::Exact => ka.cast::<i64>() * kb.cast::<i64>(),
+        SignedKernel::SDrum { k } => sdrum_block(ka, kb, U32s::splat(k)),
+        SignedKernel::Booth { k } => booth_block(ka, kb, k),
+        SignedKernel::Flat { table, bits, half } => {
+            slut_flat_block(table, bits, half, ka, kb)
+        }
+    };
+    // renorm_signed: sign from the product, magnitude via the same
+    // wrapping conditional negate (`i64::MIN` → `2^63` == unsigned_abs).
+    let negm = p >> I64s::splat(63);
+    let mag = ((p ^ negm) - negm).cast::<u64>();
+    let sign = (negm & I64s::splat(1)).cast::<u32>();
+    let bits = renorm_bits(sign, ex + ey, mag);
+    let nonf = ex.simd_eq(nf) | ey.simd_eq(nf);
+    (both.select(bits, U32s::splat(0)), nonf.to_bitmask())
+}
+
+/// Patch the non-finite lanes of one block into the term buffer: the
+/// same native-f32 product fallback the scalar engine uses, replayed
+/// at the exact k position.
+#[inline]
+fn patch_nonfinite(
+    mut nfm: u64,
+    k0: usize,
+    a_row: (&[u8], &[i32], &[u32]),
+    b_row: (&[u8], &[i32], &[u32]),
+    terms: &mut [u32],
+) {
+    let (sa, ea, ma) = a_row;
+    let (sb, eb, mb) = b_row;
+    while nfm != 0 {
+        let k = k0 + nfm.trailing_zeros() as usize;
+        nfm &= nfm - 1;
+        let x = element_value(sa[k], ea[k], ma[k]);
+        let y = element_value(sb[k], eb[k], mb[k]);
+        terms[k] = (x * y).to_bits();
+    }
+}
+
+/// One output element's unsigned k-chain through the vector
+/// microkernel. `terms` is the caller's per-task scratch (`len ==
+/// inner`); the return value is bit-identical to the scalar-batch
+/// engine's sum.
+pub(crate) fn unsigned_chain_sum(
+    kernel: UnsignedKernel<'_>,
+    a_row: (&[u8], &[i32], &[u32]),
+    b_row: (&[u8], &[i32], &[u32]),
+    terms: &mut [u32],
+) -> f32 {
+    let (sa, ea, ma) = a_row;
+    let (sb, eb, mb) = b_row;
+    let inner = ea.len();
+    debug_assert_eq!(terms.len(), inner);
+    let mut k0 = 0usize;
+    while k0 + LANES <= inner {
+        let (bits, nfm) = chain_block(
+            kernel,
+            I32s::from_slice(&ea[k0..]),
+            I32s::from_slice(&eb[k0..]),
+            U32s::from_slice(&ma[k0..]),
+            U32s::from_slice(&mb[k0..]),
+            Simd::<u8, LANES>::from_slice(&sa[k0..]).cast::<u32>(),
+            Simd::<u8, LANES>::from_slice(&sb[k0..]).cast::<u32>(),
+        );
+        bits.copy_to_slice(&mut terms[k0..k0 + LANES]);
+        patch_nonfinite(nfm, k0, a_row, b_row, terms);
+        k0 += LANES;
+    }
+    if k0 < inner {
+        // Tail block padded with flushed exponents and dummy mantissas:
+        // padding lanes classify as skipped and store `+0.0`.
+        let n = inner - k0;
+        let mut ex = [EXP_FLUSHED; LANES];
+        let mut ey = [EXP_FLUSHED; LANES];
+        let mut mx = [DUMMY_MANT; LANES];
+        let mut my = [DUMMY_MANT; LANES];
+        let mut sx = [0u8; LANES];
+        let mut sy = [0u8; LANES];
+        ex[..n].copy_from_slice(&ea[k0..]);
+        ey[..n].copy_from_slice(&eb[k0..]);
+        mx[..n].copy_from_slice(&ma[k0..]);
+        my[..n].copy_from_slice(&mb[k0..]);
+        sx[..n].copy_from_slice(&sa[k0..]);
+        sy[..n].copy_from_slice(&sb[k0..]);
+        let (bits, nfm) = chain_block(
+            kernel,
+            I32s::from_array(ex),
+            I32s::from_array(ey),
+            U32s::from_array(mx),
+            U32s::from_array(my),
+            Simd::<u8, LANES>::from_array(sx).cast::<u32>(),
+            Simd::<u8, LANES>::from_array(sy).cast::<u32>(),
+        );
+        terms[k0..].copy_from_slice(&bits.to_array()[..n]);
+        patch_nonfinite(nfm, k0, a_row, b_row, terms);
+    }
+    // Strict k-order scalar accumulation — the determinism contract.
+    let mut acc = 0f32;
+    for &t in terms[..inner].iter() {
+        acc += f32::from_bits(t);
+    }
+    acc
+}
+
+/// Signed twin of [`unsigned_chain_sum`]; `a_row`/`b_row` additionally
+/// carry the signed-mantissa plane (the sign/mantissa planes are only
+/// read for the non-finite fallback).
+pub(crate) fn signed_chain_sum(
+    kernel: SignedKernel<'_>,
+    a_row: (&[u8], &[i32], &[u32], &[i32]),
+    b_row: (&[u8], &[i32], &[u32], &[i32]),
+    terms: &mut [u32],
+) -> f32 {
+    let (sa, ea, ma, va) = a_row;
+    let (sb, eb, mb, vb) = b_row;
+    let inner = ea.len();
+    debug_assert_eq!(terms.len(), inner);
+    let mut k0 = 0usize;
+    while k0 + LANES <= inner {
+        let (bits, nfm) = signed_chain_block(
+            kernel,
+            I32s::from_slice(&ea[k0..]),
+            I32s::from_slice(&eb[k0..]),
+            I32s::from_slice(&va[k0..]),
+            I32s::from_slice(&vb[k0..]),
+        );
+        bits.copy_to_slice(&mut terms[k0..k0 + LANES]);
+        patch_nonfinite(nfm, k0, (sa, ea, ma), (sb, eb, mb), terms);
+        k0 += LANES;
+    }
+    if k0 < inner {
+        let n = inner - k0;
+        let mut ex = [EXP_FLUSHED; LANES];
+        let mut ey = [EXP_FLUSHED; LANES];
+        let mut vx = [DUMMY_MANT as i32; LANES];
+        let mut vy = [DUMMY_MANT as i32; LANES];
+        ex[..n].copy_from_slice(&ea[k0..]);
+        ey[..n].copy_from_slice(&eb[k0..]);
+        vx[..n].copy_from_slice(&va[k0..]);
+        vy[..n].copy_from_slice(&vb[k0..]);
+        let (bits, nfm) = signed_chain_block(
+            kernel,
+            I32s::from_array(ex),
+            I32s::from_array(ey),
+            I32s::from_array(vx),
+            I32s::from_array(vy),
+        );
+        terms[k0..].copy_from_slice(&bits.to_array()[..n]);
+        patch_nonfinite(nfm, k0, (sa, ea, ma), (sb, eb, mb), terms);
+    }
+    let mut acc = 0f32;
+    for &t in terms[..inner].iter() {
+        acc += f32::from_bits(t);
+    }
+    acc
+}

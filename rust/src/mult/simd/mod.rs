@@ -1,0 +1,90 @@
+//! Explicit `std::simd` microkernels for the hot multiplier designs
+//! (`simd` cargo feature, nightly-only: `#![feature(portable_simd)]`).
+//!
+//! Two layers live here, both pinned **bit-identical** to the scalar
+//! paths they replace (`tests/simd_parity.rs`; the branchless recipes
+//! themselves are cross-validated against scalar transcriptions by
+//! `tools/check_simd_recipes.py`):
+//!
+//! * **Batch kernels** ([`batch`]) — the `simd`-feature bodies of
+//!   `mul_batch` for `drum`/`trunc`/`mitchell` and the signed
+//!   `sdrum`/`booth`: [`LANES`]-wide vector loops over the operand
+//!   slices with a zero-padded final block (zero operands are inert in
+//!   every design — product 0 — so padding lanes never leak).
+//! * **Chain kernels** ([`chain`]) — the register-blocked microkernel
+//!   `approx_matmul_prepared{,_signed}` dispatch to when the design
+//!   reports an [`UnsignedKernel`] / [`SignedKernel`]: vectorized
+//!   operand-class test, mantissa products, and sign/exponent
+//!   renormalization, with the final f32 accumulation kept strict
+//!   k-order scalar so trajectories stay bit-identical and
+//!   thread-count invariant.
+//!
+//! Lane discipline throughout: no per-lane control flow. Zero and
+//! masked-off lanes are routed through inert dummy operands by
+//! selects, and every vector shift amount is select-clamped into
+//! range *before* the shift (out-of-range lanes in a vector shift are
+//! undefined behavior, unlike scalar Rust's panic).
+
+use std::simd::prelude::*;
+
+pub(crate) mod batch;
+pub(crate) mod chain;
+
+pub(crate) use batch::{
+    booth_mul_batch, drum_mul_batch, mitchell_mul_batch, sdrum_mul_batch,
+    trunc_mul_batch,
+};
+pub(crate) use chain::{signed_chain_sum, unsigned_chain_sum};
+
+/// Vector width of every kernel, in 32-bit lanes. Eight lanes keeps
+/// the widened 64-bit intermediates at 512 bits — two AVX2 registers
+/// or one AVX-512/SVE register — without spilling on 128-bit NEON
+/// (four 128-bit ops), and the tail handling cheap for the short
+/// k-chains dense layers produce.
+pub const LANES: usize = 8;
+
+pub(crate) type U32s = Simd<u32, LANES>;
+pub(crate) type I32s = Simd<i32, LANES>;
+pub(crate) type U64s = Simd<u64, LANES>;
+pub(crate) type I64s = Simd<i64, LANES>;
+
+/// Which vector core evaluates an unsigned design's mantissa products
+/// inside the prepared GEMM ([`Multiplier::simd_kernel`] returns one).
+///
+/// Only meaningful in the GEMM's mantissa domain — every operand in
+/// `[2^23, 2^24)`. `Flat` in particular turns the LUT's dynamic-range
+/// reduction into a *constant* shift (`24 - bits` per operand, the
+/// leading-one reduction for exactly that domain), making the product
+/// table the inner loop; it is **not** a general-domain `mul`.
+///
+/// [`Multiplier::simd_kernel`]: super::Multiplier::simd_kernel
+#[derive(Clone, Copy)]
+pub enum UnsignedKernel<'a> {
+    /// Exact 24×24 widening product.
+    Exact,
+    /// DRUM-k leading-one truncation with forced LSB.
+    Drum { k: u32 },
+    /// Low-k mask-and-multiply truncation.
+    Trunc { k: u32 },
+    /// Mitchell's log/antilog approximation.
+    Mitchell,
+    /// Flat product-table GEMM over the LUT's own table.
+    Flat { table: &'a [u64], bits: u32 },
+}
+
+/// Signed twin of [`UnsignedKernel`], over two's-complement mantissa
+/// lanes ([`SignedMultiplier::simd_kernel`] returns one). Same
+/// mantissa-domain caveat: `Flat` assumes `|v| ∈ [2^23, 2^24)`.
+///
+/// [`SignedMultiplier::simd_kernel`]: super::signed::SignedMultiplier::simd_kernel
+#[derive(Clone, Copy)]
+pub enum SignedKernel<'a> {
+    /// Exact signed widening product.
+    Exact,
+    /// Sign-magnitude DRUM-k core.
+    SDrum { k: u32 },
+    /// Radix-4 Booth recoding with k-bit column truncation.
+    Booth { k: u32 },
+    /// Flat signed product-table GEMM.
+    Flat { table: &'a [i64], bits: u32, half: i32 },
+}

@@ -34,14 +34,25 @@ impl Multiplier for Truncation {
         (a & mask) as u64 * (b & mask) as u64
     }
 
-    /// Mask-and-multiply loop — the ideal auto-vectorization target;
-    /// bit-identical to the scalar path.
+    /// Mask-and-multiply loop (the ideal auto-vectorization target) or
+    /// the explicit vector kernel under the `simd` feature —
+    /// bit-identical to the scalar path either way.
     fn mul_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         check_batch_lens(a, b, out);
-        let mask = !0u32 << self.k;
-        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
-            *o = (x & mask) as u64 * (y & mask) as u64;
+        #[cfg(feature = "simd")]
+        super::simd::trunc_mul_batch(self.k, a, b, out);
+        #[cfg(not(feature = "simd"))]
+        {
+            let mask = !0u32 << self.k;
+            for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+                *o = (x & mask) as u64 * (y & mask) as u64;
+            }
         }
+    }
+
+    #[cfg(feature = "simd")]
+    fn simd_kernel(&self) -> Option<super::simd::UnsignedKernel<'_>> {
+        Some(super::simd::UnsignedKernel::Trunc { k: self.k })
     }
 }
 

@@ -14,6 +14,11 @@
 //!   contention-free load balancing with no queues to tune.
 //! * **Panics propagate**: a panicking worker aborts the scope and
 //!   re-panics on the caller, so property tests see their assertions.
+//!
+//! The `simd` cargo feature changes none of this: vector microkernels
+//! replace the *per-task computation* inside a chunk, never the chunk
+//! schedule or merge order, so thread-count invariance and simd-on ≡
+//! simd-off bit-identity compose (`tests/simd_parity.rs` pins both).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -1,0 +1,442 @@
+//! Feature-matrix bit-identity suite for the `simd` microkernels.
+//!
+//! Every test here pins a public-API result against a **scalar
+//! oracle** that never touches `mul_batch` or the GEMM chain engine:
+//! per-element `Multiplier::mul` / `SignedMultiplier::mul`, and the
+//! reference GEMM walks (`approx_matmul_reference`,
+//! `approx_matmul_reference_signed` — one `approx_mul_f32*` per
+//! product, strict k-order f32 accumulation). The suite compiles and
+//! must pass **identically with and without `--features simd`**; CI
+//! runs both builds, which is what proves simd-on ≡ simd-off
+//! bit-identity for `mul_batch`, `characterize*`, and the prepared
+//! unsigned/signed GEMMs across designs × operand layouts × thread
+//! counts — including chains carrying inf/NaN/subnormal operands.
+//!
+//! Shapes are chosen to cross the vector-width boundaries: inner
+//! dimensions below, at, and away from multiples of the 8-wide lane
+//! count, so both the main vector loop and the padded-tail path of
+//! every kernel are exercised.
+
+use approxmul::mult::signed::{
+    approx_matmul_prepared_signed, approx_matmul_reference_signed,
+    approx_matmul_signed, approx_matmul_signed_nt, approx_matmul_signed_tn,
+    by_name as signed_by_name, characterize_signed_threads, SignedMultiplier,
+};
+use approxmul::mult::{
+    approx_matmul, approx_matmul_nt, approx_matmul_prepared, approx_matmul_reference,
+    approx_matmul_tn, by_name, characterize_threads, gemm_row_block, Multiplier,
+    OperandDist, PreparedMatrix, GEMM_ROW_BLOCK,
+};
+use approxmul::parallel;
+use approxmul::rng::Xoshiro256;
+
+/// Unsigned designs under test: every design with an explicit vector
+/// kernel (drum/trunc/mitchell/exact, plus the flat-table LUT via the
+/// GEMM path) and two that stay on the scalar engine (roba, bam8) as
+/// dispatch-fallback coverage. k values sit at both domain edges.
+const DESIGNS: &[&str] = &[
+    "exact", "drum3", "drum6", "drum8", "drum32", "trunc1", "trunc8", "trunc31",
+    "mitchell", "roba", "bam8", "lut8:drum6",
+];
+
+/// Signed designs under test, same policy (sroba is the scalar-engine
+/// fallback; booth0/booth32 are the truncation-domain edges).
+const SIGNED_DESIGNS: &[&str] = &[
+    "sexact", "sdrum3", "sdrum6", "sdrum32", "booth0", "booth8", "booth24",
+    "booth32", "sroba", "slut8:sdrum6",
+];
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; src.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Random operands with special values (inf, NaN, signed zero,
+/// subnormal) planted through the chains — same recipe as
+/// `tests/prepared_gemm.rs`.
+fn operands(rows: usize, inner: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.next_u32() % 64 {
+                0 => f32::INFINITY,
+                1 => f32::NEG_INFINITY,
+                2 => f32::NAN,
+                3 => 0.0,
+                4 => -0.0,
+                5 => 1.0e-41, // subnormal -> flushed
+                _ => 2.0 * rng.next_f32() - 1.0,
+            })
+            .collect()
+    };
+    (gen(rows * inner), gen(inner * cols))
+}
+
+#[test]
+fn unsigned_mul_batch_matches_scalar_mul() {
+    // Edge operands (zero, one-bit values, mantissa-domain bounds, all
+    // ones) as a full cross product, then a random pool sliced at every
+    // length in [0, 17] so the 8-wide kernels see pure-tail, exactly-
+    // one-vector, and vector-plus-tail batches.
+    let edges: [u32; 16] = [
+        0,
+        1,
+        2,
+        3,
+        5,
+        0x80,
+        0xFFFF,
+        0x0001_0000,
+        0x007F_FFFF,
+        0x0080_0000,
+        0x00FF_FFFF,
+        0x0100_0000,
+        0x7FFF_FFFF,
+        0x8000_0000,
+        0xAAAA_5555,
+        0xFFFF_FFFF,
+    ];
+    let mut ea = Vec::new();
+    let mut eb = Vec::new();
+    for &x in &edges {
+        for &y in &edges {
+            ea.push(x);
+            eb.push(y);
+        }
+    }
+    let mut rng = Xoshiro256::new(2024);
+    let pool_a: Vec<u32> = (0..64).map(|_| rng.next_u32()).collect();
+    let pool_b: Vec<u32> = (0..64).map(|_| rng.next_u32()).collect();
+    for spec in DESIGNS {
+        let m = by_name(spec).unwrap();
+        let mut out = vec![0u64; ea.len()];
+        m.mul_batch(&ea, &eb, &mut out);
+        for i in 0..ea.len() {
+            assert_eq!(
+                out[i],
+                m.mul(ea[i], eb[i]),
+                "{spec}: edge {:#x} * {:#x}",
+                ea[i],
+                eb[i]
+            );
+        }
+        for len in 0..=17usize {
+            let (a, b) = (&pool_a[..len], &pool_b[..len]);
+            let mut out = vec![0u64; len];
+            m.mul_batch(a, b, &mut out);
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "{spec}: len {len}, i {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn signed_mul_batch_matches_scalar_mul() {
+    let edges: [i32; 16] = [
+        0,
+        1,
+        -1,
+        2,
+        -2,
+        127,
+        -128,
+        0xFFFF,
+        1 << 23,
+        -(1 << 23),
+        0x00FF_FFFF,
+        -0x00FF_FFFF,
+        0x5555_AAAA,
+        -0x1234_5678,
+        i32::MAX,
+        i32::MIN,
+    ];
+    let mut ea = Vec::new();
+    let mut eb = Vec::new();
+    for &x in &edges {
+        for &y in &edges {
+            ea.push(x);
+            eb.push(y);
+        }
+    }
+    let mut rng = Xoshiro256::new(2025);
+    let pool_a: Vec<i32> = (0..64).map(|_| rng.next_u32() as i32).collect();
+    let pool_b: Vec<i32> = (0..64).map(|_| rng.next_u32() as i32).collect();
+    for spec in SIGNED_DESIGNS {
+        let m = signed_by_name(spec).unwrap();
+        let mut out = vec![0i64; ea.len()];
+        m.mul_batch(&ea, &eb, &mut out);
+        for i in 0..ea.len() {
+            assert_eq!(
+                out[i],
+                m.mul(ea[i], eb[i]),
+                "{spec}: edge {} * {}",
+                ea[i],
+                eb[i]
+            );
+        }
+        for len in 0..=17usize {
+            let (a, b) = (&pool_a[..len], &pool_b[..len]);
+            let mut out = vec![0i64; len];
+            m.mul_batch(a, b, &mut out);
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "{spec}: len {len}, i {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn characterize_is_thread_invariant() {
+    // The characterization harness runs on `mul_batch` chunks; any two
+    // worker counts (and therefore the simd and scalar batch paths,
+    // across CI's two builds) must agree to the bit on every statistic.
+    let check = |stats: &[approxmul::mult::ErrorStats], what: &str| {
+        let s0 = &stats[0];
+        for s in &stats[1..] {
+            assert_eq!(s.mre.to_bits(), s0.mre.to_bits(), "{what}: mre");
+            assert_eq!(s.sd.to_bits(), s0.sd.to_bits(), "{what}: sd");
+            assert_eq!(s.mean_re.to_bits(), s0.mean_re.to_bits(), "{what}: mean_re");
+            assert_eq!(s.min_re.to_bits(), s0.min_re.to_bits(), "{what}: min_re");
+            assert_eq!(s.max_re.to_bits(), s0.max_re.to_bits(), "{what}: max_re");
+            assert_eq!(s.samples, s0.samples, "{what}: samples");
+        }
+    };
+    for dist in [OperandDist::Mantissa, OperandDist::Uniform32] {
+        for spec in ["drum6", "mitchell", "trunc8"] {
+            let m = by_name(spec).unwrap();
+            let stats: Vec<_> = [1usize, 3, 8]
+                .iter()
+                .map(|&t| characterize_threads(m.as_ref(), dist, 40_000, 42, t))
+                .collect();
+            check(&stats, spec);
+        }
+        for spec in ["sdrum6", "booth8"] {
+            let m = signed_by_name(spec).unwrap();
+            let stats: Vec<_> = [1usize, 3, 8]
+                .iter()
+                .map(|&t| characterize_signed_threads(m.as_ref(), dist, 40_000, 42, t))
+                .collect();
+            check(&stats, spec);
+        }
+    }
+}
+
+#[test]
+fn unsigned_gemm_matches_reference_across_layouts_and_threads() {
+    // inner = 19: two full 8-lane vectors plus a 3-element tail in
+    // every k-chain (before specials knock terms out of the batch).
+    let (rows, inner, cols) = (GEMM_ROW_BLOCK + 5, 19usize, 50usize);
+    for (di, spec) in DESIGNS.iter().enumerate() {
+        let m = by_name(spec).unwrap();
+        let (a, b) = operands(rows, inner, cols, 3000 + di as u64);
+        let want =
+            approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let a_t = transpose(&a, rows, inner); // [inner x rows]
+        let b_t = transpose(&b, inner, cols); // [cols x inner]
+        for threads in [1usize, 2, 5] {
+            parallel::set_max_threads(threads);
+            let nn = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let tn =
+                approx_matmul_tn(m.as_ref(), &a_t, &b, rows, inner, cols).unwrap();
+            let nt =
+                approx_matmul_nt(m.as_ref(), &a, &b_t, rows, inner, cols).unwrap();
+            parallel::set_max_threads(0);
+            assert_bits_eq(&nn, &want, &format!("{spec} NN t={threads}"));
+            assert_bits_eq(&tn, &want, &format!("{spec} TN t={threads}"));
+            assert_bits_eq(&nt, &want, &format!("{spec} NT t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn signed_gemm_matches_reference_across_layouts_and_threads() {
+    let (rows, inner, cols) = (GEMM_ROW_BLOCK + 3, 19usize, 37usize);
+    for (di, spec) in ["sexact", "sdrum6", "booth8", "slut8:sdrum6"]
+        .iter()
+        .enumerate()
+    {
+        let m = signed_by_name(spec).unwrap();
+        let (a, b) = operands(rows, inner, cols, 4000 + di as u64);
+        let want =
+            approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+        let a_t = transpose(&a, rows, inner);
+        let b_t = transpose(&b, inner, cols);
+        for threads in [1usize, 2, 5] {
+            parallel::set_max_threads(threads);
+            let nn =
+                approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let tn = approx_matmul_signed_tn(m.as_ref(), &a_t, &b, rows, inner, cols)
+                .unwrap();
+            let nt = approx_matmul_signed_nt(m.as_ref(), &a, &b_t, rows, inner, cols)
+                .unwrap();
+            parallel::set_max_threads(0);
+            assert_bits_eq(&nn, &want, &format!("{spec} NN t={threads}"));
+            assert_bits_eq(&tn, &want, &format!("{spec} TN t={threads}"));
+            assert_bits_eq(&nt, &want, &format!("{spec} NT t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn short_inner_dimensions_hit_the_tail_only_paths() {
+    // inner in [1, 9]: chains shorter than one vector (pure padded
+    // tail) through exactly-one-vector-plus-one.
+    for inner in 1usize..=9 {
+        let (rows, cols) = (5usize, 7usize);
+        for spec in ["drum6", "mitchell", "lut8:drum6"] {
+            let m = by_name(spec).unwrap();
+            let (a, b) = operands(rows, inner, cols, 70 + inner as u64);
+            let fast = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let slow = approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+            assert_bits_eq(&fast, &slow, &format!("{spec} inner={inner}"));
+        }
+        for spec in ["sdrum6", "booth8", "slut8:sdrum6"] {
+            let m = signed_by_name(spec).unwrap();
+            let (a, b) = operands(rows, inner, cols, 700 + inner as u64);
+            let fast =
+                approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+            let slow =
+                approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                    .unwrap();
+            assert_bits_eq(&fast, &slow, &format!("{spec} inner={inner}"));
+        }
+    }
+}
+
+#[test]
+fn dense_special_value_chains_match_reference() {
+    // Every k position cycles through the special classes, so
+    // non-finite fallbacks (scalar-patched lanes in the simd build)
+    // and flushed skips interleave densely with batched products.
+    let specials = [
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        0.0,
+        -0.0,
+        1.0e-41,
+        1.5,
+        -2.25,
+    ];
+    let (rows, inner, cols) = (4usize, specials.len() * 2, 3usize);
+    let mut rng = Xoshiro256::new(99);
+    let a: Vec<f32> = (0..rows * inner)
+        .map(|i| {
+            if i % 3 == 0 {
+                specials[(i / 3) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    let b: Vec<f32> = (0..inner * cols)
+        .map(|i| {
+            if i % 4 == 1 {
+                specials[(i / 4) % specials.len()]
+            } else {
+                rng.next_f32() - 0.5
+            }
+        })
+        .collect();
+    for spec in DESIGNS {
+        let m = by_name(spec).unwrap();
+        let fast = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        assert_bits_eq(&fast, &slow, spec);
+    }
+    for spec in SIGNED_DESIGNS {
+        let m = signed_by_name(spec).unwrap();
+        let fast = approx_matmul_signed(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+        let slow =
+            approx_matmul_reference_signed(m.as_ref(), &a, &b, rows, inner, cols)
+                .unwrap();
+        assert_bits_eq(&fast, &slow, spec);
+    }
+}
+
+#[test]
+fn fused_epilogues_match_unfused() {
+    // Bias and column-sum epilogues sit downstream of the chain engine;
+    // they must see identical element values from either engine.
+    let (rows, inner, cols) = (73usize, 13usize, 6usize);
+    let mut rng = Xoshiro256::new(137);
+    let a: Vec<f32> = (0..rows * inner).map(|_| rng.next_f32() - 0.5).collect();
+    let b: Vec<f32> = (0..inner * cols).map(|_| rng.next_f32() - 0.5).collect();
+    let bias: Vec<f32> = (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+    let col_sums_by_block = |plain: &[f32]| -> Vec<f32> {
+        let mut want = vec![0f32; cols];
+        for blk in plain.chunks(gemm_row_block(rows) * cols) {
+            let mut part = vec![0f32; cols];
+            for row in blk.chunks(cols) {
+                for (p, &v) in part.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+            for (w, p) in want.iter_mut().zip(&part) {
+                *w += p;
+            }
+        }
+        want
+    };
+
+    let m: Box<dyn Multiplier> = by_name("drum6").unwrap();
+    let ap = PreparedMatrix::prepare(&a, rows, inner).unwrap();
+    let bp = PreparedMatrix::prepare_strided(&b, cols, inner, 1, cols).unwrap();
+    let fused = approx_matmul_prepared(m.as_ref(), &ap, &bp, Some(&bias), true).unwrap();
+    let mut plain = approx_matmul(m.as_ref(), &a, &b, rows, inner, cols).unwrap();
+    for r in 0..rows {
+        for c in 0..cols {
+            plain[r * cols + c] += bias[c];
+        }
+    }
+    assert_bits_eq(&fused.out, &plain, "drum6 fused bias");
+    assert_bits_eq(
+        &fused.col_sums.unwrap(),
+        &col_sums_by_block(&plain),
+        "drum6 col_sums",
+    );
+
+    let sm: Box<dyn SignedMultiplier> = signed_by_name("booth8").unwrap();
+    let sap = PreparedMatrix::prepare(&a, rows, inner)
+        .unwrap()
+        .with_signed_mantissas();
+    let sbp = PreparedMatrix::prepare_strided(&b, cols, inner, 1, cols)
+        .unwrap()
+        .with_signed_mantissas();
+    let sfused =
+        approx_matmul_prepared_signed(sm.as_ref(), &sap, &sbp, Some(&bias), true)
+            .unwrap();
+    let mut splain =
+        approx_matmul_signed(sm.as_ref(), &a, &b, rows, inner, cols).unwrap();
+    for r in 0..rows {
+        for c in 0..cols {
+            splain[r * cols + c] += bias[c];
+        }
+    }
+    assert_bits_eq(&sfused.out, &splain, "booth8 fused bias");
+    assert_bits_eq(
+        &sfused.col_sums.unwrap(),
+        &col_sums_by_block(&splain),
+        "booth8 col_sums",
+    );
+}

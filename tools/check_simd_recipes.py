@@ -1,0 +1,495 @@
+#!/usr/bin/env python3
+"""Cross-validation of the branchless SIMD kernel recipes in
+`rust/src/mult/simd/` against straight transcriptions of the scalar
+Rust designs.
+
+No Rust toolchain is available in the authoring container, so this
+script is the executable check that the *algorithms* behind the vector
+kernels are equivalent to the scalar ones before `tests/simd_parity.rs`
+can pin the compiled artifacts. Two implementations of every kernel are
+kept deliberately different in style:
+
+* ``scalar_*`` — line-by-line transcriptions of the Rust scalar code
+  (``Drum::mul``, ``Mitchell::mul``, ``Booth::mul``, ``renorm`` ...);
+* ``vector_*`` — the branchless select/mask formulas the `std::simd`
+  kernels use, evaluated lane-wise (including the dummy-lane handling
+  the GEMM chain kernel relies on).
+
+They are compared on exhaustive edge operands plus randomized sweeps,
+and the k-chain accumulation argument (full term list with ``+0.0``
+placeholders == compact list with flushed terms skipped) is checked on
+f32 chains seeded with inf/NaN/signed-zero/subnormal operands.
+
+Run: ``python3 tools/check_simd_recipes.py`` (exit 0 == all recipes
+equivalent).
+"""
+
+import random
+import sys
+
+import numpy as np
+
+M32 = 0xFFFFFFFF
+M64 = 0xFFFFFFFFFFFFFFFF
+FRAC_BITS = 32
+EXP_NONFINITE = 2**31 - 1  # i32::MAX sentinel from prepared.rs
+
+
+def u32(v):
+    return v & M32
+
+
+def u64(v):
+    return v & M64
+
+
+def i32(v):
+    v &= M32
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+def i64(v):
+    v &= M64
+    return v - (1 << 64) if v >= (1 << 63) else v
+
+
+def lz32(v):
+    return 32 - v.bit_length() if v else 32
+
+
+def lz64(v):
+    return 64 - v.bit_length() if v else 64
+
+
+# --- f32 helpers (exact IEEE single-precision via struct) -------------
+
+
+def f32_from_bits(b):
+    return np.uint32(b).view(np.float32)
+
+
+def f32_to_bits(x):
+    return int(np.float32(x).view(np.uint32))
+
+
+def f32_add(x, y):
+    # numpy float32 arithmetic is IEEE round-to-nearest-even with
+    # overflow to inf — the same as Rust f32 `+`.
+    with np.errstate(all="ignore"):
+        return np.float32(x) + np.float32(y)
+
+
+# --- scalar transcriptions (the Rust `mul` bodies) --------------------
+
+
+def scalar_drum_reduce(v, k):
+    if v == 0:
+        return (0, 0)
+    msb = 31 - lz32(v)
+    if msb < k:
+        return (v, 0)
+    shift = msb + 1 - k
+    return ((v >> shift) | 1, shift)
+
+
+def scalar_drum(k, a, b):
+    ta, sa = scalar_drum_reduce(a, k)
+    tb, sb = scalar_drum_reduce(b, k)
+    return u64((ta * tb) << (sa + sb))
+
+
+def scalar_trunc(k, a, b):
+    mask = u32(M32 << k)
+    return u64((a & mask) * (b & mask))
+
+
+def scalar_log2_fixed(v):
+    assert v > 0
+    msb = 31 - lz32(v)
+    frac = u64(v << (FRAC_BITS - msb)) & ((1 << FRAC_BITS) - 1)
+    return (msb << FRAC_BITS) | frac
+
+
+def scalar_antilog_fixed(l):
+    intp = l >> FRAC_BITS
+    frac = l & ((1 << FRAC_BITS) - 1)
+    mantissa = (1 << FRAC_BITS) | frac
+    if intp >= FRAC_BITS:
+        return u64(mantissa << (intp - FRAC_BITS))
+    return mantissa >> (FRAC_BITS - intp)
+
+
+def scalar_mitchell(a, b):
+    if a == 0 or b == 0:
+        return 0
+    return scalar_antilog_fixed(scalar_log2_fixed(a) + scalar_log2_fixed(b))
+
+
+def scalar_sdrum(k, a, b):
+    mag = scalar_drum(k, abs(a), abs(b))
+    assert mag <= (1 << 63) - 1
+    return -mag if (a < 0) != (b < 0) else mag
+
+
+def scalar_booth(k, a, b):
+    bits = u32(b)  # two's-complement bit pattern, zero-extended
+    acc = 0
+    prev = 0
+    for idx in range(16):
+        b0 = (bits >> (2 * idx)) & 1
+        b1 = (bits >> (2 * idx + 1)) & 1
+        d = (b0 + prev) - 2 * b1
+        prev = b1
+        if d != 0:
+            pp = i64(u64(d * a) << (2 * idx))
+            acc = i64(acc + ((pp >> k) << k))  # Python >> floors == arithmetic
+    return acc
+
+
+def scalar_lut_flat(table, bits, a, b):
+    # LutMultiplier on mantissa-domain operands (>= 2^23): reduce is the
+    # constant shift 24 - bits, then shift_saturating by the sum.
+    shift = 24 - bits
+    v = table[((a >> shift) << bits) | (b >> shift)]
+    total = 2 * shift
+    if v == 0:
+        return 0
+    if lz64(v) >= total:
+        return u64(v << total)
+    return M64
+
+
+def scalar_slut_flat(table, bits, half, a, b):
+    # SignedLut on signed mantissa operands (|v| in [2^23, 2^24)):
+    # always out of domain, msb == 23, shift == 25 - bits.
+    shift = 25 - bits
+
+    def reduce(v):
+        mag = abs(v)
+        red = mag >> shift
+        return -red if v < 0 else red
+
+    ia, ib = reduce(a), reduce(b)
+    v = table[((ia + half) << bits) | (ib + half)]
+    total = 2 * shift
+    if v == 0 or total == 0:
+        return v
+    if lz64(abs(v)) > total:
+        return i64(v << total)
+    return -(1 << 63) if v < 0 else (1 << 63) - 1
+
+
+def scalar_renorm(sign, ex, ey, p):
+    """rust matmul.rs renorm(), bit-exact; returns f32 bits."""
+    if p == 0:
+        return sign << 31
+    q = 63 - lz64(p)
+    if q > 23:
+        mant = u32(p >> (q - 23))
+    else:
+        mant = u32(p << (23 - q))
+    er = ex + ey + q - 173
+    if er >= 255:
+        return (sign << 31) | 0x7F800000
+    if er <= 0:
+        return sign << 31
+    return (sign << 31) | (u32(er) << 23) | (mant & 0x007FFFFF)
+
+
+# --- vector (branchless select/mask) recipes, lane-wise ----------------
+
+
+def select(m, t, f):
+    return t if m else f
+
+
+def vector_drum_reduce(v, k):
+    nz = v != 0
+    vv = select(nz, v, 1)
+    msb = 31 - lz32(vv)
+    big = msb >= k
+    shift = select(big, msb + 1 - k, 0)
+    t = select(big, (vv >> shift) | 1, vv)
+    return (select(nz, t, 0), shift)
+
+
+def vector_drum(k, a, b):
+    ta, sa = vector_drum_reduce(a, k)
+    tb, sb = vector_drum_reduce(b, k)
+    return u64((ta * tb) << (sa + sb))
+
+
+def vector_trunc(k, a, b):
+    mask = u32(M32 << k)
+    return u64((a & mask) * (b & mask))
+
+
+def vector_mitchell(a, b):
+    one_a = select(a != 0, a, 1)
+    one_b = select(b != 0, b, 1)
+
+    def log2v(v):
+        msb = 31 - lz32(v)
+        frac = u64(v << (FRAC_BITS - msb)) & ((1 << FRAC_BITS) - 1)
+        return (msb << FRAC_BITS) | frac
+
+    l = log2v(one_a) + log2v(one_b)
+    intp = l >> FRAC_BITS
+    frac = l & ((1 << FRAC_BITS) - 1)
+    mant = (1 << FRAC_BITS) | frac
+    ge = intp >= FRAC_BITS
+    shl = select(ge, intp - FRAC_BITS, 0)
+    shr = select(ge, 0, FRAC_BITS - intp)
+    p = u64(mant << shl) >> shr
+    return select((a != 0) and (b != 0), p, 0)
+
+
+def vector_sdrum(k, a, b):
+    # sign masks: arithmetic >> 31 of the i32 lanes
+    sa = -1 if a < 0 else 0
+    sb = -1 if b < 0 else 0
+    mag_a = u32((a ^ sa) - sa)  # wrapping conditional negate, bit cast
+    mag_b = u32((b ^ sb) - sb)
+    mag = vector_drum(k, mag_a, mag_b)
+    neg = i64(sa ^ sb)  # 0 or -1, sign-extended
+    return i64((i64(mag) ^ neg) - neg)
+
+
+def vector_booth(k, a, b):
+    bits = u32(b)
+    acc = 0
+    prev = 0
+    for idx in range(16):
+        b0 = (bits >> (2 * idx)) & 1
+        b1 = (bits >> (2 * idx + 1)) & 1
+        d = (b0 + prev) - 2 * b1
+        prev = b1
+        # Unconditional lane math: d == 0 contributes 0.
+        pp = i64(u64(d * a) << (2 * idx))
+        acc = i64(acc + ((pp >> k) << k))
+    return acc
+
+
+def vector_renorm(sign, esum, p):
+    """The select-ordered vector renorm; returns f32 bits."""
+    pz = p == 0
+    pp = select(pz, 1, p)
+    q = 63 - lz64(pp)
+    gt = q > 23
+    shr = select(gt, q - 23, 0)
+    mant_hi = u32(pp >> shr)
+    shl = select(gt, 0, 23 - q)
+    mant_lo = u32(u32(pp) << shl)
+    mant = select(gt, mant_hi, mant_lo)
+    er = esum + q - 173
+    sign31 = sign << 31
+    packed = sign31 | (u32(er) << 23) | (mant & 0x007FFFFF)
+    bits = packed
+    bits = select(er >= 255, sign31 | 0x7F800000, bits)
+    bits = select(er <= 0, sign31, bits)
+    bits = select(pz, sign31, bits)
+    return bits
+
+
+def vector_lut_flat(table, bits, a, b):
+    shift = 24 - bits
+    idx = ((a >> shift) << bits) | (b >> shift)
+    v = table[idx]
+    total = 2 * shift
+    ok = lz64(v) >= total
+    r = select(ok, u64(v << total), M64)
+    return select(v == 0, 0, r)
+
+
+def vector_slut_flat(table, bits, half, a, b):
+    shift = 25 - bits
+    sa = -1 if a < 0 else 0
+    mag_a = u32((a ^ sa) - sa)
+    sb = -1 if b < 0 else 0
+    mag_b = u32((b ^ sb) - sb)
+    ia = i32((i32(mag_a >> shift) ^ sa) - sa)
+    ib = i32((i32(mag_b >> shift) ^ sb) - sb)
+    v = table[((ia + half) << bits) | (ib + half)]
+    total = 2 * shift
+    neg = v < 0
+    mag_v = abs(v)
+    ok = lz64(mag_v) > total
+    sat = select(neg, -(1 << 63), (1 << 63) - 1)
+    r = select(ok, i64(v << total), sat)
+    return select(v == 0, 0, r)
+
+
+# --- operand pools -----------------------------------------------------
+
+EDGE_U32 = [
+    0, 1, 2, 3, 7, 8, 63, 64, 255, 256, 1 << 15, (1 << 16) - 1,
+    1 << 22, (1 << 23) - 1, 1 << 23, (1 << 23) + 1, (1 << 24) - 1,
+    1 << 24, (1 << 31) - 1, 1 << 31, M32 - 1, M32,
+]
+EDGE_I32 = sorted(
+    {i32(v) for v in EDGE_U32}
+    | {-(1 << 31), -(1 << 31) + 1, -1, -2, -(1 << 23), (1 << 23) - 1, 1 << 23}
+)
+MANT = [1 << 23, (1 << 23) + 1, (1 << 24) - 1, 0xABCDEF | (1 << 23)]
+
+
+def rand_u32(rng):
+    return rng.getrandbits(32)
+
+
+def rand_i32(rng):
+    return i32(rng.getrandbits(32))
+
+
+def rand_mant(rng):
+    return (1 << 23) | rng.getrandbits(23)
+
+
+FAILURES = []
+
+
+def check(name, want, got, ctx):
+    if want != got:
+        FAILURES.append(f"{name}: want {want} got {got} ({ctx})")
+        if len(FAILURES) < 20:
+            print(f"FAIL {FAILURES[-1]}")
+
+
+def sweep_pair(name, scalar_fn, vector_fn, edges, rand_fn, rng, n=20000):
+    pool = list(edges)
+    for a in pool:
+        for b in pool:
+            check(name, scalar_fn(a, b), vector_fn(a, b), f"{a},{b}")
+    for _ in range(n):
+        a, b = rand_fn(rng), rand_fn(rng)
+        check(name, scalar_fn(a, b), vector_fn(a, b), f"{a},{b}")
+
+
+def main():
+    rng = random.Random(20260808)
+
+    for k in (3, 4, 6, 8, 23, 24, 31, 32):
+        sweep_pair(
+            f"drum{k}",
+            lambda a, b, k=k: scalar_drum(k, a, b),
+            lambda a, b, k=k: vector_drum(k, a, b),
+            EDGE_U32, rand_u32, rng, 4000,
+        )
+    for k in (1, 4, 8, 12, 16, 24, 31):
+        sweep_pair(
+            f"trunc{k}",
+            lambda a, b, k=k: scalar_trunc(k, a, b),
+            lambda a, b, k=k: vector_trunc(k, a, b),
+            EDGE_U32, rand_u32, rng, 2000,
+        )
+    sweep_pair("mitchell", scalar_mitchell, vector_mitchell, EDGE_U32,
+               rand_u32, rng, 20000)
+    for k in (3, 4, 6, 8, 24, 32):
+        sweep_pair(
+            f"sdrum{k}",
+            lambda a, b, k=k: scalar_sdrum(k, a, b),
+            lambda a, b, k=k: vector_sdrum(k, a, b),
+            EDGE_I32, rand_i32, rng, 4000,
+        )
+    for k in (0, 4, 8, 12, 24, 32):
+        sweep_pair(
+            f"booth{k}",
+            lambda a, b, k=k: scalar_booth(k, a, b),
+            lambda a, b, k=k: vector_booth(k, a, b),
+            EDGE_I32, rand_i32, rng, 4000,
+        )
+
+    # Flat LUT kernels on the GEMM mantissa domain, including a table
+    # with planted zero / huge cells so the saturation legs are hit.
+    bits = 8
+    size = 1 << bits
+    table = [scalar_drum(6, a, b) for a in range(size) for b in range(size)]
+    table[(130 << bits) | 131] = 0
+    table[(200 << bits) | 201] = M64 >> 3  # forces saturation
+    for _ in range(20000):
+        a, b = rand_mant(rng), rand_mant(rng)
+        check("lut8-flat", scalar_lut_flat(table, bits, a, b),
+              vector_lut_flat(table, bits, a, b), f"{a},{b}")
+    # Every index the mantissa domain can produce is in [2^(b-1), 2^b).
+    assert all(
+        (1 << (bits - 1)) <= (m >> (24 - bits)) < (1 << bits)
+        for m in [1 << 23, (1 << 24) - 1]
+    )
+
+    half = size // 2
+    stable = [scalar_booth(8, i32(r - half), i32(c - half))
+              for r in range(size) for c in range(size)]
+    stable[(5 << bits) | 7] = 0
+    stable[(17 << bits) | 9] = -(1 << 62)  # negative saturation leg
+    stable[(18 << bits) | 9] = (1 << 62)   # positive saturation leg
+    for _ in range(20000):
+        a = rand_mant(rng) * rng.choice((1, -1))
+        b = rand_mant(rng) * rng.choice((1, -1))
+        check("slut8-flat", scalar_slut_flat(stable, bits, half, a, b),
+              vector_slut_flat(stable, bits, half, a, b), f"{a},{b}")
+
+    # Vector renorm vs scalar renorm (esum spans under/overflow bands;
+    # p == 0 lanes included — the select ordering under test).
+    for _ in range(40000):
+        sign = rng.getrandbits(1)
+        esum = rng.randrange(2, 511)
+        choice = rng.randrange(4)
+        if choice == 0:
+            p = 0
+        elif choice == 1:
+            p = rng.getrandbits(64)
+        elif choice == 2:
+            p = rand_mant(rng) * rand_mant(rng)
+        else:
+            p = rng.getrandbits(rng.randrange(1, 65))
+        check("renorm", scalar_renorm(sign, esum, 0, p),
+              vector_renorm(sign, esum, p), f"{sign},{esum},{p}")
+    for p in (0, 1, M64, 1 << 63, (1 << 47) - 1, 1 << 46):
+        for esum in (0, 1, 126, 173, 300, 427, 428, 510):
+            for sign in (0, 1):
+                check("renorm-edge", scalar_renorm(sign, esum, 0, p),
+                      vector_renorm(sign, esum, p), f"{sign},{esum},{p}")
+
+    # The chain argument: summing the full per-k term list (with +0.0
+    # for flushed/dummy lanes) is bit-identical to summing the compact
+    # list that skips them, because an f32 accumulator can never be
+    # -0.0 mid-chain. Terms include -0.0 (underflowed renorm), ±inf and
+    # NaN (non-finite fallbacks).
+    special_bits = [
+        0x00000000, 0x80000000,            # ±0
+        0x7F800000, 0xFF800000,            # ±inf
+        0x7FC00000,                        # NaN
+        0x00000001,                        # subnormal
+    ]
+    for trial in range(20000):
+        n = rng.randrange(1, 33)
+        terms = []
+        for _ in range(n):
+            if rng.randrange(8) == 0:
+                terms.append(f32_from_bits(rng.choice(special_bits)))
+            else:
+                b = (rng.getrandbits(1) << 31) | (rng.randrange(1, 255) << 23) \
+                    | rng.getrandbits(23)
+                terms.append(f32_from_bits(b))
+        flush = [rng.randrange(4) == 0 for _ in range(n)]
+        acc_full = f32_from_bits(0)
+        acc_skip = f32_from_bits(0)
+        for t, fl in zip(terms, flush):
+            acc_full = f32_add(acc_full, 0.0 if fl else t)
+            if not fl:
+                acc_skip = f32_add(acc_skip, t)
+        bf, bs = f32_to_bits(acc_full), f32_to_bits(acc_skip)
+        # NaN payloads may differ representationally in Python; compare
+        # NaN-as-class, everything else bitwise.
+        if not (acc_full != acc_full and acc_skip != acc_skip):
+            check("chain-skip", bs, bf, f"trial {trial}")
+
+    if FAILURES:
+        print(f"{len(FAILURES)} failures")
+        return 1
+    print("all SIMD recipes match their scalar transcriptions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
