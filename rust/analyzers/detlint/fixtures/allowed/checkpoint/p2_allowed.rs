@@ -1,0 +1,7 @@
+//! Fixture: P2 suppressed — a masked index into a fixed-size table
+//! cannot go out of bounds.
+
+pub fn crc_step(table: &[u32; 256], crc: u32, b: u8) -> u32 {
+    // detlint: allow(P2) -- fixture: index masked to 0xFF into a 256-entry table
+    (crc >> 8) ^ table[((crc ^ b as u32) & 0xFF) as usize]
+}

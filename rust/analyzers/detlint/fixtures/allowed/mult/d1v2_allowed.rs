@@ -1,0 +1,17 @@
+//! Fixture: D1v2 — audited iteration over a hash-typed field.
+
+pub struct Cache {
+    // detlint: allow(D1) -- fixture: keyed lookup cache, audited
+    map: std::collections::HashMap<u32, u64>,
+}
+
+impl Cache {
+    pub fn sum(&self) -> u64 {
+        let mut acc = 0;
+        // detlint: allow(D1v2) -- fixture: order-insensitive integer sum, audited
+        for v in self.map.values() {
+            acc += v;
+        }
+        acc
+    }
+}

@@ -1,0 +1,5 @@
+//! Fixture: U1 suppressed with an audited reason.
+
+pub fn read(ptr: *const u8) -> u8 {
+    unsafe { *ptr } // detlint: allow(U1) -- fixture: caller-audited raw read
+}

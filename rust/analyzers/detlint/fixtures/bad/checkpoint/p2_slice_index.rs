@@ -1,0 +1,6 @@
+//! Fixture: P2 — a panicking index in the resilience spine turns a
+//! classifiable fault (short buffer) into an abort.
+
+pub fn first_byte(bytes: &[u8]) -> u8 {
+    bytes[0]
+}

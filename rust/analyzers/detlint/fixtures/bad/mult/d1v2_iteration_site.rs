@@ -1,0 +1,13 @@
+//! Fixture: D1v2 — iterating a HashMap-typed binding leaks hash order
+//! into a trajectory module, even when the type mention itself was
+//! allowed for keyed lookup.
+
+pub fn order_leak() -> u64 {
+    // detlint: allow(D1) -- fixture: the binding is allowed, the iteration is not
+    let table: std::collections::HashMap<u32, u64> = Default::default();
+    let mut acc = 0u64;
+    for (_k, v) in &table {
+        acc += v;
+    }
+    acc
+}

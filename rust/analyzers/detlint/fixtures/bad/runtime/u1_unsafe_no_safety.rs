@@ -1,0 +1,5 @@
+//! Fixture: U1 — an unsafe block with no adjacent safety comment.
+
+pub fn as_bytes(words: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 4) }
+}

@@ -1,0 +1,5 @@
+//! Fixture: bench row names without the booth family.
+
+pub fn rows() -> Vec<&'static str> {
+    vec!["exact"]
+}

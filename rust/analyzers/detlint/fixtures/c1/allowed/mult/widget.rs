@@ -1,0 +1,11 @@
+//! Fixture: C1 suppressed — the registration is acknowledged as
+//! unpinned, with an audited reason.
+
+pub struct Widget;
+
+impl Widget {
+    // detlint: allow(C1) -- fixture: parity pin lands in a tracked follow-on
+    pub fn simd_kernel(&self) -> Option<SignedKernel> {
+        Some(SignedKernel::Booth { k: 8 })
+    }
+}

@@ -1,0 +1,3 @@
+//! Fixture: parity design lists without the booth family.
+
+const DESIGNS: &[&str] = &["exact"];

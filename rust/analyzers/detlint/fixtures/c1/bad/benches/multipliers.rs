@@ -1,0 +1,5 @@
+//! Fixture: bench row names (the mitchell family is missing).
+
+pub fn rows() -> Vec<&'static str> {
+    vec!["exact", "sexact"]
+}

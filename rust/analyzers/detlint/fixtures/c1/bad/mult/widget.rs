@@ -1,0 +1,10 @@
+//! Fixture: C1 — a registered kernel family with no parity pin and no
+//! bench row.
+
+pub struct Widget;
+
+impl Widget {
+    pub fn simd_kernel(&self) -> Option<UnsignedKernel> {
+        Some(UnsignedKernel::Mitchell { bits: 8 })
+    }
+}

@@ -1,0 +1,5 @@
+//! Fixture: the parity suite's design lists (the mitchell family is
+//! missing, so the registration in mult/widget.rs must fire C1).
+
+const DESIGNS: &[&str] = &["exact"];
+const SIGNED_DESIGNS: &[&str] = &["sexact"];

@@ -1,0 +1,5 @@
+//! Fixture: bench row names covering the drum family.
+
+pub fn rows() -> Vec<&'static str> {
+    vec!["exact", "drum6"]
+}

@@ -1,0 +1,10 @@
+//! Fixture: C1 — a fully pinned registration (parity entry + bench row
+//! both present).
+
+pub struct Widget;
+
+impl Widget {
+    pub fn simd_kernel(&self) -> Option<UnsignedKernel> {
+        Some(UnsignedKernel::Drum { k: 6 })
+    }
+}

@@ -1,0 +1,3 @@
+//! Fixture: parity design lists covering the drum family.
+
+const DESIGNS: &[&str] = &["exact", "drum6"];

@@ -1,0 +1,7 @@
+//! Fixture: checked access with a typed error is the spine contract.
+
+pub fn header(bytes: &[u8]) -> Result<&[u8], String> {
+    bytes
+        .get(..4)
+        .ok_or_else(|| format!("truncated header: {} < 4 bytes", bytes.len()))
+}

@@ -1,0 +1,9 @@
+//! Fixture: ordered-container iteration is deterministic and clean.
+
+pub fn sum(m: &std::collections::BTreeMap<u32, u64>) -> u64 {
+    let mut acc = 0;
+    for v in m.values() {
+        acc += v;
+    }
+    acc
+}

@@ -1,0 +1,8 @@
+//! Fixture: a SAFETY comment directly above the unsafe block is the
+//! contract.
+
+pub fn read(ptr: *const u8) -> u8 {
+    // SAFETY: fixture — the caller guarantees ptr is valid for one byte;
+    // the read copies it out without retaining the pointer.
+    unsafe { *ptr }
+}

@@ -3,52 +3,70 @@
 //! The reproduction's methodology rests on source-level invariants that
 //! `rustc` cannot enforce: bit-identical trajectories (rollback replay,
 //! thread-invariant GEMM, hybrid-switch comparability), panic-free
-//! recovery paths, and byte-stable emitted artifacts. This crate makes
-//! those conventions machine-checked with a lightweight line/token-level
-//! scanner (no `syn`, no dependencies):
+//! recovery paths, byte-stable emitted artifacts, and scalar≡SIMD
+//! bit-identity. This crate makes those conventions machine-checked
+//! with an expression-aware analysis engine (still no `syn`, no
+//! dependencies): a real token stream with byte spans, delimiter tree
+//! matching, and a per-file binding table (let / fn-arg / struct-field
+//! bindings with their declared types).
 //!
-//! * **D1** — no `HashMap`/`HashSet` in trajectory/artifact modules.
-//!   Hash iteration order is seeded per process; one stray `for` over a
-//!   hash map leaks that order into a trajectory or an emitted file.
-//!   Keyed lookup is fine, but must carry an audit marker so the
-//!   "never iterated" claim is reviewed, not assumed.
+//! Rules:
+//!
+//! * **D1** — no `HashMap`/`HashSet` *mention* in trajectory/artifact
+//!   modules. Keyed lookup is fine but must carry an audit marker.
+//! * **D1v2** — no *iteration* over a binding whose type resolved to
+//!   `HashMap`/`HashSet` (`for`, `.iter()`, `.keys()`, `.values()`,
+//!   `.drain()`, ...) in those modules: the site where hash order
+//!   actually leaks into a trajectory or an emitted file.
 //! * **D2** — no `Instant::now`/`SystemTime`/`std::time` in step-math
-//!   modules. Wall-clock reads in the step path make replay diverge.
-//!   `benchkit` is exempt by scope (it exists to time things); backoff
-//!   and throughput telemetry carry audit markers.
+//!   modules (wall-clock reads make replay diverge; `benchkit` is
+//!   exempt by scope).
 //! * **D3** — no raw `std::thread::spawn` outside `parallel/`, and no
 //!   float `.sum()`/float-accumulator `fold` reductions in the numeric
-//!   spine. Reductions there must be sequential in a fixed order (or go
-//!   through the k-ordered kernels); annotated exceptions document why
-//!   a site is deterministic.
+//!   spine.
 //! * **P1** — no `unwrap()`/`expect()`/panic-family macros in the
 //!   resilience spine (`checkpoint`, the coordinator's health/recovery/
-//!   trainer, `testkit/faults`). Typed errors are the contract there: a
-//!   panic turns a recoverable fault into an abort.
+//!   trainer, `testkit/faults`).
+//! * **P2** — no panicking slice/array indexing (`x[i]`) in the
+//!   resilience spine. Index expressions are disambiguated from type
+//!   and attribute brackets by expression context; `.get()` plus a
+//!   typed error is the contract there.
 //! * **S1** — no unchecked `as` float→int casts in `mult/`
-//!   bit-decomposition paths; the checked helpers in `mult::cast` are
-//!   the single audited crossing.
+//!   bit-decomposition paths; `mult::cast` is the single audited
+//!   crossing.
+//! * **U1** — every `unsafe` must be immediately preceded by a
+//!   `// SAFETY:` comment (same line, or contiguous comment lines
+//!   directly above).
+//! * **C1** — cross-file SIMD-parity coverage: every design family
+//!   registering a `simd_kernel()` descriptor in `mult/` must appear in
+//!   the `tests/simd_parity.rs` design lists and carry a named bench
+//!   row, so a new kernel cannot land without its bit-identity pin.
+//!
+//! Scan profiles keep the rule set honest per tree region: `fixtures/`
+//! scans like the mirrored `src/` tree, `rust/tests/**` runs
+//! D1/D1v2/D3/U1 everywhere but drops D2/P1/P2/S1 (tests may read
+//! wall-clock and unwrap), and detlint's own sources dogfood
+//! D1/D1v2/D3/U1.
 //!
 //! Suppression is explicit and auditable:
 //! `// detlint: allow(<rule>[, <rule>...]) -- <reason>` on the
 //! offending line, or alone on the line above it. Markers without a
 //! reason, with unknown rule names, or that suppress nothing are
-//! reported (the first two fail the run; stale markers warn).
-//!
-//! Scanning is text-based on purpose: it has no false negatives from
-//! conditional compilation, runs in milliseconds with no toolchain
-//! beyond `rustc`, and its few heuristics (statement-window float
-//! evidence for bare `.sum()`/`as` casts) are pinned by the fixture
-//! corpus under `fixtures/`.
+//! reported (the first two fail the run; stale markers warn, or fail
+//! under `--strict-stale`). A `--baseline <report.json>` ratchet
+//! grandfathers previously recorded violations by (rule, path,
+//! message), so new findings fail while legacy ones burn down.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 /// All known rule identifiers, in report order.
-pub const RULE_IDS: [&str; 5] = ["D1", "D2", "D3", "P1", "S1"];
+pub const RULE_IDS: [&str; 9] =
+    ["D1", "D1v2", "D2", "D3", "P1", "P2", "S1", "U1", "C1"];
 
 /// Path scopes, as `/`-separated segment sequences matched anywhere in
 /// a file's path. `runtime/native` matches `rust/src/runtime/native/x.rs`
-/// but not `rust/src/runtime/engine.rs`.
+/// but not `rust/src/runtime/engine.rs`. The special scope `"*"`
+/// matches every path.
 const D1_SCOPE: &[&str] = &[
     "mult",
     "runtime",
@@ -75,7 +93,11 @@ const P1_SCOPE: &[&str] = &[
     "coordinator/trainer.rs",
     "testkit/faults.rs",
 ];
+const P2_SCOPE: &[&str] = P1_SCOPE;
 const S1_SCOPE: &[&str] = &["mult"];
+const U1_SCOPE: &[&str] = &["*"];
+const C1_SCOPE: &[&str] = &["mult"];
+const ALL_SCOPE: &[&str] = &["*"];
 
 /// Static description of one rule (for `--list-rules` and docs).
 #[derive(Debug, Clone, Copy)]
@@ -88,7 +110,7 @@ pub struct RuleInfo {
     pub rationale: &'static str,
 }
 
-pub const RULES: [RuleInfo; 5] = [
+pub const RULES: [RuleInfo; 9] = [
     RuleInfo {
         id: "D1",
         severity: "deny",
@@ -97,6 +119,16 @@ pub const RULES: [RuleInfo; 5] = [
         rationale: "hash iteration order is per-process random; iterating one leaks \
                     that order into trajectories or emitted files. Use BTreeMap/BTreeSet, \
                     or annotate a lookup-only use.",
+    },
+    RuleInfo {
+        id: "D1v2",
+        severity: "deny",
+        scope: D1_SCOPE,
+        summary: "no iteration over HashMap/HashSet-typed bindings in trajectory \
+                  or artifact modules",
+        rationale: "type-level D1 can be suppressed for keyed lookup; this rule tracks \
+                    the binding to its iteration sites (for / .iter() / .keys() / \
+                    .values() / .drain()), where hash order actually leaks.",
     },
     RuleInfo {
         id: "D2",
@@ -127,6 +159,15 @@ pub const RULES: [RuleInfo; 5] = [
                     recoverable fault into an abort.",
     },
     RuleInfo {
+        id: "P2",
+        severity: "deny",
+        scope: P2_SCOPE,
+        summary: "no panicking slice/array indexing in the resilience spine",
+        rationale: "`x[i]` panics on a short or corrupt buffer, turning a classifiable \
+                    fault (e.g. a truncated checkpoint) into an abort; use \
+                    .get()/.get_mut() and raise a typed error.",
+    },
+    RuleInfo {
         id: "S1",
         severity: "deny",
         scope: S1_SCOPE,
@@ -134,6 +175,25 @@ pub const RULES: [RuleInfo; 5] = [
         rationale: "bare float->int `as` casts saturate/truncate silently and have \
                     caused bit-domain bugs; route through the audited helpers in \
                     mult::cast.",
+    },
+    RuleInfo {
+        id: "U1",
+        severity: "deny",
+        scope: U1_SCOPE,
+        summary: "every `unsafe` must be immediately preceded by a `// SAFETY:` comment",
+        rationale: "an unsafe block encodes a proof obligation the compiler cannot \
+                    check; the SAFETY comment is where that proof lives, and drift \
+                    between code and proof is how UB ships.",
+    },
+    RuleInfo {
+        id: "C1",
+        severity: "deny",
+        scope: C1_SCOPE,
+        summary: "every simd_kernel() registration needs a simd_parity.rs design \
+                  entry and a named bench row",
+        rationale: "the scalar<->SIMD bit-identity claim only holds for kernels pinned \
+                    by the parity suite; a registered kernel family without its parity \
+                    entry and bench row is an unverified fast path.",
     },
 ];
 
@@ -172,8 +232,12 @@ pub struct Report {
     /// Malformed markers: fail the run (an unparseable suppression is
     /// worse than a violation — it silently suppresses nothing).
     pub marker_problems: Vec<MarkerProblem>,
-    /// Markers that suppressed nothing: warn only.
+    /// Markers that suppressed nothing: warn only (fail under
+    /// `--strict-stale`).
     pub stale_markers: Vec<MarkerProblem>,
+    /// Violations matched against a `--baseline` report: reported for
+    /// visibility, but do not fail the run (the ratchet).
+    pub grandfathered: Vec<Violation>,
 }
 
 impl Report {
@@ -183,26 +247,61 @@ impl Report {
         self.suppressions.extend(other.suppressions);
         self.marker_problems.extend(other.marker_problems);
         self.stale_markers.extend(other.stale_markers);
+        self.grandfathered.extend(other.grandfathered);
     }
 
-    /// True when the run should exit nonzero.
+    /// True when the run should exit nonzero (before `--strict-stale`,
+    /// which the CLI layers on top).
     pub fn failed(&self) -> bool {
         !self.violations.is_empty() || !self.marker_problems.is_empty()
+    }
+
+    /// Move every violation matching a baseline entry (by rule, path,
+    /// message — line numbers drift and are ignored) into
+    /// `grandfathered`. Each baseline entry grandfathers at most one
+    /// violation, so *adding* a second identical finding still fails.
+    pub fn apply_baseline(&mut self, baseline: &[(String, String, String)]) {
+        let mut budget: BTreeMap<(&str, &str, &str), usize> = BTreeMap::new();
+        for (r, p, m) in baseline {
+            *budget.entry((r.as_str(), p.as_str(), m.as_str())).or_insert(0) += 1;
+        }
+        let mut kept = Vec::new();
+        for v in std::mem::take(&mut self.violations) {
+            let key = (v.rule, v.path.as_str(), v.message.as_str());
+            match budget.get_mut(&key) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    self.grandfathered.push(v);
+                }
+                _ => kept.push(v),
+            }
+        }
+        self.violations = kept;
     }
 }
 
 // --------------------------------------------------------------------------
-// Lexing: blank comments/strings/chars out of the source so pattern
-// matching never fires inside literals, while keeping byte offsets (and
-// therefore line numbers) intact.
+// Lexing: a real token stream with byte spans. Comments are collected
+// separately (line comments only — they carry the allow markers and the
+// SAFETY audit trail).
 // --------------------------------------------------------------------------
 
-struct Blanked {
-    /// Same length as the input; comment and literal bytes replaced by
-    /// spaces (newlines kept, so line structure is preserved).
-    code: Vec<u8>,
-    /// `(line, text)` of every `//` comment, for marker parsing.
-    comments: Vec<(usize, String)>,
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Tok {
+    kind: TokKind,
+    pos: usize,
+    end: usize,
+    line: usize,
 }
 
 fn is_ident(b: u8) -> bool {
@@ -213,56 +312,46 @@ fn find_byte(hay: &[u8], from: usize, needle: u8) -> Option<usize> {
     hay.iter().skip(from).position(|&b| b == needle).map(|p| p + from)
 }
 
-fn find_from(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
-    if needle.is_empty() || hay.len() < needle.len() || from > hay.len() - needle.len() {
-        return None;
-    }
-    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+struct Lexed {
+    toks: Vec<Tok>,
+    /// `(line, text)` of every `//` comment.
+    comments: Vec<(usize, String)>,
+    line_starts: Vec<usize>,
 }
 
-fn blank_range(out: &mut [u8], a: usize, b: usize) {
-    let b = b.min(out.len());
-    if a >= b {
-        return;
-    }
-    for slot in &mut out[a..b] {
-        if *slot != b'\n' {
-            *slot = b' ';
-        }
-    }
-}
-
-fn count_newlines(bytes: &[u8], a: usize, b: usize) -> usize {
-    let b = b.min(bytes.len());
-    if a >= b {
-        return 0;
-    }
-    bytes[a..b].iter().filter(|&&c| c == b'\n').count()
-}
-
-fn blank(src: &str) -> Blanked {
+fn lex(src: &str) -> Lexed {
     let b = src.as_bytes();
     let n = b.len();
-    let mut out = b.to_vec();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let line_of = |pos: usize| -> usize {
+        match line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    };
+    let mut toks: Vec<Tok> = Vec::new();
     let mut comments: Vec<(usize, String)> = Vec::new();
     let mut i = 0usize;
-    let mut line = 1usize;
     while i < n {
         let c = b[i];
-        if c == b'\n' {
-            line += 1;
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
             i += 1;
             continue;
         }
         // Line comment.
         if b[i..].starts_with(b"//") {
             let j = find_byte(b, i, b'\n').unwrap_or(n);
-            comments.push((line, String::from_utf8_lossy(&b[i..j]).into_owned()));
-            blank_range(&mut out, i, j);
+            comments.push((line_of(i), String::from_utf8_lossy(&b[i..j]).into_owned()));
             i = j;
             continue;
         }
-        // Block comment (nested, per Rust).
+        // Block comment (nested, per Rust). Not recorded: markers and
+        // SAFETY audits are line-comment-only by contract.
         if b[i..].starts_with(b"/*") {
             let mut depth = 1usize;
             let mut j = i + 2;
@@ -274,13 +363,9 @@ fn blank(src: &str) -> Blanked {
                     depth -= 1;
                     j += 2;
                 } else {
-                    if b[j] == b'\n' {
-                        line += 1;
-                    }
                     j += 1;
                 }
             }
-            blank_range(&mut out, i, j);
             i = j;
             continue;
         }
@@ -317,116 +402,273 @@ fn blank(src: &str) -> Blanked {
                         }
                     }
                 }
-                line += count_newlines(b, i, end);
-                blank_range(&mut out, i, end);
+                toks.push(Tok { kind: TokKind::Str, pos: i, end, line: line_of(i) });
                 i = end;
                 continue;
             }
         }
-        // Plain and byte strings.
-        let str_open = if c == b'"' {
-            Some(i)
-        } else if left_bound && c == b'b' && i + 1 < n && b[i + 1] == b'"' {
-            Some(i + 1)
-        } else {
-            None
-        };
-        if let Some(q0) = str_open {
+        // Plain and byte strings. An escape always consumes the next
+        // byte, which also handles `\`-newline string continuations.
+        let is_str = c == b'"' || (left_bound && c == b'b' && i + 1 < n && b[i + 1] == b'"');
+        if is_str {
+            let q0 = if c == b'b' { i + 1 } else { i };
             let mut j = q0 + 1;
             while j < n {
                 match b[j] {
-                    // An escape always consumes the next byte; a
-                    // string-continuation escape consumes a newline,
-                    // which must still be counted.
-                    b'\\' => {
-                        if j + 1 < n && b[j + 1] == b'\n' {
-                            line += 1;
-                        }
-                        j += 2;
-                    }
+                    b'\\' => j += 2,
                     b'"' => {
                         j += 1;
                         break;
-                    }
-                    b'\n' => {
-                        line += 1;
-                        j += 1;
                     }
                     _ => j += 1,
                 }
             }
             let j = j.min(n);
-            blank_range(&mut out, i, j);
+            toks.push(Tok { kind: TokKind::Str, pos: i, end: j, line: line_of(i) });
             i = j;
             continue;
         }
-        // Char literal vs lifetime: '\...' and 'x' are literals (this
-        // also neutralizes '{' / ';' so brace/statement tracking on the
-        // blanked text stays correct); anything else is a lifetime.
+        // Char literal vs lifetime: '\...' and 'x' are literals;
+        // anything else is a lifetime token.
         if c == b'\'' {
             if i + 1 < n && b[i + 1] == b'\\' {
                 let j = find_byte(b, i + 2, b'\'').map(|p| p + 1).unwrap_or(n);
-                blank_range(&mut out, i, j);
+                toks.push(Tok { kind: TokKind::Char, pos: i, end: j, line: line_of(i) });
                 i = j;
                 continue;
             }
             if i + 2 < n && b[i + 2] == b'\'' {
-                blank_range(&mut out, i, i + 3);
+                toks.push(Tok { kind: TokKind::Char, pos: i, end: i + 3, line: line_of(i) });
                 i += 3;
                 continue;
             }
-            i += 1;
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lifetime, pos: i, end: j, line: line_of(i) });
+            i = j;
             continue;
         }
+        // Number: digits, then ident-ish chars (hex digits, suffixes),
+        // then an optional `.digits` fraction (but not `0..4` ranges).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, pos: i, end: j, line: line_of(i) });
+            i = j;
+            continue;
+        }
+        if is_ident(c) {
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, pos: i, end: j, line: line_of(i) });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, pos: i, end: i + 1, line: line_of(i) });
         i += 1;
     }
-    Blanked { code: out, comments }
+    Lexed { toks, comments, line_starts }
 }
 
 // --------------------------------------------------------------------------
-// Test-region masking: code under `#[cfg(test)]` / `#[test]` plays by
-// different rules (unwraps and HashSets in tests are fine).
+// File context: tokens + delimiter tree + test mask + line bookkeeping.
 // --------------------------------------------------------------------------
 
-fn test_mask(code: &[u8]) -> Vec<bool> {
-    let mut mask = vec![false; code.len()];
-    for pat in [&b"#[cfg(test)]"[..], &b"#[test]"[..]] {
-        let mut from = 0usize;
-        while let Some(p) = find_from(code, from, pat) {
-            from = p + pat.len();
-            let nb = find_byte(code, from, b'{');
-            let ns = find_byte(code, from, b';');
-            let end = match (nb, ns) {
-                (None, None) => code.len(),
-                (None, Some(s)) => s + 1,
-                (Some(brace), Some(s)) if s < brace => s + 1,
-                (Some(brace), _) => {
-                    let mut depth = 0usize;
-                    let mut j = brace;
-                    let mut end = code.len();
-                    while j < code.len() {
-                        match code[j] {
-                            b'{' => depth += 1,
-                            b'}' => {
-                                depth -= 1;
-                                if depth == 0 {
-                                    end = j + 1;
-                                    break;
-                                }
-                            }
-                            _ => {}
-                        }
-                        j += 1;
-                    }
-                    end
-                }
-            };
-            for m in &mut mask[p..end.min(mask.len())] {
-                *m = true;
+struct Fx<'a> {
+    src: &'a str,
+    toks: Vec<Tok>,
+    /// Partner index for each `( ) [ ] { }` punct token.
+    partner: Vec<Option<usize>>,
+    /// Token is inside a `#[cfg(test)]` / `#[test]` region.
+    mask: Vec<bool>,
+    comments: Vec<(usize, String)>,
+    /// 1-indexed; `line_has_code[l]` = some token starts or continues
+    /// on line `l`.
+    line_has_code: Vec<bool>,
+    n_lines: usize,
+}
+
+impl<'a> Fx<'a> {
+    fn new(src: &'a str) -> Fx<'a> {
+        let Lexed { toks, comments, line_starts } = lex(src);
+        let n_lines = line_starts.len();
+        let line_of = |pos: usize| -> usize {
+            match line_starts.binary_search(&pos) {
+                Ok(i) => i + 1,
+                Err(i) => i,
+            }
+        };
+        let mut line_has_code = vec![false; n_lines + 2];
+        for t in &toks {
+            let a = t.line;
+            let b = line_of(t.end.saturating_sub(1).max(t.pos));
+            for l in a..=b.min(n_lines) {
+                line_has_code[l] = true;
             }
         }
+        let mut fx = Fx {
+            src,
+            toks,
+            partner: Vec::new(),
+            mask: Vec::new(),
+            comments,
+            line_has_code,
+            n_lines,
+        };
+        fx.partner = fx.match_delims();
+        fx.mask = fx.test_mask();
+        fx
     }
-    mask
+
+    fn text(&self, i: usize) -> &str {
+        let t = &self.toks[i];
+        &self.src[t.pos..t.end]
+    }
+
+    fn ident_is(&self, i: usize, s: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.kind == TokKind::Ident) && self.text(i) == s
+    }
+
+    fn punct_is(&self, i: usize, c: u8) -> bool {
+        self.toks
+            .get(i)
+            .is_some_and(|t| t.kind == TokKind::Punct && self.src.as_bytes()[t.pos] == c)
+    }
+
+    fn match_delims(&self) -> Vec<Option<usize>> {
+        let mut partner = vec![None; self.toks.len()];
+        let mut stack: Vec<(u8, usize)> = Vec::new();
+        for (i, t) in self.toks.iter().enumerate() {
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            match self.src.as_bytes()[t.pos] {
+                c @ (b'(' | b'[' | b'{') => stack.push((c, i)),
+                c @ (b')' | b']' | b'}') => {
+                    let open = match c {
+                        b')' => b'(',
+                        b']' => b'[',
+                        _ => b'{',
+                    };
+                    while let Some((oc, oi)) = stack.pop() {
+                        if oc == open {
+                            partner[oi] = Some(i);
+                            partner[i] = Some(oi);
+                            break;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        partner
+    }
+
+    /// Mask tokens under `#[cfg(test)]` / `#[test]` attributes: the
+    /// attribute's item (up to the matching `}` of its first brace, or
+    /// a terminating `;`) plays by different rules.
+    fn test_mask(&self) -> Vec<bool> {
+        let mut mask = vec![false; self.toks.len()];
+        let n = self.toks.len();
+        let mut i = 0usize;
+        while i < n {
+            let attr_end = if self.punct_is(i, b'#') && self.punct_is(i + 1, b'[') {
+                if self.ident_is(i + 2, "test") && self.punct_is(i + 3, b']') {
+                    Some(i + 3)
+                } else if self.ident_is(i + 2, "cfg")
+                    && self.punct_is(i + 3, b'(')
+                    && self.ident_is(i + 4, "test")
+                    && self.punct_is(i + 5, b')')
+                    && self.punct_is(i + 6, b']')
+                {
+                    Some(i + 6)
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+            if let Some(e) = attr_end {
+                let mut j = e + 1;
+                let mut end = n;
+                while j < n {
+                    if self.punct_is(j, b';') {
+                        end = j + 1;
+                        break;
+                    }
+                    if self.punct_is(j, b'{') {
+                        end = self.partner[j].map(|p| p + 1).unwrap_or(n);
+                        break;
+                    }
+                    j += 1;
+                }
+                for m in &mut mask[i..end.min(n)] {
+                    *m = true;
+                }
+                i = e + 1;
+                continue;
+            }
+            i += 1;
+        }
+        mask
+    }
+
+    /// Index of the first token of the statement containing token `i`
+    /// (the token after the previous `;`, `{`, or `}`).
+    fn stmt_start(&self, i: usize) -> usize {
+        let mut j = i;
+        while j > 0 {
+            let p = j - 1;
+            if self.punct_is(p, b';') || self.punct_is(p, b'{') || self.punct_is(p, b'}') {
+                break;
+            }
+            j -= 1;
+        }
+        j
+    }
+
+    /// Heuristic: does the token range `[a, b)` mention float
+    /// arithmetic? Word `f32`/`f64` or a float literal counts; the
+    /// bit-domain constructors `f32::from_bits`/`f64::from_bits` are
+    /// ignored (they take integers).
+    fn float_evidence(&self, a: usize, b: usize) -> bool {
+        for i in a..b.min(self.toks.len()) {
+            match self.toks[i].kind {
+                TokKind::Ident => {
+                    let t = self.text(i);
+                    if (t == "f32" || t == "f64")
+                        && !(self.punct_is(i + 1, b':')
+                            && self.punct_is(i + 2, b':')
+                            && self.ident_is(i + 3, "from_bits"))
+                    {
+                        return true;
+                    }
+                }
+                TokKind::Num => {
+                    let t = self.text(i).as_bytes();
+                    if t.windows(3).any(|w| {
+                        w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit()
+                    }) {
+                        return true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -484,12 +726,16 @@ fn parse_marker(text: &str) -> Option<Result<(Vec<String>, String), String>> {
 }
 
 // --------------------------------------------------------------------------
-// Scope matching.
+// Scope matching and scan profiles.
 // --------------------------------------------------------------------------
 
 /// Does `path` fall under any of `scopes`? A scope is a `/`-separated
-/// run of path segments matched anywhere in the (normalized) path.
+/// run of path segments matched anywhere in the (normalized) path; the
+/// special scope `"*"` matches everything.
 pub fn in_scope(path: &str, scopes: &[&str]) -> bool {
+    if scopes.contains(&"*") {
+        return true;
+    }
     let norm = path.replace('\\', "/");
     let segs: Vec<&str> = norm.split('/').filter(|s| !s.is_empty()).collect();
     scopes.iter().any(|scope| {
@@ -500,65 +746,320 @@ pub fn in_scope(path: &str, scopes: &[&str]) -> bool {
     })
 }
 
-// --------------------------------------------------------------------------
-// Pattern helpers.
-// --------------------------------------------------------------------------
-
-fn bounded(code: &[u8], start: usize, end: usize) -> bool {
-    let before_ok = start == 0 || !is_ident(code[start - 1]);
-    let after_ok = end >= code.len() || !is_ident(code[end]);
-    before_ok && after_ok
+/// Which rule set a file is scanned under, by tree region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// The mirrored `src/` layout: all rules at their native scopes.
+    Default,
+    /// `rust/tests/**`: D1/D1v2/D3/U1 everywhere in the file; D2/P1/
+    /// P2/S1 off (tests may read wall-clock and unwrap).
+    Tests,
+    /// detlint's own sources: dogfood D1/D1v2/D3/U1 everywhere.
+    Analyzer,
 }
 
-fn find_word_all(code: &[u8], word: &[u8]) -> Vec<usize> {
-    let mut out = Vec::new();
+/// Profile precedence: a `fixtures` segment wins (fixture corpora
+/// mirror the src tree even under `analyzers/`), then `analyzers`,
+/// then `tests`.
+pub fn profile_for(path: &str) -> Profile {
+    let norm = path.replace('\\', "/");
+    let segs: Vec<&str> = norm.split('/').filter(|s| !s.is_empty()).collect();
+    if segs.contains(&"fixtures") {
+        Profile::Default
+    } else if segs.contains(&"analyzers") {
+        Profile::Analyzer
+    } else if segs.contains(&"tests") {
+        Profile::Tests
+    } else {
+        Profile::Default
+    }
+}
+
+/// Effective scope per rule under a profile; `None` = rule off.
+fn rule_scope(profile: Profile, rule: &str) -> Option<&'static [&'static str]> {
+    match profile {
+        Profile::Default => Some(match rule {
+            "D1" | "D1v2" => D1_SCOPE,
+            "D2" => D2_SCOPE,
+            "D3" => D3_REDUCE_SCOPE,
+            "P1" => P1_SCOPE,
+            "P2" => P2_SCOPE,
+            "S1" => S1_SCOPE,
+            "U1" => U1_SCOPE,
+            "C1" => C1_SCOPE,
+            _ => return None,
+        }),
+        Profile::Tests | Profile::Analyzer => match rule {
+            "D1" | "D1v2" | "D3" | "U1" => Some(ALL_SCOPE),
+            _ => None,
+        },
+    }
+}
+
+// --------------------------------------------------------------------------
+// Binding table: let / fn-arg / struct-field bindings with their
+// declared (or RHS-inferred) types.
+// --------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Binding {
+    name: String,
+    ty: String,
+    pos: usize,
+}
+
+fn contains_word(hay: &str, word: &str) -> bool {
+    let hb = hay.as_bytes();
     let mut from = 0usize;
-    while let Some(p) = find_from(code, from, word) {
-        if bounded(code, p, p + word.len()) {
-            out.push(p);
+    while let Some(p) = hay[from..].find(word).map(|p| p + from) {
+        let before_ok = p == 0 || !is_ident(hb[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= hb.len() || !is_ident(hb[after]);
+        if before_ok && after_ok {
+            return true;
         }
         from = p + 1;
+    }
+    false
+}
+
+/// A single-`:` punct (not part of `::`).
+fn lone_colon(fx: &Fx, i: usize) -> bool {
+    fx.punct_is(i, b':')
+        && !fx.punct_is(i + 1, b':')
+        && !(i > 0 && fx.punct_is(i - 1, b':'))
+}
+
+fn collect_bindings(fx: &Fx) -> Vec<Binding> {
+    let n = fx.toks.len();
+    let mut out: Vec<Binding> = Vec::new();
+    // One parameter or field segment: `... name : ty...`.
+    let mut push_segment = |fx: &Fx, a: usize, b: usize, out: &mut Vec<Binding>| {
+        let mut colon = None;
+        let mut depth = 0i32;
+        let mut angle = 0i32;
+        for i in a..b {
+            if fx.toks[i].kind == TokKind::Punct {
+                match fx.src.as_bytes()[fx.toks[i].pos] {
+                    b'(' | b'[' | b'{' => depth += 1,
+                    b')' | b']' | b'}' => depth -= 1,
+                    b'<' => angle += 1,
+                    b'>' => angle -= 1,
+                    _ => {}
+                }
+            }
+            if depth == 0 && angle == 0 && lone_colon(fx, i) {
+                colon = Some(i);
+                break;
+            }
+        }
+        let Some(c) = colon else { return };
+        // Name: last ident before the colon (skips `pub`, `mut`, ...).
+        let mut name = None;
+        for i in (a..c).rev() {
+            if fx.toks[i].kind == TokKind::Ident {
+                let t = fx.text(i);
+                if t != "mut" && t != "ref" {
+                    name = Some((t.to_string(), fx.toks[i].pos));
+                }
+                break;
+            }
+        }
+        let Some((name, pos)) = name else { return };
+        let ty: String = (c + 1..b).map(|i| fx.text(i)).collect();
+        out.push(Binding { name, ty, pos });
+    };
+    // Split `[open+1, close)` into comma segments at depth 0.
+    let split_segments = |fx: &Fx, open: usize, close: usize, out: &mut Vec<Binding>,
+                          push: &mut dyn FnMut(&Fx, usize, usize, &mut Vec<Binding>)| {
+        let mut seg = open + 1;
+        let mut depth = 0i32;
+        let mut angle = 0i32;
+        let mut i = open + 1;
+        while i <= close {
+            let boundary =
+                i == close || (depth == 0 && angle <= 0 && fx.punct_is(i, b','));
+            if boundary {
+                if seg < i {
+                    push(fx, seg, i, out);
+                }
+                seg = i + 1;
+                if fx.punct_is(i, b',') {
+                    angle = angle.max(0);
+                }
+            } else if fx.toks[i].kind == TokKind::Punct {
+                match fx.src.as_bytes()[fx.toks[i].pos] {
+                    b'(' | b'[' | b'{' => depth += 1,
+                    b')' | b']' | b'}' => depth -= 1,
+                    b'<' => angle += 1,
+                    b'>' => angle -= 1,
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+    };
+    let mut i = 0usize;
+    while i < n {
+        // `let [mut] name: Ty = ...` / `let [mut] name = <rhs>;`
+        if fx.ident_is(i, "let") {
+            let mut j = i + 1;
+            if fx.ident_is(j, "mut") {
+                j += 1;
+            }
+            if fx.toks.get(j).is_some_and(|t| t.kind == TokKind::Ident) {
+                let name = fx.text(j).to_string();
+                let pos = fx.toks[j].pos;
+                let k = j + 1;
+                if lone_colon(fx, k) {
+                    let mut ty = String::new();
+                    let mut m = k + 1;
+                    let mut angle = 0i32;
+                    while m < n {
+                        if angle <= 0 && (fx.punct_is(m, b'=') || fx.punct_is(m, b';')) {
+                            break;
+                        }
+                        if fx.punct_is(m, b'<') {
+                            angle += 1;
+                        } else if fx.punct_is(m, b'>') {
+                            angle -= 1;
+                        }
+                        ty.push_str(fx.text(m));
+                        m += 1;
+                    }
+                    out.push(Binding { name, ty, pos });
+                } else if fx.punct_is(k, b'=') && !fx.punct_is(k + 1, b'=') {
+                    // RHS inference: a hash container constructor names
+                    // its type on the right-hand side.
+                    let mut m = k + 1;
+                    let mut depth = 0i32;
+                    let mut ty = String::new();
+                    while m < n {
+                        if depth == 0 && fx.punct_is(m, b';') {
+                            break;
+                        }
+                        if fx.toks[m].kind == TokKind::Punct {
+                            match fx.src.as_bytes()[fx.toks[m].pos] {
+                                b'(' | b'[' | b'{' => depth += 1,
+                                b')' | b']' | b'}' => depth -= 1,
+                                _ => {}
+                            }
+                        } else if fx.toks[m].kind == TokKind::Ident
+                            && (fx.text(m) == "HashMap" || fx.text(m) == "HashSet")
+                        {
+                            ty = fx.text(m).to_string();
+                        }
+                        m += 1;
+                    }
+                    if !ty.is_empty() {
+                        out.push(Binding { name, ty, pos });
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+        // `fn name(params...)`
+        if fx.ident_is(i, "fn") {
+            let mut j = i + 1;
+            let mut angle = 0i32;
+            while j < n {
+                if fx.punct_is(j, b'<') {
+                    angle += 1;
+                } else if fx.punct_is(j, b'>') {
+                    angle -= 1;
+                } else if angle <= 0
+                    && (fx.punct_is(j, b'{') || fx.punct_is(j, b';'))
+                {
+                    break;
+                } else if angle <= 0 && fx.punct_is(j, b'(') {
+                    if let Some(close) = fx.partner[j] {
+                        split_segments(fx, j, close, &mut out, &mut push_segment);
+                    }
+                    break;
+                }
+                j += 1;
+            }
+            i += 1;
+            continue;
+        }
+        // `struct Name { fields... }`
+        if fx.ident_is(i, "struct")
+            && fx.toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+        {
+            let mut j = i + 2;
+            let mut angle = 0i32;
+            while j < n {
+                if fx.punct_is(j, b'<') {
+                    angle += 1;
+                } else if fx.punct_is(j, b'>') {
+                    angle -= 1;
+                } else if angle <= 0
+                    && (fx.punct_is(j, b';') || fx.punct_is(j, b'('))
+                {
+                    break; // unit or tuple struct
+                } else if angle <= 0 && fx.punct_is(j, b'{') {
+                    if let Some(close) = fx.partner[j] {
+                        split_segments(fx, j, close, &mut out, &mut push_segment);
+                    }
+                    break;
+                }
+                j += 1;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
     }
     out
 }
 
-fn find_all(code: &[u8], pat: &[u8]) -> Vec<usize> {
-    let mut out = Vec::new();
-    let mut from = 0usize;
-    while let Some(p) = find_from(code, from, pat) {
-        out.push(p);
-        from = p + 1;
-    }
-    out
-}
-
-/// Start of the statement containing `pos` (after the previous `;`,
-/// `{`, or `}` in the blanked code).
-fn stmt_start(code: &[u8], pos: usize) -> usize {
-    code[..pos]
-        .iter()
-        .rposition(|&c| c == b';' || c == b'{' || c == b'}')
-        .map(|p| p + 1)
-        .unwrap_or(0)
-}
-
-/// Heuristic: does this code slice mention float arithmetic? Word
-/// `f32`/`f64` or a float literal counts; the bit-domain constructors
-/// `f32::from_bits`/`f64::from_bits` are ignored (they take integers).
-fn float_evidence(text: &[u8]) -> bool {
-    let mut t = text.to_vec();
-    for pat in [&b"f32::from_bits"[..], &b"f64::from_bits"[..]] {
-        let mut from = 0usize;
-        while let Some(p) = find_from(&t, from, pat) {
-            blank_range(&mut t, p, p + pat.len());
-            from = p + pat.len();
+fn resolve<'b>(bindings: &'b [Binding], name: &str, pos: usize) -> Option<&'b Binding> {
+    let mut before: Option<&Binding> = None;
+    let mut after: Option<&Binding> = None;
+    for b in bindings.iter().filter(|b| b.name == name) {
+        if b.pos <= pos {
+            if before.is_none_or(|x| b.pos >= x.pos) {
+                before = Some(b);
+            }
+        } else if after.is_none_or(|x| b.pos < x.pos) {
+            after = Some(b);
         }
     }
-    if !find_word_all(&t, b"f32").is_empty() || !find_word_all(&t, b"f64").is_empty() {
-        return true;
-    }
-    t.windows(3)
-        .any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+    before.or(after)
+}
+
+fn hash_typed(b: &Binding) -> bool {
+    contains_word(&b.ty, "HashMap") || contains_word(&b.ty, "HashSet")
+}
+
+// --------------------------------------------------------------------------
+// Per-file analysis.
+// --------------------------------------------------------------------------
+
+struct Candidate {
+    pos: usize,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Everything a single file contributes to a scan. Cross-file rules
+/// (C1) and stale-marker accounting resolve in [`finalize`].
+struct FileAnalysis {
+    path: String,
+    violations: Vec<Violation>,
+    suppressions: Vec<Suppression>,
+    marker_problems: Vec<MarkerProblem>,
+    markers: Vec<Marker>,
+    used: BTreeSet<(usize, String)>,
+    allow: BTreeMap<usize, BTreeMap<String, String>>,
+    /// `(family, line)` of each `simd_kernel()` registration.
+    registrations: Vec<(String, usize)>,
+    parity_seen: bool,
+    parity_families: BTreeSet<String>,
+    bench_seen: bool,
+    bench_families: BTreeSet<String>,
 }
 
 const INT_TYPES: [&str; 12] = [
@@ -566,61 +1067,72 @@ const INT_TYPES: [&str; 12] = [
     "usize",
 ];
 
-// --------------------------------------------------------------------------
-// The scanner.
-// --------------------------------------------------------------------------
+/// Keywords that can directly precede a `[` without forming an index
+/// expression (`return [..]`, `match [..]`, ...).
+const NON_INDEX_KEYWORDS: [&str; 28] = [
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn",
+    "else", "enum", "extern", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "mod", "move", "mut", "pub", "ref", "return", "use", "where",
+];
 
-struct Candidate {
-    pos: usize,
-    rule: &'static str,
-    message: String,
+const ITER_METHODS: [&str; 9] = [
+    "drain", "into_iter", "into_keys", "into_values", "iter", "iter_mut", "keys",
+    "values", "values_mut",
+];
+
+/// The leading lowercase-letter run of a design spec names its family
+/// (`"lut8:drum6"` -> `lut`, `"sdrum6"` -> `sdrum`).
+fn design_family(spec: &str) -> String {
+    spec.bytes()
+        .take_while(|b| b.is_ascii_lowercase())
+        .map(|b| b as char)
+        .collect()
 }
 
-/// Scan one file's source. `path` is used for scoping and reporting;
-/// scope matching is segment-based, so both repo-relative and absolute
-/// paths work.
-pub fn scan_source(path: &str, src: &str) -> Report {
-    let Blanked { code, comments } = blank(src);
-    let mask = test_mask(&code);
+/// Literal content of a string token (quotes, `b`/`r` prefixes and raw
+/// hashes stripped).
+fn str_content<'a>(fx: &Fx<'a>, i: usize) -> &'a str {
+    let t = fx.text(i);
+    let Some(a) = t.find('"') else { return "" };
+    let Some(b) = t.rfind('"') else { return "" };
+    if b > a { &fx.src[fx.toks[i].pos + a + 1..fx.toks[i].pos + b] } else { "" }
+}
 
-    // Line bookkeeping.
-    let mut line_starts: Vec<usize> = vec![0];
-    for (i, &b) in code.iter().enumerate() {
-        if b == b'\n' {
-            line_starts.push(i + 1);
-        }
-    }
-    let line_of = |pos: usize| -> usize {
-        match line_starts.binary_search(&pos) {
-            Ok(i) => i + 1,
-            Err(i) => i,
-        }
-    };
-    let line_is_blank = |line: usize| -> bool {
-        let a = line_starts[line - 1];
-        let b = line_starts.get(line).copied().unwrap_or(code.len());
-        code[a..b].iter().all(|&c| c == b' ' || c == b'\n')
+fn kernel_family(kernel_enum: &str, variant: &str) -> Option<&'static str> {
+    Some(match (kernel_enum, variant) {
+        ("UnsignedKernel", "Exact") => "exact",
+        ("UnsignedKernel", "Drum") => "drum",
+        ("UnsignedKernel", "Trunc") => "trunc",
+        ("UnsignedKernel", "Mitchell") => "mitchell",
+        ("UnsignedKernel", "Flat") => "lut",
+        ("SignedKernel", "Exact") => "sexact",
+        ("SignedKernel", "SDrum") => "sdrum",
+        ("SignedKernel", "Booth") => "booth",
+        ("SignedKernel", "Flat") => "slut",
+        _ => return None,
+    })
+}
+
+fn analyze_file(path: &str, src: &str) -> FileAnalysis {
+    let fx = Fx::new(src);
+    let profile = profile_for(path);
+    let on = |rule: &str| -> bool {
+        rule_scope(profile, rule).is_some_and(|s| in_scope(path, s))
     };
 
     // Markers.
-    let mut report = Report { files_scanned: 1, ..Report::default() };
+    let mut marker_problems: Vec<MarkerProblem> = Vec::new();
     let mut markers: Vec<Marker> = Vec::new();
-    for (line, text) in &comments {
+    for (line, text) in &fx.comments {
         match parse_marker(text) {
             None => {}
-            Some(Err(msg)) => report.marker_problems.push(MarkerProblem {
+            Some(Err(msg)) => marker_problems.push(MarkerProblem {
                 path: path.to_string(),
                 line: *line,
                 message: msg,
             }),
             Some(Ok((rules, reason))) => {
-                // A comment-only line covers the next line; a trailing
-                // comment covers its own.
-                let target = if line_is_blank(*line) {
-                    *line + 1
-                } else {
-                    *line
-                };
+                let target = if !fx.line_has_code[*line] { *line + 1 } else { *line };
                 markers.push(Marker { line: *line, target, rules, reason });
             }
         }
@@ -633,204 +1145,526 @@ pub fn scan_source(path: &str, src: &str) -> Report {
         }
     }
 
-    // Collect candidates per rule.
+    let n = fx.toks.len();
     let mut cands: Vec<Candidate> = Vec::new();
-    if in_scope(path, D1_SCOPE) {
-        for word in [&b"HashMap"[..], &b"HashSet"[..]] {
-            for p in find_word_all(&code, word) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "D1",
-                    message: format!(
-                        "hash-ordered container `{}` in a trajectory/artifact module \
-                         (iteration order leaks; use BTreeMap/BTreeSet or annotate a \
-                         lookup-only use)",
-                        String::from_utf8_lossy(word)
-                    ),
-                });
-            }
+    let push = |cands: &mut Vec<Candidate>, i: usize, rule: &'static str, msg: String| {
+        cands.push(Candidate {
+            pos: fx.toks[i].pos,
+            line: fx.toks[i].line,
+            rule,
+            message: msg,
+        });
+    };
+
+    let bindings = if on("D1v2") { collect_bindings(&fx) } else { Vec::new() };
+    let mut d1v2_seen: BTreeSet<(usize, String)> = BTreeSet::new();
+    let mut d1v2_site = |cands: &mut Vec<Candidate>, i: usize, name: &str, ty: &str| {
+        if !d1v2_seen.insert((fx.toks[i].line, name.to_string())) {
+            return;
         }
-    }
-    if in_scope(path, D2_SCOPE) {
-        for pat in [&b"Instant::now"[..], &b"SystemTime"[..], &b"std::time"[..]] {
-            for p in find_word_all(&code, pat) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "D2",
-                    message: format!(
-                        "wall-clock `{}` in a step-math module (breaks bit-identical \
+        cands.push(Candidate {
+            pos: fx.toks[i].pos,
+            line: fx.toks[i].line,
+            rule: "D1v2",
+            message: format!(
+                "iteration over hash-ordered binding `{name}` (type `{ty}`) leaks \
+                 per-process order into a trajectory/artifact module (use \
+                 BTreeMap/BTreeSet, or restructure to keyed lookup)"
+            ),
+        });
+    };
+
+    for i in 0..n {
+        if fx.mask[i] {
+            continue;
+        }
+        let kind = fx.toks[i].kind;
+        if kind == TokKind::Ident {
+            let t = fx.text(i);
+            // D1: any HashMap/HashSet mention.
+            if on("D1") && (t == "HashMap" || t == "HashSet") {
+                push(&mut cands, i, "D1", format!(
+                    "hash-ordered container `{t}` in a trajectory/artifact module \
+                     (iteration order leaks; use BTreeMap/BTreeSet or annotate a \
+                     lookup-only use)"
+                ));
+            }
+            // D2: wall-clock reads.
+            if on("D2") {
+                let pat = if t == "Instant"
+                    && fx.punct_is(i + 1, b':')
+                    && fx.punct_is(i + 2, b':')
+                    && fx.ident_is(i + 3, "now")
+                {
+                    Some("Instant::now")
+                } else if t == "SystemTime" {
+                    Some("SystemTime")
+                } else if t == "std"
+                    && fx.punct_is(i + 1, b':')
+                    && fx.punct_is(i + 2, b':')
+                    && fx.ident_is(i + 3, "time")
+                {
+                    Some("std::time")
+                } else {
+                    None
+                };
+                if let Some(pat) = pat {
+                    push(&mut cands, i, "D2", format!(
+                        "wall-clock `{pat}` in a step-math module (breaks bit-identical \
                          replay; move timing out of the step path or annotate \
-                         telemetry-only use)",
-                        String::from_utf8_lossy(pat)
-                    ),
-                });
-            }
-        }
-    }
-    if !in_scope(path, D3_SPAWN_EXEMPT) {
-        for p in find_word_all(&code, b"thread::spawn") {
-            cands.push(Candidate {
-                pos: p,
-                rule: "D3",
-                message: "raw `thread::spawn` outside parallel/ (use \
-                          parallel::par_map / par_chunks_mut, which keep results \
-                          thread-count invariant)"
-                    .into(),
-            });
-        }
-    }
-    if in_scope(path, D3_REDUCE_SCOPE) {
-        for pat in [&b".sum::<f32>"[..], &b".sum::<f64>"[..]] {
-            for p in find_all(&code, pat) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "D3",
-                    message: "float `.sum()` reduction in the numeric spine (must be \
-                              sequential in a fixed order — annotate why this one is, \
-                              or route through the k-ordered kernels)"
-                        .into(),
-                });
-            }
-        }
-        for p in find_all(&code, b".sum()") {
-            if float_evidence(&code[stmt_start(&code, p)..p]) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "D3",
-                    message: "float `.sum()` reduction in the numeric spine (must be \
-                              sequential in a fixed order — annotate why this one is, \
-                              or route through the k-ordered kernels)"
-                        .into(),
-                });
-            }
-        }
-        for p in find_all(&code, b".fold(") {
-            let end = (p + 6 + 64).min(code.len());
-            if float_evidence(&code[p + 6..end]) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "D3",
-                    message: "float-accumulator `.fold(..)` reduction in the numeric \
-                              spine (order-sensitive; annotate or restructure)"
-                        .into(),
-                });
-            }
-        }
-    }
-    if in_scope(path, P1_SCOPE) {
-        for pat in [&b".unwrap()"[..], &b".expect("[..]] {
-            for p in find_all(&code, pat) {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "P1",
-                    message: format!(
-                        "`{}` in the resilience spine (typed errors are the contract \
-                         here: a panic turns a recoverable fault into an abort)",
-                        String::from_utf8_lossy(&pat[1..])
-                    ),
-                });
-            }
-        }
-        let macros = [&b"panic!"[..], &b"unreachable!"[..], &b"todo!"[..], &b"unimplemented!"[..]];
-        for mac in macros {
-            let word = &mac[..mac.len() - 1];
-            let mut from = 0usize;
-            while let Some(p) = find_from(&code, from, mac) {
-                if bounded(&code, p, p + word.len()) {
-                    cands.push(Candidate {
-                        pos: p,
-                        rule: "P1",
-                        message: format!(
-                            "`{}` in the resilience spine (raise a typed error instead)",
-                            String::from_utf8_lossy(mac)
-                        ),
-                    });
+                         telemetry-only use)"
+                    ));
                 }
-                from = p + 1;
+            }
+            // D3: raw thread::spawn outside parallel/.
+            if t == "thread"
+                && fx.punct_is(i + 1, b':')
+                && fx.punct_is(i + 2, b':')
+                && fx.ident_is(i + 3, "spawn")
+                && !in_scope(path, D3_SPAWN_EXEMPT)
+            {
+                push(&mut cands, i, "D3", "raw `thread::spawn` outside parallel/ (use \
+                      parallel::par_map / par_chunks_mut, which keep results \
+                      thread-count invariant)".into());
+            }
+            // D3: float reductions.
+            if on("D3") && i > 0 && fx.punct_is(i - 1, b'.') {
+                if t == "sum" {
+                    let turbofish = fx.punct_is(i + 1, b':')
+                        && fx.punct_is(i + 2, b':')
+                        && fx.punct_is(i + 3, b'<')
+                        && (fx.ident_is(i + 4, "f32") || fx.ident_is(i + 4, "f64"));
+                    let bare = fx.punct_is(i + 1, b'(')
+                        && fx.punct_is(i + 2, b')')
+                        && fx.float_evidence(fx.stmt_start(i), i);
+                    if turbofish || bare {
+                        push(&mut cands, i - 1, "D3", "float `.sum()` reduction in the \
+                              numeric spine (must be sequential in a fixed order — \
+                              annotate why this one is, or route through the k-ordered \
+                              kernels)".into());
+                    }
+                }
+                if t == "fold" && fx.punct_is(i + 1, b'(') {
+                    let close = fx.partner[i + 1].unwrap_or(n);
+                    if fx.float_evidence(i + 2, close) {
+                        push(&mut cands, i - 1, "D3", "float-accumulator `.fold(..)` \
+                              reduction in the numeric spine (order-sensitive; annotate \
+                              or restructure)".into());
+                    }
+                }
+            }
+            // P1: panic family.
+            if on("P1") {
+                if i > 0 && fx.punct_is(i - 1, b'.') {
+                    if t == "unwrap" && fx.punct_is(i + 1, b'(') && fx.punct_is(i + 2, b')') {
+                        push(&mut cands, i - 1, "P1", "`unwrap()` in the resilience \
+                              spine (typed errors are the contract here: a panic turns \
+                              a recoverable fault into an abort)".into());
+                    }
+                    if t == "expect" && fx.punct_is(i + 1, b'(') {
+                        push(&mut cands, i - 1, "P1", "`expect(` in the resilience \
+                              spine (typed errors are the contract here: a panic turns \
+                              a recoverable fault into an abort)".into());
+                    }
+                }
+                if matches!(t, "panic" | "unreachable" | "todo" | "unimplemented")
+                    && fx.punct_is(i + 1, b'!')
+                    && fx.toks[i + 1].pos == fx.toks[i].end
+                {
+                    push(&mut cands, i, "P1", format!(
+                        "`{t}!` in the resilience spine (raise a typed error instead)"
+                    ));
+                }
+            }
+            // S1: float->int `as` casts.
+            if on("S1")
+                && t == "as"
+                && fx.toks.get(i + 1).is_some_and(|x| x.kind == TokKind::Ident)
+                && INT_TYPES.contains(&fx.text(i + 1))
+                && fx.float_evidence(fx.stmt_start(i), i)
+            {
+                push(&mut cands, i, "S1", format!(
+                    "float->int `as {}` cast in a mult/ decomposition path (silently \
+                     saturates/truncates; use the checked helpers in mult::cast)",
+                    fx.text(i + 1)
+                ));
+            }
+            // U1: unsafe without a SAFETY comment.
+            if on("U1") && t == "unsafe" {
+                let l = fx.toks[i].line;
+                let has_safety = |line: usize| {
+                    fx.comments
+                        .iter()
+                        .any(|(cl, c)| *cl == line && c.contains("SAFETY:"))
+                };
+                let mut ok = has_safety(l);
+                if !ok {
+                    let mut k = l.saturating_sub(1);
+                    while k >= 1 && !fx.line_has_code[k] {
+                        if !fx.comments.iter().any(|(cl, _)| *cl == k) {
+                            break; // blank line: not "immediately preceded"
+                        }
+                        if has_safety(k) {
+                            ok = true;
+                            break;
+                        }
+                        k -= 1;
+                    }
+                }
+                if !ok {
+                    push(&mut cands, i, "U1", "`unsafe` without an immediately \
+                          preceding `// SAFETY:` comment (state the proof obligation \
+                          the compiler cannot check)".into());
+                }
+            }
+            // D1v2: iteration sites over hash-typed bindings.
+            if on("D1v2") && in_scope(path, rule_scope(profile, "D1v2").unwrap_or(&[])) {
+                // `for <pat> in <expr> {`
+                if t == "for" && !fx.punct_is(i + 1, b'<') {
+                    let mut depth = 0i32;
+                    let mut j = i + 1;
+                    let mut in_idx = None;
+                    while j < n {
+                        if fx.toks[j].kind == TokKind::Punct {
+                            match fx.src.as_bytes()[fx.toks[j].pos] {
+                                b'(' | b'[' => depth += 1,
+                                b')' | b']' => depth -= 1,
+                                b'{' | b';' if depth == 0 => break,
+                                _ => {}
+                            }
+                        } else if depth == 0 && fx.ident_is(j, "in") {
+                            in_idx = Some(j);
+                            break;
+                        }
+                        j += 1;
+                    }
+                    if let Some(start) = in_idx {
+                        let mut depth = 0i32;
+                        let mut j = start + 1;
+                        while j < n {
+                            if fx.toks[j].kind == TokKind::Punct {
+                                match fx.src.as_bytes()[fx.toks[j].pos] {
+                                    b'(' | b'[' => depth += 1,
+                                    b')' | b']' => depth -= 1,
+                                    b'{' if depth == 0 => break,
+                                    _ => {}
+                                }
+                            } else if fx.toks[j].kind == TokKind::Ident {
+                                let name = fx.text(j);
+                                let dotted = j > 0 && fx.punct_is(j - 1, b'.');
+                                let self_field = dotted && fx.ident_is(j - 2, "self");
+                                if name != "self" && (!dotted || self_field) {
+                                    if let Some(b) = resolve(&bindings, name, fx.toks[j].pos)
+                                    {
+                                        if hash_typed(b) {
+                                            let ty = b.ty.clone();
+                                            d1v2_site(&mut cands, j, name, &ty);
+                                        }
+                                    }
+                                }
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+                // `<receiver>.iter()/.keys()/...`
+                if ITER_METHODS.contains(&t)
+                    && i > 0
+                    && fx.punct_is(i - 1, b'.')
+                    && fx.punct_is(i + 1, b'(')
+                    && i >= 2
+                    && fx.toks[i - 2].kind == TokKind::Ident
+                {
+                    let name = fx.text(i - 2);
+                    let plain = i < 3 || !fx.punct_is(i - 3, b'.');
+                    let self_field = !plain && i >= 4 && fx.ident_is(i - 4, "self");
+                    if name != "self" && (plain || self_field) {
+                        if let Some(b) = resolve(&bindings, name, fx.toks[i - 2].pos) {
+                            if hash_typed(b) {
+                                let ty = b.ty.clone();
+                                d1v2_site(&mut cands, i - 2, name, &ty);
+                            }
+                        }
+                    }
+                }
             }
         }
-    }
-    if in_scope(path, S1_SCOPE) {
-        for p in find_word_all(&code, b"as") {
-            let mut k = p + 2;
-            while k < code.len() && (code[k] == b' ' || code[k] == b'\t' || code[k] == b'\n') {
-                k += 1;
-            }
-            let ty_start = k;
-            while k < code.len() && is_ident(code[k]) {
-                k += 1;
-            }
-            let ty = String::from_utf8_lossy(&code[ty_start..k]).into_owned();
-            if INT_TYPES.contains(&ty.as_str())
-                && float_evidence(&code[stmt_start(&code, p)..p])
-            {
-                cands.push(Candidate {
-                    pos: p,
-                    rule: "S1",
-                    message: format!(
-                        "float->int `as {ty}` cast in a mult/ decomposition path \
-                         (silently saturates/truncates; use the checked helpers in \
-                         mult::cast)"
-                    ),
-                });
+        // P2: panicking index expressions.
+        if kind == TokKind::Punct
+            && on("P2")
+            && fx.punct_is(i, b'[')
+            && i > 0
+        {
+            let p = i - 1;
+            let indexy = match fx.toks[p].kind {
+                TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&fx.text(p)),
+                TokKind::Punct => matches!(fx.src.as_bytes()[fx.toks[p].pos], b')' | b']' | b'?'),
+                _ => false,
+            };
+            if indexy {
+                push(&mut cands, i, "P2", "panicking slice/array index `[..]` in the \
+                      resilience spine (a short or corrupt buffer must surface as a \
+                      typed fault, not an abort; use .get()/.get_mut())".into());
             }
         }
     }
 
-    // Resolve candidates against the test mask and allow markers.
-    cands.sort_by_key(|c| (c.pos, c.rule));
+    // C1 facts: simd_kernel registrations, parity design lists, bench
+    // row names.
+    let mut registrations: Vec<(String, usize)> = Vec::new();
+    if on("C1") {
+        for i in 0..n {
+            if !fx.ident_is(i, "fn") || !fx.ident_is(i + 1, "simd_kernel") || fx.mask[i] {
+                continue;
+            }
+            let mut body_open = None;
+            let mut j = i + 2;
+            while j < n {
+                if fx.punct_is(j, b'{') {
+                    body_open = Some(j);
+                    break;
+                }
+                if fx.punct_is(j, b';') {
+                    break; // trait method declaration without a body
+                }
+                j += 1;
+            }
+            let Some(open) = body_open else { continue };
+            let close = fx.partner[open].unwrap_or(n);
+            for k in open..close {
+                let ke = fx.text(k);
+                if fx.toks[k].kind == TokKind::Ident
+                    && (ke == "UnsignedKernel" || ke == "SignedKernel")
+                    && fx.punct_is(k + 1, b':')
+                    && fx.punct_is(k + 2, b':')
+                    && fx.toks.get(k + 3).is_some_and(|t| t.kind == TokKind::Ident)
+                {
+                    if let Some(fam) = kernel_family(ke, fx.text(k + 3)) {
+                        registrations.push((fam.to_string(), fx.toks[i].line));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    let norm = path.replace('\\', "/");
+    let is_parity_file = norm.rsplit('/').next() == Some("simd_parity.rs");
+    let mut parity_families: BTreeSet<String> = BTreeSet::new();
+    if is_parity_file {
+        for i in 0..n {
+            if !(fx.ident_is(i, "DESIGNS") || fx.ident_is(i, "SIGNED_DESIGNS")) {
+                continue;
+            }
+            // Collect every string literal up to the end of this item.
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            while j < n {
+                if fx.toks[j].kind == TokKind::Punct {
+                    match fx.src.as_bytes()[fx.toks[j].pos] {
+                        b'(' | b'[' | b'{' => depth += 1,
+                        b')' | b']' | b'}' => depth -= 1,
+                        b';' if depth == 0 => break,
+                        _ => {}
+                    }
+                } else if fx.toks[j].kind == TokKind::Str {
+                    let fam = design_family(str_content(&fx, j));
+                    if !fam.is_empty() {
+                        parity_families.insert(fam);
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    let is_bench_file = in_scope(path, &["benches"]);
+    let mut bench_families: BTreeSet<String> = BTreeSet::new();
+    if is_bench_file {
+        for i in 0..n {
+            if fx.toks[i].kind == TokKind::Str {
+                let fam = design_family(str_content(&fx, i));
+                if !fam.is_empty() {
+                    bench_families.insert(fam);
+                }
+            }
+        }
+    }
+
+    // Resolve candidates against allow markers (test-masked tokens were
+    // never candidates).
+    cands.sort_by(|a, b| (a.pos, a.rule).cmp(&(b.pos, b.rule)));
+    let mut violations = Vec::new();
+    let mut suppressions = Vec::new();
     let mut used: BTreeSet<(usize, String)> = BTreeSet::new();
     for c in cands {
-        if mask[c.pos] {
-            continue;
-        }
-        let line = line_of(c.pos);
-        if let Some(rules) = allow.get(&line) {
+        if let Some(rules) = allow.get(&c.line) {
             if let Some(reason) = rules.get(c.rule) {
-                used.insert((line, c.rule.to_string()));
-                report.suppressions.push(Suppression {
+                used.insert((c.line, c.rule.to_string()));
+                suppressions.push(Suppression {
                     rule: c.rule.to_string(),
                     path: path.to_string(),
-                    line,
+                    line: c.line,
                     reason: reason.clone(),
                 });
                 continue;
             }
         }
-        report.violations.push(Violation {
+        violations.push(Violation {
             rule: c.rule,
             path: path.to_string(),
-            line,
+            line: c.line,
             message: c.message,
         });
     }
-    for m in &markers {
-        for r in &m.rules {
-            if !used.contains(&(m.target, r.clone())) {
-                report.stale_markers.push(MarkerProblem {
-                    path: path.to_string(),
-                    line: m.line,
-                    message: format!("stale marker: allow({r}) suppressed nothing"),
+
+    FileAnalysis {
+        path: path.to_string(),
+        violations,
+        suppressions,
+        marker_problems,
+        markers,
+        used,
+        allow,
+        registrations,
+        parity_seen: is_parity_file,
+        parity_families,
+        bench_seen: is_bench_file,
+        bench_families,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Finalize: cross-file C1 resolution, stale markers, deterministic
+// ordering.
+// --------------------------------------------------------------------------
+
+fn rule_index(rule: &str) -> usize {
+    RULE_IDS.iter().position(|r| *r == rule).unwrap_or(RULE_IDS.len())
+}
+
+fn finalize(mut files: Vec<FileAnalysis>) -> Report {
+    let parity_seen = files.iter().any(|f| f.parity_seen);
+    let bench_seen = files.iter().any(|f| f.bench_seen);
+    let mut parity: BTreeSet<String> = BTreeSet::new();
+    let mut bench: BTreeSet<String> = BTreeSet::new();
+    for f in &files {
+        parity.extend(f.parity_families.iter().cloned());
+        bench.extend(f.bench_families.iter().cloned());
+    }
+    let mut report = Report { files_scanned: files.len(), ..Report::default() };
+    for f in &mut files {
+        // C1 resolves only when the scan set actually contains the
+        // parity suite — a lone `mult/` file carries no coverage facts.
+        for (family, line) in std::mem::take(&mut f.registrations) {
+            let mut gaps: Vec<&str> = Vec::new();
+            if parity_seen && !parity.contains(&family) {
+                gaps.push("the simd_parity.rs design lists");
+            }
+            if bench_seen && !bench.contains(&family) {
+                gaps.push("a named bench row");
+            }
+            if gaps.is_empty() {
+                continue;
+            }
+            let message = format!(
+                "design family `{family}` registers a simd_kernel() but is missing \
+                 from {} (the scalar<->SIMD bit-identity pin)",
+                gaps.join(" and ")
+            );
+            if let Some(reason) = f.allow.get(&line).and_then(|m| m.get("C1")).cloned() {
+                f.used.insert((line, "C1".to_string()));
+                f.suppressions.push(Suppression {
+                    rule: "C1".to_string(),
+                    path: f.path.clone(),
+                    line,
+                    reason,
+                });
+            } else {
+                f.violations.push(Violation {
+                    rule: "C1",
+                    path: f.path.clone(),
+                    line,
+                    message,
                 });
             }
         }
+        for m in &f.markers {
+            for r in &m.rules {
+                if !f.used.contains(&(m.target, r.clone())) {
+                    report.stale_markers.push(MarkerProblem {
+                        path: f.path.clone(),
+                        line: m.line,
+                        message: format!("stale marker: allow({r}) suppressed nothing"),
+                    });
+                }
+            }
+        }
+        report.violations.append(&mut f.violations);
+        report.suppressions.append(&mut f.suppressions);
+        report.marker_problems.append(&mut f.marker_problems);
     }
+    report
+        .violations
+        .sort_by(|a, b| {
+            (a.path.as_str(), a.line, rule_index(a.rule), a.message.as_str())
+                .cmp(&(b.path.as_str(), b.line, rule_index(b.rule), b.message.as_str()))
+        });
+    report
+        .suppressions
+        .sort_by(|a, b| {
+            (a.path.as_str(), a.line, a.rule.as_str())
+                .cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+        });
+    report
+        .marker_problems
+        .sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
+    report
+        .stale_markers
+        .sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
     report
 }
 
-/// Scan a file or directory tree (only `.rs` files), in sorted path
-/// order so output is deterministic.
-pub fn scan_path(path: &std::path::Path) -> std::io::Result<Report> {
+// --------------------------------------------------------------------------
+// Public scan entry points.
+// --------------------------------------------------------------------------
+
+/// Scan one file's source. `path` is used for scoping and reporting;
+/// scope matching is segment-based, so both repo-relative and absolute
+/// paths work. Cross-file coverage (C1) only resolves when the scan
+/// set includes the parity suite, so a single-file scan never raises
+/// it.
+pub fn scan_source(path: &str, src: &str) -> Report {
+    finalize(vec![analyze_file(path, src)])
+}
+
+/// Scan a set of `(path, source)` pairs as one project: cross-file
+/// rules see the whole set.
+pub fn scan_sources(files: &[(String, String)]) -> Report {
+    finalize(files.iter().map(|(p, s)| analyze_file(p, s)).collect())
+}
+
+/// Scan files and directory trees (only `.rs` files), in sorted path
+/// order per argument so output is deterministic. All paths form one
+/// project for cross-file rules.
+pub fn scan_paths(paths: &[std::path::PathBuf]) -> std::io::Result<Report> {
     let mut files: Vec<std::path::PathBuf> = Vec::new();
-    collect_rs_files(path, &mut files)?;
-    files.sort();
-    let mut report = Report::default();
+    for p in paths {
+        let mut batch = Vec::new();
+        collect_rs_files(p, &mut batch)?;
+        batch.sort();
+        files.extend(batch);
+    }
+    let mut analyses = Vec::new();
     for f in files {
         let src = std::fs::read_to_string(&f)?;
         let rel = f.to_string_lossy().replace('\\', "/");
-        report.merge(scan_source(&rel, &src));
+        analyses.push(analyze_file(&rel, &src));
     }
-    Ok(report)
+    Ok(finalize(analyses))
+}
+
+/// Scan a single file or directory tree.
+pub fn scan_path(path: &std::path::Path) -> std::io::Result<Report> {
+    scan_paths(std::slice::from_ref(&path.to_path_buf()))
 }
 
 fn collect_rs_files(
@@ -860,175 +1694,531 @@ fn collect_rs_files(
     Ok(())
 }
 
+// --------------------------------------------------------------------------
+// Baseline parsing: just enough JSON to read back a `--json` report.
+// --------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct JParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JParser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("baseline JSON: expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        let Some(&c) = self.b.get(self.i) else {
+            return Err("baseline JSON: unexpected end of input".into());
+        };
+        match c {
+            b'{' => {
+                self.i += 1;
+                let mut out = Vec::new();
+                self.ws();
+                if self.b.get(self.i) == Some(&b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                loop {
+                    self.ws();
+                    let key = match self.value()? {
+                        Json::Str(s) => s,
+                        _ => return Err("baseline JSON: object key must be a string".into()),
+                    };
+                    self.expect(b':')?;
+                    out.push((key, self.value()?));
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(&b',') => self.i += 1,
+                        Some(&b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(out));
+                        }
+                        _ => return Err("baseline JSON: expected `,` or `}`".into()),
+                    }
+                }
+            }
+            b'[' => {
+                self.i += 1;
+                let mut out = Vec::new();
+                self.ws();
+                if self.b.get(self.i) == Some(&b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                loop {
+                    out.push(self.value()?);
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(&b',') => self.i += 1,
+                        Some(&b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(out));
+                        }
+                        _ => return Err("baseline JSON: expected `,` or `]`".into()),
+                    }
+                }
+            }
+            b'"' => {
+                self.i += 1;
+                let mut s = String::new();
+                while self.i < self.b.len() {
+                    match self.b[self.i] {
+                        b'"' => {
+                            self.i += 1;
+                            return Ok(Json::Str(s));
+                        }
+                        b'\\' => {
+                            let e = self.b.get(self.i + 1).copied().unwrap_or(b'"');
+                            self.i += 2;
+                            match e {
+                                b'n' => s.push('\n'),
+                                b't' => s.push('\t'),
+                                b'r' => s.push('\r'),
+                                b'u' => {
+                                    let hex: String = self
+                                        .b
+                                        .get(self.i..self.i + 4)
+                                        .map(|h| String::from_utf8_lossy(h).into_owned())
+                                        .unwrap_or_default();
+                                    self.i += 4;
+                                    if let Ok(cp) = u32::from_str_radix(&hex, 16) {
+                                        s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                    }
+                                }
+                                other => s.push(other as char),
+                            }
+                        }
+                        other => {
+                            // Copy the full UTF-8 sequence through.
+                            let start = self.i;
+                            self.i += 1;
+                            while self.i < self.b.len()
+                                && other >= 0x80
+                                && self.b[self.i] & 0xC0 == 0x80
+                            {
+                                self.i += 1;
+                            }
+                            s.push_str(&String::from_utf8_lossy(&self.b[start..self.i]));
+                        }
+                    }
+                }
+                Err("baseline JSON: unterminated string".into())
+            }
+            b't' if self.b[self.i..].starts_with(b"true") => {
+                self.i += 4;
+                Ok(Json::Bool(true))
+            }
+            b'f' if self.b[self.i..].starts_with(b"false") => {
+                self.i += 5;
+                Ok(Json::Bool(false))
+            }
+            b'n' if self.b[self.i..].starts_with(b"null") => {
+                self.i += 4;
+                Ok(Json::Null)
+            }
+            _ => {
+                let start = self.i;
+                while self.i < self.b.len()
+                    && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.i += 1;
+                }
+                let txt = std::str::from_utf8(&self.b[start..self.i])
+                    .map_err(|_| "baseline JSON: bad number".to_string())?;
+                txt.parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| format!("baseline JSON: bad number `{txt}`"))
+            }
+        }
+    }
+}
+
+/// Parse a detlint `--json` report into `(rule, path, message)` baseline
+/// entries. Both `violations` and (already-)`grandfathered` entries
+/// count, so re-baselining from a ratcheted run is stable.
+pub fn parse_baseline(text: &str) -> Result<Vec<(String, String, String)>, String> {
+    let mut p = JParser { b: text.as_bytes(), i: 0 };
+    let root = p.value()?;
+    let Json::Obj(fields) = root else {
+        return Err("baseline JSON: root must be an object".into());
+    };
+    let mut out = Vec::new();
+    for (key, val) in &fields {
+        if key != "violations" && key != "grandfathered" {
+            continue;
+        }
+        let Json::Arr(items) = val else {
+            return Err(format!("baseline JSON: `{key}` must be an array"));
+        };
+        for item in items {
+            let Json::Obj(f) = item else {
+                return Err(format!("baseline JSON: `{key}` entries must be objects"));
+            };
+            let get = |name: &str| -> Option<String> {
+                f.iter().find(|(k, _)| k == name).and_then(|(_, v)| match v {
+                    Json::Str(s) => Some(s.clone()),
+                    _ => None,
+                })
+            };
+            match (get("rule"), get("path"), get("message")) {
+                (Some(r), Some(p), Some(m)) => out.push((r, p, m)),
+                _ => {
+                    return Err(format!(
+                        "baseline JSON: `{key}` entry missing rule/path/message"
+                    ))
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn v(path: &str, src: &str) -> Vec<(String, usize)> {
+    fn scan(path: &str, src: &str) -> Report {
         scan_source(path, src)
-            .violations
-            .into_iter()
-            .map(|x| (x.rule.to_string(), x.line))
-            .collect()
     }
 
     #[test]
     fn comments_and_strings_are_blanked() {
-        let src = "// HashMap in a comment\nlet s = \"HashMap\"; /* HashMap */\n";
-        assert!(v("src/mult/x.rs", src).is_empty());
+        let src = "// HashMap in a comment is fine\nfn f() -> &'static str { \"HashMap\" }\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
     }
 
     #[test]
     fn raw_strings_and_chars_are_blanked() {
-        let src = "let s = r#\"HashMap \"quoted\" \"#;\nlet c = '\"';\nlet b = b\"HashMap\";\n";
-        assert!(v("src/mult/x.rs", src).is_empty());
-        // A char-literal brace must not desync statement tracking.
-        let src2 = "fn f() { let open = '{'; let m: HashMap<u32, u32> = x; }\n";
-        assert_eq!(v("src/mult/x.rs", src2), vec![("D1".to_string(), 1)]);
+        // The '{' char literal must not desync delimiter matching, and
+        // the raw string's HashMap must not count as a type mention.
+        let src = "fn f() { let s = r#\"HashMap\"#; let c = '{'; \
+                   let m: std::collections::HashMap<u8, u8> = Default::default(); \
+                   let _ = (s, c, m); }\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "D1");
+        assert_eq!(r.violations[0].line, 1);
     }
 
     #[test]
     fn lifetimes_are_not_chars() {
-        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet m: HashMap<u8, u8> = y;\n";
-        assert_eq!(v("src/tensor/mod.rs", src), vec![("D1".to_string(), 2)]);
+        let src = "struct S<'a> { x: &'a str }\nfn f<'b>(y: &'b [u8]) -> &'b [u8] { y }\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
     }
 
     #[test]
     fn d1_out_of_scope_is_ignored() {
-        let src = "use std::collections::HashMap;\n";
-        assert!(v("src/cli/mod.rs", src).is_empty());
-        assert_eq!(v("src/config/mod.rs", src).len(), 1);
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u8, u8>) -> Option<&u8> { m.get(&0) }\n";
+        assert!(scan("rust/src/parallel/mod.rs", src).violations.is_empty());
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert_eq!(r.violations.iter().filter(|v| v.rule == "D1").count(), 2);
     }
 
     #[test]
     fn d2_scope_exempts_benchkit() {
-        let src = "use std::time::Instant;\n";
-        assert!(v("src/benchkit/mod.rs", src).is_empty());
-        assert_eq!(v("src/runtime/native/mod.rs", src).len(), 1);
-        // runtime/ outside native/ is not step math.
-        assert!(v("src/runtime/engine.rs", src).is_empty());
+        let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+        assert!(scan("rust/src/benchkit/mod.rs", src).violations.is_empty());
+        let r = scan("rust/src/runtime/native/mod.rs", src);
+        assert!(r.violations.iter().any(|v| v.rule == "D2"));
+        assert!(scan("rust/src/runtime/engine.rs", src).violations.is_empty());
     }
 
     #[test]
     fn d3_spawn_everywhere_but_parallel() {
-        let src = "std::thread::spawn(|| {});\n";
-        assert_eq!(v("src/report/mod.rs", src).len(), 1);
-        assert!(v("src/parallel/mod.rs", src).is_empty());
+        let src = "fn go() { std::thread::spawn(|| {}); }\n";
+        assert!(scan("rust/src/parallel/pool.rs", src).violations.is_empty());
+        let r = scan("rust/src/report/mod.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "D3");
     }
 
     #[test]
     fn d3_float_sum_needs_float_evidence() {
-        let int_sum = "fn f(x: &[u64]) -> u64 { x.iter().sum() }\n";
-        assert!(v("src/data/mod.rs", int_sum).is_empty());
-        let float_sum = "fn f(x: &[f32]) -> f32 { let s: f32 = x.iter().sum(); s }\n";
-        assert_eq!(v("src/data/mod.rs", float_sum).len(), 1);
-        let turbofish = "let s = xs.iter().sum::<f64>();\n";
-        assert_eq!(v("src/tensor/mod.rs", turbofish).len(), 1);
-        let float_fold = "let m = xs.iter().fold(f64::MIN, f64::max);\n";
-        assert_eq!(v("src/tensor/mod.rs", float_fold).len(), 1);
-        let welford_fold = "accs.into_iter().fold(Welford::new(), Welford::merge);\n";
-        assert!(v("src/mult/stats.rs", welford_fold).is_empty());
+        let int_sum = "fn s(xs: &[u32]) -> u32 { xs.iter().sum() }\n";
+        assert!(scan("rust/src/tensor/mod.rs", int_sum).violations.is_empty());
+        let float_sum = "fn s(xs: &[f32]) -> f32 { let t: f32 = xs.iter().sum(); t }\n";
+        assert_eq!(scan("rust/src/tensor/mod.rs", float_sum).violations.len(), 1);
+        let turbofish = "fn s(xs: &[u8]) -> f64 { xs.iter().map(|&x| x as f64).sum::<f64>() }\n";
+        assert_eq!(scan("rust/src/tensor/mod.rs", turbofish).violations.len(), 1);
+        let float_fold = "fn s(xs: &[f32]) -> f32 { xs.iter().fold(0.0f32, |a, b| a + b) }\n";
+        assert_eq!(scan("rust/src/tensor/mod.rs", float_fold).violations.len(), 1);
+        let welford = "fn s(xs: &[u32]) -> u32 { xs.iter().fold(0u32, |a, b| a.max(*b)) }\n";
+        assert!(scan("rust/src/tensor/mod.rs", welford).violations.is_empty());
     }
 
     #[test]
     fn p1_fires_in_spine_only_outside_tests() {
-        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn g() { y.unwrap(); }\n}\n";
-        let got = v("src/checkpoint/mod.rs", src);
-        assert_eq!(got, vec![("P1".to_string(), 1)]);
-        // unwrap_or is fine.
-        assert!(v("src/checkpoint/mod.rs", "x.unwrap_or(0);\n").is_empty());
-        // Not spine: no P1.
-        assert!(v("src/coordinator/sweep.rs", "x.unwrap();\n").is_empty());
-        assert_eq!(v("src/coordinator/trainer.rs", "panic!(\"boom\");\n").len(), 1);
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert!(scan("rust/src/mult/mod.rs", src).violations.is_empty());
+        let r = scan("rust/src/checkpoint/mod.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "P1");
+        let masked = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(scan("rust/src/checkpoint/mod.rs", masked).violations.is_empty());
     }
 
     #[test]
     fn test_attr_on_fn_is_masked() {
-        let src = "#[test]\nfn t() { x.unwrap(); }\nfn live() { y.unwrap(); }\n";
-        assert_eq!(v("src/checkpoint/mod.rs", src), vec![("P1".to_string(), 3)]);
+        let src = "#[test]\nfn t() { Some(1).unwrap(); }\nfn live(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        let r = scan("rust/src/checkpoint/mod.rs", src);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].line, 3);
     }
 
     #[test]
     fn s1_flags_float_casts_not_bit_casts() {
-        let float_cast = "let q = (x * 0.5) as u32;\n";
-        assert_eq!(v("src/mult/gaussian.rs", float_cast), vec![("S1".to_string(), 1)]);
-        let bit_repack = "let w = f32::from_bits((sign << 31) | ((er as u32) << 23));\n";
-        assert!(v("src/mult/matmul.rs", bit_repack).is_empty());
-        let int_cast = "let k = (bits >> 23) as i32;\n";
-        assert!(v("src/mult/prepared.rs", int_cast).is_empty());
-        // Out of mult/: not S1's business.
-        assert!(v("src/tensor/mod.rs", float_cast).is_empty());
+        let bad = "fn q(x: f64) -> u64 { (x * 0.5) as u64 }\n";
+        let r = scan("rust/src/mult/drum.rs", bad);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "S1");
+        let repack = "fn r(bits: u32) -> u32 { f32::from_bits(bits).to_bits() }\n";
+        assert!(scan("rust/src/mult/drum.rs", repack).violations.is_empty());
     }
 
     #[test]
     fn allow_marker_suppresses_and_records() {
-        let src = "// detlint: allow(D1) -- lookup-only cache, never iterated\n\
-                   let m: HashMap<u32, u32> = x;\n";
-        let r = scan_source("src/mult/x.rs", src);
-        assert!(r.violations.is_empty());
-        assert_eq!(r.suppressions.len(), 1);
-        assert_eq!(r.suppressions[0].rule, "D1");
-        assert!(r.suppressions[0].reason.contains("lookup-only"));
+        let src = "// detlint: allow(D1) -- lookup-only, never iterated\n\
+                   use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u8, u8>) -> Option<&u8> { m.get(&0) } // detlint: allow(D1) -- lookup-only param\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.suppressions.len(), 2);
+        assert_eq!(r.suppressions[0].reason, "lookup-only, never iterated");
         assert!(r.stale_markers.is_empty());
+        assert!(!r.failed());
     }
 
     #[test]
     fn same_line_marker_works() {
-        let src = "let m: HashMap<u32, u32> = x; // detlint: allow(D1) -- fixture\n";
-        let r = scan_source("src/mult/x.rs", src);
+        let src = "fn t() { std::thread::spawn(|| {}); } // detlint: allow(D3) -- fixture: audited\n";
+        let r = scan("rust/src/report/mod.rs", src);
         assert!(r.violations.is_empty());
         assert_eq!(r.suppressions.len(), 1);
+        assert_eq!(r.suppressions[0].rule, "D3");
     }
 
     #[test]
     fn malformed_markers_are_problems() {
-        let no_reason = "// detlint: allow(D1)\nlet m: HashMap<u8, u8> = x;\n";
-        let r = scan_source("src/mult/x.rs", no_reason);
-        assert_eq!(r.marker_problems.len(), 1);
-        assert_eq!(r.violations.len(), 1); // marker invalid -> no suppression
-        let unknown = "// detlint: allow(D9) -- whatever\n";
-        let r = scan_source("src/mult/x.rs", unknown);
-        assert_eq!(r.marker_problems.len(), 1);
+        let src = "// detlint: allow(D9) -- no such rule\n\
+                   // detlint: allow(D1)\n\
+                   // detlint: deny(D1) -- wrong verb\n\
+                   fn f() {}\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert_eq!(r.marker_problems.len(), 3, "{:?}", r.marker_problems);
+        assert!(r.failed());
     }
 
     #[test]
     fn stale_marker_warns() {
-        let src = "// detlint: allow(P1) -- nothing here\nlet x = 1;\n";
-        let r = scan_source("src/checkpoint/mod.rs", src);
+        let src = "// detlint: allow(D1) -- nothing here anymore\nfn f() {}\n";
+        let r = scan("rust/src/mult/mod.rs", src);
         assert!(r.violations.is_empty());
         assert_eq!(r.stale_markers.len(), 1);
-        assert!(!r.failed()); // stale markers warn, not fail
+        assert!(!r.failed());
     }
 
     #[test]
     fn string_continuation_escape_keeps_line_numbers() {
-        // `\` + newline inside a string consumes the newline; losing it
-        // desyncs every later line number and detaches same-line
-        // markers from their code (found on the real tree).
-        let src = "let s = \"a \\\n b\";\nx.unwrap(); // detlint: allow(P1) -- continuation test\n";
-        let r = scan_source("src/checkpoint/mod.rs", src);
-        assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
+        let src = "fn f() -> String { format!(\"a\\\n   b\") }\nuse std::collections::HashMap; // detlint: allow(D1) -- fixture: line check\n";
+        let r = scan("rust/src/mult/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
         assert_eq!(r.suppressions.len(), 1);
         assert_eq!(r.suppressions[0].line, 3);
-        assert!(r.stale_markers.is_empty());
     }
 
     #[test]
     fn scope_matching_is_segment_based() {
         assert!(in_scope("rust/src/runtime/native/mod.rs", &["runtime/native"]));
         assert!(!in_scope("rust/src/runtime/engine.rs", &["runtime/native"]));
-        assert!(in_scope("/abs/path/rust/src/mult/lut.rs", &["mult"]));
-        assert!(!in_scope("rust/src/multiplier/x.rs", &["mult"]));
-        assert!(in_scope("fixtures/bad/checkpoint/p1.rs", &["checkpoint"]));
+        assert!(in_scope("rust/src/coordinator/health.rs", &["coordinator/health.rs"]));
+        assert!(!in_scope("rust/src/multitool/mod.rs", &["mult"]));
+        assert!(in_scope("anything/at/all.rs", &["*"]));
     }
 
     #[test]
     fn rules_table_is_consistent() {
         assert_eq!(RULES.len(), RULE_IDS.len());
-        for (r, id) in RULES.iter().zip(RULE_IDS.iter()) {
-            assert_eq!(r.id, *id);
-            assert!(!r.summary.is_empty() && !r.rationale.is_empty());
-            assert!(r.severity == "deny" || r.severity == "warn");
+        for (rule, id) in RULES.iter().zip(RULE_IDS.iter()) {
+            assert_eq!(rule.id, *id);
+            assert!(!rule.summary.is_empty());
+            assert!(!rule.rationale.is_empty());
+            assert!(!rule.scope.is_empty());
         }
+    }
+
+    // ---- v2: binding tracking, expression context, cross-file rules ----
+
+    #[test]
+    fn d1v2_flags_iteration_sites_not_lookups() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u64>) -> u64 {\n\
+                   \x20   let mut acc = 0u64;\n\
+                   \x20   for (_k, v) in m.iter() {\n\
+                   \x20       acc += *v;\n\
+                   \x20   }\n\
+                   \x20   acc + m.get(&0).copied().unwrap_or(0)\n\
+                   }\n";
+        let r = scan("rust/src/runtime/engine.rs", src);
+        let d1v2: Vec<_> = r.violations.iter().filter(|v| v.rule == "D1v2").collect();
+        assert_eq!(d1v2.len(), 1, "{:?}", r.violations);
+        assert_eq!(d1v2[0].line, 4);
+    }
+
+    #[test]
+    fn d1v2_ignores_ordered_containers() {
+        let src = "use std::collections::BTreeMap;\n\
+                   fn f(m: &BTreeMap<u32, u64>) -> u64 {\n\
+                   \x20   let mut acc = 0;\n\
+                   \x20   for v in m.values() {\n\
+                   \x20       acc += *v;\n\
+                   \x20   }\n\
+                   \x20   acc\n\
+                   }\n";
+        assert!(scan("rust/src/runtime/engine.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn d1v2_tracks_struct_fields_through_self() {
+        let src = "use std::collections::HashMap;\n\
+                   // detlint: allow(D1) -- fixture: lookup table under test\n\
+                   struct C { map: HashMap<u32, u64> }\n\
+                   impl C {\n\
+                   \x20   fn leak(&self) -> u64 { self.map.values().sum::<u64>() }\n\
+                   }\n";
+        let r = scan("rust/src/runtime/engine.rs", src);
+        let d1v2: Vec<_> = r.violations.iter().filter(|v| v.rule == "D1v2").collect();
+        assert_eq!(d1v2.len(), 1, "{:?}", r.violations);
+        assert_eq!(d1v2[0].line, 5);
+    }
+
+    #[test]
+    fn p2_flags_index_expressions_not_type_brackets() {
+        let bad = "pub fn first(bytes: &[u8]) -> u8 { bytes[0] }\n";
+        let r = scan("rust/src/checkpoint/mod.rs", bad);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "P2");
+        let clean = "#[derive(Clone)]\npub struct B { v: [u8; 4] }\n\
+                     pub fn first(bytes: &[u8]) -> Option<u8> { bytes.get(0).copied() }\n";
+        assert!(scan("rust/src/checkpoint/mod.rs", clean).violations.is_empty());
+        let chained = "fn f(rows: &[Vec<u8>]) -> u8 { rows[0][1] }\n";
+        assert_eq!(scan("rust/src/checkpoint/mod.rs", chained).violations.len(), 2);
+        assert!(scan("rust/src/mult/mod.rs", bad).violations.is_empty());
+    }
+
+    #[test]
+    fn u1_requires_adjacent_safety_comment() {
+        let bare = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let r = scan("rust/src/runtime/mod.rs", bare);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "U1");
+        let same_line = "fn f(p: *const u8) -> u8 { unsafe { *p } } // SAFETY: caller keeps p valid\n";
+        assert!(scan("rust/src/runtime/mod.rs", same_line).violations.is_empty());
+        let above = "fn f(p: *const u8) -> u8 {\n\
+                     \x20   // SAFETY: caller keeps p valid for reads;\n\
+                     \x20   // the deref copies one byte.\n\
+                     \x20   unsafe { *p }\n\
+                     }\n";
+        assert!(scan("rust/src/runtime/mod.rs", above).violations.is_empty());
+        let gapped = "fn f(p: *const u8) -> u8 {\n\
+                      \x20   // SAFETY: too far away\n\
+                      \n\
+                      \x20   unsafe { *p }\n\
+                      }\n";
+        assert_eq!(scan("rust/src/runtime/mod.rs", gapped).violations.len(), 1);
+    }
+
+    #[test]
+    fn c1_needs_parity_and_bench_coverage() {
+        let reg = "pub fn simd_kernel(&self) -> Option<K> { Some(UnsignedKernel::Mitchell { bits: 8 }) }\n";
+        // Alone, the scan set has no parity/bench facts: C1 stays quiet.
+        assert!(scan("rust/src/mult/mitchell.rs", reg).violations.is_empty());
+        let parity = "const DESIGNS: &[&str] = &[\"exact\", \"drum6\"];\n\
+                      const SIGNED_DESIGNS: &[&str] = &[\"sexact\"];\n";
+        let bench = "fn rows() -> Vec<&'static str> { vec![\"exact\", \"drum6\"] }\n";
+        let files = vec![
+            ("rust/src/mult/mitchell.rs".to_string(), reg.to_string()),
+            ("rust/tests/simd_parity.rs".to_string(), parity.to_string()),
+            ("rust/benches/multipliers.rs".to_string(), bench.to_string()),
+        ];
+        let r = scan_sources(&files);
+        let c1: Vec<_> = r.violations.iter().filter(|v| v.rule == "C1").collect();
+        assert_eq!(c1.len(), 1, "{:?}", r.violations);
+        assert!(c1[0].message.contains("mitchell"));
+        let parity2 = "const DESIGNS: &[&str] = &[\"exact\", \"mitchell\"];\n";
+        let bench2 = "fn rows() -> Vec<&'static str> { vec![\"exact\", \"mitchell\"] }\n";
+        let files2 = vec![
+            ("rust/src/mult/mitchell.rs".to_string(), reg.to_string()),
+            ("rust/tests/simd_parity.rs".to_string(), parity2.to_string()),
+            ("rust/benches/multipliers.rs".to_string(), bench2.to_string()),
+        ];
+        assert!(scan_sources(&files2).violations.is_empty());
+    }
+
+    #[test]
+    fn baseline_grandfathers_matching_violations() {
+        let src = "use std::collections::HashMap;\n";
+        let mut r = scan("rust/src/mult/mod.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        let msg = r.violations[0].message.clone();
+        let baseline = vec![("D1".to_string(), "rust/src/mult/mod.rs".to_string(), msg)];
+        r.apply_baseline(&baseline);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.grandfathered.len(), 1);
+        assert!(!r.failed());
+    }
+
+    #[test]
+    fn parse_baseline_reads_json_reports() {
+        let json = "{\"files_scanned\": 1, \"violations\": [{\"rule\": \"D1\", \
+                    \"path\": \"a.rs\", \"line\": 3, \"message\": \"m \\\"x\\\"\"}], \
+                    \"grandfathered\": [], \"ok\": false}";
+        let entries = parse_baseline(json).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "D1");
+        assert_eq!(entries[0].2, "m \"x\"");
+        assert!(parse_baseline("not json").is_err());
+    }
+
+    #[test]
+    fn profiles_mask_rules_by_tree_region() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert!(scan("rust/tests/checkpoint_suite.rs", src).violations.is_empty());
+        let hash = "use std::collections::HashMap;\n";
+        assert_eq!(scan("rust/tests/misc.rs", hash).violations.len(), 1);
+        assert_eq!(scan("rust/analyzers/detlint/src/lib.rs", hash).violations.len(), 1);
+        assert_eq!(
+            profile_for("rust/analyzers/detlint/fixtures/bad/mult/x.rs"),
+            Profile::Default
+        );
     }
 }

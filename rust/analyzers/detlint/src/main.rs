@@ -1,17 +1,28 @@
 //! detlint CLI.
 //!
 //! ```text
-//! detlint [--json] <path>...     scan files/trees (exit 0 clean, 1 findings)
-//! detlint --list-rules [--json]  print the rule table
+//! detlint [--json] [--strict-stale] [--baseline <report.json>] <path>...
+//! detlint --list-rules [--json]
 //! ```
 //!
-//! Exit codes: 0 = clean, 1 = violations or malformed markers, 2 = usage
-//! or I/O error. Stale (unused) allow markers are reported but do not
-//! fail the run.
+//! Exit codes: 0 = clean, 1 = violations or malformed markers (or stale
+//! markers under `--strict-stale`), 2 = usage or I/O error. Stale
+//! (unused) allow markers are reported but only fail the run under
+//! `--strict-stale`. `--baseline` reads a previous `--json` report and
+//! grandfathers its violations by (rule, path, message): the ratchet —
+//! old findings burn down without blocking CI, new ones fail.
+//!
+//! All named paths are scanned as ONE project, so cross-file rules (C1
+//! SIMD-parity coverage) see `mult/` registrations, the parity suite,
+//! and the bench rows together.
 
 use std::process::ExitCode;
 
 use detlint::{Report, RULES};
+
+const USAGE: &str =
+    "usage: detlint [--json] [--strict-stale] [--baseline <report.json>] <path>... \
+     | detlint --list-rules [--json]";
 
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -58,21 +69,19 @@ fn print_rules(json: bool) {
     }
 }
 
-fn print_report(report: &Report, json: bool) {
+fn print_report(report: &Report, json: bool, failed: bool) {
     if json {
-        let vs: Vec<String> = report
-            .violations
-            .iter()
-            .map(|v| {
-                format!(
-                    "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
-                    v.rule,
-                    json_escape(&v.path),
-                    v.line,
-                    json_escape(&v.message)
-                )
-            })
-            .collect();
+        let vio = |v: &detlint::Violation| {
+            format!(
+                "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                v.rule,
+                json_escape(&v.path),
+                v.line,
+                json_escape(&v.message)
+            )
+        };
+        let vs: Vec<String> = report.violations.iter().map(vio).collect();
+        let gs: Vec<String> = report.grandfathered.iter().map(vio).collect();
         let ss: Vec<String> = report
             .suppressions
             .iter()
@@ -97,18 +106,22 @@ fn print_report(report: &Report, json: bool) {
         let probs: Vec<String> = report.marker_problems.iter().map(mp).collect();
         let stale: Vec<String> = report.stale_markers.iter().map(mp).collect();
         println!(
-            "{{\"files_scanned\":{},\"violations\":[{}],\"suppressions\":[{}],\"marker_problems\":[{}],\"stale_markers\":[{}],\"ok\":{}}}",
+            "{{\"files_scanned\":{},\"violations\":[{}],\"grandfathered\":[{}],\"suppressions\":[{}],\"marker_problems\":[{}],\"stale_markers\":[{}],\"ok\":{}}}",
             report.files_scanned,
             vs.join(","),
+            gs.join(","),
             ss.join(","),
             probs.join(","),
             stale.join(","),
-            !report.failed()
+            !failed
         );
         return;
     }
     for v in &report.violations {
         println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.message);
+    }
+    for v in &report.grandfathered {
+        println!("{}:{}: [grandfathered {}] {}", v.path, v.line, v.rule, v.message);
     }
     for p in &report.marker_problems {
         println!("{}:{}: [marker] {}", p.path, p.line, p.message);
@@ -117,9 +130,10 @@ fn print_report(report: &Report, json: bool) {
         println!("{}:{}: [stale] {}", s.path, s.line, s.message);
     }
     println!(
-        "detlint: {} file(s), {} violation(s), {} suppression(s), {} marker problem(s), {} stale marker(s)",
+        "detlint: {} file(s), {} violation(s), {} grandfathered, {} suppression(s), {} marker problem(s), {} stale marker(s)",
         report.files_scanned,
         report.violations.len(),
+        report.grandfathered.len(),
         report.suppressions.len(),
         report.marker_problems.len(),
         report.stale_markers.len()
@@ -129,13 +143,23 @@ fn print_report(report: &Report, json: bool) {
 fn main() -> ExitCode {
     let mut json = false;
     let mut list_rules = false;
+    let mut strict_stale = false;
+    let mut baseline_path: Option<String> = None;
+    let mut expect_baseline = false;
     let mut paths: Vec<String> = Vec::new();
     for arg in std::env::args().skip(1) {
+        if expect_baseline {
+            baseline_path = Some(arg);
+            expect_baseline = false;
+            continue;
+        }
         match arg.as_str() {
             "--json" => json = true,
             "--list-rules" => list_rules = true,
+            "--strict-stale" => strict_stale = true,
+            "--baseline" => expect_baseline = true,
             "--help" | "-h" => {
-                eprintln!("usage: detlint [--json] <path>... | detlint --list-rules [--json]");
+                eprintln!("{USAGE}");
                 return ExitCode::SUCCESS;
             }
             a if a.starts_with('-') => {
@@ -145,26 +169,52 @@ fn main() -> ExitCode {
             a => paths.push(a.to_string()),
         }
     }
+    if expect_baseline {
+        eprintln!("detlint: --baseline needs a report path");
+        return ExitCode::from(2);
+    }
     if list_rules {
         print_rules(json);
         return ExitCode::SUCCESS;
     }
     if paths.is_empty() {
-        eprintln!("usage: detlint [--json] <path>... | detlint --list-rules [--json]");
+        eprintln!("{USAGE}");
         return ExitCode::from(2);
     }
-    let mut report = Report::default();
-    for p in &paths {
-        match detlint::scan_path(std::path::Path::new(p)) {
-            Ok(r) => report.merge(r),
-            Err(e) => {
-                eprintln!("detlint: {p}: {e}");
-                return ExitCode::from(2);
+    let baseline = match &baseline_path {
+        None => Vec::new(),
+        Some(p) => {
+            let text = match std::fs::read_to_string(p) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("detlint: --baseline {p}: {e}");
+                    return ExitCode::from(2);
+                }
+            };
+            match detlint::parse_baseline(&text) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("detlint: --baseline {p}: {e}");
+                    return ExitCode::from(2);
+                }
             }
         }
+    };
+    let path_bufs: Vec<std::path::PathBuf> =
+        paths.iter().map(std::path::PathBuf::from).collect();
+    let mut report = match detlint::scan_paths(&path_bufs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if !baseline.is_empty() {
+        report.apply_baseline(&baseline);
     }
-    print_report(&report, json);
-    if report.failed() {
+    let failed = report.failed() || (strict_stale && !report.stale_markers.is_empty());
+    print_report(&report, json, failed);
+    if failed {
         ExitCode::from(1)
     } else {
         ExitCode::SUCCESS

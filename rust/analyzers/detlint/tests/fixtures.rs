@@ -1,151 +1,265 @@
-//! Fixture-corpus self-tests: each known-bad file trips its rule exactly
-//! once, the allow-marker file suppresses with a recorded reason, the
-//! clean file scans clean, and the CLI's exit codes match the contract.
+//! Fixture-corpus integration tests.
+//!
+//! The corpus under `fixtures/` is scanned as text (never compiled):
+//! `bad/` must fire each rule exactly once per fixture, `allowed/` must
+//! produce suppressions only, `clean/` must be silent, and `c1/` holds
+//! three 3-file mini-projects (mult registration + parity suite + bench
+//! rows) because C1 is a cross-file rule. CLI tests pin exit codes, the
+//! `--baseline` ratchet round-trip, `--strict-stale`, and byte-identical
+//! `--json` output.
 
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
-use detlint::{scan_path, scan_source};
-
-fn fixture(rel: &str) -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(rel)
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
 }
 
 fn scan_fixture(rel: &str) -> detlint::Report {
-    let path = fixture(rel);
+    let path = fixture_root().join(rel);
     let src = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
     // Scope matching is segment-based, so the path under fixtures/
     // (bad/mult/..., bad/runtime/native/...) lands in the right rule
     // scopes exactly like the mirrored src/ tree would.
-    scan_source(&path.to_string_lossy().replace('\\', "/"), &src)
+    detlint::scan_source(&path.to_string_lossy().replace('\\', "/"), &src)
+}
+
+fn scan_dir(rel: &str) -> detlint::Report {
+    detlint::scan_path(&fixture_root().join(rel)).expect("scan fixture dir")
+}
+
+fn run_detlint(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .args(args)
+        .output()
+        .expect("run detlint")
 }
 
 #[test]
 fn each_bad_fixture_fires_its_rule_exactly_once() {
     let cases = [
         ("bad/mult/d1_hash_iteration.rs", "D1"),
+        ("bad/mult/d1v2_iteration_site.rs", "D1v2"),
+        ("bad/mult/s1_unchecked_cast.rs", "S1"),
         ("bad/runtime/native/d2_wall_clock.rs", "D2"),
         ("bad/runtime/native/d3_unordered_reduction.rs", "D3"),
-        ("bad/checkpoint/p1_panic_in_recovery.rs", "P1"),
-        ("bad/mult/s1_unchecked_cast.rs", "S1"),
+        ("bad/checkpoint/p2_slice_index.rs", "P2"),
+        ("bad/runtime/u1_unsafe_no_safety.rs", "U1"),
     ];
     for (rel, rule) in cases {
         let r = scan_fixture(rel);
-        assert_eq!(
-            r.violations.len(),
-            1,
-            "{rel}: expected exactly one violation, got {:?}",
+        let hits = r.violations.iter().filter(|v| v.rule == rule).count();
+        assert_eq!(hits, 1, "{rel}: expected {rule} x1, got {:?}", r.violations);
+        assert!(
+            r.violations.iter().all(|v| v.rule == rule),
+            "{rel}: unexpected extra rules: {:?}",
             r.violations
         );
-        assert_eq!(r.violations[0].rule, rule, "{rel}: wrong rule");
-        assert!(r.suppressions.is_empty(), "{rel}: unexpected suppressions");
         assert!(r.marker_problems.is_empty(), "{rel}: marker problems");
         assert!(r.failed(), "{rel}: report must fail");
     }
 }
 
 #[test]
-fn allow_marker_fixture_suppresses_with_recorded_reasons() {
-    let r = scan_fixture("allowed/mult/allow_marker.rs");
-    assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
-    assert_eq!(r.suppressions.len(), 2, "suppressions: {:?}", r.suppressions);
-    let mut rules: Vec<&str> = r.suppressions.iter().map(|s| s.rule.as_str()).collect();
-    rules.sort_unstable();
-    assert_eq!(rules, ["D1", "S1"]);
-    for s in &r.suppressions {
-        assert!(!s.reason.is_empty(), "suppression without reason: {s:?}");
-    }
-    let d1 = r.suppressions.iter().find(|s| s.rule == "D1").unwrap();
-    assert!(d1.reason.contains("never iterated"), "reason not recorded: {d1:?}");
-    assert!(r.marker_problems.is_empty());
-    assert!(r.stale_markers.is_empty(), "stale: {:?}", r.stale_markers);
-    assert!(!r.failed());
+fn p1_fixture_crossfires_p2_on_the_slice_expression() {
+    // `bytes[..4].try_into().unwrap()` is both a panicking index (P2)
+    // and a panicking unwrap (P1) — the v2 engine sees both on the same
+    // line. This pins the documented crossfire.
+    let r = scan_fixture("bad/checkpoint/p1_panic_in_recovery.rs");
+    assert_eq!(r.violations.len(), 2, "{:?}", r.violations);
+    assert_eq!(r.violations.iter().filter(|v| v.rule == "P1").count(), 1);
+    assert_eq!(r.violations.iter().filter(|v| v.rule == "P2").count(), 1);
+    assert_eq!(r.violations[0].line, r.violations[1].line);
 }
 
 #[test]
-fn clean_fixture_scans_clean() {
-    let r = scan_fixture("clean/mult/ordered_clean.rs");
-    assert!(r.violations.is_empty(), "violations: {:?}", r.violations);
-    assert!(r.suppressions.is_empty());
-    assert!(r.marker_problems.is_empty());
-    assert!(r.stale_markers.is_empty());
-    assert!(!r.failed());
+fn allowed_fixtures_suppress_without_violations_or_stale() {
+    let cases = [
+        ("allowed/mult/allow_marker.rs", 2),
+        ("allowed/mult/d1v2_allowed.rs", 2),
+        ("allowed/checkpoint/p2_allowed.rs", 1),
+        ("allowed/runtime/u1_allowed.rs", 1),
+    ];
+    for (rel, n) in cases {
+        let r = scan_fixture(rel);
+        assert!(r.violations.is_empty(), "{rel}: {:?}", r.violations);
+        assert_eq!(r.suppressions.len(), n, "{rel}: {:?}", r.suppressions);
+        for s in &r.suppressions {
+            assert!(!s.reason.is_empty(), "{rel}: suppression without reason: {s:?}");
+        }
+        assert!(r.marker_problems.is_empty(), "{rel}: {:?}", r.marker_problems);
+        assert!(r.stale_markers.is_empty(), "{rel}: {:?}", r.stale_markers);
+        assert!(!r.failed());
+    }
+    let marker = scan_fixture("allowed/mult/allow_marker.rs");
+    assert!(marker
+        .suppressions
+        .iter()
+        .any(|s| s.rule == "D1" && s.reason.contains("never iterated")));
+    assert!(marker.suppressions.iter().any(|s| s.rule == "S1"));
+    let d1v2 = scan_fixture("allowed/mult/d1v2_allowed.rs");
+    let mut rules: Vec<&str> = d1v2.suppressions.iter().map(|s| s.rule.as_str()).collect();
+    rules.sort_unstable();
+    assert_eq!(rules, ["D1", "D1v2"]);
+}
+
+#[test]
+fn clean_fixtures_are_silent() {
+    for rel in [
+        "clean/mult/ordered_clean.rs",
+        "clean/mult/d1v2_btree_iter.rs",
+        "clean/checkpoint/p2_get_checked.rs",
+        "clean/runtime/u1_safety_comment.rs",
+    ] {
+        let r = scan_fixture(rel);
+        assert!(r.violations.is_empty(), "{rel}: {:?}", r.violations);
+        assert!(r.suppressions.is_empty(), "{rel}: {:?}", r.suppressions);
+        assert!(r.marker_problems.is_empty());
+        assert!(r.stale_markers.is_empty(), "{rel}: {:?}", r.stale_markers);
+        assert!(!r.failed());
+    }
+}
+
+#[test]
+fn c1_mini_projects_resolve_cross_file() {
+    // C1 needs the parity suite and bench rows in the same scan set, so
+    // each case is a directory scan, not a single-file one.
+    let bad = scan_dir("c1/bad");
+    assert_eq!(bad.files_scanned, 3);
+    let c1: Vec<_> = bad.violations.iter().filter(|v| v.rule == "C1").collect();
+    assert_eq!(c1.len(), 1, "{:?}", bad.violations);
+    assert!(c1[0].message.contains("mitchell"));
+    assert!(c1[0].message.contains("simd_parity.rs design lists"));
+    assert!(c1[0].message.contains("named bench row"));
+
+    let allowed = scan_dir("c1/allowed");
+    assert!(allowed.violations.is_empty(), "{:?}", allowed.violations);
+    assert_eq!(allowed.suppressions.len(), 1, "{:?}", allowed.suppressions);
+    assert_eq!(allowed.suppressions[0].rule, "C1");
+    assert!(allowed.stale_markers.is_empty(), "{:?}", allowed.stale_markers);
+
+    let clean = scan_dir("c1/clean");
+    assert!(clean.violations.is_empty(), "{:?}", clean.violations);
+    assert!(clean.suppressions.is_empty());
 }
 
 #[test]
 fn whole_corpus_counts_add_up() {
-    let r = scan_path(&fixture("")).expect("scan fixtures/");
-    assert_eq!(r.files_scanned, 7);
-    assert_eq!(r.violations.len(), 5, "violations: {:?}", r.violations);
-    assert_eq!(r.suppressions.len(), 2);
-    assert!(r.marker_problems.is_empty());
-    assert!(r.stale_markers.is_empty());
+    let r = scan_dir("");
+    assert_eq!(r.files_scanned, 25, "fixture corpus drifted");
+    assert_eq!(r.violations.len(), 10, "violations: {:#?}", r.violations);
+    assert_eq!(r.suppressions.len(), 8, "suppressions: {:#?}", r.suppressions);
+    assert!(r.marker_problems.is_empty(), "{:?}", r.marker_problems);
+    assert!(r.stale_markers.is_empty(), "{:?}", r.stale_markers);
     assert!(r.failed());
 }
 
 #[test]
 fn cli_exit_codes_match_contract() {
-    let bin = env!("CARGO_BIN_EXE_detlint");
+    let root = fixture_root();
 
     // Bad corpus -> exit 1, findings on stdout.
-    let out = Command::new(bin)
-        .arg(fixture("bad"))
-        .output()
-        .expect("run detlint on bad corpus");
+    let out = run_detlint(&[root.join("bad").to_str().unwrap()]);
     assert_eq!(out.status.code(), Some(1), "bad corpus must exit 1");
-    let stdout = String::from_utf8_lossy(&out.stdout);
-    for rule in ["D1", "D2", "D3", "P1", "S1"] {
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    for rule in ["D1", "D1v2", "D2", "D3", "P1", "P2", "S1", "U1"] {
         assert!(stdout.contains(&format!("[{rule}]")), "missing {rule} in:\n{stdout}");
     }
 
+    // C1 mini-project -> exit 1 with the cross-file finding.
+    let out = run_detlint(&[root.join("c1").join("bad").to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("[C1]"));
+
     // Clean corpus -> exit 0.
-    let out = Command::new(bin)
-        .arg(fixture("clean"))
-        .output()
-        .expect("run detlint on clean corpus");
+    let out = run_detlint(&[root.join("clean").to_str().unwrap()]);
     assert_eq!(out.status.code(), Some(0), "clean corpus must exit 0");
 
     // Allowed corpus -> exit 0, suppressions surfaced in --json.
-    let out = Command::new(bin)
-        .arg("--json")
-        .arg(fixture("allowed"))
-        .output()
-        .expect("run detlint --json on allowed corpus");
+    let out = run_detlint(&["--json", root.join("allowed").to_str().unwrap()]);
     assert_eq!(out.status.code(), Some(0), "allowed corpus must exit 0");
-    let js = String::from_utf8_lossy(&out.stdout);
+    let js = String::from_utf8_lossy(&out.stdout).into_owned();
     assert!(js.contains("\"ok\":true"), "json: {js}");
-    assert!(js.contains("\"rule\":\"D1\"") && js.contains("\"rule\":\"S1\""), "json: {js}");
+    assert!(js.contains("\"rule\":\"D1v2\"") && js.contains("\"rule\":\"U1\""), "json: {js}");
     assert!(js.contains("never iterated"), "reason missing from json: {js}");
 
-    // --list-rules -> exit 0, all five ids present.
-    let out = Command::new(bin)
-        .arg("--list-rules")
-        .output()
-        .expect("run detlint --list-rules");
+    // --list-rules -> exit 0, all nine ids present.
+    let out = run_detlint(&["--list-rules"]);
     assert_eq!(out.status.code(), Some(0));
-    let rules = String::from_utf8_lossy(&out.stdout);
-    for id in ["D1", "D2", "D3", "P1", "S1"] {
+    let rules = String::from_utf8_lossy(&out.stdout).into_owned();
+    for id in detlint::RULE_IDS {
         assert!(rules.contains(id), "--list-rules missing {id}: {rules}");
     }
+    assert_eq!(detlint::RULE_IDS.len(), 9);
 
-    // Unknown flag / missing path -> exit 2.
-    let out = Command::new(bin).arg("--bogus").output().expect("run detlint --bogus");
-    assert_eq!(out.status.code(), Some(2));
-    let out = Command::new(bin).output().expect("run detlint with no args");
-    assert_eq!(out.status.code(), Some(2));
+    // Unknown flag / missing path / dangling --baseline -> exit 2.
+    assert_eq!(run_detlint(&["--bogus"]).status.code(), Some(2));
+    assert_eq!(run_detlint(&[]).status.code(), Some(2));
+    assert_eq!(run_detlint(&["--baseline"]).status.code(), Some(2));
 }
 
 #[test]
 fn json_output_is_deterministic_across_runs() {
-    let bin = env!("CARGO_BIN_EXE_detlint");
-    let run = || {
-        Command::new(bin)
-            .arg("--json")
-            .arg(fixture(""))
-            .output()
-            .expect("run detlint --json on fixtures")
-            .stdout
-    };
-    assert_eq!(run(), run(), "detlint --json must be byte-stable");
+    let root = fixture_root();
+    let a = run_detlint(&["--json", root.to_str().unwrap()]);
+    let b = run_detlint(&["--json", root.to_str().unwrap()]);
+    assert_eq!(a.stdout, b.stdout, "detlint --json must be byte-stable");
+    assert!(!a.stdout.is_empty());
+}
+
+#[test]
+fn baseline_ratchet_round_trip() {
+    let root = fixture_root();
+    let bad = root.join("bad");
+    let report = run_detlint(&["--json", bad.to_str().unwrap()]);
+    assert_eq!(report.status.code(), Some(1));
+    let tmp = std::env::temp_dir()
+        .join(format!("detlint_baseline_{}.json", std::process::id()));
+    std::fs::write(&tmp, &report.stdout).expect("write baseline");
+
+    // Same tree against its own report: everything grandfathers, exit 0.
+    let ratcheted = run_detlint(&[
+        "--json",
+        "--baseline",
+        tmp.to_str().unwrap(),
+        bad.to_str().unwrap(),
+    ]);
+    assert_eq!(ratcheted.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&ratcheted.stdout).into_owned();
+    assert!(stdout.contains("\"violations\":[]"), "{stdout}");
+    assert!(stdout.contains("\"grandfathered\":[{"), "{stdout}");
+    assert!(stdout.contains("\"ok\":true"), "{stdout}");
+
+    // A different tree with new findings still fails under the baseline.
+    let c1bad = root.join("c1").join("bad");
+    let fresh = run_detlint(&["--baseline", tmp.to_str().unwrap(), c1bad.to_str().unwrap()]);
+    assert_eq!(fresh.status.code(), Some(1));
+
+    // A garbage baseline is a usage error, not a silent pass.
+    std::fs::write(&tmp, b"not json").expect("write garbage baseline");
+    let broken = run_detlint(&["--baseline", tmp.to_str().unwrap(), bad.to_str().unwrap()]);
+    assert_eq!(broken.status.code(), Some(2));
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn strict_stale_promotes_stale_markers_to_failures() {
+    let dir = std::env::temp_dir().join(format!("detlint_stale_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("make temp dir");
+    let file = dir.join("mult_stale.rs");
+    std::fs::write(
+        &file,
+        "// detlint: allow(D1) -- suppresses nothing anymore\npub fn f() {}\n",
+    )
+    .expect("write stale fixture");
+    let lenient = run_detlint(&[file.to_str().unwrap()]);
+    assert_eq!(lenient.status.code(), Some(0));
+    assert!(String::from_utf8_lossy(&lenient.stdout).contains("[stale]"));
+    let strict = run_detlint(&["--strict-stale", file.to_str().unwrap()]);
+    assert_eq!(strict.status.code(), Some(1));
+    let json = run_detlint(&["--strict-stale", "--json", file.to_str().unwrap()]);
+    assert!(String::from_utf8_lossy(&json.stdout).contains("\"ok\":false"));
+    std::fs::remove_file(&file).ok();
+    std::fs::remove_dir(&dir).ok();
 }

@@ -35,6 +35,16 @@ use approxmul::rng::Xoshiro256;
 const N_OPS: usize = 1_000_000;
 const LUT_BITS: u32 = 8;
 
+/// One named bench row per design family that registers a
+/// `simd_kernel()` in `mult/`. detlint's C1 lint cross-checks every
+/// such family against the design lists in `tests/simd_parity.rs`
+/// *and* against a named row here; `main` asserts each entry below is
+/// actually benched, so the roster cannot drift from the harness.
+const SIMD_KERNEL_BENCH_ROWS: &[&str] = &[
+    "exact", "drum6", "trunc8", "mitchell", "lut8:drum6", "sexact", "sdrum6", "booth8",
+    "slut8:sdrum6",
+];
+
 fn operands(dist: OperandDist, seed: u64) -> (Vec<u32>, Vec<u32>) {
     let mut rng = Xoshiro256::new(seed);
     let mut a = Vec::with_capacity(N_OPS);
@@ -157,6 +167,21 @@ fn main() -> anyhow::Result<()> {
         Box::new(signed::Booth::new(8)?),
         Box::new(signed::SignedRoba),
     ];
+
+    // The bench half of the C1 pin: every roster name must be a row this
+    // harness actually runs (design names, or the LUT/SLUT wrappers built
+    // around them at LUT_BITS).
+    let mut benched: Vec<String> = designs.iter().map(|d| d.name()).collect();
+    benched.extend(designs.iter().map(|d| format!("lut{LUT_BITS}:{}", d.name())));
+    benched.extend(signed_designs.iter().map(|d| d.name()));
+    benched.extend(signed_designs.iter().map(|d| format!("slut{LUT_BITS}:{}", d.name())));
+    for row in SIMD_KERNEL_BENCH_ROWS {
+        assert!(
+            benched.iter().any(|n| n == row),
+            "SIMD_KERNEL_BENCH_ROWS entry `{row}` is not benched by any design above"
+        );
+    }
+
     let mut t = Table::new(&["design", "MRE", "SD", "bias", "MRE/SD"]);
     for d in &signed_designs {
         let s = characterize_signed(d.as_ref(), OperandDist::Uniform16, 300_000, 7);

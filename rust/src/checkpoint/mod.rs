@@ -288,18 +288,22 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.b.len() {
-            return Err(fault(
-                FailureClass::Truncated,
-                format!("checkpoint truncated at offset {}", self.pos),
-            ));
-        }
-        let s = &self.b[self.pos..self.pos + n];
+        let s = self
+            .pos
+            .checked_add(n)
+            .and_then(|end| self.b.get(self.pos..end))
+            .ok_or_else(|| {
+                fault(
+                    FailureClass::Truncated,
+                    format!("checkpoint truncated at offset {}", self.pos),
+                )
+            })?;
         self.pos += n;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
+        // detlint: allow(P2) -- take(1) just bounds-checked exactly this byte
         Ok(self.take(1)?[0])
     }
 
@@ -367,11 +371,13 @@ impl Store {
         match self.fault.take() {
             Some(StoreFault::TearNextSave { keep }) => {
                 let keep = keep.min(bytes.len());
+                // detlint: allow(P2) -- keep is clamped to bytes.len() on the line above
                 std::fs::write(&path, &bytes[..keep])
                     .with_context(|| format!("tearing {}", path.display()))?;
                 return Ok(path);
             }
             Some(StoreFault::FailNextSave) => {
+                // detlint: allow(P2) -- len/2 <= len; injected-fault path writes a half file
                 std::fs::write(&tmp, &bytes[..bytes.len() / 2]).ok();
                 return Err(fault(
                     FailureClass::Io,
@@ -477,6 +483,7 @@ impl Store {
         if keep > 0 {
             let epochs = self.list_epochs(tag)?;
             if epochs.len() > keep {
+                // detlint: allow(P2) -- len > keep just checked, so len - keep <= len
                 for &epoch in &epochs[..epochs.len() - keep] {
                     let p = self.path_for(tag, epoch);
                     std::fs::remove_file(&p)
@@ -519,6 +526,7 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     });
     let mut crc = !0u32;
     for &b in bytes {
+        // detlint: allow(P2) -- index masked to 0xFF into a 256-entry table
         crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
     !crc

@@ -45,8 +45,10 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         DType::I32 => xla::ElementType::S32,
         DType::U32 => xla::ElementType::U32,
     };
-    // Reinterpret the word storage as bytes (little-endian host).
     let words = t.raw();
+    // SAFETY: `words` is a live `&[u32]`, so the pointer is valid for
+    // `words.len() * 4` bytes, `u8` has no alignment requirement, and the
+    // byte view cannot outlive the borrow it was derived from.
     let bytes = unsafe {
         std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 4)
     };

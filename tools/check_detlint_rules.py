@@ -1,0 +1,1383 @@
+#!/usr/bin/env python3
+"""detlint mirror — stdlib-only port of rust/analyzers/detlint.
+
+Authoring containers for this repo have no Rust toolchain, so this
+mirror is the executable validation for the detlint v2 engine: it
+re-implements the token lexer, delimiter matching, binding table, scan
+profiles, all nine rules, and the report ordering, then (with no
+arguments) it
+
+  1. checks the fixture corpus against its pinned expectations,
+  2. runs embedded scenario checks (the lib.rs unit tests, ported), and
+  3. scans the CI tree set expecting a clean report.
+
+`--scan <paths...> [--json] [--strict-stale]` mirrors the CLI (minus
+`--baseline`); with `--json` the output is byte-identical to
+`detlint --json` over the same paths, so CI can diff the two engines.
+
+Exit codes: 0 = all checks pass (or scan clean), 1 = findings/failures,
+2 = usage error. Mirrors `tools/check_simd_recipes.py` in spirit: no
+third-party imports, runnable anywhere.
+"""
+
+import os
+import sys
+from bisect import bisect_right
+
+# --------------------------------------------------------------------------
+# Rule tables (keep in lockstep with rust/analyzers/detlint/src/lib.rs).
+# --------------------------------------------------------------------------
+
+RULE_IDS = ["D1", "D1v2", "D2", "D3", "P1", "P2", "S1", "U1", "C1"]
+
+D1_SCOPE = [
+    "mult", "runtime", "coordinator", "rng", "tensor", "data", "config",
+    "metrics", "benchkit", "report", "json", "checkpoint",
+]
+D2_SCOPE = ["mult", "runtime/native", "rng", "tensor", "data", "coordinator"]
+D3_SPAWN_EXEMPT = ["parallel"]
+D3_REDUCE_SCOPE = ["mult", "runtime/native", "tensor", "data", "rng"]
+P1_SCOPE = [
+    "checkpoint", "coordinator/health.rs", "coordinator/recovery.rs",
+    "coordinator/trainer.rs", "testkit/faults.rs",
+]
+P2_SCOPE = P1_SCOPE
+S1_SCOPE = ["mult"]
+ALL_SCOPE = ["*"]
+
+INT_TYPES = {
+    "i8", "i16", "i32", "i64", "i128", "isize",
+    "u8", "u16", "u32", "u64", "u128", "usize",
+}
+
+NON_INDEX_KEYWORDS = {
+    "as", "async", "await", "box", "break", "const", "continue", "crate",
+    "dyn", "else", "enum", "extern", "fn", "for", "if", "impl", "in", "let",
+    "loop", "match", "mod", "move", "mut", "pub", "ref", "return", "use",
+    "where",
+}
+
+ITER_METHODS = {
+    "drain", "into_iter", "into_keys", "into_values", "iter", "iter_mut",
+    "keys", "values", "values_mut",
+}
+
+KERNEL_FAMILIES = {
+    ("UnsignedKernel", "Exact"): "exact",
+    ("UnsignedKernel", "Drum"): "drum",
+    ("UnsignedKernel", "Trunc"): "trunc",
+    ("UnsignedKernel", "Mitchell"): "mitchell",
+    ("UnsignedKernel", "Flat"): "lut",
+    ("SignedKernel", "Exact"): "sexact",
+    ("SignedKernel", "SDrum"): "sdrum",
+    ("SignedKernel", "Booth"): "booth",
+    ("SignedKernel", "Flat"): "slut",
+}
+
+IDENT, NUM, STR, CHAR, LIFETIME, PUNCT = range(6)
+
+
+def is_ident_char(c):
+    return c == "_" or (c.isascii() and c.isalnum())
+
+
+# --------------------------------------------------------------------------
+# Lexer.
+# --------------------------------------------------------------------------
+
+def lex(src):
+    n = len(src)
+    line_starts = [0]
+    for i, c in enumerate(src):
+        if c == "\n":
+            line_starts.append(i + 1)
+
+    def line_of(pos):
+        return bisect_right(line_starts, pos)
+
+    toks = []   # (kind, pos, end, line, text)
+    comments = []  # (line, text)
+    i = 0
+    while i < n:
+        c = src[i]
+        if c in " \t\r\n":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append((line_of(i), src[i:j]))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            i = j
+            continue
+        left_bound = i == 0 or not is_ident_char(src[i - 1])
+        # Raw (and byte-raw) strings.
+        if left_bound and (c == "r" or (c == "b" and src.startswith("br", i))):
+            k = i + 2 if c == "b" else i + 1
+            hashes = 0
+            while k < n and src[k] == "#":
+                hashes += 1
+                k += 1
+            if k < n and src[k] == '"':
+                j = k + 1
+                end = n
+                while True:
+                    q = src.find('"', j)
+                    if q < 0:
+                        end = n
+                        break
+                    h = 0
+                    while h < hashes and q + 1 + h < n and src[q + 1 + h] == "#":
+                        h += 1
+                    if h == hashes:
+                        end = q + 1 + hashes
+                        break
+                    j = q + 1
+                toks.append((STR, i, end, line_of(i), src[i:end]))
+                i = end
+                continue
+        # Plain and byte strings.
+        if c == '"' or (left_bound and c == "b" and i + 1 < n and src[i + 1] == '"'):
+            q0 = i + 1 if c == "b" else i
+            j = q0 + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            j = min(j, n)
+            toks.append((STR, i, j, line_of(i), src[i:j]))
+            i = j
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                q = src.find("'", i + 2)
+                j = n if q < 0 else q + 1
+                toks.append((CHAR, i, j, line_of(i), src[i:j]))
+                i = j
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                toks.append((CHAR, i, i + 3, line_of(i), src[i:i + 3]))
+                i += 3
+                continue
+            j = i + 1
+            while j < n and is_ident_char(src[j]):
+                j += 1
+            toks.append((LIFETIME, i, j, line_of(i), src[i:j]))
+            i = j
+            continue
+        # Number (ident-ish suffix chars, optional `.digits` fraction).
+        if c.isdigit():
+            j = i + 1
+            while j < n and is_ident_char(src[j]):
+                j += 1
+            if j + 1 < n and src[j] == "." and src[j + 1].isdigit():
+                j += 1
+                while j < n and is_ident_char(src[j]):
+                    j += 1
+            toks.append((NUM, i, j, line_of(i), src[i:j]))
+            i = j
+            continue
+        if is_ident_char(c):
+            j = i + 1
+            while j < n and is_ident_char(src[j]):
+                j += 1
+            toks.append((IDENT, i, j, line_of(i), src[i:j]))
+            i = j
+            continue
+        toks.append((PUNCT, i, i + 1, line_of(i), c))
+        i += 1
+    return toks, comments, line_starts
+
+
+class Fx:
+    def __init__(self, src):
+        toks, comments, line_starts = lex(src)
+        self.src = src
+        self.toks = toks
+        self.comments = comments
+        self.n_lines = len(line_starts)
+        line_has_code = [False] * (self.n_lines + 2)
+        for (kind, pos, end, line, _text) in toks:
+            b = bisect_right(line_starts, max(end - 1, pos))
+            for l in range(line, min(b, self.n_lines) + 1):
+                line_has_code[l] = True
+        self.line_has_code = line_has_code
+        self.partner = self._match_delims()
+        self.mask = self._test_mask()
+
+    def text(self, i):
+        return self.toks[i][4]
+
+    def kind(self, i):
+        return self.toks[i][0]
+
+    def line(self, i):
+        return self.toks[i][3]
+
+    def pos(self, i):
+        return self.toks[i][1]
+
+    def end(self, i):
+        return self.toks[i][2]
+
+    def ident_is(self, i, s):
+        return 0 <= i < len(self.toks) and self.toks[i][0] == IDENT and self.toks[i][4] == s
+
+    def punct_is(self, i, c):
+        return 0 <= i < len(self.toks) and self.toks[i][0] == PUNCT and self.toks[i][4] == c
+
+    def _match_delims(self):
+        partner = [None] * len(self.toks)
+        stack = []
+        opens = {")": "(", "]": "[", "}": "{"}
+        for i, (kind, _pos, _end, _line, text) in enumerate(self.toks):
+            if kind != PUNCT:
+                continue
+            if text in "([{":
+                stack.append((text, i))
+            elif text in ")]}":
+                want = opens[text]
+                while stack:
+                    oc, oi = stack.pop()
+                    if oc == want:
+                        partner[oi] = i
+                        partner[i] = oi
+                        break
+        return partner
+
+    def _test_mask(self):
+        n = len(self.toks)
+        mask = [False] * n
+        i = 0
+        while i < n:
+            attr_end = None
+            if self.punct_is(i, "#") and self.punct_is(i + 1, "["):
+                if self.ident_is(i + 2, "test") and self.punct_is(i + 3, "]"):
+                    attr_end = i + 3
+                elif (
+                    self.ident_is(i + 2, "cfg")
+                    and self.punct_is(i + 3, "(")
+                    and self.ident_is(i + 4, "test")
+                    and self.punct_is(i + 5, ")")
+                    and self.punct_is(i + 6, "]")
+                ):
+                    attr_end = i + 6
+            if attr_end is not None:
+                j = attr_end + 1
+                end = n
+                while j < n:
+                    if self.punct_is(j, ";"):
+                        end = j + 1
+                        break
+                    if self.punct_is(j, "{"):
+                        p = self.partner[j]
+                        end = (p + 1) if p is not None else n
+                        break
+                    j += 1
+                for m in range(i, min(end, n)):
+                    mask[m] = True
+                i = attr_end + 1
+                continue
+            i += 1
+        return mask
+
+    def stmt_start(self, i):
+        j = i
+        while j > 0:
+            p = j - 1
+            if self.punct_is(p, ";") or self.punct_is(p, "{") or self.punct_is(p, "}"):
+                break
+            j -= 1
+        return j
+
+    def float_evidence(self, a, b):
+        for i in range(a, min(b, len(self.toks))):
+            kind = self.kind(i)
+            if kind == IDENT:
+                t = self.text(i)
+                if t in ("f32", "f64") and not (
+                    self.punct_is(i + 1, ":")
+                    and self.punct_is(i + 2, ":")
+                    and self.ident_is(i + 3, "from_bits")
+                ):
+                    return True
+            elif kind == NUM:
+                t = self.text(i)
+                for k in range(len(t) - 2):
+                    if t[k].isdigit() and t[k + 1] == "." and t[k + 2].isdigit():
+                        return True
+        return False
+
+
+# --------------------------------------------------------------------------
+# Markers, scopes, profiles.
+# --------------------------------------------------------------------------
+
+def parse_marker(text):
+    """None = not a marker; ("err", msg) = malformed; ("ok", rules, reason)."""
+    t = text.lstrip("/!").lstrip()
+    if not t.startswith("detlint:"):
+        return None
+    rest = t[len("detlint:"):].lstrip()
+    if not rest.startswith("allow("):
+        return ("err", "expected `allow(<rules>)` after `detlint:`")
+    rest = rest[len("allow("):]
+    close = rest.find(")")
+    if close < 0:
+        return ("err", "unclosed `allow(`")
+    rules = [s.strip() for s in rest[:close].split(",")]
+    rules = [r for r in rules if r]
+    if not rules:
+        return ("err", "empty rule list in `allow()`")
+    for r in rules:
+        if r not in RULE_IDS:
+            return ("err", "unknown rule `%s` in allow marker" % r)
+    tail = rest[close + 1:].lstrip()
+    if not tail.startswith("--"):
+        return ("err", "marker missing `-- <reason>`")
+    reason = tail[2:].strip()
+    if not reason:
+        return ("err", "marker missing `-- <reason>`")
+    return ("ok", rules, reason)
+
+
+def in_scope(path, scopes):
+    if "*" in scopes:
+        return True
+    segs = [s for s in path.replace("\\", "/").split("/") if s]
+    for scope in scopes:
+        want = scope.split("/")
+        if not want or len(segs) < len(want):
+            continue
+        for k in range(len(segs) - len(want) + 1):
+            if segs[k:k + len(want)] == want:
+                return True
+    return False
+
+
+DEFAULT, TESTS, ANALYZER = "default", "tests", "analyzer"
+
+
+def profile_for(path):
+    segs = [s for s in path.replace("\\", "/").split("/") if s]
+    if "fixtures" in segs:
+        return DEFAULT
+    if "analyzers" in segs:
+        return ANALYZER
+    if "tests" in segs:
+        return TESTS
+    return DEFAULT
+
+
+def rule_scope(profile, rule):
+    if profile == DEFAULT:
+        return {
+            "D1": D1_SCOPE, "D1v2": D1_SCOPE, "D2": D2_SCOPE,
+            "D3": D3_REDUCE_SCOPE, "P1": P1_SCOPE, "P2": P2_SCOPE,
+            "S1": S1_SCOPE, "U1": ALL_SCOPE, "C1": S1_SCOPE,
+        }.get(rule)
+    if rule in ("D1", "D1v2", "D3", "U1"):
+        return ALL_SCOPE
+    return None
+
+
+# --------------------------------------------------------------------------
+# Binding table.
+# --------------------------------------------------------------------------
+
+def contains_word(hay, word):
+    start = 0
+    while True:
+        p = hay.find(word, start)
+        if p < 0:
+            return False
+        before_ok = p == 0 or not is_ident_char(hay[p - 1])
+        after = p + len(word)
+        after_ok = after >= len(hay) or not is_ident_char(hay[after])
+        if before_ok and after_ok:
+            return True
+        start = p + 1
+
+
+def lone_colon(fx, i):
+    return (
+        fx.punct_is(i, ":")
+        and not fx.punct_is(i + 1, ":")
+        and not (i > 0 and fx.punct_is(i - 1, ":"))
+    )
+
+
+def collect_bindings(fx):
+    n = len(fx.toks)
+    out = []  # (name, ty, pos)
+
+    def push_segment(a, b):
+        colon = None
+        depth = 0
+        angle = 0
+        for i in range(a, b):
+            if fx.kind(i) == PUNCT:
+                t = fx.text(i)
+                if t in "([{":
+                    depth += 1
+                elif t in ")]}":
+                    depth -= 1
+                elif t == "<":
+                    angle += 1
+                elif t == ">":
+                    angle -= 1
+            if depth == 0 and angle == 0 and lone_colon(fx, i):
+                colon = i
+                break
+        if colon is None:
+            return
+        name = None
+        pos = None
+        for i in range(colon - 1, a - 1, -1):
+            if fx.kind(i) == IDENT:
+                t = fx.text(i)
+                if t not in ("mut", "ref"):
+                    name = t
+                    pos = fx.pos(i)
+                break
+        if name is None:
+            return
+        ty = "".join(fx.text(i) for i in range(colon + 1, b))
+        out.append((name, ty, pos))
+
+    def split_segments(opened, close):
+        seg = opened + 1
+        depth = 0
+        angle = 0
+        i = opened + 1
+        while i <= close:
+            boundary = i == close or (depth == 0 and angle <= 0 and fx.punct_is(i, ","))
+            if boundary:
+                if seg < i:
+                    push_segment(seg, i)
+                seg = i + 1
+                if fx.punct_is(i, ","):
+                    angle = max(angle, 0)
+            elif fx.kind(i) == PUNCT:
+                t = fx.text(i)
+                if t in "([{":
+                    depth += 1
+                elif t in ")]}":
+                    depth -= 1
+                elif t == "<":
+                    angle += 1
+                elif t == ">":
+                    angle -= 1
+            i += 1
+
+    i = 0
+    while i < n:
+        if fx.ident_is(i, "let"):
+            j = i + 1
+            if fx.ident_is(j, "mut"):
+                j += 1
+            if j < n and fx.kind(j) == IDENT:
+                name = fx.text(j)
+                pos = fx.pos(j)
+                k = j + 1
+                if lone_colon(fx, k):
+                    ty = []
+                    m = k + 1
+                    angle = 0
+                    while m < n:
+                        if angle <= 0 and (fx.punct_is(m, "=") or fx.punct_is(m, ";")):
+                            break
+                        if fx.punct_is(m, "<"):
+                            angle += 1
+                        elif fx.punct_is(m, ">"):
+                            angle -= 1
+                        ty.append(fx.text(m))
+                        m += 1
+                    out.append((name, "".join(ty), pos))
+                elif fx.punct_is(k, "=") and not fx.punct_is(k + 1, "="):
+                    m = k + 1
+                    depth = 0
+                    ty = ""
+                    while m < n:
+                        if depth == 0 and fx.punct_is(m, ";"):
+                            break
+                        if fx.kind(m) == PUNCT:
+                            t = fx.text(m)
+                            if t in "([{":
+                                depth += 1
+                            elif t in ")]}":
+                                depth -= 1
+                        elif fx.kind(m) == IDENT and fx.text(m) in ("HashMap", "HashSet"):
+                            ty = fx.text(m)
+                        m += 1
+                    if ty:
+                        out.append((name, ty, pos))
+            i += 1
+            continue
+        if fx.ident_is(i, "fn"):
+            j = i + 1
+            angle = 0
+            while j < n:
+                if fx.punct_is(j, "<"):
+                    angle += 1
+                elif fx.punct_is(j, ">"):
+                    angle -= 1
+                elif angle <= 0 and (fx.punct_is(j, "{") or fx.punct_is(j, ";")):
+                    break
+                elif angle <= 0 and fx.punct_is(j, "("):
+                    close = fx.partner[j]
+                    if close is not None:
+                        split_segments(j, close)
+                    break
+                j += 1
+            i += 1
+            continue
+        if fx.ident_is(i, "struct") and i + 1 < n and fx.kind(i + 1) == IDENT:
+            j = i + 2
+            angle = 0
+            while j < n:
+                if fx.punct_is(j, "<"):
+                    angle += 1
+                elif fx.punct_is(j, ">"):
+                    angle -= 1
+                elif angle <= 0 and (fx.punct_is(j, ";") or fx.punct_is(j, "(")):
+                    break
+                elif angle <= 0 and fx.punct_is(j, "{"):
+                    close = fx.partner[j]
+                    if close is not None:
+                        split_segments(j, close)
+                    break
+                j += 1
+            i += 1
+            continue
+        i += 1
+    return out
+
+
+def resolve(bindings, name, pos):
+    before = None
+    after = None
+    for b in bindings:
+        if b[0] != name:
+            continue
+        if b[2] <= pos:
+            if before is None or b[2] >= before[2]:
+                before = b
+        elif after is None or b[2] < after[2]:
+            after = b
+    return before if before is not None else after
+
+
+def hash_typed(b):
+    return contains_word(b[1], "HashMap") or contains_word(b[1], "HashSet")
+
+
+# --------------------------------------------------------------------------
+# Per-file analysis.
+# --------------------------------------------------------------------------
+
+def design_family(spec):
+    out = []
+    for ch in spec:
+        if "a" <= ch <= "z":
+            out.append(ch)
+        else:
+            break
+    return "".join(out)
+
+
+def str_content(text):
+    a = text.find('"')
+    b = text.rfind('"')
+    if a < 0 or b <= a:
+        return ""
+    return text[a + 1:b]
+
+
+def analyze_file(path, src):
+    fx = Fx(src)
+    profile = profile_for(path)
+
+    def on(rule):
+        scope = rule_scope(profile, rule)
+        return scope is not None and in_scope(path, scope)
+
+    marker_problems = []
+    markers = []  # (line, target, rules, reason)
+    for (line, text) in fx.comments:
+        parsed = parse_marker(text)
+        if parsed is None:
+            continue
+        if parsed[0] == "err":
+            marker_problems.append({"path": path, "line": line, "message": parsed[1]})
+        else:
+            target = line + 1 if not fx.line_has_code[line] else line
+            markers.append((line, target, parsed[1], parsed[2]))
+    allow = {}
+    for (_line, target, rules, reason) in markers:
+        entry = allow.setdefault(target, {})
+        for r in rules:
+            entry[r] = reason
+
+    n = len(fx.toks)
+    cands = []  # (pos, line, rule, message)
+
+    def push(i, rule, msg):
+        cands.append((fx.pos(i), fx.line(i), rule, msg))
+
+    bindings = collect_bindings(fx) if on("D1v2") else []
+    d1v2_seen = set()
+
+    def d1v2_site(i, name, ty):
+        key = (fx.line(i), name)
+        if key in d1v2_seen:
+            return
+        d1v2_seen.add(key)
+        cands.append((
+            fx.pos(i), fx.line(i), "D1v2",
+            "iteration over hash-ordered binding `%s` (type `%s`) leaks "
+            "per-process order into a trajectory/artifact module (use "
+            "BTreeMap/BTreeSet, or restructure to keyed lookup)" % (name, ty),
+        ))
+
+    for i in range(n):
+        if fx.mask[i]:
+            continue
+        kind = fx.kind(i)
+        if kind == IDENT:
+            t = fx.text(i)
+            if on("D1") and t in ("HashMap", "HashSet"):
+                push(i, "D1",
+                     "hash-ordered container `%s` in a trajectory/artifact module "
+                     "(iteration order leaks; use BTreeMap/BTreeSet or annotate a "
+                     "lookup-only use)" % t)
+            if on("D2"):
+                pat = None
+                if (t == "Instant" and fx.punct_is(i + 1, ":")
+                        and fx.punct_is(i + 2, ":") and fx.ident_is(i + 3, "now")):
+                    pat = "Instant::now"
+                elif t == "SystemTime":
+                    pat = "SystemTime"
+                elif (t == "std" and fx.punct_is(i + 1, ":")
+                        and fx.punct_is(i + 2, ":") and fx.ident_is(i + 3, "time")):
+                    pat = "std::time"
+                if pat is not None:
+                    push(i, "D2",
+                         "wall-clock `%s` in a step-math module (breaks bit-identical "
+                         "replay; move timing out of the step path or annotate "
+                         "telemetry-only use)" % pat)
+            if (t == "thread" and fx.punct_is(i + 1, ":") and fx.punct_is(i + 2, ":")
+                    and fx.ident_is(i + 3, "spawn")
+                    and not in_scope(path, D3_SPAWN_EXEMPT)):
+                push(i, "D3",
+                     "raw `thread::spawn` outside parallel/ (use "
+                     "parallel::par_map / par_chunks_mut, which keep results "
+                     "thread-count invariant)")
+            if on("D3") and i > 0 and fx.punct_is(i - 1, "."):
+                if t == "sum":
+                    turbofish = (
+                        fx.punct_is(i + 1, ":") and fx.punct_is(i + 2, ":")
+                        and fx.punct_is(i + 3, "<")
+                        and (fx.ident_is(i + 4, "f32") or fx.ident_is(i + 4, "f64"))
+                    )
+                    bare = (
+                        fx.punct_is(i + 1, "(") and fx.punct_is(i + 2, ")")
+                        and fx.float_evidence(fx.stmt_start(i), i)
+                    )
+                    if turbofish or bare:
+                        push(i - 1, "D3",
+                             "float `.sum()` reduction in the numeric spine (must be "
+                             "sequential in a fixed order — annotate why this one "
+                             "is, or route through the k-ordered kernels)")
+                if t == "fold" and fx.punct_is(i + 1, "("):
+                    close = fx.partner[i + 1]
+                    close = n if close is None else close
+                    if fx.float_evidence(i + 2, close):
+                        push(i - 1, "D3",
+                             "float-accumulator `.fold(..)` reduction in the numeric "
+                             "spine (order-sensitive; annotate or restructure)")
+            if on("P1"):
+                if i > 0 and fx.punct_is(i - 1, "."):
+                    if t == "unwrap" and fx.punct_is(i + 1, "(") and fx.punct_is(i + 2, ")"):
+                        push(i - 1, "P1",
+                             "`unwrap()` in the resilience spine (typed errors are the "
+                             "contract here: a panic turns a recoverable fault into an "
+                             "abort)")
+                    if t == "expect" and fx.punct_is(i + 1, "("):
+                        push(i - 1, "P1",
+                             "`expect(` in the resilience spine (typed errors are the "
+                             "contract here: a panic turns a recoverable fault into an "
+                             "abort)")
+                if (t in ("panic", "unreachable", "todo", "unimplemented")
+                        and fx.punct_is(i + 1, "!") and fx.pos(i + 1) == fx.end(i)):
+                    push(i, "P1",
+                         "`%s!` in the resilience spine (raise a typed error instead)" % t)
+            if (on("S1") and t == "as" and i + 1 < n and fx.kind(i + 1) == IDENT
+                    and fx.text(i + 1) in INT_TYPES
+                    and fx.float_evidence(fx.stmt_start(i), i)):
+                push(i, "S1",
+                     "float->int `as %s` cast in a mult/ decomposition path (silently "
+                     "saturates/truncates; use the checked helpers in mult::cast)"
+                     % fx.text(i + 1))
+            if on("U1") and t == "unsafe":
+                l = fx.line(i)
+
+                def has_safety(line):
+                    return any(cl == line and "SAFETY:" in c for (cl, c) in fx.comments)
+
+                ok = has_safety(l)
+                if not ok:
+                    k = l - 1
+                    while k >= 1 and not fx.line_has_code[k]:
+                        if not any(cl == k for (cl, _c) in fx.comments):
+                            break
+                        if has_safety(k):
+                            ok = True
+                            break
+                        k -= 1
+                if not ok:
+                    push(i, "U1",
+                         "`unsafe` without an immediately preceding `// SAFETY:` "
+                         "comment (state the proof obligation the compiler cannot "
+                         "check)")
+            if on("D1v2"):
+                if t == "for" and not fx.punct_is(i + 1, "<"):
+                    depth = 0
+                    j = i + 1
+                    in_idx = None
+                    while j < n:
+                        if fx.kind(j) == PUNCT:
+                            tj = fx.text(j)
+                            if tj in "([":
+                                depth += 1
+                            elif tj in ")]":
+                                depth -= 1
+                            elif tj in "{;" and depth == 0:
+                                break
+                        elif depth == 0 and fx.ident_is(j, "in"):
+                            in_idx = j
+                            break
+                        j += 1
+                    if in_idx is not None:
+                        depth = 0
+                        j = in_idx + 1
+                        while j < n:
+                            if fx.kind(j) == PUNCT:
+                                tj = fx.text(j)
+                                if tj in "([":
+                                    depth += 1
+                                elif tj in ")]":
+                                    depth -= 1
+                                elif tj == "{" and depth == 0:
+                                    break
+                            elif fx.kind(j) == IDENT:
+                                name = fx.text(j)
+                                dotted = j > 0 and fx.punct_is(j - 1, ".")
+                                self_field = dotted and fx.ident_is(j - 2, "self")
+                                if name != "self" and (not dotted or self_field):
+                                    b = resolve(bindings, name, fx.pos(j))
+                                    if b is not None and hash_typed(b):
+                                        d1v2_site(j, name, b[1])
+                            j += 1
+                if (t in ITER_METHODS and i > 0 and fx.punct_is(i - 1, ".")
+                        and fx.punct_is(i + 1, "(") and i >= 2 and fx.kind(i - 2) == IDENT):
+                    name = fx.text(i - 2)
+                    plain = i < 3 or not fx.punct_is(i - 3, ".")
+                    self_field = (not plain) and i >= 4 and fx.ident_is(i - 4, "self")
+                    if name != "self" and (plain or self_field):
+                        b = resolve(bindings, name, fx.pos(i - 2))
+                        if b is not None and hash_typed(b):
+                            d1v2_site(i - 2, name, b[1])
+        if kind == PUNCT and on("P2") and fx.punct_is(i, "[") and i > 0:
+            p = i - 1
+            pk = fx.kind(p)
+            if pk == IDENT:
+                indexy = fx.text(p) not in NON_INDEX_KEYWORDS
+            elif pk == PUNCT:
+                indexy = fx.text(p) in (")", "]", "?")
+            else:
+                indexy = False
+            if indexy:
+                push(i, "P2",
+                     "panicking slice/array index `[..]` in the resilience spine (a "
+                     "short or corrupt buffer must surface as a typed fault, not an "
+                     "abort; use .get()/.get_mut())")
+
+    # C1 facts.
+    registrations = []
+    if on("C1"):
+        for i in range(n):
+            if not (fx.ident_is(i, "fn") and fx.ident_is(i + 1, "simd_kernel")) or fx.mask[i]:
+                continue
+            body_open = None
+            j = i + 2
+            while j < n:
+                if fx.punct_is(j, "{"):
+                    body_open = j
+                    break
+                if fx.punct_is(j, ";"):
+                    break
+                j += 1
+            if body_open is None:
+                continue
+            close = fx.partner[body_open]
+            close = n if close is None else close
+            for k in range(body_open, close):
+                ke = fx.text(k)
+                if (fx.kind(k) == IDENT and ke in ("UnsignedKernel", "SignedKernel")
+                        and fx.punct_is(k + 1, ":") and fx.punct_is(k + 2, ":")
+                        and k + 3 < n and fx.kind(k + 3) == IDENT):
+                    fam = KERNEL_FAMILIES.get((ke, fx.text(k + 3)))
+                    if fam is not None:
+                        registrations.append((fam, fx.line(i)))
+                        break
+    norm = path.replace("\\", "/")
+    is_parity_file = norm.rsplit("/", 1)[-1] == "simd_parity.rs"
+    parity_families = set()
+    if is_parity_file:
+        for i in range(n):
+            if not (fx.ident_is(i, "DESIGNS") or fx.ident_is(i, "SIGNED_DESIGNS")):
+                continue
+            depth = 0
+            j = i + 1
+            while j < n:
+                if fx.kind(j) == PUNCT:
+                    tj = fx.text(j)
+                    if tj in "([{":
+                        depth += 1
+                    elif tj in ")]}":
+                        depth -= 1
+                    elif tj == ";" and depth == 0:
+                        break
+                elif fx.kind(j) == STR:
+                    fam = design_family(str_content(fx.text(j)))
+                    if fam:
+                        parity_families.add(fam)
+                j += 1
+    is_bench_file = in_scope(path, ["benches"])
+    bench_families = set()
+    if is_bench_file:
+        for i in range(n):
+            if fx.kind(i) == STR:
+                fam = design_family(str_content(fx.text(i)))
+                if fam:
+                    bench_families.add(fam)
+
+    cands.sort(key=lambda c: (c[0], c[2]))
+    violations = []
+    suppressions = []
+    used = set()
+    for (pos, line, rule, message) in cands:
+        reason = allow.get(line, {}).get(rule)
+        if reason is not None:
+            used.add((line, rule))
+            suppressions.append(
+                {"rule": rule, "path": path, "line": line, "reason": reason})
+            continue
+        violations.append(
+            {"rule": rule, "path": path, "line": line, "message": message})
+
+    return {
+        "path": path,
+        "violations": violations,
+        "suppressions": suppressions,
+        "marker_problems": marker_problems,
+        "markers": markers,
+        "used": used,
+        "allow": allow,
+        "registrations": registrations,
+        "parity_seen": is_parity_file,
+        "parity_families": parity_families,
+        "bench_seen": is_bench_file,
+        "bench_families": bench_families,
+    }
+
+
+# --------------------------------------------------------------------------
+# Finalize + scan entry points.
+# --------------------------------------------------------------------------
+
+def rule_index(rule):
+    try:
+        return RULE_IDS.index(rule)
+    except ValueError:
+        return len(RULE_IDS)
+
+
+def finalize(files):
+    parity_seen = any(f["parity_seen"] for f in files)
+    bench_seen = any(f["bench_seen"] for f in files)
+    parity = set()
+    bench = set()
+    for f in files:
+        parity |= f["parity_families"]
+        bench |= f["bench_families"]
+    report = {
+        "files_scanned": len(files),
+        "violations": [],
+        "suppressions": [],
+        "marker_problems": [],
+        "stale_markers": [],
+    }
+    for f in files:
+        for (family, line) in f["registrations"]:
+            gaps = []
+            if parity_seen and family not in parity:
+                gaps.append("the simd_parity.rs design lists")
+            if bench_seen and family not in bench:
+                gaps.append("a named bench row")
+            if not gaps:
+                continue
+            message = (
+                "design family `%s` registers a simd_kernel() but is missing "
+                "from %s (the scalar<->SIMD bit-identity pin)"
+                % (family, " and ".join(gaps))
+            )
+            reason = f["allow"].get(line, {}).get("C1")
+            if reason is not None:
+                f["used"].add((line, "C1"))
+                f["suppressions"].append(
+                    {"rule": "C1", "path": f["path"], "line": line, "reason": reason})
+            else:
+                f["violations"].append(
+                    {"rule": "C1", "path": f["path"], "line": line, "message": message})
+        for (line, target, rules, _reason) in f["markers"]:
+            for r in rules:
+                if (target, r) not in f["used"]:
+                    report["stale_markers"].append({
+                        "path": f["path"], "line": line,
+                        "message": "stale marker: allow(%s) suppressed nothing" % r,
+                    })
+        report["violations"].extend(f["violations"])
+        report["suppressions"].extend(f["suppressions"])
+        report["marker_problems"].extend(f["marker_problems"])
+    report["violations"].sort(
+        key=lambda v: (v["path"], v["line"], rule_index(v["rule"]), v["message"]))
+    report["suppressions"].sort(key=lambda s: (s["path"], s["line"], s["rule"]))
+    report["marker_problems"].sort(key=lambda p: (p["path"], p["line"]))
+    report["stale_markers"].sort(key=lambda p: (p["path"], p["line"]))
+    return report
+
+
+def failed(report):
+    return bool(report["violations"]) or bool(report["marker_problems"])
+
+
+def scan_source(path, src):
+    return finalize([analyze_file(path, src)])
+
+
+def scan_sources(files):
+    return finalize([analyze_file(p, s) for (p, s) in files])
+
+
+def collect_rs_files(path, out):
+    if os.path.isfile(path):
+        if path.endswith(".rs"):
+            out.append(path)
+        return
+    entries = sorted(os.path.join(path, e) for e in os.listdir(path))
+    for e in entries:
+        if os.path.isdir(e):
+            collect_rs_files(e, out)
+        elif e.endswith(".rs"):
+            out.append(e)
+
+
+def scan_paths(paths):
+    files = []
+    for p in paths:
+        batch = []
+        collect_rs_files(p, batch)
+        batch.sort()
+        files.extend(batch)
+    analyses = []
+    for f in files:
+        with open(f, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        analyses.append(analyze_file(f.replace("\\", "/"), src))
+    return finalize(analyses)
+
+
+# --------------------------------------------------------------------------
+# JSON output (byte-identical to `detlint --json`).
+# --------------------------------------------------------------------------
+
+def json_escape(s):
+    out = []
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    return "".join(out)
+
+
+def report_json(report, ok):
+    vs = ",".join(
+        '{"rule":"%s","path":"%s","line":%d,"message":"%s"}'
+        % (v["rule"], json_escape(v["path"]), v["line"], json_escape(v["message"]))
+        for v in report["violations"])
+    ss = ",".join(
+        '{"rule":"%s","path":"%s","line":%d,"reason":"%s"}'
+        % (json_escape(s["rule"]), json_escape(s["path"]), s["line"],
+           json_escape(s["reason"]))
+        for s in report["suppressions"])
+    probs = ",".join(
+        '{"path":"%s","line":%d,"message":"%s"}'
+        % (json_escape(p["path"]), p["line"], json_escape(p["message"]))
+        for p in report["marker_problems"])
+    stale = ",".join(
+        '{"path":"%s","line":%d,"message":"%s"}'
+        % (json_escape(p["path"]), p["line"], json_escape(p["message"]))
+        for p in report["stale_markers"])
+    return (
+        '{"files_scanned":%d,"violations":[%s],"grandfathered":[],'
+        '"suppressions":[%s],"marker_problems":[%s],"stale_markers":[%s],"ok":%s}'
+        % (report["files_scanned"], vs, ss, probs, stale,
+           "true" if ok else "false"))
+
+
+def print_report_text(report):
+    for v in report["violations"]:
+        print("%s:%d: [%s] %s" % (v["path"], v["line"], v["rule"], v["message"]))
+    for p in report["marker_problems"]:
+        print("%s:%d: [marker] %s" % (p["path"], p["line"], p["message"]))
+    for s in report["stale_markers"]:
+        print("%s:%d: [stale] %s" % (s["path"], s["line"], s["message"]))
+    print("detlint-mirror: %d file(s), %d violation(s), %d suppression(s), "
+          "%d marker problem(s), %d stale marker(s)"
+          % (report["files_scanned"], len(report["violations"]),
+             len(report["suppressions"]), len(report["marker_problems"]),
+             len(report["stale_markers"])))
+
+
+# --------------------------------------------------------------------------
+# Validation suite (default mode).
+# --------------------------------------------------------------------------
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(
+    REPO_ROOT, "rust", "analyzers", "detlint", "fixtures").replace("\\", "/")
+
+TREE_SCAN_SET = [
+    "rust/src",
+    "rust/benches",
+    "rust/tests",
+    "examples",
+    "rust/analyzers/detlint/src",
+    "rust/analyzers/detlint/tests",
+]
+
+_failures = []
+
+
+def check(name, cond, detail=""):
+    if cond:
+        print("ok   %s" % name)
+    else:
+        print("FAIL %s%s" % (name, (" — " + detail) if detail else ""))
+        _failures.append(name)
+
+
+def rules_of(report):
+    return [v["rule"] for v in report["violations"]]
+
+
+def scan_fixture_file(rel):
+    path = FIXTURES + "/" + rel
+    with open(path, "r", encoding="utf-8") as fh:
+        return scan_source(path, fh.read())
+
+
+def scan_fixture_dir(rel):
+    return scan_paths([os.path.join(FIXTURES, rel) if rel else FIXTURES])
+
+
+def run_fixture_checks():
+    singles = [
+        ("bad/mult/d1_hash_iteration.rs", "D1"),
+        ("bad/mult/d1v2_iteration_site.rs", "D1v2"),
+        ("bad/mult/s1_unchecked_cast.rs", "S1"),
+        ("bad/runtime/native/d2_wall_clock.rs", "D2"),
+        ("bad/runtime/native/d3_unordered_reduction.rs", "D3"),
+        ("bad/checkpoint/p2_slice_index.rs", "P2"),
+        ("bad/runtime/u1_unsafe_no_safety.rs", "U1"),
+    ]
+    for rel, rule in singles:
+        r = scan_fixture_file(rel)
+        check("fixture %s fires %s exactly once" % (rel, rule),
+              rules_of(r) == [rule], repr(rules_of(r)))
+    r = scan_fixture_file("bad/checkpoint/p1_panic_in_recovery.rs")
+    check("P1 fixture crossfires P2 on the same line",
+          sorted(rules_of(r)) == ["P1", "P2"]
+          and len({v["line"] for v in r["violations"]}) == 1,
+          repr(r["violations"]))
+    allowed = [
+        ("allowed/mult/allow_marker.rs", 2),
+        ("allowed/mult/d1v2_allowed.rs", 2),
+        ("allowed/checkpoint/p2_allowed.rs", 1),
+        ("allowed/runtime/u1_allowed.rs", 1),
+    ]
+    for rel, n_sup in allowed:
+        r = scan_fixture_file(rel)
+        check("fixture %s suppresses x%d, no stale" % (rel, n_sup),
+              not r["violations"] and len(r["suppressions"]) == n_sup
+              and not r["stale_markers"],
+              repr((rules_of(r), r["suppressions"], r["stale_markers"])))
+    for rel in [
+        "clean/mult/ordered_clean.rs",
+        "clean/mult/d1v2_btree_iter.rs",
+        "clean/checkpoint/p2_get_checked.rs",
+        "clean/runtime/u1_safety_comment.rs",
+    ]:
+        r = scan_fixture_file(rel)
+        check("fixture %s is silent" % rel,
+              not r["violations"] and not r["suppressions"]
+              and not r["stale_markers"], repr(rules_of(r)))
+
+    bad = scan_fixture_dir("c1/bad")
+    check("c1/bad fires C1 once with both gaps",
+          rules_of(bad) == ["C1"]
+          and "mitchell" in bad["violations"][0]["message"]
+          and "design lists" in bad["violations"][0]["message"]
+          and "named bench row" in bad["violations"][0]["message"],
+          repr(bad["violations"]))
+    allowed_c1 = scan_fixture_dir("c1/allowed")
+    check("c1/allowed suppresses C1, no stale",
+          not allowed_c1["violations"]
+          and [s["rule"] for s in allowed_c1["suppressions"]] == ["C1"]
+          and not allowed_c1["stale_markers"],
+          repr((allowed_c1["violations"], allowed_c1["suppressions"],
+                allowed_c1["stale_markers"])))
+    clean_c1 = scan_fixture_dir("c1/clean")
+    check("c1/clean is silent",
+          not clean_c1["violations"] and not clean_c1["suppressions"],
+          repr(clean_c1["violations"]))
+
+    corpus = scan_fixture_dir("")
+    check("whole corpus: 25 files, 10 violations, 8 suppressions, 0 problems, 0 stale",
+          corpus["files_scanned"] == 25 and len(corpus["violations"]) == 10
+          and len(corpus["suppressions"]) == 8
+          and not corpus["marker_problems"] and not corpus["stale_markers"],
+          repr((corpus["files_scanned"], len(corpus["violations"]),
+                len(corpus["suppressions"]), corpus["marker_problems"],
+                corpus["stale_markers"])))
+
+
+def run_scenario_checks():
+    """Ported lib.rs unit-test scenarios — engine semantics, no files."""
+    r = scan_source("rust/src/mult/mod.rs",
+                    '// HashMap in a comment is fine\n'
+                    'fn f() -> &\'static str { "HashMap" }\n')
+    check("comments and strings are not code", not r["violations"],
+          repr(rules_of(r)))
+
+    r = scan_source(
+        "rust/src/mult/mod.rs",
+        'fn f() { let s = r#"HashMap"#; let c = \'{\'; '
+        'let m: std::collections::HashMap<u8, u8> = Default::default(); '
+        'let _ = (s, c, m); }\n')
+    check("raw strings and char literals stay out of the token stream",
+          rules_of(r) == ["D1"] and r["violations"][0]["line"] == 1,
+          repr(r["violations"]))
+
+    r = scan_source("rust/src/checkpoint/mod.rs",
+                    "pub fn first(bytes: &[u8]) -> u8 { bytes[0] }\n")
+    check("P2 fires on index expressions", rules_of(r) == ["P2"], repr(rules_of(r)))
+    r = scan_source(
+        "rust/src/checkpoint/mod.rs",
+        "#[derive(Clone)]\npub struct B { v: [u8; 4] }\n"
+        "pub fn first(bytes: &[u8]) -> Option<u8> { bytes.get(0).copied() }\n")
+    check("P2 ignores type and attribute brackets", not r["violations"],
+          repr(rules_of(r)))
+    r = scan_source("rust/src/checkpoint/mod.rs",
+                    "fn f(rows: &[Vec<u8>]) -> u8 { rows[0][1] }\n")
+    check("P2 fires per chained index", rules_of(r) == ["P2", "P2"], repr(rules_of(r)))
+
+    src = ("use std::collections::HashMap;\n"
+           "fn f(m: &HashMap<u32, u64>) -> u64 {\n"
+           "    let mut acc = 0u64;\n"
+           "    for (_k, v) in m.iter() {\n"
+           "        acc += *v;\n"
+           "    }\n"
+           "    acc + m.get(&0).copied().unwrap_or(0)\n"
+           "}\n")
+    r = scan_source("rust/src/runtime/engine.rs", src)
+    d1v2 = [v for v in r["violations"] if v["rule"] == "D1v2"]
+    check("D1v2 fires once at the iteration site",
+          len(d1v2) == 1 and d1v2[0]["line"] == 4, repr(r["violations"]))
+
+    src = ("use std::collections::HashMap;\n"
+           "// detlint: allow(D1) -- scenario: lookup table under test\n"
+           "struct C { map: HashMap<u32, u64> }\n"
+           "impl C {\n"
+           "    fn leak(&self) -> u64 { self.map.values().sum::<u64>() }\n"
+           "}\n")
+    r = scan_source("rust/src/runtime/engine.rs", src)
+    d1v2 = [v for v in r["violations"] if v["rule"] == "D1v2"]
+    check("D1v2 tracks struct fields through self",
+          len(d1v2) == 1 and d1v2[0]["line"] == 5, repr(r["violations"]))
+
+    r = scan_source("rust/src/runtime/mod.rs",
+                    "fn f(p: *const u8) -> u8 { unsafe { *p } }\n")
+    check("U1 fires without a SAFETY comment", rules_of(r) == ["U1"],
+          repr(rules_of(r)))
+    r = scan_source(
+        "rust/src/runtime/mod.rs",
+        "fn f(p: *const u8) -> u8 {\n"
+        "    // SAFETY: caller keeps p valid for reads;\n"
+        "    // the deref copies one byte.\n"
+        "    unsafe { *p }\n"
+        "}\n")
+    check("U1 accepts contiguous comment lines above", not r["violations"],
+          repr(rules_of(r)))
+    r = scan_source(
+        "rust/src/runtime/mod.rs",
+        "fn f(p: *const u8) -> u8 {\n"
+        "    // SAFETY: too far away\n"
+        "\n"
+        "    unsafe { *p }\n"
+        "}\n")
+    check("U1 rejects a blank-line gap", rules_of(r) == ["U1"], repr(rules_of(r)))
+
+    reg = ("pub fn simd_kernel(&self) -> Option<K> "
+           "{ Some(UnsignedKernel::Mitchell { bits: 8 }) }\n")
+    r = scan_sources([
+        ("rust/src/mult/mitchell.rs", reg),
+        ("rust/tests/simd_parity.rs",
+         'const DESIGNS: &[&str] = &["exact", "drum6"];\n'),
+        ("rust/benches/multipliers.rs",
+         'fn rows() -> Vec<&\'static str> { vec!["exact", "drum6"] }\n'),
+    ])
+    c1 = [v for v in r["violations"] if v["rule"] == "C1"]
+    check("C1 fires cross-file for an unpinned family",
+          len(c1) == 1 and "mitchell" in c1[0]["message"], repr(r["violations"]))
+    r = scan_sources([
+        ("rust/src/mult/mitchell.rs", reg),
+        ("rust/tests/simd_parity.rs",
+         'const DESIGNS: &[&str] = &["exact", "mitchell"];\n'),
+        ("rust/benches/multipliers.rs",
+         'fn rows() -> Vec<&\'static str> { vec!["exact", "mitchell"] }\n'),
+    ])
+    check("C1 is quiet for a pinned family", not r["violations"],
+          repr(rules_of(r)))
+    r = scan_source("rust/src/mult/mitchell.rs", reg)
+    check("C1 needs parity/bench facts in the scan set", not r["violations"],
+          repr(rules_of(r)))
+
+    r = scan_source("rust/tests/checkpoint_suite.rs",
+                    "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n")
+    check("tests profile drops P1", not r["violations"], repr(rules_of(r)))
+    r = scan_source("rust/tests/misc.rs", "use std::collections::HashMap;\n")
+    check("tests profile keeps D1 everywhere", rules_of(r) == ["D1"],
+          repr(rules_of(r)))
+    check("fixtures profile precedence",
+          profile_for("rust/analyzers/detlint/fixtures/bad/mult/x.rs") == DEFAULT
+          and profile_for("rust/analyzers/detlint/src/lib.rs") == ANALYZER
+          and profile_for("rust/tests/misc.rs") == TESTS)
+
+    r = scan_source("rust/src/mult/mod.rs",
+                    "// detlint: allow(D9) -- no such rule\n"
+                    "// detlint: allow(D1)\n"
+                    "// detlint: deny(D1) -- wrong verb\n"
+                    "fn f() {}\n")
+    check("malformed markers are problems", len(r["marker_problems"]) == 3,
+          repr(r["marker_problems"]))
+    r = scan_source("rust/src/mult/mod.rs",
+                    "// detlint: allow(D1) -- nothing here anymore\nfn f() {}\n")
+    check("stale markers warn", not r["violations"]
+          and len(r["stale_markers"]) == 1 and not failed(r),
+          repr(r["stale_markers"]))
+
+
+def run_tree_check():
+    paths = [p for p in TREE_SCAN_SET
+             if os.path.exists(os.path.join(REPO_ROOT, p))]
+    cwd = os.getcwd()
+    os.chdir(REPO_ROOT)
+    try:
+        report = scan_paths(paths)
+    finally:
+        os.chdir(cwd)
+    ok = (not report["violations"] and not report["marker_problems"]
+          and not report["stale_markers"])
+    check("tree scan over %s is clean (strict-stale)" % " ".join(paths), ok, "")
+    if not ok:
+        print_report_text(report)
+    else:
+        print("     (%d files, %d audited suppressions)"
+              % (report["files_scanned"], len(report["suppressions"])))
+
+
+def main(argv):
+    if argv and argv[0] == "--scan":
+        as_json = False
+        strict_stale = False
+        paths = []
+        for a in argv[1:]:
+            if a == "--json":
+                as_json = True
+            elif a == "--strict-stale":
+                strict_stale = True
+            elif a.startswith("-"):
+                sys.stderr.write("check_detlint_rules: unknown flag `%s`\n" % a)
+                return 2
+            else:
+                paths.append(a)
+        if not paths:
+            sys.stderr.write(
+                "usage: check_detlint_rules.py --scan [--json] [--strict-stale] <path>...\n")
+            return 2
+        report = scan_paths(paths)
+        bad = failed(report) or (strict_stale and bool(report["stale_markers"]))
+        if as_json:
+            print(report_json(report, not bad))
+        else:
+            print_report_text(report)
+        return 1 if bad else 0
+    if argv:
+        sys.stderr.write(
+            "usage: check_detlint_rules.py            # run the validation suite\n"
+            "       check_detlint_rules.py --scan [--json] [--strict-stale] <path>...\n")
+        return 2
+    run_fixture_checks()
+    run_scenario_checks()
+    run_tree_check()
+    if _failures:
+        print("\n%d check(s) FAILED" % len(_failures))
+        return 1
+    print("\nall detlint mirror checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
