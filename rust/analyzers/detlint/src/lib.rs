@@ -80,18 +80,21 @@ const D1_SCOPE: &[&str] = &[
     "report",
     "json",
     "checkpoint",
+    "serve",
 ];
-const D2_SCOPE: &[&str] = &["mult", "runtime/native", "rng", "tensor", "data", "coordinator"];
+const D2_SCOPE: &[&str] =
+    &["mult", "runtime/native", "rng", "tensor", "data", "coordinator", "serve"];
 /// Modules allowed to spawn threads (the deterministic fork-join
 /// substrate every parallel caller routes through).
 const D3_SPAWN_EXEMPT: &[&str] = &["parallel"];
-const D3_REDUCE_SCOPE: &[&str] = &["mult", "runtime/native", "tensor", "data", "rng"];
+const D3_REDUCE_SCOPE: &[&str] = &["mult", "runtime/native", "tensor", "data", "rng", "serve"];
 const P1_SCOPE: &[&str] = &[
     "checkpoint",
     "coordinator/health.rs",
     "coordinator/recovery.rs",
     "coordinator/trainer.rs",
     "testkit/faults.rs",
+    "serve",
 ];
 const P2_SCOPE: &[&str] = P1_SCOPE;
 const S1_SCOPE: &[&str] = &["mult"];

@@ -1,0 +1,251 @@
+//! Fixed-bucket latency histogram with deterministic edges.
+//!
+//! `serve-bench` (and future training-step timing) need percentiles
+//! that are *reproducible artifacts*: the same set of recorded
+//! latencies must report the same p50/p95/p99 on every run, every
+//! platform, every thread count. Sorting raw sample vectors gets that
+//! too, but costs O(n log n) memory-resident samples; a histogram with
+//! a fixed, deterministic bucket layout gets it in O(buckets) with
+//! exact-from-counts percentiles (each percentile answers with its
+//! bucket's inclusive upper edge — a deterministic, conservative
+//! over-estimate bounded by the ~25% bucket width).
+//!
+//! Bucket edges are geometric over integer microseconds: starting at
+//! 1µs each next edge is `prev + max(1, prev/4)` (~×1.25), capped at
+//! one hour. The sequence is pure integer arithmetic — identical on
+//! every build — so histograms from different workers merge bucket-
+//! for-bucket and serialized artifacts diff cleanly across PRs.
+
+/// Inclusive upper edge of the last regular bucket: one hour in µs.
+const MAX_EDGE_US: u64 = 3_600_000_000;
+
+/// Deterministic geometric edge sequence. Bucket `i` covers
+/// `(edges[i-1], edges[i]]` in µs (bucket 0 covers `[0, edges[0]]`);
+/// values above the last edge land in a single overflow bucket whose
+/// percentile answer is the recorded maximum.
+fn edges() -> Vec<u64> {
+    let mut v = Vec::with_capacity(128);
+    let mut e: u64 = 1;
+    while e < MAX_EDGE_US {
+        v.push(e);
+        e += (e / 4).max(1);
+    }
+    v.push(MAX_EDGE_US);
+    v
+}
+
+/// Fixed-bucket latency histogram over integer microseconds.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    edges: Vec<u64>,
+    /// One count per edge, plus a final overflow bucket.
+    counts: Vec<u64>,
+    total: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        let edges = edges();
+        let counts = vec![0u64; edges.len() + 1];
+        LatencyHistogram { edges, counts, total: 0, max_us: 0 }
+    }
+
+    /// Record one latency observation in microseconds.
+    pub fn record(&mut self, us: u64) {
+        // First bucket whose upper edge admits the value; everything
+        // past the last edge is the overflow bucket.
+        let idx = self.edges.partition_point(|&e| e < us);
+        if let Some(c) = self.counts.get_mut(idx) {
+            *c += 1;
+        }
+        self.total += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Largest recorded observation (0 when empty).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Exact-from-counts percentile: the inclusive upper edge of the
+    /// bucket holding the `ceil(p/100 · total)`-th smallest
+    /// observation. Overflow-bucket answers report the recorded max.
+    /// Returns 0 for an empty histogram.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        // k-th order statistic, 1-based; p=0 degenerates to k=1.
+        let k = ((p / 100.0 * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= k {
+                // Overflow bucket (or any bucket the max falls in):
+                // never answer above the recorded maximum.
+                return match self.edges.get(i) {
+                    Some(&edge) => edge.min(self.max_us),
+                    None => self.max_us,
+                };
+            }
+        }
+        self.max_us
+    }
+
+    /// Merge another histogram's counts into this one. Layouts are
+    /// identical by construction, so this is bucket-wise addition.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Standard summary row: `{count, p50_us, p95_us, p99_us, max_us}`.
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::object([
+            ("count", crate::json::Value::from(self.total as usize)),
+            ("p50_us", crate::json::Value::from(self.percentile_us(50.0) as f64)),
+            ("p95_us", crate::json::Value::from(self.percentile_us(95.0) as f64)),
+            ("p99_us", crate::json::Value::from(self.percentile_us(99.0) as f64)),
+            ("max_us", crate::json::Value::from(self.max_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_are_strictly_increasing_and_bounded() {
+        let e = edges();
+        assert!(e.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*e.first().unwrap(), 1);
+        assert_eq!(*e.last().unwrap(), MAX_EDGE_US);
+        // Geometric layout stays compact: well under 200 buckets.
+        assert!(e.len() < 200, "edge count {}", e.len());
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(50.0), 0);
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.max_us(), 0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = LatencyHistogram::new();
+        h.record(100);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile_us(p), 100, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentiles_at_bucket_boundaries_are_exact() {
+        // Values placed exactly on edges must be admitted by their own
+        // bucket (inclusive upper edge), so percentiles on a
+        // boundary-only population answer with the boundary itself.
+        let e = edges();
+        let mut h = LatencyHistogram::new();
+        // 100 observations: edges[10] × 50, edges[20] × 45, edges[30] × 5.
+        for _ in 0..50 {
+            h.record(e[10]);
+        }
+        for _ in 0..45 {
+            h.record(e[20]);
+        }
+        for _ in 0..5 {
+            h.record(e[30]);
+        }
+        assert_eq!(h.count(), 100);
+        // k = ceil(0.50·100) = 50 → still inside the first group.
+        assert_eq!(h.percentile_us(50.0), e[10]);
+        // k = 51 → second group.
+        assert_eq!(h.percentile_us(51.0), e[20]);
+        // k = 95 → last observation of the second group.
+        assert_eq!(h.percentile_us(95.0), e[20]);
+        // k = 96..=100 → third group.
+        assert_eq!(h.percentile_us(96.0), e[30]);
+        assert_eq!(h.percentile_us(99.0), e[30]);
+        assert_eq!(h.percentile_us(100.0), e[30]);
+    }
+
+    #[test]
+    fn conservative_rounding_stays_within_one_bucket() {
+        // A value strictly inside a bucket reports that bucket's upper
+        // edge: an over-estimate of at most ~25%.
+        let mut h = LatencyHistogram::new();
+        h.record(1000);
+        let p = h.percentile_us(50.0);
+        assert!(p >= 1000, "must not under-report: {p}");
+        assert!(p <= 1000 + 1000 / 3, "bucket too wide: {p}");
+    }
+
+    #[test]
+    fn overflow_bucket_reports_recorded_max() {
+        let mut h = LatencyHistogram::new();
+        h.record(MAX_EDGE_US * 2);
+        assert_eq!(h.percentile_us(99.0), MAX_EDGE_US * 2);
+        assert_eq!(h.max_us(), MAX_EDGE_US * 2);
+    }
+
+    #[test]
+    fn zero_latency_lands_in_first_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(0);
+        // Upper edge is 1µs but the max is 0, and percentiles never
+        // answer above the recorded max.
+        assert_eq!(h.percentile_us(50.0), 0);
+    }
+
+    #[test]
+    fn merge_equals_concatenated_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for v in [10u64, 200, 3000, 40000] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [7u64, 70, 700_000, 9_999_999] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max_us(), both.max_us());
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(a.percentile_us(p), both.percentile_us(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn json_summary_roundtrips() {
+        let mut h = LatencyHistogram::new();
+        h.record(500);
+        h.record(1500);
+        let v = h.to_json();
+        let re = crate::json::Value::parse(&v.to_string()).unwrap();
+        assert_eq!(re.get("count").unwrap().as_usize().unwrap(), 2);
+        assert!(re.get("p99_us").unwrap().as_f64().unwrap() >= 1500.0);
+    }
+}

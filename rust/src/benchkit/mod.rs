@@ -7,6 +7,8 @@
 //! monotonic clock, and the reporter prints enough distribution shape
 //! to spot bimodality.
 
+pub mod hist;
+
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.

@@ -182,6 +182,65 @@ impl Default for WatchdogConfig {
     }
 }
 
+/// Serving-mode policy ([`crate::serve`]): dynamic-batching knobs and
+/// admission bounds for the resident multi-tenant inference server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Max coalescing wait for a lane's oldest request (µs) before a
+    /// partial batch flushes anyway.
+    pub batch_window_us: u64,
+    /// Max requests per GEMM batch.
+    pub max_batch: usize,
+    /// Bounded request-queue capacity across all lanes; admission past
+    /// it is a typed `queue-full` rejection.
+    pub queue_capacity: usize,
+    /// Bound on distinct resident multiplier specs.
+    pub max_specs: usize,
+    /// Deterministic per-batch service-time model (µs) used for
+    /// deadline feasibility and modeled completion times.
+    pub service_estimate_us: u64,
+    /// Byte cap enforced on request bodies *before* JSON parsing.
+    pub max_request_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_window_us: 2_000,
+            max_batch: 8,
+            queue_capacity: 256,
+            max_specs: 8,
+            service_estimate_us: 2_000,
+            max_request_bytes: 1 << 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("serve.max_batch must be >= 1");
+        }
+        if self.queue_capacity < self.max_batch {
+            bail!(
+                "serve.queue_capacity {} must be >= max_batch {}",
+                self.queue_capacity,
+                self.max_batch
+            );
+        }
+        if self.max_specs == 0 {
+            bail!("serve.max_specs must be >= 1");
+        }
+        if self.service_estimate_us == 0 {
+            bail!("serve.service_estimate_us must be >= 1");
+        }
+        if self.max_request_bytes == 0 {
+            bail!("serve.max_request_bytes must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// A full training-run configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {

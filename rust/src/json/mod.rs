@@ -5,11 +5,79 @@
 //! line/column error reporting. The manifest and experiment configs are
 //! small (< 1 MB), so the recursive-descent parser favours clarity over
 //! zero-copy tricks; throughput is still ~100 MB/s, far from hot.
+//!
+//! ## Hostile input (the serve wire path)
+//!
+//! [`Value::parse_bytes`] is the entry point for bytes that arrive
+//! over a wire rather than from our own artifacts: it enforces a byte
+//! cap *before* parsing, rejects non-UTF-8 input, and — like every
+//! parse here — rejects duplicate object keys instead of silently
+//! last-write-winning. Each failure mode carries a typed
+//! [`JsonFault`] in the `anyhow` chain ([`classify`]) so the wire
+//! layer can answer with a machine-readable rejection, never a panic.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+/// Machine-readable classification of a JSON decode failure on the
+/// wire path. Mirrors `checkpoint::FailureClass` in spirit: recovery
+/// and rejection code dispatches on the class, the human-readable
+/// message keeps the byte-level detail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonFaultClass {
+    /// Input exceeds the caller's byte cap (checked before parsing, so
+    /// an oversized body cannot cost a full parse).
+    Oversized,
+    /// Input is not valid UTF-8.
+    NonUtf8,
+    /// An object repeats a member name. RFC 8259 leaves this
+    /// undefined; silently keeping the last write would let two
+    /// readers disagree about the same document, so it is an error.
+    DuplicateKey,
+    /// Any other grammar violation.
+    Syntax,
+}
+
+impl JsonFaultClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            JsonFaultClass::Oversized => "oversized",
+            JsonFaultClass::NonUtf8 => "non-utf8",
+            JsonFaultClass::DuplicateKey => "duplicate-key",
+            JsonFaultClass::Syntax => "syntax",
+        }
+    }
+}
+
+/// Typed JSON decode error carried through `anyhow` chains so callers
+/// can reject by class instead of string-matching messages.
+#[derive(Debug)]
+pub struct JsonFault {
+    pub class: JsonFaultClass,
+    msg: String,
+}
+
+impl fmt::Display for JsonFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for JsonFault {}
+
+fn fault(class: JsonFaultClass, msg: String) -> anyhow::Error {
+    anyhow::Error::new(JsonFault { class, msg })
+}
+
+/// Walk an error's chain for a JSON-fault classification (context
+/// layers added by callers are skipped transparently).
+pub fn classify(err: &anyhow::Error) -> Option<JsonFaultClass> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<JsonFault>())
+        .map(|f| f.class)
+}
 
 /// A parsed JSON value. Numbers are kept as `f64` (the manifest has no
 /// integers that exceed 2^53).
@@ -36,6 +104,31 @@ impl Value {
             bail!("trailing garbage at {}", p.location());
         }
         Ok(v)
+    }
+
+    /// Parse an untrusted byte buffer with a size cap — the wire-path
+    /// entry point. The cap is enforced *before* any parsing work, the
+    /// buffer must be UTF-8, and every failure (including grammar
+    /// errors from the parse itself) carries a typed [`JsonFault`].
+    pub fn parse_bytes(bytes: &[u8], max_bytes: usize) -> Result<Value> {
+        if bytes.len() > max_bytes {
+            return Err(fault(
+                JsonFaultClass::Oversized,
+                format!("input is {} bytes, cap is {max_bytes}", bytes.len()),
+            ));
+        }
+        let text = std::str::from_utf8(bytes).map_err(|e| {
+            fault(JsonFaultClass::NonUtf8, format!("input is not UTF-8: {e}"))
+        })?;
+        Self::parse(text).map_err(|e| {
+            // Duplicate-key (and any future) classifications from the
+            // parser pass through; everything else is a syntax fault.
+            if classify(&e).is_some() {
+                e
+            } else {
+                fault(JsonFaultClass::Syntax, format!("{e:#}"))
+            }
+        })
     }
 
     /// Parse the file at `path`.
@@ -420,7 +513,12 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.skip_ws();
             let val = self.value()?;
-            map.insert(key, val);
+            if map.insert(key.clone(), val).is_some() {
+                return Err(fault(
+                    JsonFaultClass::DuplicateKey,
+                    format!("duplicate object key {key:?} at {}", self.location()),
+                ));
+            }
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
@@ -477,6 +575,39 @@ mod tests {
     fn unicode_escapes() {
         let v = Value::parse(r#""é😀""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "é😀");
+    }
+
+    #[test]
+    fn duplicate_keys_are_typed_errors_not_last_write_wins() {
+        let err = Value::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::DuplicateKey));
+        // Nested objects are checked too.
+        let err = Value::parse(r#"{"o": {"k": 1, "k": 1}}"#).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::DuplicateKey));
+    }
+
+    #[test]
+    fn parse_bytes_enforces_cap_before_parse() {
+        let body = br#"{"k": "v"}"#;
+        assert!(Value::parse_bytes(body, 64).is_ok());
+        let err = Value::parse_bytes(body, body.len() - 1).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::Oversized));
+    }
+
+    #[test]
+    fn parse_bytes_rejects_non_utf8() {
+        let err = Value::parse_bytes(&[b'{', 0xFF, 0xFE, b'}'], 64).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::NonUtf8));
+    }
+
+    #[test]
+    fn parse_bytes_classifies_grammar_errors_as_syntax() {
+        let err = Value::parse_bytes(b"{\"k\": ", 64).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::Syntax));
+        // Duplicate keys keep their more specific class through
+        // parse_bytes.
+        let err = Value::parse_bytes(br#"{"a":1,"a":1}"#, 64).unwrap_err();
+        assert_eq!(classify(&err), Some(JsonFaultClass::DuplicateKey));
     }
 
     #[test]

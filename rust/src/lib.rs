@@ -64,6 +64,7 @@ pub mod parallel;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 

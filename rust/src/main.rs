@@ -24,6 +24,11 @@ use approxmul::mult::{
 };
 use approxmul::report::{ascii_histogram, diff_pct, histogram_csv, pct, Table};
 use approxmul::runtime::Engine;
+use approxmul::serve::{
+    replay, synth_trace, InferenceSession, InferReject, InferRequest, RejectReason,
+    Server, SystemClock, TraceSpec,
+};
+use approxmul::serve::clock::Clock as _;
 
 fn main() {
     init_logger();
@@ -53,6 +58,8 @@ fn run(argv: &[String]) -> Result<()> {
         "arch" => cmd_arch(rest),
         "characterize" => cmd_characterize(rest),
         "costmodel" => cmd_costmodel(rest),
+        "serve" => cmd_serve(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "validate" => cmd_validate(rest),
         "help" | "--help" | "-h" => {
             print!("{}", top_help());
@@ -73,6 +80,8 @@ fn top_help() -> String {
      arch          model layer table (paper Figure 1)\n  \
      characterize  bit-accurate approximate-multiplier error stats\n  \
      costmodel     multiplier-level -> system-level gain mapping (§III)\n  \
+     serve         resident inference service over NDJSON requests\n  \
+     serve-bench   deterministic serving benchmark (BENCH_serve.json)\n  \
      validate      verify artifact hashes against the manifest\n  \
      help          this message\n\nRun `approxmul <cmd> --help` for flags.\n"
         .to_string()
@@ -902,6 +911,348 @@ fn cmd_validate(argv: &[String]) -> Result<()> {
     } else {
         bail!("artifact integrity check FAILED — re-run `make artifacts`");
     }
+}
+
+// ---------------------------------------------------------------------------
+// serve mode
+
+fn serve_session_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec {
+            name: "checkpoint",
+            help: "checkpoint directory (omit to serve fresh weights)",
+            takes_value: true,
+            default: None,
+        },
+        FlagSpec { name: "tag", help: "checkpoint tag", takes_value: true, default: Some("run") },
+        FlagSpec {
+            name: "mult",
+            help: "comma-separated multiplier specs to keep resident \
+                   (first is the default for requests that omit `mult`)",
+            takes_value: true,
+            default: Some("exact"),
+        },
+        FlagSpec { name: "preset", help: "model preset for fresh weights", takes_value: true, default: Some("micro") },
+        FlagSpec { name: "seed", help: "fresh-weight init seed", takes_value: true, default: Some("42") },
+        FlagSpec { name: "seed-err", help: "gaussian weight-error seed", takes_value: true, default: Some("42") },
+        FlagSpec { name: "batch-window", help: "batching window (ms)", takes_value: true, default: Some("2") },
+        FlagSpec { name: "max-batch", help: "max requests per batch", takes_value: true, default: Some("8") },
+        FlagSpec { name: "queue-capacity", help: "admission queue bound", takes_value: true, default: Some("256") },
+        FlagSpec { name: "max-specs", help: "resident spec registry bound", takes_value: true, default: Some("8") },
+        FlagSpec {
+            name: "service-estimate",
+            help: "modeled per-batch service time (µs)",
+            takes_value: true,
+            default: Some("2000"),
+        },
+    ]
+}
+
+fn serve_config_from(a: &Args) -> Result<approxmul::config::ServeConfig> {
+    let mut cfg = approxmul::config::ServeConfig::default();
+    if let Some(w) = a.parse_u64("batch-window")? {
+        cfg.batch_window_us = w * 1_000;
+    }
+    if let Some(b) = a.parse_usize("max-batch")? {
+        cfg.max_batch = b;
+    }
+    if let Some(q) = a.parse_usize("queue-capacity")? {
+        cfg.queue_capacity = q;
+    }
+    if let Some(m) = a.parse_usize("max-specs")? {
+        cfg.max_specs = m;
+    }
+    if let Some(s) = a.parse_u64("service-estimate")? {
+        cfg.service_estimate_us = s;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn serve_specs_from(a: &Args) -> Result<Vec<MultSpec>> {
+    a.get_or("mult", "exact")
+        .split(',')
+        .map(|s| MultSpec::parse(s.trim()))
+        .collect::<Result<_>>()
+        .context("parsing --mult spec list")
+}
+
+fn build_serve_session(
+    a: &Args,
+    cfg: &approxmul::config::ServeConfig,
+) -> Result<InferenceSession> {
+    let specs = serve_specs_from(a)?;
+    let seed_err = a.parse_u64("seed-err")?.unwrap_or(42) as u32;
+    match a.get("checkpoint") {
+        Some(dir) => InferenceSession::from_store(
+            dir,
+            &a.get_or("tag", "run"),
+            &specs,
+            cfg.max_specs,
+            seed_err,
+        ),
+        None => InferenceSession::from_fresh(
+            &a.get_or("preset", "micro"),
+            a.parse_u64("seed")?.unwrap_or(42) as u32,
+            &specs,
+            cfg.max_specs,
+            seed_err,
+        ),
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut specs = serve_session_flags();
+    specs.push(FlagSpec {
+        name: "input",
+        help: "NDJSON request file (default: stdin)",
+        takes_value: true,
+        default: None,
+    });
+    if wants_help(argv) {
+        print!(
+            "{}",
+            cli::help(
+                "serve",
+                "resident inference service: NDJSON requests in, NDJSON \
+                 responses/rejections out",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let cfg = serve_config_from(&a)?;
+    let session = build_serve_session(&a, &cfg)?;
+    eprintln!(
+        "serving preset={} specs=[{}] epoch={} batch-window={}us max-batch={}",
+        session.preset(),
+        session.specs().join(", "),
+        session
+            .checkpoint_epoch()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "fresh".into()),
+        cfg.batch_window_us,
+        cfg.max_batch
+    );
+    let mut server = Server::new(session, &cfg)?;
+    let clock = SystemClock::new();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let mut emit = |out: &mut dyn std::io::Write,
+                    r: approxmul::serve::PollResult|
+     -> Result<()> {
+        for resp in r.responses {
+            writeln!(out, "{}", resp.to_value())?;
+        }
+        for rej in r.rejects {
+            writeln!(out, "{}", rej.to_value())?;
+        }
+        Ok(())
+    };
+    let reader: Box<dyn std::io::BufRead> = match a.get("input") {
+        Some(path) => Box::new(std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+        )),
+        None => Box::new(std::io::BufReader::new(std::io::stdin())),
+    };
+    for line in std::io::BufRead::lines(reader) {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let now = clock.now_us();
+        match InferRequest::decode(line.as_bytes(), cfg.max_request_bytes) {
+            Ok(req) => {
+                if let Err(reject) = server.submit(req, now) {
+                    writeln!(out, "{}", reject.to_value())?;
+                }
+            }
+            Err(e) => {
+                let reject = InferReject {
+                    id: 0,
+                    tenant: String::new(),
+                    reason: RejectReason::BadInput,
+                    detail: format!("{e:#}"),
+                };
+                writeln!(out, "{}", reject.to_value())?;
+            }
+        }
+        // Fire every batch the arrival made due.
+        while let Some(ev) = server.next_event_us(clock.now_us()) {
+            if ev > clock.now_us() {
+                break;
+            }
+            let r = server.poll(clock.now_us())?;
+            emit(&mut out, r)?;
+        }
+    }
+    // End of input: flush everything still queued.
+    let r = server.drain(clock.now_us())?;
+    emit(&mut out, r)?;
+    out.flush()?;
+    let st = server.stats();
+    eprintln!(
+        "served {} of {} (batches {}, p50 {}us p99 {}us; rejected: queue {}, \
+         deadline {}, bad-input {})",
+        st.completed,
+        st.submitted,
+        st.batches,
+        st.latency.percentile_us(50.0),
+        st.latency.percentile_us(99.0),
+        st.rejected_queue,
+        st.rejected_deadline,
+        st.rejected_bad_input
+    );
+    Ok(())
+}
+
+/// One serve-bench scenario: a synthetic trace plus the server shape
+/// it runs against.
+struct BenchScenario {
+    name: &'static str,
+    mean_gap_us: u64,
+    deadline_us: u64,
+    requests: usize,
+    queue_capacity: usize,
+}
+
+fn cmd_serve_bench(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        FlagSpec { name: "preset", help: "model preset", takes_value: true, default: Some("micro") },
+        FlagSpec { name: "seed", help: "trace + init seed", takes_value: true, default: Some("42") },
+        FlagSpec { name: "requests", help: "requests per scenario", takes_value: true, default: Some("48") },
+        FlagSpec {
+            name: "mult",
+            help: "comma-separated designs to bench",
+            takes_value: true,
+            default: Some("exact,drum6"),
+        },
+        FlagSpec {
+            name: "json",
+            help: "write rows here",
+            takes_value: true,
+            default: Some("BENCH_serve.json"),
+        },
+    ];
+    if wants_help(argv) {
+        print!(
+            "{}",
+            cli::help(
+                "serve-bench",
+                "replay deterministic arrival traces through the server; \
+                 virtual-time latency percentiles + wall-clock throughput",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let a = cli::parse(argv, &specs)?;
+    let preset = a.get_or("preset", "micro");
+    let seed = a.parse_u64("seed")?.unwrap_or(42);
+    let requests = a.parse_usize("requests")?.unwrap_or(48);
+    let designs = serve_specs_from(&a)?;
+    // `low` must complete everything inside generous deadlines; the
+    // `overload` burst must shed deterministically with typed
+    // deadline-missed rejections (CI gates on both).
+    let scenarios = [
+        BenchScenario {
+            name: "low",
+            mean_gap_us: 4_000,
+            deadline_us: 200_000,
+            requests,
+            queue_capacity: 256,
+        },
+        BenchScenario {
+            name: "overload",
+            mean_gap_us: 0, // one burst at t=0
+            deadline_us: 1_500,
+            requests,
+            queue_capacity: 256,
+        },
+    ];
+    let mut json_rows = Vec::new();
+    let mut t = Table::new(&[
+        "row", "req", "done", "q-rej", "d-rej", "batches", "p50 µs", "p99 µs",
+        "req/s",
+    ]);
+    for design in &designs {
+        for sc in &scenarios {
+            let cfg = approxmul::config::ServeConfig {
+                batch_window_us: 1_000,
+                max_batch: 8,
+                queue_capacity: sc.queue_capacity,
+                max_specs: 4,
+                service_estimate_us: 500,
+                max_request_bytes: 1 << 20,
+            };
+            let session = InferenceSession::from_fresh(
+                &preset,
+                seed as u32,
+                std::slice::from_ref(design),
+                cfg.max_specs,
+                seed as u32,
+            )?;
+            let mut server = Server::new(session, &cfg)?;
+            let trace = synth_trace(
+                &TraceSpec {
+                    seed,
+                    requests: sc.requests,
+                    mean_gap_us: sc.mean_gap_us,
+                    deadline_us: sc.deadline_us,
+                    specs: vec![],
+                },
+                server.session().input_elems(),
+            );
+            let t0 = std::time::Instant::now();
+            replay(&mut server, &trace)?;
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let st = server.stats();
+            let name = format!("serve/{preset}/{}/{}", design.canonical(), sc.name);
+            let sustained_rps = st.completed as f64 / wall;
+            t.row(vec![
+                name.clone(),
+                st.submitted.to_string(),
+                st.completed.to_string(),
+                st.rejected_queue.to_string(),
+                st.rejected_deadline.to_string(),
+                st.batches.to_string(),
+                st.latency.percentile_us(50.0).to_string(),
+                st.latency.percentile_us(99.0).to_string(),
+                format!("{sustained_rps:.0}"),
+            ]);
+            json_rows.push(approxmul::json::object([
+                ("name", approxmul::json::Value::from(name)),
+                ("preset", approxmul::json::Value::from(preset.clone())),
+                ("design", approxmul::json::Value::from(design.canonical())),
+                ("scenario", approxmul::json::Value::from(sc.name)),
+                ("requests", (st.submitted as usize).into()),
+                ("completed", (st.completed as usize).into()),
+                ("rejected_queue", (st.rejected_queue as usize).into()),
+                ("rejected_deadline", (st.rejected_deadline as usize).into()),
+                ("rejected_bad_input", (st.rejected_bad_input as usize).into()),
+                ("batches", (st.batches as usize).into()),
+                ("p50_us", (st.latency.percentile_us(50.0) as f64).into()),
+                ("p95_us", (st.latency.percentile_us(95.0) as f64).into()),
+                ("p99_us", (st.latency.percentile_us(99.0) as f64).into()),
+                ("max_us", (st.latency.max_us() as f64).into()),
+                ("sustained_rps", sustained_rps.into()),
+                ("simd", cfg!(feature = "simd").into()),
+            ]));
+        }
+    }
+    println!(
+        "serve-bench: preset={preset} seed={seed} requests/scenario={requests} \
+         (virtual-time latencies; req/s is wall clock)"
+    );
+    print!("{}", t.to_markdown());
+    let path = a.get_or("json", "BENCH_serve.json");
+    approxmul::benchkit::save_json(
+        &path,
+        &approxmul::json::Value::Array(json_rows),
+    )?;
+    println!("rows -> {path}");
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------

@@ -140,6 +140,39 @@ impl BackendModel {
         }
         Ok(())
     }
+
+    /// Validate an *evaluation* state vector — params++state with the
+    /// optimizer tail either absent (an eval-only restore) or present
+    /// (a full training checkpoint, whose tail the caller may drop).
+    /// Returns the params++state prefix length on success.
+    pub fn validate_eval_tensors(&self, tensors: &[Tensor]) -> Result<usize> {
+        let eval_len = self.params.len() + self.state.len();
+        if tensors.len() != eval_len && tensors.len() != self.n_tensors() {
+            bail!(
+                "{}: state vector has {} tensors, expected {eval_len} \
+                 (params++state) or {} (params++state++opt)",
+                self.preset,
+                tensors.len(),
+                self.n_tensors()
+            );
+        }
+        for (t, spec) in tensors
+            .iter()
+            .take(eval_len)
+            .zip(self.params.iter().chain(self.state.iter()))
+        {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: tensor {} shape {:?} != manifest {:?}",
+                    self.preset,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(eval_len)
+    }
 }
 
 /// An evaluation pass at fixed parameters: per-pass setup (e.g. the

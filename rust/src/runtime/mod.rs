@@ -26,7 +26,7 @@ pub use engine::{Engine, Executable};
 pub use manifest::{EntrySpec, IoSpec, LayerRow, Manifest, ModelManifest, TensorSpec};
 pub use native::{NativeBackend, NativeConfig};
 pub use pjrt_backend::PjrtBackend;
-pub use session::{NonFiniteLoss, TrainSession};
+pub use session::{EvalOnlySession, NonFiniteLoss, TrainSession};
 
 use crate::tensor::{DType, Tensor};
 use anyhow::{bail, Context, Result};

@@ -46,8 +46,8 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use crate::mult::{approx_matmul_prepared, PreparedMatrix};
-use crate::mult::{Exact, GemmDesign, GemmMode, MultSpec, Multiplier};
+use crate::mult::PreparedMatrix;
+use crate::mult::{Exact, GemmDesign, GemmMode, MultSpec};
 use crate::rng::threefry::counter_normal;
 use crate::tensor::Tensor;
 use crate::testkit::faults::{FaultPlan, FaultSite};
@@ -862,6 +862,87 @@ impl NativeBackend {
             .collect()
     }
 
+    /// The GEMM mode an inference forward runs under: the built design
+    /// for bit-accurate specs, exact otherwise (Gaussian specs model
+    /// their error at the *weight* level — see [`Self::infer_params`] —
+    /// so their product path is exact, matching training semantics).
+    pub fn infer_mode(&self) -> GemmMode<'_> {
+        match &self.design {
+            Some(d) => d.mode(),
+            None => GemmMode::Unsigned(&EXACT_MULT),
+        }
+    }
+
+    /// Number of GEMM layers in this preset's forward — the expected
+    /// prepare-call count for one full weight decomposition (pinned by
+    /// the serve decompose-once test).
+    pub fn n_gemm_layers(&self) -> usize {
+        self.cfg.gemm_layers().len()
+    }
+
+    /// Serving-time weight materialization. For `gaussian:<sd>` specs
+    /// the error is a *weight-level* field, applied once per resident
+    /// session from the same per-layer Threefry streams training uses
+    /// (`(seed_err, gemm layer id)`); bit-accurate and exact specs
+    /// return the weights unchanged. The returned buffers are what
+    /// [`Self::pack_infer_weights`] should decompose.
+    pub fn infer_params(&self, params: &[Vec<f32>], seed_err: u32) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = params.to_vec();
+        if let MultSpec::Gaussian { sigma } = &self.spec {
+            for (layer_id, (_kin, _kout, pi)) in
+                self.cfg.gemm_layers().into_iter().enumerate()
+            {
+                let (wq, _) =
+                    Self::inject(&params[pi], *sigma as f32, seed_err, layer_id as u32);
+                if let Some(wq) = wq {
+                    out[pi] = wq;
+                }
+            }
+        }
+        out
+    }
+
+    /// Decompose every weight matrix once for *mode-aware* inference:
+    /// unlike [`Self::pack_eval_weights`] (exact-only eval during
+    /// training), this derives the signed-mantissa plane up front when
+    /// the resident spec runs the signed pipeline, so per-request
+    /// batches pay zero decomposition cost.
+    pub fn pack_infer_weights(&self, params: &[Vec<f32>]) -> Result<Vec<PreparedMatrix>> {
+        let gemm = self.infer_mode();
+        self.cfg
+            .gemm_layers()
+            .into_iter()
+            .map(|(kin, kout, pi)| {
+                Self::prepare_operand(&params[pi], kout, kin, 1, kout, gemm)
+            })
+            .collect()
+    }
+
+    /// Inference forward over pre-packed weight planes under the
+    /// resident spec's GEMM mode: logits for `n` examples. `x` is the
+    /// flat `[n, hw, hw, ch]` input; its length is validated against
+    /// the preset geometry (typed error, not a shape panic).
+    pub fn infer_logits(
+        &self,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        packed: &[PreparedMatrix],
+        x: &[f32],
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        let per = self.cfg.input_hw * self.cfg.input_hw * self.cfg.in_ch;
+        if n == 0 || x.len() != n * per {
+            bail!(
+                "input has {} elements, expected {n} examples x {per} ({}x{}x{})",
+                x.len(),
+                self.cfg.input_hw,
+                self.cfg.input_hw,
+                self.cfg.in_ch
+            );
+        }
+        self.forward_packed(params, state, x, n, packed, self.infer_mode())
+    }
+
     /// Eval-mode forward (running BN stats, exact multipliers, no
     /// dropout) over pre-packed weight planes — logits only.
     fn forward_eval(
@@ -872,7 +953,23 @@ impl NativeBackend {
         n: usize,
         packed: &[PreparedMatrix],
     ) -> Result<Vec<f32>> {
-        let gemm: &dyn Multiplier = &EXACT_MULT;
+        self.forward_packed(params, state, x, n, packed, GemmMode::Unsigned(&EXACT_MULT))
+    }
+
+    /// Shared packed-weight forward body (BN running stats, ReLU, no
+    /// dropout) parameterized over the GEMM mode: the exact eval path
+    /// and the mode-aware serving path are the same code, so the
+    /// serving forward inherits every eval-path invariant (dynamic
+    /// batch geometry, strict k-order accumulation).
+    fn forward_packed(
+        &self,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        x: &[f32],
+        n: usize,
+        packed: &[PreparedMatrix],
+        gemm: GemmMode<'_>,
+    ) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let mut h = x.to_vec();
         let mut hw = cfg.input_hw;
@@ -886,15 +983,10 @@ impl NativeBackend {
                 let rows = n * hw * hw;
                 let kin = 9 * ch;
                 let patches = layers::im2col(&h, n, hw, ch);
-                let pp = PreparedMatrix::prepare(&patches, rows, kin)?;
-                let z = approx_matmul_prepared(
-                    gemm,
-                    &pp,
-                    &packed[li],
-                    Some(&params[pi + 1]),
-                    false,
-                )?
-                .out;
+                let pp = Self::prepare_activation(&patches, rows, kin, gemm)?;
+                let z = gemm
+                    .matmul_prepared(&pp, &packed[li], Some(&params[pi + 1]), false)?
+                    .out;
                 let mut out = layers::bn_eval(
                     &z,
                     rows,
@@ -923,15 +1015,10 @@ impl NativeBackend {
 
         let mut feat = hw * hw * ch;
         for &width in &cfg.dense {
-            let hp = PreparedMatrix::prepare(&h, n, feat)?;
-            let z = approx_matmul_prepared(
-                gemm,
-                &hp,
-                &packed[li],
-                Some(&params[pi + 1]),
-                false,
-            )?
-            .out;
+            let hp = Self::prepare_activation(&h, n, feat, gemm)?;
+            let z = gemm
+                .matmul_prepared(&hp, &packed[li], Some(&params[pi + 1]), false)?
+                .out;
             let mut out = layers::bn_eval(
                 &z,
                 n,
@@ -954,15 +1041,10 @@ impl NativeBackend {
             feat = width;
         }
 
-        let hp = PreparedMatrix::prepare(&h, n, feat)?;
-        let logits = approx_matmul_prepared(
-            gemm,
-            &hp,
-            &packed[li],
-            Some(&params[pi + 1]),
-            false,
-        )?
-        .out;
+        let hp = Self::prepare_activation(&h, n, feat, gemm)?;
+        let logits = gemm
+            .matmul_prepared(&hp, &packed[li], Some(&params[pi + 1]), false)?
+            .out;
         Ok(logits)
     }
 

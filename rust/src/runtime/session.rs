@@ -265,6 +265,68 @@ impl TrainSession {
     }
 }
 
+/// Inference-only session: params++state with the optimizer tail
+/// dropped at construction. This is the long-lived owner the serving
+/// path wants — a restored checkpoint's optimizer tensors are dead
+/// weight at inference time (for the `vgg16` preset they double the
+/// resident footprint), and a session that cannot step cannot corrupt
+/// its weights. Accepts either a full training checkpoint
+/// (params++state++opt, tail truncated) or an eval-only vector.
+pub struct EvalOnlySession {
+    backend: Box<dyn Backend>,
+    /// params ++ state, manifest order — no optimizer tail.
+    tensors: Vec<Tensor>,
+}
+
+impl EvalOnlySession {
+    /// Session over restored tensors; shape-validated against the
+    /// backend manifest, optimizer tail (if present) dropped.
+    pub fn from_tensors(backend: Box<dyn Backend>, mut tensors: Vec<Tensor>) -> Result<Self> {
+        let eval_len = backend.model().validate_eval_tensors(&tensors)?;
+        tensors.truncate(eval_len);
+        Ok(EvalOnlySession { backend, tensors })
+    }
+
+    /// Session at freshly initialized weights (no checkpoint — smoke
+    /// tests and cold-start serving).
+    pub fn fresh(backend: Box<dyn Backend>, seed: u32) -> Result<Self> {
+        let tensors = backend.init(seed)?;
+        Self::from_tensors(backend, tensors)
+    }
+
+    pub fn model(&self) -> &BackendModel {
+        self.backend.model()
+    }
+
+    /// The resident params ++ state vector.
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Evaluate one batch (exact multipliers, no amortized setup).
+    pub fn eval_batch(&self, x: Tensor, y: Tensor) -> Result<EvalStats> {
+        let model = self.backend.model();
+        if self.backend.supports_dynamic_batch() {
+            model.check_dynamic_len(x.len(), model.eval_input_elems())?;
+        } else if x.len() != model.eval_input_elems() {
+            bail!(
+                "{}: eval x has {} elements, expected {}",
+                model.preset,
+                x.len(),
+                model.eval_input_elems()
+            );
+        }
+        self.backend.eval_batch(&self.tensors, &x, &y)
+    }
+
+    /// Start an amortized evaluation pass (see
+    /// [`TrainSession::eval_pass`]).
+    pub fn eval_pass(&self) -> Result<SessionEval<'_>> {
+        let pass = self.backend.eval_pass(&self.tensors)?;
+        Ok(SessionEval { backend: self.backend.as_ref(), tensors: &self.tensors, pass })
+    }
+}
+
 /// One evaluation pass bound to a session's current parameters (see
 /// [`TrainSession::eval_pass`]). Holds the backend's amortized
 /// per-pass state when it provides one; otherwise forwards each batch

@@ -1,0 +1,339 @@
+//! Deadline-aware dynamic batching policy.
+//!
+//! The batcher turns queued requests into GEMM-shaped batches under
+//! three triggers, checked in priority order per lane:
+//!
+//! 1. **DeadlineImminent** — the lane's earliest absolute deadline is
+//!    within two service quanta of the effective start time: waiting
+//!    any longer risks converting a servable request into a miss.
+//! 2. **BatchFull** — the lane holds at least `max_batch` requests: a
+//!    full GEMM batch is ready, flush it.
+//! 3. **WindowElapsed** — the lane's oldest request has waited
+//!    `batch_window_us`: bounded coalescing latency for quiet lanes.
+//!
+//! All decision math is pure `u64` microsecond arithmetic over the
+//! caller-supplied `now` (detlint D2: no wall-clock reads here), lanes
+//! are visited in the queue's canonical order, and requests flush in
+//! FIFO order — so the batch sequence is a deterministic function of
+//! `(arrival trace, policy)` at any thread count.
+//!
+//! One server executes batches serially: `busy_until_us` models the
+//! earliest time a new flush can *start*. Requests whose deadline
+//! precedes `start + service_estimate_us` are shed as typed
+//! `deadline-missed` rejections before any GEMM time is spent on them
+//! — under overload the queue sheds load instead of serving answers
+//! that are already too late.
+
+use super::queue::{Pending, ServeQueue};
+
+/// Tunable batching policy (see [`crate::config::ServeConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per GEMM batch.
+    pub max_batch: usize,
+    /// Max coalescing wait for a lane's oldest request (µs).
+    pub batch_window_us: u64,
+    /// Deterministic per-batch service-time model (µs): used for
+    /// deadline feasibility, imminence, and modeled completion times.
+    pub service_estimate_us: u64,
+}
+
+/// Why a batch was flushed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushTrigger {
+    DeadlineImminent,
+    BatchFull,
+    WindowElapsed,
+}
+
+impl FlushTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlushTrigger::DeadlineImminent => "deadline-imminent",
+            FlushTrigger::BatchFull => "batch-full",
+            FlushTrigger::WindowElapsed => "window-elapsed",
+        }
+    }
+}
+
+/// One flushed batch: requests for exactly one spec, never mixed.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Canonical spec every request in this batch runs under.
+    pub spec: String,
+    pub requests: Vec<Pending>,
+    pub trigger: FlushTrigger,
+    /// Decision time of the flush (µs).
+    pub flush_us: u64,
+    /// Modeled service start (µs): `max(flush_us, busy_until)` at
+    /// decision time.
+    pub start_us: u64,
+    /// Modeled completion (µs): `start_us + service_estimate_us`.
+    /// Response latency is `complete_us - arrival_us`.
+    pub complete_us: u64,
+}
+
+/// Result of one poll: batches to execute and requests shed because
+/// their deadline can no longer be met.
+#[derive(Debug, Default)]
+pub struct PollOutcome {
+    pub batches: Vec<Batch>,
+    pub expired: Vec<Pending>,
+    /// Server busy horizon after the flushed batches (µs).
+    pub busy_until_us: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Evaluate triggers at `now_us` with the server busy until
+    /// `busy_until_us`, flushing every lane whose condition holds.
+    /// Mutates the queue (flushed and expired requests leave it).
+    pub fn poll(
+        &self,
+        queue: &mut ServeQueue,
+        now_us: u64,
+        busy_until_us: u64,
+    ) -> PollOutcome {
+        let svc = self.policy.service_estimate_us;
+        let mut out = PollOutcome {
+            batches: Vec::new(),
+            expired: Vec::new(),
+            busy_until_us,
+        };
+        for spec in queue.specs() {
+            loop {
+                let start = now_us.max(out.busy_until_us);
+                // Shed requests that cannot complete even if flushed
+                // right now: completion would be start + svc.
+                out.expired
+                    .extend(queue.drain_expired(&spec, start.saturating_add(svc)));
+                let Some(lane) = queue.lane_summary(&spec) else {
+                    break;
+                };
+                let imminent =
+                    lane.deadline_min_us <= start.saturating_add(2 * svc);
+                let trigger = if imminent {
+                    FlushTrigger::DeadlineImminent
+                } else if lane.len >= self.policy.max_batch {
+                    FlushTrigger::BatchFull
+                } else if now_us
+                    >= lane.oldest_arrival_us.saturating_add(self.policy.batch_window_us)
+                {
+                    FlushTrigger::WindowElapsed
+                } else {
+                    break;
+                };
+                let requests = queue.take_front(&spec, self.policy.max_batch);
+                if requests.is_empty() {
+                    break;
+                }
+                let complete = start.saturating_add(svc);
+                out.busy_until_us = complete;
+                out.batches.push(Batch {
+                    spec: spec.clone(),
+                    requests,
+                    trigger,
+                    flush_us: now_us,
+                    start_us: start,
+                    complete_us: complete,
+                });
+            }
+        }
+        out
+    }
+
+    /// Earliest future time a trigger could fire, given the queue's
+    /// current contents — the virtual driver's next wake-up. `None`
+    /// when the queue is empty. A full lane reports `now` is already
+    /// due (returns a time ≤ now).
+    pub fn next_event_us(&self, queue: &ServeQueue, now_us: u64) -> Option<u64> {
+        let svc = self.policy.service_estimate_us;
+        let mut next: Option<u64> = None;
+        for spec in queue.specs() {
+            let Some(lane) = queue.lane_summary(&spec) else {
+                continue;
+            };
+            let mut lane_next = if lane.len >= self.policy.max_batch {
+                now_us
+            } else {
+                lane.oldest_arrival_us.saturating_add(self.policy.batch_window_us)
+            };
+            let imminence = lane.deadline_min_us.saturating_sub(2 * svc);
+            lane_next = lane_next.min(imminence);
+            next = Some(next.map_or(lane_next, |n| n.min(lane_next)));
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: u64, arrival: u64, deadline: u64) -> Pending {
+        Pending {
+            id,
+            tenant: "t".into(),
+            arrival_us: arrival,
+            deadline_us: deadline,
+            input: vec![0.0],
+            seq: 0,
+        }
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::new(BatchPolicy {
+            max_batch: 4,
+            batch_window_us: 1000,
+            service_estimate_us: 100,
+        })
+    }
+
+    #[test]
+    fn quiet_lane_waits_for_window() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        q.push("exact", p(1, 0, 1_000_000)).unwrap();
+        // Before the window: nothing flushes.
+        let out = b.poll(&mut q, 500, 0);
+        assert!(out.batches.is_empty());
+        assert_eq!(q.len(), 1);
+        // At the window boundary: WindowElapsed.
+        let out = b.poll(&mut q, 1000, 0);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].trigger, FlushTrigger::WindowElapsed);
+    }
+
+    #[test]
+    fn full_lane_flushes_immediately() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        for i in 0..4 {
+            q.push("exact", p(i, 0, 1_000_000)).unwrap();
+        }
+        let out = b.poll(&mut q, 0, 0);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].trigger, FlushTrigger::BatchFull);
+        assert_eq!(out.batches[0].requests.len(), 4);
+    }
+
+    #[test]
+    fn deadline_imminent_beats_batch_full() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        // Full lane AND an imminent deadline: the label must be
+        // DeadlineImminent (priority over BatchFull).
+        for i in 0..4 {
+            q.push("exact", p(i, 0, 150)).unwrap();
+        }
+        let out = b.poll(&mut q, 0, 0);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].trigger, FlushTrigger::DeadlineImminent);
+    }
+
+    #[test]
+    fn deadline_imminent_flushes_a_short_batch_early() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        // One request, window not elapsed, lane not full — but the
+        // deadline is within 2·svc of now: flush anyway.
+        q.push("exact", p(1, 0, 180)).unwrap();
+        let out = b.poll(&mut q, 0, 0);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].trigger, FlushTrigger::DeadlineImminent);
+        assert_eq!(out.batches[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn unmeetable_deadlines_are_shed_not_served() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        // Completion would be at 100; deadline 50 is hopeless.
+        q.push("exact", p(1, 0, 50)).unwrap();
+        let out = b.poll(&mut q, 0, 0);
+        assert!(out.batches.is_empty());
+        assert_eq!(out.expired.len(), 1);
+        assert_eq!(out.expired[0].id, 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn busy_horizon_serializes_batches_and_sheds_late_requests() {
+        let b = batcher();
+        let mut q = ServeQueue::new(64);
+        // 12 requests at t=0 with deadlines that allow ~2 batches:
+        // batch 1 completes at 100, batch 2 at 200, batch 3 at 300.
+        for i in 0..12 {
+            q.push("exact", p(i, 0, 250)).unwrap();
+        }
+        let out = b.poll(&mut q, 0, 0);
+        // Batch 1: start 0 → complete 100. Batch 2: start 100 →
+        // complete 200. Batch 3 would complete at 300 > 250: shed.
+        assert_eq!(out.batches.len(), 2);
+        assert_eq!(out.batches[0].complete_us, 100);
+        assert_eq!(out.batches[1].complete_us, 200);
+        assert_eq!(out.expired.len(), 4);
+        assert_eq!(out.busy_until_us, 200);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn specs_never_mix_within_a_batch() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        q.push("drum6", p(1, 0, 1_000_000)).unwrap();
+        q.push("exact", p(2, 0, 1_000_000)).unwrap();
+        q.push("drum6", p(3, 0, 1_000_000)).unwrap();
+        let out = b.poll(&mut q, 5000, 0);
+        assert_eq!(out.batches.len(), 2);
+        for batch in &out.batches {
+            let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+            match batch.spec.as_str() {
+                "drum6" => assert_eq!(ids, [1, 3]),
+                "exact" => assert_eq!(ids, [2]),
+                other => panic!("unexpected spec {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn next_event_is_min_of_window_and_imminence() {
+        let b = batcher();
+        let mut q = ServeQueue::new(16);
+        // Window fires at 0+1000; imminence at 5000-200=4800.
+        q.push("exact", p(1, 0, 5000)).unwrap();
+        assert_eq!(b.next_event_us(&q, 0), Some(1000));
+        // Tight deadline: imminence (300-200=100) precedes the window.
+        q.push("drum6", p(2, 0, 300)).unwrap();
+        assert_eq!(b.next_event_us(&q, 0), Some(100));
+        assert_eq!(b.next_event_us(&ServeQueue::new(4), 0), None);
+    }
+
+    #[test]
+    fn oversize_lane_drains_in_fifo_chunks() {
+        let b = batcher();
+        let mut q = ServeQueue::new(64);
+        for i in 0..10 {
+            q.push("exact", p(i, 0, 1_000_000)).unwrap();
+        }
+        let out = b.poll(&mut q, 0, 0);
+        // 4 + 4 (BatchFull) + 2 (WindowElapsed? no — window not
+        // elapsed at t=0, deadline far) → the tail stays queued.
+        assert_eq!(out.batches.len(), 2);
+        let first: Vec<u64> = out.batches[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(first, [0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -1,0 +1,337 @@
+//! Typed wire codec for the serving path.
+//!
+//! Requests and responses are explicit structs converted to and from
+//! [`crate::json::Value`] — not ad-hoc value poking — so every field
+//! has one documented type and one decode error message. Decoding runs
+//! through [`Value::parse_bytes`], which enforces the byte cap and
+//! classifies hostile inputs (oversized / non-UTF-8 / duplicate keys /
+//! grammar) before any field logic runs.
+//!
+//! Numbers ride JSON's f64: request ids are exact up to 2^53, far past
+//! any real request volume, and microsecond budgets up to ~285 years.
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// One inference request.
+///
+/// | field         | type     | meaning                                        |
+/// |---------------|----------|------------------------------------------------|
+/// | `id`          | integer  | caller-chosen request id, echoed in the reply  |
+/// | `tenant`      | string   | tenant name; routes to that tenant's `mult`    |
+/// | `mult`        | string?  | multiplier spec override (canonical grammar);  |
+/// |               |          | omitted → the server's default spec            |
+/// | `deadline_us` | integer  | relative completion budget in µs from admission|
+/// | `input`       | [number] | one flat `[hw, hw, ch]` example, f32           |
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    pub id: u64,
+    pub tenant: String,
+    pub mult: Option<String>,
+    pub deadline_us: u64,
+    pub input: Vec<f32>,
+}
+
+/// One successful inference reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Echo of the tenant.
+    pub tenant: String,
+    /// Canonical multiplier spec the request was served under.
+    pub mult: String,
+    /// Argmax class of the logits.
+    pub class: usize,
+    /// Raw logits, one per class.
+    pub logits: Vec<f32>,
+    /// Size of the GEMM batch this request rode in.
+    pub batch: usize,
+    /// Admission-to-completion latency in µs.
+    pub latency_us: u64,
+}
+
+/// Why a request was rejected instead of served. Rejection is a typed
+/// reply, never a panic and never a silent drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded request queue was at capacity at admission.
+    QueueFull,
+    /// The deadline could not (or can no longer) be met; the request
+    /// was shed *before* spending GEMM time on it.
+    DeadlineMissed,
+    /// The request failed validation: unknown spec, wrong input
+    /// length, zero deadline, or an undecodable body.
+    BadInput,
+}
+
+impl RejectReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::DeadlineMissed => "deadline-missed",
+            RejectReason::BadInput => "bad-input",
+        }
+    }
+}
+
+/// One rejection reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReject {
+    pub id: u64,
+    pub tenant: String,
+    pub reason: RejectReason,
+    /// Human-readable detail (one line).
+    pub detail: String,
+}
+
+impl InferRequest {
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("id", Value::from(self.id as f64)),
+            ("tenant", Value::from(self.tenant.clone())),
+            ("deadline_us", Value::from(self.deadline_us as f64)),
+            (
+                "input",
+                Value::Array(self.input.iter().map(|&v| Value::from(v as f64)).collect()),
+            ),
+        ];
+        if let Some(m) = &self.mult {
+            fields.push(("mult", Value::from(m.clone())));
+        }
+        json::object(fields)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let id = field_u64(v, "id")?;
+        let tenant = v
+            .get("tenant")
+            .and_then(|t| t.as_str())
+            .context("request field `tenant`")?
+            .to_string();
+        let mult = match v.get("mult") {
+            Ok(m) => Some(m.as_str().context("request field `mult`")?.to_string()),
+            Err(_) => None,
+        };
+        let deadline_us = field_u64(v, "deadline_us")?;
+        let input = v
+            .get("input")
+            .and_then(|a| a.as_array())
+            .context("request field `input`")?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as f32))
+            .collect::<Result<Vec<f32>>>()
+            .context("request field `input`")?;
+        Ok(InferRequest { id, tenant, mult, deadline_us, input })
+    }
+
+    /// Decode one request from raw bytes under the configured byte
+    /// cap. Errors are typed: the transport layer maps
+    /// [`crate::json::classify`]-able faults and field errors alike to
+    /// [`RejectReason::BadInput`].
+    pub fn decode(bytes: &[u8], max_bytes: usize) -> Result<Self> {
+        let v = Value::parse_bytes(bytes, max_bytes).context("decoding request body")?;
+        Self::from_value(&v)
+    }
+}
+
+impl InferResponse {
+    pub fn to_value(&self) -> Value {
+        json::object(vec![
+            ("id", Value::from(self.id as f64)),
+            ("tenant", Value::from(self.tenant.clone())),
+            ("mult", Value::from(self.mult.clone())),
+            ("class", Value::from(self.class)),
+            (
+                "logits",
+                Value::Array(self.logits.iter().map(|&v| Value::from(v as f64)).collect()),
+            ),
+            ("batch", Value::from(self.batch)),
+            ("latency_us", Value::from(self.latency_us as f64)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(InferResponse {
+            id: field_u64(v, "id")?,
+            tenant: v
+                .get("tenant")
+                .and_then(|t| t.as_str())
+                .context("response field `tenant`")?
+                .to_string(),
+            mult: v
+                .get("mult")
+                .and_then(|t| t.as_str())
+                .context("response field `mult`")?
+                .to_string(),
+            class: v
+                .get("class")
+                .and_then(|c| c.as_usize())
+                .context("response field `class`")?,
+            logits: v
+                .get("logits")
+                .and_then(|a| a.as_array())
+                .context("response field `logits`")?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32))
+                .collect::<Result<Vec<f32>>>()
+                .context("response field `logits`")?,
+            batch: v
+                .get("batch")
+                .and_then(|b| b.as_usize())
+                .context("response field `batch`")?,
+            latency_us: field_u64(v, "latency_us")?,
+        })
+    }
+}
+
+impl InferReject {
+    pub fn to_value(&self) -> Value {
+        json::object(vec![
+            ("id", Value::from(self.id as f64)),
+            ("tenant", Value::from(self.tenant.clone())),
+            ("reject", Value::from(self.reason.name())),
+            ("detail", Value::from(self.detail.clone())),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let name = v
+            .get("reject")
+            .and_then(|r| r.as_str())
+            .context("reject field `reject`")?;
+        let reason = match name {
+            "queue-full" => RejectReason::QueueFull,
+            "deadline-missed" => RejectReason::DeadlineMissed,
+            "bad-input" => RejectReason::BadInput,
+            other => bail!("unknown reject reason {other:?}"),
+        };
+        Ok(InferReject {
+            id: field_u64(v, "id")?,
+            tenant: v
+                .get("tenant")
+                .and_then(|t| t.as_str())
+                .context("reject field `tenant`")?
+                .to_string(),
+            reason,
+            detail: v
+                .get("detail")
+                .and_then(|d| d.as_str())
+                .context("reject field `detail`")?
+                .to_string(),
+        })
+    }
+}
+
+/// Non-negative integer field decoded to u64 (exact up to 2^53).
+fn field_u64(v: &Value, key: &str) -> Result<u64> {
+    let n = v
+        .get(key)
+        .and_then(|x| x.as_f64())
+        .with_context(|| format!("request field `{key}`"))?;
+    if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0) {
+        bail!("field `{key}` must be a non-negative integer, got {n}");
+    }
+    Ok(n as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> InferRequest {
+        InferRequest {
+            id: 42,
+            tenant: "acme".into(),
+            mult: Some("drum6".into()),
+            deadline_us: 5000,
+            input: vec![0.5, -1.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let r = req();
+        let v = r.to_value();
+        let back = InferRequest::from_value(&v).unwrap();
+        assert_eq!(back, r);
+        // And through the byte path.
+        let bytes = v.to_string().into_bytes();
+        let back = InferRequest::decode(&bytes, 1 << 20).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn request_without_mult_roundtrips() {
+        let mut r = req();
+        r.mult = None;
+        let back = InferRequest::from_value(&r.to_value()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let r = InferResponse {
+            id: 7,
+            tenant: "acme".into(),
+            mult: "exact".into(),
+            class: 3,
+            logits: vec![0.1, 0.2, 0.3, 0.9],
+            batch: 8,
+            latency_us: 1234,
+        };
+        assert_eq!(InferResponse::from_value(&r.to_value()).unwrap(), r);
+    }
+
+    #[test]
+    fn reject_roundtrips_all_reasons() {
+        for reason in [
+            RejectReason::QueueFull,
+            RejectReason::DeadlineMissed,
+            RejectReason::BadInput,
+        ] {
+            let r = InferReject {
+                id: 1,
+                tenant: "t".into(),
+                reason,
+                detail: "d".into(),
+            };
+            assert_eq!(InferReject::from_value(&r.to_value()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_hostile_bodies_with_typed_errors() {
+        use crate::json::JsonFaultClass;
+        // Oversized.
+        let body = req().to_value().to_string().into_bytes();
+        let err = InferRequest::decode(&body, 8).unwrap_err();
+        assert_eq!(json::classify(&err), Some(JsonFaultClass::Oversized));
+        // Non-UTF-8.
+        let err = InferRequest::decode(&[0xFF, 0xFE], 1024).unwrap_err();
+        assert_eq!(json::classify(&err), Some(JsonFaultClass::NonUtf8));
+        // Duplicate keys.
+        let err = InferRequest::decode(br#"{"id":1,"id":2}"#, 1024).unwrap_err();
+        assert_eq!(json::classify(&err), Some(JsonFaultClass::DuplicateKey));
+        // Grammar garbage.
+        let err = InferRequest::decode(b"not json", 1024).unwrap_err();
+        assert_eq!(json::classify(&err), Some(JsonFaultClass::Syntax));
+    }
+
+    #[test]
+    fn missing_and_malformed_fields_are_errors() {
+        let v = Value::parse(r#"{"id": 1}"#).unwrap();
+        assert!(InferRequest::from_value(&v).is_err());
+        let v = Value::parse(
+            r#"{"id": -3, "tenant": "t", "deadline_us": 1, "input": []}"#,
+        )
+        .unwrap();
+        assert!(InferRequest::from_value(&v).is_err(), "negative id");
+        let v = Value::parse(
+            r#"{"id": 1.5, "tenant": "t", "deadline_us": 1, "input": []}"#,
+        )
+        .unwrap();
+        assert!(InferRequest::from_value(&v).is_err(), "fractional id");
+    }
+}

@@ -1,0 +1,561 @@
+//! The serve loop: admission, batching, execution, accounting.
+//!
+//! [`Server`] glues the pieces together: requests are validated and
+//! stamped at admission ([`Server::submit`]), wait in the bounded
+//! [`ServeQueue`], and are flushed by the [`Batcher`] into
+//! single-spec GEMM batches executed on the resident
+//! [`InferenceSession`]. Completion times and latencies come from the
+//! deterministic service model (`start + service_estimate_us`), so a
+//! replayed arrival trace produces bit-identical responses, batch
+//! compositions, rejection sets and latency percentiles on every run
+//! and at every thread count.
+//!
+//! [`replay`] is the deterministic driver: it walks a timed trace on a
+//! [`VirtualClock`], alternating arrivals with due batcher events.
+//! [`synth_trace`] builds such traces from `rng::counter_split`
+//! streams — no wall clock anywhere (detlint D2).
+
+use std::collections::BTreeMap;
+
+use crate::benchkit::hist::LatencyHistogram;
+use crate::config::ServeConfig;
+use crate::rng::threefry::{counter_normal, counter_split};
+
+use super::batcher::{Batcher, BatchPolicy, FlushTrigger};
+use super::clock::{Clock, VirtualClock};
+use super::codec::{InferReject, InferRequest, InferResponse, RejectReason};
+use super::queue::{Pending, ServeQueue};
+use super::session::InferenceSession;
+
+/// Threefry domain tags for trace synthesis (disjoint from training's
+/// init/dropout/error streams by construction: they only feed the
+/// bench driver).
+const TRACE_GAP_STREAM: u32 = 0x5345_4701; // "SEG" + 1
+const TRACE_SPEC_STREAM: u32 = 0x5345_4702;
+const TRACE_INPUT_STREAM: u32 = 0x5345_4703;
+
+/// One executed batch, for the deterministic replay digest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRecord {
+    pub spec: String,
+    pub trigger: &'static str,
+    pub flush_us: u64,
+    pub complete_us: u64,
+    pub ids: Vec<u64>,
+}
+
+/// Serving counters + per-spec latency histograms.
+#[derive(Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_queue: u64,
+    pub rejected_deadline: u64,
+    pub rejected_bad_input: u64,
+    pub batches: u64,
+    /// Latency histogram across all specs.
+    pub latency: LatencyHistogram,
+    /// Per-spec latency histograms, canonical order.
+    pub latency_by_spec: BTreeMap<String, LatencyHistogram>,
+}
+
+impl ServeStats {
+    fn record_latency(&mut self, spec: &str, us: u64) {
+        self.latency.record(us);
+        self.latency_by_spec.entry(spec.to_string()).or_default().record(us);
+    }
+}
+
+/// Output of one [`Server::poll`].
+#[derive(Debug, Default)]
+pub struct PollResult {
+    pub responses: Vec<InferResponse>,
+    pub rejects: Vec<InferReject>,
+}
+
+/// Resident inference server: session + queue + batcher + accounting.
+pub struct Server {
+    session: InferenceSession,
+    queue: ServeQueue,
+    batcher: Batcher,
+    /// Default canonical spec for requests that omit `mult`.
+    default_spec: String,
+    /// Modeled server-busy horizon (µs).
+    busy_until_us: u64,
+    stats: ServeStats,
+    batch_log: Vec<BatchRecord>,
+}
+
+impl Server {
+    /// Build a server over a resident session. The default spec for
+    /// requests that omit `mult` is the registry's first (canonical
+    /// order) spec.
+    pub fn new(session: InferenceSession, cfg: &ServeConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let default_spec = session
+            .specs()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("session has no resident specs"))?;
+        Ok(Server {
+            session,
+            queue: ServeQueue::new(cfg.queue_capacity),
+            batcher: Batcher::new(BatchPolicy {
+                max_batch: cfg.max_batch,
+                batch_window_us: cfg.batch_window_us,
+                service_estimate_us: cfg.service_estimate_us,
+            }),
+            default_spec,
+            busy_until_us: 0,
+            stats: ServeStats::default(),
+            batch_log: Vec::new(),
+        })
+    }
+
+    pub fn session(&self) -> &InferenceSession {
+        &self.session
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Every executed batch in flush order — the replay digest.
+    pub fn batch_log(&self) -> &[BatchRecord] {
+        &self.batch_log
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Earliest future batcher event, for virtual drivers.
+    pub fn next_event_us(&self, now_us: u64) -> Option<u64> {
+        self.batcher.next_event_us(&self.queue, now_us)
+    }
+
+    /// Admit one request at `now_us`. Invalid requests and queue
+    /// overflow return a typed rejection instead of queueing.
+    pub fn submit(&mut self, req: InferRequest, now_us: u64) -> Result<u64, InferReject> {
+        self.stats.submitted += 1;
+        let (rid, rtenant) = (req.id, req.tenant.clone());
+        let reject = move |reason: RejectReason, detail: String| InferReject {
+            id: rid,
+            tenant: rtenant.clone(),
+            reason,
+            detail,
+        };
+        let spec = match &req.mult {
+            Some(s) => match crate::mult::MultSpec::parse(s) {
+                Ok(m) => m.canonical(),
+                Err(e) => {
+                    self.stats.rejected_bad_input += 1;
+                    return Err(reject(RejectReason::BadInput, format!("bad mult spec: {e:#}")));
+                }
+            },
+            None => self.default_spec.clone(),
+        };
+        if !self.session.has_spec(&spec) {
+            self.stats.rejected_bad_input += 1;
+            return Err(reject(
+                RejectReason::BadInput,
+                format!(
+                    "spec {spec:?} has no resident session (resident: {})",
+                    self.session.specs().join(", ")
+                ),
+            ));
+        }
+        if req.input.len() != self.session.input_elems() {
+            self.stats.rejected_bad_input += 1;
+            return Err(reject(
+                RejectReason::BadInput,
+                format!(
+                    "input has {} elements, expected {}",
+                    req.input.len(),
+                    self.session.input_elems()
+                ),
+            ));
+        }
+        if req.deadline_us == 0 {
+            self.stats.rejected_bad_input += 1;
+            return Err(reject(
+                RejectReason::BadInput,
+                "deadline_us must be >= 1".to_string(),
+            ));
+        }
+        let pending = Pending {
+            id: req.id,
+            tenant: req.tenant.clone(),
+            arrival_us: now_us,
+            deadline_us: now_us.saturating_add(req.deadline_us),
+            input: req.input,
+            seq: 0,
+        };
+        match self.queue.push(&spec, pending) {
+            Ok(seq) => Ok(seq),
+            Err(e) => {
+                self.stats.rejected_queue += 1;
+                Err(reject(RejectReason::QueueFull, e.to_string()))
+            }
+        }
+    }
+
+    /// Run the batcher at `now_us` and execute every flushed batch.
+    pub fn poll(&mut self, now_us: u64) -> anyhow::Result<PollResult> {
+        let outcome = self.batcher.poll(&mut self.queue, now_us, self.busy_until_us);
+        self.busy_until_us = self.busy_until_us.max(outcome.busy_until_us);
+        let mut result = PollResult::default();
+        for p in outcome.expired {
+            self.stats.rejected_deadline += 1;
+            result.rejects.push(InferReject {
+                id: p.id,
+                tenant: p.tenant,
+                reason: RejectReason::DeadlineMissed,
+                detail: format!(
+                    "deadline {}us unmeetable at decision time {now_us}us",
+                    p.deadline_us
+                ),
+            });
+        }
+        for batch in outcome.batches {
+            let n = batch.requests.len();
+            let mut x = Vec::with_capacity(n * self.session.input_elems());
+            for r in &batch.requests {
+                x.extend_from_slice(&r.input);
+            }
+            let logits = self.session.infer(&batch.spec, &x, n)?;
+            let classes = self.session.num_classes();
+            self.stats.batches += 1;
+            self.batch_log.push(BatchRecord {
+                spec: batch.spec.clone(),
+                trigger: batch.trigger.name(),
+                flush_us: batch.flush_us,
+                complete_us: batch.complete_us,
+                ids: batch.requests.iter().map(|r| r.id).collect(),
+            });
+            for (r, row) in batch.requests.iter().zip(logits.chunks(classes)) {
+                let latency_us = batch.complete_us.saturating_sub(r.arrival_us);
+                self.stats.completed += 1;
+                self.stats.record_latency(&batch.spec, latency_us);
+                result.responses.push(InferResponse {
+                    id: r.id,
+                    tenant: r.tenant.clone(),
+                    mult: batch.spec.clone(),
+                    class: argmax(row),
+                    logits: row.to_vec(),
+                    batch: n,
+                    latency_us,
+                });
+            }
+        }
+        Ok(result)
+    }
+
+    /// Flush everything still queued (end-of-trace drain): advances a
+    /// virtual cursor through remaining batcher events until the queue
+    /// empties. Returns responses/rejects in event order.
+    pub fn drain(&mut self, from_us: u64) -> anyhow::Result<PollResult> {
+        let mut all = PollResult::default();
+        let mut cursor = from_us;
+        while let Some(event) = self.next_event_us(cursor) {
+            cursor = cursor.max(event);
+            let r = self.poll(cursor)?;
+            all.responses.extend(r.responses);
+            all.rejects.extend(r.rejects);
+        }
+        Ok(all)
+    }
+}
+
+/// First-max argmax over one logits row (deterministic under ties and
+/// total over NaN via `total_cmp`).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v.total_cmp(&best_v) == std::cmp::Ordering::Greater {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// One timed arrival in a replayable trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedRequest {
+    pub arrival_us: u64,
+    pub request: InferRequest,
+}
+
+/// Shape of a synthetic arrival trace.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Threefry seed: same seed → same trace, bit-for-bit.
+    pub seed: u64,
+    pub requests: usize,
+    /// Mean inter-arrival gap (µs); gaps are uniform on
+    /// `[0, 2*mean_gap_us]`. `0` = a single burst at t=0.
+    pub mean_gap_us: u64,
+    /// Relative deadline carried by every request (µs).
+    pub deadline_us: u64,
+    /// Specs cycled through by counter stream (tenant `i` uses
+    /// `specs[k_i]`); empty → requests omit `mult`.
+    pub specs: Vec<String>,
+}
+
+/// Build a deterministic synthetic trace: inter-arrival gaps, per-
+/// request spec choice and input pixels all come from counter-mode
+/// Threefry streams keyed on `spec.seed` — no wall clock, no shared
+/// RNG state, so the trace is identical on every machine.
+pub fn synth_trace(spec: &TraceSpec, input_elems: usize) -> Vec<TimedRequest> {
+    let mut out = Vec::with_capacity(spec.requests);
+    let mut t = 0u64;
+    for i in 0..spec.requests {
+        let step = i as u64;
+        if spec.mean_gap_us > 0 {
+            let gap = u64::from(counter_split(spec.seed, TRACE_GAP_STREAM, step))
+                % (2 * spec.mean_gap_us + 1);
+            t = t.saturating_add(gap);
+        }
+        let mult = if spec.specs.is_empty() {
+            None
+        } else {
+            let k = counter_split(spec.seed, TRACE_SPEC_STREAM, step) as usize
+                % spec.specs.len();
+            spec.specs.get(k).cloned()
+        };
+        let pixel_seed = counter_split(spec.seed, TRACE_INPUT_STREAM, step);
+        let input = counter_normal(pixel_seed, 0, 0, input_elems);
+        out.push(TimedRequest {
+            arrival_us: t,
+            request: InferRequest {
+                id: step,
+                tenant: format!("tenant-{}", step % 4),
+                mult,
+                deadline_us: spec.deadline_us,
+                input,
+            },
+        });
+    }
+    out
+}
+
+/// Deterministic replay summary — everything two runs must agree on.
+#[derive(Debug, Default)]
+pub struct ReplaySummary {
+    pub responses: Vec<InferResponse>,
+    pub rejects: Vec<InferReject>,
+    /// Virtual timestamp of the last processed event.
+    pub end_us: u64,
+}
+
+/// Replay a timed trace on a virtual clock: arrivals and batcher
+/// events interleave in timestamp order (ties: events first, so a due
+/// flush never absorbs a later-timestamped arrival). Fully drains the
+/// queue after the last arrival.
+pub fn replay(server: &mut Server, trace: &[TimedRequest]) -> anyhow::Result<ReplaySummary> {
+    let clock = VirtualClock::new(0);
+    let mut summary = ReplaySummary::default();
+    for timed in trace {
+        // Fire every batcher event due strictly before this arrival.
+        while let Some(event) = server.next_event_us(clock.now_us()) {
+            if event >= timed.arrival_us {
+                break;
+            }
+            clock.advance_to(event);
+            let r = server.poll(clock.now_us())?;
+            summary.responses.extend(r.responses);
+            summary.rejects.extend(r.rejects);
+        }
+        clock.advance_to(timed.arrival_us);
+        if let Err(reject) = server.submit(timed.request.clone(), clock.now_us()) {
+            summary.rejects.push(reject);
+        }
+        // A full lane flushes at admission time, not at the next
+        // arrival: poll when an event is already due.
+        if let Some(event) = server.next_event_us(clock.now_us()) {
+            if event <= clock.now_us() {
+                let r = server.poll(clock.now_us())?;
+                summary.responses.extend(r.responses);
+                summary.rejects.extend(r.rejects);
+            }
+        }
+    }
+    let r = server.drain(clock.now_us())?;
+    summary.responses.extend(r.responses);
+    summary.rejects.extend(r.rejects);
+    summary.end_us = clock.now_us().max(server.busy_until_us);
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::MultSpec;
+
+    fn server(cfg: &ServeConfig, specs: &[&str]) -> Server {
+        let parsed: Vec<MultSpec> =
+            specs.iter().map(|s| MultSpec::parse(s).unwrap()).collect();
+        let session =
+            InferenceSession::from_fresh("micro", 7, &parsed, cfg.max_specs, 11).unwrap();
+        Server::new(session, cfg).unwrap()
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            batch_window_us: 1_000,
+            max_batch: 4,
+            queue_capacity: 16,
+            max_specs: 4,
+            service_estimate_us: 500,
+            max_request_bytes: 1 << 16,
+        }
+    }
+
+    fn request(id: u64, input_elems: usize, deadline_us: u64) -> InferRequest {
+        InferRequest {
+            id,
+            tenant: "t".into(),
+            mult: None,
+            deadline_us,
+            input: vec![0.25; input_elems],
+        }
+    }
+
+    #[test]
+    fn submit_validates_before_queueing() {
+        let c = cfg();
+        let mut s = server(&c, &["exact"]);
+        let elems = s.session().input_elems();
+        // Wrong input length.
+        let r = s.submit(request(1, elems + 1, 1000), 0).unwrap_err();
+        assert_eq!(r.reason, RejectReason::BadInput);
+        // Unknown spec.
+        let mut req = request(2, elems, 1000);
+        req.mult = Some("drum6".into());
+        let r = s.submit(req, 0).unwrap_err();
+        assert_eq!(r.reason, RejectReason::BadInput);
+        // Zero deadline.
+        let r = s.submit(request(3, elems, 0), 0).unwrap_err();
+        assert_eq!(r.reason, RejectReason::BadInput);
+        // Unparsable spec.
+        let mut req = request(4, elems, 1000);
+        req.mult = Some("zorble9".into());
+        let r = s.submit(req, 0).unwrap_err();
+        assert_eq!(r.reason, RejectReason::BadInput);
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.stats().rejected_bad_input, 4);
+    }
+
+    #[test]
+    fn queue_overflow_is_typed() {
+        let c = ServeConfig { queue_capacity: 4, ..cfg() };
+        let mut s = server(&c, &["exact"]);
+        let elems = s.session().input_elems();
+        for i in 0..4 {
+            // Far deadlines so nothing flushes or expires.
+            s.submit(request(i, elems, 10_000_000), 0).unwrap();
+        }
+        // Capacity 4 = max_batch: the 5th is rejected before queueing.
+        let r = s.submit(request(9, elems, 10_000_000), 0).unwrap_err();
+        assert_eq!(r.reason, RejectReason::QueueFull);
+        assert_eq!(s.stats().rejected_queue, 1);
+    }
+
+    #[test]
+    fn responses_carry_batch_size_and_latency() {
+        let c = cfg();
+        let mut s = server(&c, &["exact"]);
+        let elems = s.session().input_elems();
+        for i in 0..4 {
+            s.submit(request(i, elems, 100_000), 10).unwrap();
+        }
+        // Lane full → flush at poll; completion = 10 + 500.
+        let out = s.poll(10).unwrap();
+        assert_eq!(out.responses.len(), 4);
+        for resp in &out.responses {
+            assert_eq!(resp.batch, 4);
+            assert_eq!(resp.latency_us, 500);
+            assert_eq!(resp.mult, "exact");
+            assert!(resp.class < s.session().num_classes());
+        }
+        assert_eq!(s.stats().completed, 4);
+        assert_eq!(s.stats().batches, 1);
+        assert_eq!(s.stats().latency.percentile_us(50.0), 500);
+    }
+
+    #[test]
+    fn replay_low_load_completes_everything() {
+        let c = cfg();
+        let mut s = server(&c, &["exact", "drum6"]);
+        let trace = synth_trace(
+            &TraceSpec {
+                seed: 33,
+                requests: 24,
+                mean_gap_us: 2_000,
+                deadline_us: 200_000,
+                specs: vec!["exact".into(), "drum6".into()],
+            },
+            s.session().input_elems(),
+        );
+        let summary = replay(&mut s, &trace).unwrap();
+        assert_eq!(summary.responses.len(), 24, "rejects: {:?}", summary.rejects);
+        assert!(summary.rejects.is_empty());
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn replay_burst_overload_sheds_with_typed_rejections() {
+        let c = ServeConfig { queue_capacity: 8, ..cfg() };
+        let mut s = server(&c, &["exact"]);
+        let trace = synth_trace(
+            &TraceSpec {
+                seed: 5,
+                requests: 32,
+                mean_gap_us: 0, // single burst at t=0
+                deadline_us: 1_200,
+                specs: vec![],
+            },
+            s.session().input_elems(),
+        );
+        let summary = replay(&mut s, &trace).unwrap();
+        let st = s.stats();
+        assert_eq!(
+            st.completed + st.rejected_queue + st.rejected_deadline,
+            32,
+            "every request is answered exactly once"
+        );
+        assert!(st.rejected_queue > 0, "burst past capacity must shed");
+        assert!(st.completed > 0, "head of the burst must be served");
+        assert_eq!(
+            summary.responses.len() as u64 + summary.rejects.len() as u64,
+            32
+        );
+    }
+
+    #[test]
+    fn identical_traces_replay_bit_identically() {
+        let build = || {
+            let c = cfg();
+            let mut s = server(&c, &["exact", "drum6", "sdrum6"]);
+            let trace = synth_trace(
+                &TraceSpec {
+                    seed: 77,
+                    requests: 40,
+                    mean_gap_us: 400,
+                    deadline_us: 5_000,
+                    specs: vec!["exact".into(), "drum6".into(), "sdrum6".into()],
+                },
+                s.session().input_elems(),
+            );
+            let summary = replay(&mut s, &trace).unwrap();
+            (summary, s)
+        };
+        let (a, sa) = build();
+        let (b, sb) = build();
+        assert_eq!(a.responses, b.responses);
+        assert_eq!(a.rejects, b.rejects);
+        assert_eq!(sa.batch_log(), sb.batch_log());
+    }
+}

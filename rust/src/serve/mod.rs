@@ -1,0 +1,42 @@
+//! Serve mode: resident multi-tenant inference with deadline-aware
+//! dynamic batching.
+//!
+//! The subsystem turns a trained checkpoint into a long-lived
+//! inference service:
+//!
+//! - [`session::InferenceSession`] loads a checkpoint **once** (via
+//!   the verified `checkpoint::Store::latest_valid` path), runs the
+//!   one-time weight-plane decomposition per multiplier spec, and
+//!   keeps the prepared planes resident. Distinct tenant
+//!   [`crate::mult::MultSpec`]s get their own entries in a bounded,
+//!   deterministically-iterated registry; tenants sharing a canonical
+//!   spec share one plane set.
+//! - [`queue::ServeQueue`] is the bounded admission queue, one FIFO
+//!   lane per canonical spec, with typed overflow instead of panics.
+//! - [`batcher::Batcher`] coalesces queued requests into GEMM-shaped
+//!   batches under three triggers (deadline-imminent > batch-full >
+//!   window-elapsed) using a serial busy-horizon service model — all
+//!   decision math on integer microseconds, never the wall clock.
+//! - [`codec`] is the wire layer: typed request / response / rejection
+//!   structs over the in-tree `json` value model.
+//! - [`driver::Server`] glues admission, batching, execution and
+//!   latency accounting together; [`driver::replay`] runs a timed
+//!   trace on a [`clock::VirtualClock`] for bit-identical benchmarks.
+//!
+//! Real time enters exactly once, through [`clock::SystemClock`]
+//! behind the [`clock::Clock`] trait; everything downstream of
+//! `now_us()` is deterministic in the timestamps it is handed.
+
+pub mod batcher;
+pub mod clock;
+pub mod codec;
+pub mod driver;
+pub mod queue;
+pub mod session;
+
+pub use batcher::{Batch, BatchPolicy, Batcher, FlushTrigger};
+pub use clock::{Clock, SystemClock, VirtualClock};
+pub use codec::{InferReject, InferRequest, InferResponse, RejectReason};
+pub use driver::{replay, synth_trace, BatchRecord, PollResult, ReplaySummary, Server, ServeStats, TimedRequest, TraceSpec};
+pub use queue::{EnqueueError, LaneSummary, Pending, ServeQueue};
+pub use session::InferenceSession;

@@ -1,0 +1,237 @@
+//! Bounded, spec-laned request queue.
+//!
+//! Admitted requests wait here until the batcher flushes them. Lanes
+//! are keyed by *canonical* multiplier spec in a `BTreeMap` — never a
+//! hash map (detlint D1) — so the batcher visits lanes in one fixed
+//! order and batch compositions are a pure function of the arrival
+//! trace. Within a lane, requests are FIFO by admission sequence.
+//!
+//! The queue is bounded across all lanes: admission past capacity is a
+//! typed [`EnqueueError::Full`], the backpressure signal the server
+//! turns into a `queue-full` rejection.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// One admitted request waiting for a batch slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pending {
+    pub id: u64,
+    pub tenant: String,
+    /// Admission timestamp (µs, server clock).
+    pub arrival_us: u64,
+    /// Absolute completion deadline (µs, server clock): admission
+    /// time + the request's relative budget.
+    pub deadline_us: u64,
+    /// One flat `[hw, hw, ch]` example.
+    pub input: Vec<f32>,
+    /// Admission sequence number — the FIFO total order.
+    pub seq: u64,
+}
+
+/// Typed admission failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnqueueError {
+    /// The queue holds `capacity` requests across all lanes.
+    Full { capacity: usize },
+}
+
+impl std::fmt::Display for EnqueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EnqueueError::Full { capacity } => {
+                write!(f, "queue full at capacity {capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EnqueueError {}
+
+/// Snapshot of one lane, the batcher's trigger inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSummary {
+    pub len: usize,
+    /// Earliest absolute deadline in the lane.
+    pub deadline_min_us: u64,
+    /// Arrival time of the oldest (front) request.
+    pub oldest_arrival_us: u64,
+}
+
+/// Bounded multi-lane FIFO keyed by canonical spec.
+#[derive(Debug, Default)]
+pub struct ServeQueue {
+    lanes: BTreeMap<String, VecDeque<Pending>>,
+    len: usize,
+    capacity: usize,
+    next_seq: u64,
+}
+
+impl ServeQueue {
+    pub fn new(capacity: usize) -> Self {
+        ServeQueue { lanes: BTreeMap::new(), len: 0, capacity, next_seq: 0 }
+    }
+
+    /// Total queued requests across all lanes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit one request into `spec`'s lane; assigns and returns its
+    /// admission sequence number.
+    pub fn push(&mut self, spec: &str, mut p: Pending) -> Result<u64, EnqueueError> {
+        if self.len >= self.capacity {
+            return Err(EnqueueError::Full { capacity: self.capacity });
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        p.seq = seq;
+        self.lanes.entry(spec.to_string()).or_default().push_back(p);
+        self.len += 1;
+        Ok(seq)
+    }
+
+    /// Lane keys in canonical (BTreeMap) order — the batcher's fixed
+    /// visit order. Empty lanes are skipped.
+    pub fn specs(&self) -> Vec<String> {
+        self.lanes
+            .iter()
+            .filter(|(_, l)| !l.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Trigger inputs for one lane; `None` when empty or absent.
+    pub fn lane_summary(&self, spec: &str) -> Option<LaneSummary> {
+        let lane = self.lanes.get(spec)?;
+        let front = lane.front()?;
+        let deadline_min_us = lane.iter().map(|p| p.deadline_us).min()?;
+        Some(LaneSummary {
+            len: lane.len(),
+            deadline_min_us,
+            oldest_arrival_us: front.arrival_us,
+        })
+    }
+
+    /// Remove every request in `spec`'s lane whose absolute deadline is
+    /// strictly below `cutoff_us` (it cannot complete by its deadline
+    /// even if flushed right now). Relative order of survivors is
+    /// preserved; the removed requests are returned for typed
+    /// `deadline-missed` rejection.
+    pub fn drain_expired(&mut self, spec: &str, cutoff_us: u64) -> Vec<Pending> {
+        let Some(lane) = self.lanes.get_mut(spec) else {
+            return Vec::new();
+        };
+        let mut expired = Vec::new();
+        let mut kept = VecDeque::with_capacity(lane.len());
+        for p in lane.drain(..) {
+            if p.deadline_us < cutoff_us {
+                expired.push(p);
+            } else {
+                kept.push_back(p);
+            }
+        }
+        *lane = kept;
+        self.len -= expired.len();
+        expired
+    }
+
+    /// Dequeue up to `k` requests from the front of `spec`'s lane, in
+    /// FIFO order — one GEMM batch's worth.
+    pub fn take_front(&mut self, spec: &str, k: usize) -> Vec<Pending> {
+        let Some(lane) = self.lanes.get_mut(spec) else {
+            return Vec::new();
+        };
+        let n = k.min(lane.len());
+        let taken: Vec<Pending> = lane.drain(..n).collect();
+        self.len -= taken.len();
+        taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: u64, arrival: u64, deadline: u64) -> Pending {
+        Pending {
+            id,
+            tenant: "t".into(),
+            arrival_us: arrival,
+            deadline_us: deadline,
+            input: vec![0.0],
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn capacity_is_global_and_typed() {
+        let mut q = ServeQueue::new(2);
+        q.push("a", p(1, 0, 10)).unwrap();
+        q.push("b", p(2, 0, 10)).unwrap();
+        assert_eq!(
+            q.push("a", p(3, 0, 10)),
+            Err(EnqueueError::Full { capacity: 2 })
+        );
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn lanes_iterate_in_canonical_order() {
+        let mut q = ServeQueue::new(10);
+        q.push("sdrum6", p(1, 0, 10)).unwrap();
+        q.push("booth8", p(2, 0, 10)).unwrap();
+        q.push("exact", p(3, 0, 10)).unwrap();
+        assert_eq!(q.specs(), ["booth8", "exact", "sdrum6"]);
+    }
+
+    #[test]
+    fn seq_is_admission_order_across_lanes() {
+        let mut q = ServeQueue::new(10);
+        let s1 = q.push("b", p(1, 0, 10)).unwrap();
+        let s2 = q.push("a", p(2, 0, 10)).unwrap();
+        assert!(s2 > s1);
+    }
+
+    #[test]
+    fn drain_expired_preserves_survivor_order() {
+        let mut q = ServeQueue::new(10);
+        q.push("a", p(1, 0, 100)).unwrap();
+        q.push("a", p(2, 0, 5)).unwrap();
+        q.push("a", p(3, 0, 200)).unwrap();
+        let gone = q.drain_expired("a", 50);
+        assert_eq!(gone.iter().map(|p| p.id).collect::<Vec<_>>(), [2]);
+        assert_eq!(q.len(), 2);
+        let taken = q.take_front("a", 10);
+        assert_eq!(taken.iter().map(|p| p.id).collect::<Vec<_>>(), [1, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_front_caps_at_k() {
+        let mut q = ServeQueue::new(10);
+        for i in 0..5 {
+            q.push("a", p(i, 0, 10)).unwrap();
+        }
+        assert_eq!(q.take_front("a", 3).len(), 3);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn summary_reports_min_deadline_not_front_deadline() {
+        let mut q = ServeQueue::new(10);
+        q.push("a", p(1, 7, 500)).unwrap();
+        q.push("a", p(2, 9, 90)).unwrap();
+        let s = q.lane_summary("a").unwrap();
+        assert_eq!(s.len, 2);
+        assert_eq!(s.deadline_min_us, 90);
+        assert_eq!(s.oldest_arrival_us, 7);
+    }
+}

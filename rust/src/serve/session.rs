@@ -1,0 +1,387 @@
+//! Resident inference sessions: load once, decompose once, serve many.
+//!
+//! [`SpecSession`] owns everything one multiplier spec needs to answer
+//! requests: a [`NativeBackend`] bound to that spec, the (possibly
+//! error-injected) f32 weights, the BN running state, and the weight
+//! planes decomposed **once** at construction
+//! ([`NativeBackend::pack_infer_weights`] — for `lut`/`slut` specs the
+//! product tables were built once inside the backend's design, and for
+//! signed specs the signed-mantissa planes are derived here too). Per
+//! request batch, the only work left is the activation prepare and the
+//! GEMM chain.
+//!
+//! [`InferenceSession`] is the multi-tenant registry: one checkpoint's
+//! weights shared across a *bounded* set of spec sessions, keyed by
+//! canonical spec string in a `BTreeMap` (deterministic iteration —
+//! detlint D1). Two tenants asking for the same canonical spec share
+//! one resident plane set; distinct specs get their own entry; specs
+//! past the bound are a typed construction error, not an unbounded
+//! cache.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Store;
+use crate::mult::{MultSpec, PreparedMatrix};
+use crate::runtime::{Backend, NativeBackend};
+use crate::tensor::Tensor;
+
+/// One spec's resident state: weights decomposed once, served many.
+pub struct SpecSession {
+    spec: MultSpec,
+    backend: NativeBackend,
+    /// Inference weights (Gaussian specs: error field already applied).
+    params: Vec<Vec<f32>>,
+    /// BN running statistics.
+    state: Vec<Vec<f32>>,
+    /// Weight planes, decomposed once at construction.
+    packed: Vec<PreparedMatrix>,
+    /// Number of `PreparedMatrix` decompositions performed for this
+    /// session — exactly one per GEMM layer, pinned by test.
+    prepare_calls: u64,
+}
+
+impl SpecSession {
+    fn build(
+        preset: &str,
+        spec: MultSpec,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        seed_err: u32,
+    ) -> Result<Self> {
+        let backend = NativeBackend::new(preset, spec.clone())
+            .with_context(|| format!("building serve backend for {}", spec.canonical()))?;
+        let params = backend.infer_params(params, seed_err);
+        let packed = backend
+            .pack_infer_weights(&params)
+            .with_context(|| format!("decomposing weights for {}", spec.canonical()))?;
+        let prepare_calls = backend.n_gemm_layers() as u64;
+        Ok(SpecSession {
+            spec,
+            backend,
+            params,
+            state: state.to_vec(),
+            packed,
+            prepare_calls,
+        })
+    }
+
+    pub fn spec(&self) -> &MultSpec {
+        &self.spec
+    }
+
+    /// Logits for `n` examples under this spec's resident planes.
+    pub fn infer(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.backend
+            .infer_logits(&self.params, &self.state, &self.packed, x, n)
+    }
+
+    /// Decompositions performed since construction (constant after
+    /// build: the serving path never re-packs weights).
+    pub fn prepare_calls(&self) -> u64 {
+        self.prepare_calls
+    }
+}
+
+/// Multi-tenant resident inference over one checkpoint.
+pub struct InferenceSession {
+    preset: String,
+    /// Flat elements of one input example (`hw * hw * ch`).
+    input_elems: usize,
+    num_classes: usize,
+    /// Source checkpoint epoch, `None` for fresh-init sessions.
+    checkpoint_epoch: Option<u64>,
+    /// Canonical spec → resident session, deterministic iteration.
+    sessions: BTreeMap<String, SpecSession>,
+}
+
+impl InferenceSession {
+    /// Load the latest valid checkpoint under `tag` from `dir` (the
+    /// verified-load path: corrupt snapshots are scanned past, not
+    /// served) and build one resident session per distinct spec.
+    pub fn from_store(
+        dir: impl AsRef<Path>,
+        tag: &str,
+        specs: &[MultSpec],
+        max_specs: usize,
+        seed_err: u32,
+    ) -> Result<Self> {
+        let store = Store::new(dir.as_ref())?;
+        let Some((epoch, meta, named)) = store
+            .latest_valid(tag)
+            .with_context(|| format!("scanning checkpoints for tag {tag:?}"))?
+        else {
+            bail!(
+                "no valid checkpoint for tag {tag:?} in {}",
+                dir.as_ref().display()
+            );
+        };
+        let (params, state) = split_named(&meta.preset, named)?;
+        let mut s = Self::from_parts(&meta.preset, &params, &state, specs, max_specs, seed_err)?;
+        s.checkpoint_epoch = Some(epoch);
+        Ok(s)
+    }
+
+    /// Session at freshly initialized weights — cold-start serving and
+    /// smoke tests (no checkpoint required).
+    pub fn from_fresh(
+        preset: &str,
+        seed: u32,
+        specs: &[MultSpec],
+        max_specs: usize,
+        seed_err: u32,
+    ) -> Result<Self> {
+        let init_backend = NativeBackend::new(preset, MultSpec::Exact)?;
+        let model = init_backend.model();
+        let n_params = model.params.len();
+        let n_state = model.state.len();
+        let tensors = init_backend.init(seed)?;
+        let params = to_vecs(
+            tensors
+                .get(..n_params)
+                .context("init returned too few tensors for params")?,
+        )?;
+        let state = to_vecs(
+            tensors
+                .get(n_params..n_params + n_state)
+                .context("init returned too few tensors for state")?,
+        )?;
+        Self::from_parts(preset, &params, &state, specs, max_specs, seed_err)
+    }
+
+    /// Core constructor over already-split f32 weights.
+    fn from_parts(
+        preset: &str,
+        params: &[Vec<f32>],
+        state: &[Vec<f32>],
+        specs: &[MultSpec],
+        max_specs: usize,
+        seed_err: u32,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("serve needs at least one multiplier spec");
+        }
+        let probe = NativeBackend::new(preset, MultSpec::Exact)?;
+        let model = probe.model();
+        let input_elems = model.input_hw * model.input_hw * model.in_ch;
+        let num_classes = model.num_classes;
+
+        let mut sessions: BTreeMap<String, SpecSession> = BTreeMap::new();
+        for spec in specs {
+            let key = spec.canonical();
+            if sessions.contains_key(&key) {
+                // Same canonical spec twice: tenants share the one
+                // resident plane set — no second decomposition.
+                continue;
+            }
+            if sessions.len() >= max_specs {
+                bail!(
+                    "spec registry bounded at {max_specs}: cannot add {key} \
+                     (resident: {})",
+                    sessions.keys().cloned().collect::<Vec<_>>().join(", ")
+                );
+            }
+            let sess = SpecSession::build(preset, spec.clone(), params, state, seed_err)?;
+            sessions.insert(key, sess);
+        }
+        Ok(InferenceSession {
+            preset: preset.to_string(),
+            input_elems,
+            num_classes,
+            checkpoint_epoch: None,
+            sessions,
+        })
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    /// Flat elements of one input example.
+    pub fn input_elems(&self) -> usize {
+        self.input_elems
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Epoch of the restored checkpoint (`None` = fresh init).
+    pub fn checkpoint_epoch(&self) -> Option<u64> {
+        self.checkpoint_epoch
+    }
+
+    /// Canonical specs with resident sessions, in registry order.
+    pub fn specs(&self) -> Vec<String> {
+        self.sessions.keys().cloned().collect()
+    }
+
+    pub fn has_spec(&self, canonical: &str) -> bool {
+        self.sessions.contains_key(canonical)
+    }
+
+    /// Logits for `n` examples under `canonical`'s resident planes.
+    /// Unknown specs are a typed error (the server maps it to a
+    /// `bad-input` rejection at admission, so this is a backstop).
+    pub fn infer(&self, canonical: &str, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let Some(sess) = self.sessions.get(canonical) else {
+            bail!(
+                "no resident session for spec {canonical:?} (resident: {})",
+                self.specs().join(", ")
+            );
+        };
+        sess.infer(x, n)
+    }
+
+    /// Total weight decompositions across all resident sessions —
+    /// exactly `n_gemm_layers x n_distinct_specs`, and constant over
+    /// the session's lifetime (pinned by `tests/serve_batching.rs`).
+    pub fn prepare_calls(&self) -> u64 {
+        let mut total = 0u64;
+        for s in self.sessions.values() {
+            total += s.prepare_calls();
+        }
+        total
+    }
+}
+
+/// Split a checkpoint's named tensors into f32 params and state in
+/// manifest order, ignoring the optimizer tail. Missing or misshapen
+/// tensors are typed errors.
+fn split_named(
+    preset: &str,
+    named: Vec<(String, Tensor)>,
+) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+    let probe = NativeBackend::new(preset, MultSpec::Exact)?;
+    let model = probe.model();
+    let by_name: BTreeMap<String, Tensor> = named.into_iter().collect();
+    let lookup = |prefix: &str, name: &str, shape: &[usize]| -> Result<Vec<f32>> {
+        let full = format!("{prefix}:{name}");
+        let Some(t) = by_name.get(&full) else {
+            bail!("checkpoint is missing tensor {full:?} for preset {preset}");
+        };
+        if t.shape() != shape {
+            bail!(
+                "checkpoint tensor {full:?} shape {:?} != manifest {:?}",
+                t.shape(),
+                shape
+            );
+        }
+        t.as_f32()
+    };
+    let mut params = Vec::with_capacity(model.params.len());
+    for spec in &model.params {
+        params.push(lookup("param", &spec.name, &spec.shape)?);
+    }
+    let mut state = Vec::with_capacity(model.state.len());
+    for spec in &model.state {
+        state.push(lookup("state", &spec.name, &spec.shape)?);
+    }
+    Ok((params, state))
+}
+
+/// Extract f32 buffers from a tensor slice.
+fn to_vecs(tensors: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+    tensors.iter().map(|t| t.as_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(list: &[&str]) -> Vec<MultSpec> {
+        list.iter().map(|s| MultSpec::parse(s).unwrap()).collect()
+    }
+
+    #[test]
+    fn fresh_session_serves_all_registered_specs() {
+        let s = InferenceSession::from_fresh(
+            "micro",
+            7,
+            &specs(&["exact", "drum6", "sdrum6"]),
+            8,
+            11,
+        )
+        .unwrap();
+        assert_eq!(s.specs(), ["drum6", "exact", "sdrum6"]);
+        let x = vec![0.1f32; s.input_elems() * 2];
+        for spec in s.specs() {
+            let logits = s.infer(&spec, &x, 2).unwrap();
+            assert_eq!(logits.len(), 2 * s.num_classes());
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn duplicate_canonical_specs_share_one_session() {
+        let s = InferenceSession::from_fresh(
+            "micro",
+            7,
+            &specs(&["drum6", "drum6", "exact"]),
+            8,
+            11,
+        )
+        .unwrap();
+        assert_eq!(s.specs().len(), 2);
+        // prepare_calls counts layers once per *distinct* spec.
+        let probe = NativeBackend::new("micro", MultSpec::Exact).unwrap();
+        assert_eq!(s.prepare_calls(), 2 * probe.n_gemm_layers() as u64);
+    }
+
+    #[test]
+    fn registry_bound_is_a_typed_error() {
+        let err = InferenceSession::from_fresh(
+            "micro",
+            7,
+            &specs(&["exact", "drum6", "drum4"]),
+            2,
+            11,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("bounded at 2"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_spec_is_a_typed_error() {
+        let s =
+            InferenceSession::from_fresh("micro", 7, &specs(&["exact"]), 4, 11).unwrap();
+        let x = vec![0.0; s.input_elems()];
+        assert!(s.infer("drum6", &x, 1).is_err());
+    }
+
+    #[test]
+    fn bad_input_length_is_a_typed_error() {
+        let s =
+            InferenceSession::from_fresh("micro", 7, &specs(&["exact"]), 4, 11).unwrap();
+        assert!(s.infer("exact", &[0.0, 1.0], 1).is_err());
+    }
+
+    #[test]
+    fn gaussian_spec_differs_from_exact_but_is_reproducible() {
+        let build = || {
+            InferenceSession::from_fresh(
+                "micro",
+                7,
+                &specs(&["exact", "gaussian:0.08"]),
+                4,
+                11,
+            )
+            .unwrap()
+        };
+        let s1 = build();
+        let s2 = build();
+        let n = 2;
+        let x: Vec<f32> = (0..n * s1.input_elems())
+            .map(|i| (i as f32) * 0.01 - 0.3)
+            .collect();
+        let exact = s1.infer("exact", &x, n).unwrap();
+        let g1 = s1.infer("gaussian:0.08", &x, n).unwrap();
+        let g2 = s2.infer("gaussian:0.08", &x, n).unwrap();
+        // Same seed_err → bit-identical injected weights across builds.
+        assert_eq!(g1, g2);
+        // And the injected field actually moved the logits.
+        assert_ne!(exact, g1);
+    }
+}

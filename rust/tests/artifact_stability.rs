@@ -112,6 +112,47 @@ fn malformed_length_fields_surface_typed_faults_not_panics() {
 }
 
 #[test]
+fn hostile_json_inputs_surface_typed_faults_not_panics() {
+    use approxmul::json::JsonFaultClass;
+
+    // Duplicate object keys: must be a typed fault, never a silent
+    // last-write-wins merge. Checked at every nesting depth.
+    let err = Value::parse(r#"{"k": 1, "k": 2}"#).expect_err("dup key");
+    assert_eq!(json::classify(&err), Some(JsonFaultClass::DuplicateKey));
+    let err = Value::parse(r#"{"outer": {"k": 1, "k": 1}}"#).expect_err("nested dup key");
+    assert_eq!(json::classify(&err), Some(JsonFaultClass::DuplicateKey));
+
+    // Oversized payloads: rejected before the parser runs, so a hostile
+    // multi-GB body can't cost parse time or memory.
+    let body = br#"{"k": "v"}"#;
+    let err = Value::parse_bytes(body, 4).expect_err("over cap");
+    assert_eq!(json::classify(&err), Some(JsonFaultClass::Oversized));
+
+    // Non-UTF-8 byte streams: typed, not a str-conversion panic.
+    let err = Value::parse_bytes(&[b'"', 0xC3, 0x28, b'"'], 1024).expect_err("bad utf8");
+    assert_eq!(json::classify(&err), Some(JsonFaultClass::NonUtf8));
+
+    // Plain grammar garbage classifies as Syntax.
+    let err = Value::parse_bytes(b"{\"k\": nope}", 1024).expect_err("garbage");
+    assert_eq!(json::classify(&err), Some(JsonFaultClass::Syntax));
+
+    // A well-formed body under the cap still parses.
+    let ok = Value::parse_bytes(body, 1024).expect("clean parse");
+    assert_eq!(ok.get("k").unwrap().as_str().unwrap(), "v");
+}
+
+#[test]
+fn json_rejection_is_bytewise_deterministic() {
+    // The same hostile input must produce the same classified fault on
+    // every parse — rejection is part of the deterministic surface.
+    let evil = br#"{"a": 1, "a": 2}"#;
+    let c1 = json::classify(&Value::parse_bytes(evil, 1024).unwrap_err());
+    let c2 = json::classify(&Value::parse_bytes(evil, 1024).unwrap_err());
+    assert_eq!(c1, c2);
+    assert_eq!(c1, Some(json::JsonFaultClass::DuplicateKey));
+}
+
+#[test]
 fn btreemap_is_the_artifact_map_type() {
     // Compile-time pin: Value::Object exposes a BTreeMap. If someone
     // swaps the representation for a hash map this stops compiling.

@@ -1,0 +1,290 @@
+//! Serve-mode integration suite: virtual-clock batching semantics,
+//! typed rejection paths, bit-identical replay at any thread count,
+//! and the once-per-(checkpoint, spec) decomposition invariant.
+
+use approxmul::config::ServeConfig;
+use approxmul::mult::MultSpec;
+use approxmul::runtime::NativeBackend;
+use approxmul::serve::{
+    replay, synth_trace, InferenceSession, InferRequest, RejectReason, ReplaySummary,
+    Server, TraceSpec,
+};
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        batch_window_us: 1_000,
+        max_batch: 4,
+        queue_capacity: 16,
+        max_specs: 4,
+        service_estimate_us: 500,
+        max_request_bytes: 1 << 16,
+    }
+}
+
+fn server(cfg: &ServeConfig, specs: &[&str]) -> Server {
+    let parsed: Vec<MultSpec> =
+        specs.iter().map(|s| MultSpec::parse(s).unwrap()).collect();
+    let session =
+        InferenceSession::from_fresh("micro", 7, &parsed, cfg.max_specs, 11).unwrap();
+    Server::new(session, cfg).unwrap()
+}
+
+fn request(id: u64, elems: usize, deadline_us: u64, mult: Option<&str>) -> InferRequest {
+    InferRequest {
+        id,
+        tenant: format!("tenant-{}", id % 3),
+        mult: mult.map(str::to_string),
+        deadline_us,
+        input: vec![0.5; elems],
+    }
+}
+
+#[test]
+fn deadline_imminent_flushes_before_batch_full() {
+    let c = cfg();
+    let mut s = server(&c, &["exact"]);
+    let elems = s.session().input_elems();
+    // Two requests, far from max_batch=4, but with deadlines inside
+    // the imminence horizon (start + 2*svc = 1000).
+    s.submit(request(1, elems, 900, None), 0).unwrap();
+    s.submit(request(2, elems, 900, None), 0).unwrap();
+    let out = s.poll(0).unwrap();
+    assert_eq!(out.responses.len(), 2, "imminent deadline must flush a partial batch");
+    assert!(out.rejects.is_empty());
+    let log = s.batch_log();
+    assert_eq!(log.len(), 1);
+    assert_eq!(log[0].trigger, "deadline-imminent");
+    // Control: same arrivals with lazy deadlines wait for the window.
+    let mut s2 = server(&c, &["exact"]);
+    s2.submit(request(1, elems, 500_000, None), 0).unwrap();
+    s2.submit(request(2, elems, 500_000, None), 0).unwrap();
+    assert!(s2.poll(0).unwrap().responses.is_empty(), "no trigger at t=0");
+    let out = s2.poll(1_000).unwrap(); // window elapses
+    assert_eq!(out.responses.len(), 2);
+    assert_eq!(s2.batch_log()[0].trigger, "window-elapsed");
+}
+
+#[test]
+fn batch_full_flushes_immediately() {
+    let c = cfg();
+    let mut s = server(&c, &["exact"]);
+    let elems = s.session().input_elems();
+    for i in 0..4 {
+        s.submit(request(i, elems, 500_000, None), 0).unwrap();
+    }
+    let out = s.poll(0).unwrap();
+    assert_eq!(out.responses.len(), 4);
+    assert_eq!(s.batch_log()[0].trigger, "batch-full");
+    for r in &out.responses {
+        assert_eq!(r.batch, 4);
+    }
+}
+
+#[test]
+fn queue_overflow_rejects_typed_and_preserves_accepted_work() {
+    let c = ServeConfig { queue_capacity: 6, ..cfg() };
+    let mut s = server(&c, &["exact"]);
+    let elems = s.session().input_elems();
+    let mut accepted = 0u64;
+    let mut queue_full = 0u64;
+    // Flood without polling: admission is bounded, never panics.
+    for i in 0..20 {
+        match s.submit(request(i, elems, 500_000, None), 0) {
+            Ok(_) => accepted += 1,
+            Err(r) => {
+                assert_eq!(r.reason, RejectReason::QueueFull);
+                assert!(r.detail.contains("6"), "detail names the bound: {}", r.detail);
+                queue_full += 1;
+            }
+        }
+    }
+    assert_eq!(accepted, 6);
+    assert_eq!(queue_full, 14);
+    // Everything accepted is still served.
+    let out = s.poll(0).unwrap();
+    let drained = s.drain(0).unwrap();
+    assert_eq!(out.responses.len() + drained.responses.len(), 6);
+    assert_eq!(s.stats().rejected_queue, 14);
+}
+
+#[test]
+fn specs_are_never_mixed_within_a_batch() {
+    let c = cfg();
+    let mut s = server(&c, &["exact", "drum6"]);
+    let elems = s.session().input_elems();
+    for i in 0..12 {
+        let mult = if i % 2 == 0 { Some("exact") } else { Some("drum6") };
+        s.submit(request(i, elems, 50_000, mult), 0).unwrap();
+    }
+    let _ = s.poll(0).unwrap();
+    let _ = s.drain(0).unwrap();
+    assert!(s.batch_log().len() >= 2);
+    for rec in s.batch_log() {
+        let parity = if rec.spec == "exact" { 0 } else { 1 };
+        for id in &rec.ids {
+            assert_eq!(
+                id % 2,
+                parity,
+                "request {id} (spec parity) landed in a {} batch",
+                rec.spec
+            );
+        }
+    }
+    assert_eq!(s.stats().completed, 12);
+}
+
+fn run_trace(threads: usize) -> (ReplaySummary, Vec<approxmul::serve::BatchRecord>, u64) {
+    approxmul::parallel::set_max_threads(threads);
+    let c = cfg();
+    let mut s = server(&c, &["exact", "drum6", "sdrum6"]);
+    let trace = synth_trace(
+        &TraceSpec {
+            seed: 99,
+            requests: 48,
+            mean_gap_us: 600,
+            deadline_us: 4_000,
+            specs: vec!["exact".into(), "drum6".into(), "sdrum6".into()],
+        },
+        s.session().input_elems(),
+    );
+    let summary = replay(&mut s, &trace).unwrap();
+    let prepare_calls = s.session().prepare_calls();
+    (summary, s.batch_log().to_vec(), prepare_calls)
+}
+
+#[test]
+fn replay_is_bit_identical_across_runs_and_thread_counts() {
+    let (a, log_a, prep_a) = run_trace(1);
+    let (b, log_b, prep_b) = run_trace(4);
+    let (c, log_c, _) = run_trace(1);
+    // Logits are f32-exact, not approximately equal: same batches, same
+    // GEMMs, same multiplier tables, regardless of worker count.
+    assert_eq!(a.responses, b.responses);
+    assert_eq!(a.rejects, b.rejects);
+    assert_eq!(log_a, log_b, "batch compositions must not depend on threads");
+    assert_eq!(a.responses, c.responses);
+    assert_eq!(log_a, log_c, "same trace, same run, every time");
+    assert_eq!(prep_a, prep_b);
+    assert!(!a.responses.is_empty());
+}
+
+#[test]
+fn decomposition_happens_once_per_checkpoint_spec_pair() {
+    let c = cfg();
+    let specs = [
+        MultSpec::parse("exact").unwrap(),
+        MultSpec::parse("drum6").unwrap(),
+    ];
+    let session = InferenceSession::from_fresh("micro", 7, &specs, 4, 11).unwrap();
+    let per_spec = NativeBackend::new("micro", MultSpec::Exact)
+        .unwrap()
+        .n_gemm_layers() as u64;
+    assert_eq!(session.prepare_calls(), per_spec * 2, "one decomposition per spec");
+    let mut s = Server::new(session, &c).unwrap();
+    let elems = s.session().input_elems();
+    // Many batches across both specs: prepare count must not move.
+    let mut t = 0u64;
+    for i in 0..40 {
+        let mult = if i % 2 == 0 { Some("exact") } else { Some("drum6") };
+        s.submit(request(i, elems, 20_000, mult), t).unwrap();
+        let _ = s.poll(t).unwrap();
+        t += 700;
+    }
+    let _ = s.drain(t).unwrap();
+    assert!(s.stats().batches >= 4);
+    assert_eq!(s.stats().completed, 40);
+    assert_eq!(
+        s.session().prepare_calls(),
+        per_spec * 2,
+        "serving must reuse resident planes, never re-decompose"
+    );
+}
+
+#[test]
+fn duplicate_canonical_specs_share_one_resident_session() {
+    // gaussian:0.05 spelled twice plus exact: registry holds 2 entries.
+    let specs = [
+        MultSpec::parse("exact").unwrap(),
+        MultSpec::parse("gaussian:0.05").unwrap(),
+        MultSpec::parse("gaussian:0.05").unwrap(),
+    ];
+    let session = InferenceSession::from_fresh("micro", 7, &specs, 4, 11).unwrap();
+    assert_eq!(session.specs().len(), 2);
+    let per_spec = NativeBackend::new("micro", MultSpec::Exact)
+        .unwrap()
+        .n_gemm_layers() as u64;
+    assert_eq!(session.prepare_calls(), per_spec * 2);
+    // The registry bound is enforced with a typed error, not a panic.
+    let many: Vec<MultSpec> = ["exact", "drum6", "sdrum6"]
+        .iter()
+        .map(|s| MultSpec::parse(s).unwrap())
+        .collect();
+    let err = InferenceSession::from_fresh("micro", 7, &many, 2, 11).unwrap_err();
+    assert!(err.to_string().contains("bounded"), "got: {err:#}");
+}
+
+#[test]
+fn wire_roundtrip_and_hostile_bodies_through_submit() {
+    let c = cfg();
+    let mut s = server(&c, &["exact"]);
+    let elems = s.session().input_elems();
+    // Round-trip a request through the codec, then serve it.
+    let req = request(31, elems, 500_000, Some("exact"));
+    let line = req.to_value().to_string();
+    let decoded = InferRequest::decode(line.as_bytes(), c.max_request_bytes).unwrap();
+    assert_eq!(decoded, req);
+    s.submit(decoded, 0).unwrap();
+    let out = s.poll(1_000).unwrap();
+    assert_eq!(out.responses.len(), 1);
+    let resp = &out.responses[0];
+    assert_eq!(resp.id, 31);
+    assert_eq!(resp.logits.len(), s.session().num_classes());
+    // Response survives its own codec round-trip.
+    let back =
+        approxmul::serve::InferResponse::from_value(&resp.to_value()).unwrap();
+    assert_eq!(&back, resp);
+
+    // Hostile bodies are typed decode errors, never panics, and a
+    // wrong-shaped but well-formed request is rejected at submit.
+    assert!(InferRequest::decode(&[0xFF, 0xFE], c.max_request_bytes).is_err());
+    assert!(InferRequest::decode(b"{\"id\":1,\"id\":2}", c.max_request_bytes).is_err());
+    let oversized = vec![b'x'; 1 << 20];
+    assert!(InferRequest::decode(&oversized, 64).is_err());
+    let bad = request(7, elems + 3, 500_000, None);
+    let rej = s.submit(bad, 0).unwrap_err();
+    assert_eq!(rej.reason, RejectReason::BadInput);
+    let rej_back =
+        approxmul::serve::InferReject::from_value(&rej.to_value()).unwrap();
+    assert_eq!(rej_back.reason, RejectReason::BadInput);
+}
+
+#[test]
+fn overload_burst_sheds_with_deadline_misses_and_conserves_requests() {
+    let c = cfg();
+    let mut s = server(&c, &["exact"]);
+    let trace = synth_trace(
+        &TraceSpec {
+            seed: 3,
+            requests: 48,
+            mean_gap_us: 0,
+            deadline_us: 1_500,
+            specs: vec![],
+        },
+        s.session().input_elems(),
+    );
+    let summary = replay(&mut s, &trace).unwrap();
+    let st = s.stats();
+    assert_eq!(st.completed + st.rejected_queue + st.rejected_deadline, 48);
+    assert!(st.rejected_deadline >= 1, "overload must shed by deadline");
+    assert!(st.completed >= 1, "head of burst must still be served");
+    for rej in &summary.rejects {
+        assert!(
+            rej.reason == RejectReason::DeadlineMissed
+                || rej.reason == RejectReason::QueueFull
+        );
+    }
+    // Every served request met its (absolute) deadline by construction.
+    for resp in &summary.responses {
+        assert!(resp.latency_us <= 1_500);
+    }
+}

@@ -32,14 +32,14 @@ RULE_IDS = ["D1", "D1v2", "D2", "D3", "P1", "P2", "S1", "U1", "C1"]
 
 D1_SCOPE = [
     "mult", "runtime", "coordinator", "rng", "tensor", "data", "config",
-    "metrics", "benchkit", "report", "json", "checkpoint",
+    "metrics", "benchkit", "report", "json", "checkpoint", "serve",
 ]
-D2_SCOPE = ["mult", "runtime/native", "rng", "tensor", "data", "coordinator"]
+D2_SCOPE = ["mult", "runtime/native", "rng", "tensor", "data", "coordinator", "serve"]
 D3_SPAWN_EXEMPT = ["parallel"]
-D3_REDUCE_SCOPE = ["mult", "runtime/native", "tensor", "data", "rng"]
+D3_REDUCE_SCOPE = ["mult", "runtime/native", "tensor", "data", "rng", "serve"]
 P1_SCOPE = [
     "checkpoint", "coordinator/health.rs", "coordinator/recovery.rs",
-    "coordinator/trainer.rs", "testkit/faults.rs",
+    "coordinator/trainer.rs", "testkit/faults.rs", "serve",
 ]
 P2_SCOPE = P1_SCOPE
 S1_SCOPE = ["mult"]
